@@ -1,0 +1,20 @@
+//! Profiling probe for the §Perf pass: a tight loop of column-skipping
+//! sorts on uniform data (the simulator's worst case — most CRs per
+//! element), suitable as a `perf record` / flamegraph target.
+//!
+//! Run: `cargo build --release --example perf_probe &&
+//!       perf record -o perf.data ./target/release/examples/perf_probe`
+
+use memsort::datasets::{Dataset, DatasetKind};
+use memsort::sorter::colskip::ColSkipSorter;
+use memsort::sorter::InMemorySorter;
+
+fn main() {
+    let d = Dataset::generate32(DatasetKind::Uniform, 1024, 42);
+    let mut acc = 0u64;
+    for _ in 0..2000 {
+        let mut s = ColSkipSorter::with_k(2);
+        acc += s.sort_with_stats(&d.values).stats.crs;
+    }
+    println!("{acc}");
+}

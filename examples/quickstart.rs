@@ -1,0 +1,51 @@
+//! Quickstart: sort an array on the column-skipping in-memory sorter and
+//! compare against the HPCA'21 baseline — the paper's Fig. 1/Fig. 3
+//! worked example, then a realistic workload.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use memsort::prelude::*;
+
+fn main() {
+    // --- The paper's worked example: {8, 9, 10}, w = 4, k = 2. ---
+    let data = vec![8u32, 9, 10];
+
+    let mut baseline = BaselineSorter::with_width(4);
+    let b = baseline.sort_with_stats(&data);
+    println!("baseline [18]  : sorted={:?} column reads={}", b.sorted, b.stats.crs);
+
+    let mut colskip = ColSkipSorter::new(ColSkipConfig { width: 4, k: 2, ..Default::default() });
+    let c = colskip.sort_with_stats(&data);
+    println!("column-skipping: sorted={:?} column reads={}", c.sorted, c.stats.crs);
+    assert_eq!(b.stats.crs, 12, "Fig. 1: baseline takes N*w = 12 CRs");
+    assert_eq!(c.stats.crs, 7, "Fig. 3: column skipping takes 7 CRs");
+
+    // --- A realistic workload: MapReduce shuffle keys at paper scale. ---
+    let d = Dataset::generate32(DatasetKind::MapReduce, 1024, 42);
+    let mut sorter = ColSkipSorter::with_k(2);
+    let out = sorter.sort_with_stats(&d.values);
+    let n = d.values.len();
+    println!();
+    println!("MapReduce n={n}, w=32, k=2:");
+    println!("  cycles/number : {:.2} (baseline: 32.00)", out.stats.cycles_per_number(n));
+    println!(
+        "  speedup       : {:.2}x (paper reports up to 4.16x)",
+        32.0 / out.stats.cycles_per_number(n)
+    );
+    println!("  throughput    : {:.1} Mnum/s @500MHz", out.stats.throughput(n) / 1e6);
+
+    // --- Cost model: the paper's Fig. 8(a) metrics for this sorter. ---
+    let model = CostModel::calibrated();
+    let arch = SorterArch::ColSkip { n, w: 32, k: 2 };
+    let act = memsort::cost::Activity::from_stats(&out.stats);
+    println!("  area          : {:.1} Kµm² (40nm model)", model.area_kum2(arch));
+    println!("  power         : {:.1} mW (measured activity)", model.power_mw(arch, act));
+    println!(
+        "  area eff      : {:.2} Num/ns/mm²",
+        model.area_efficiency(arch, out.stats.cycles_per_number(n))
+    );
+    println!(
+        "  energy eff    : {:.1} Num/µJ",
+        model.energy_efficiency(arch, out.stats.cycles_per_number(n), act)
+    );
+}

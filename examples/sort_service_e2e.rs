@@ -1,0 +1,84 @@
+//! End-to-end driver (the EXPERIMENTS.md §E2E run): the full three-layer
+//! stack serving batched sort requests.
+//!
+//!   L3  Rust sort service — worker pool, routing, backpressure, metrics
+//!   L2  AOT JAX rank pass (scan of the L1 kernel), loaded from
+//!       `artifacts/*.hlo.txt` via the PJRT C API
+//!   L1  Pallas min-search kernel (interpret-lowered into the artifact)
+//!
+//! Each request is served by the **hybrid** engine: the PJRT executable
+//! computes the sort, the native bit-accurate simulator re-derives it for
+//! cross-checking and cycle metering. The run reports service latency and
+//! throughput plus the paper's simulated cycles/number — proving all
+//! layers compose on a real workload.
+//!
+//! Requires `make artifacts` (falls back to native engine otherwise).
+//!
+//! Run: `cargo run --release --example sort_service_e2e`
+
+use memsort::coordinator::{EngineKind, ServiceConfig, SortService};
+use memsort::datasets::{Dataset, DatasetKind};
+
+fn main() -> anyhow::Result<()> {
+    let n = 1024; // paper-scale arrays (the n=1024 AOT artifact)
+    let requests = 48;
+    let workers = 4;
+
+    let have_artifacts =
+        memsort::runtime::PjrtEngine::default_dir().join("manifest.txt").exists();
+    let engine = if have_artifacts { EngineKind::Hybrid } else { EngineKind::Native };
+    if !have_artifacts {
+        eprintln!("warning: artifacts/ missing — run `make artifacts`; using native engine");
+    }
+
+    let svc = SortService::start(ServiceConfig {
+        workers,
+        engine,
+        ..Default::default()
+    })?;
+
+    // Mixed tenant traffic: every dataset family in rotation.
+    let batch: Vec<Vec<u32>> = (0..requests)
+        .map(|i| {
+            let kind = DatasetKind::ALL[i % DatasetKind::ALL.len()];
+            Dataset::generate32(kind, n, 1000 + i as u64).values
+        })
+        .collect();
+    let expected: Vec<Vec<u32>> = batch
+        .iter()
+        .map(|v| {
+            let mut s = v.clone();
+            s.sort_unstable();
+            s
+        })
+        .collect();
+
+    let t0 = std::time::Instant::now();
+    let resps = svc.submit_batch(batch)?;
+    let wall = t0.elapsed();
+
+    for (r, e) in resps.iter().zip(&expected) {
+        assert_eq!(&r.sorted, e, "request {} returned wrong order", r.id);
+    }
+
+    let m = svc.metrics();
+    println!("=== sort service e2e ({} engine) ===", engine.name());
+    println!("requests        : {} ok / {} errors", m.completed, m.errors);
+    println!("elements sorted : {}", m.elements);
+    println!("wall time       : {:.1} ms", wall.as_secs_f64() * 1e3);
+    println!(
+        "service rate    : {:.2} Mnum/s on {workers} workers",
+        m.elements as f64 / wall.as_secs_f64() / 1e6
+    );
+    println!("latency p50     : {} µs", m.p50_us);
+    println!("latency p99     : {} µs (first requests pay AOT compile)", m.p99_us);
+    println!("sim cyc/num     : {:.2} (baseline 32.00 — mixed datasets)", m.cycles_per_number);
+    println!(
+        "sim speedup     : {:.2}x vs [18] across the mix",
+        32.0 / m.cycles_per_number
+    );
+    assert_eq!(m.errors, 0);
+    svc.shutdown();
+    println!("all {requests} responses verified against std sort — stack OK");
+    Ok(())
+}

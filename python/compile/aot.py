@@ -1,0 +1,78 @@
+"""AOT bridge: lower the L2 model to HLO *text* for the Rust runtime.
+
+HLO text — not `.serialize()` — is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids, which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot [--out-dir ../artifacts] [--sizes 16,64,256,1024]
+
+Emits one artifact per array-size variant:
+    artifacts/minsort_n{N}_w{W}.hlo.txt
+plus a manifest (artifacts/manifest.txt) the Rust runtime consults.
+
+Python runs ONCE at build time (`make artifacts`); the Rust binary is
+self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import example_args, minsort
+
+DEFAULT_SIZES = (16, 64, 256, 1024)
+DEFAULT_WIDTH = 32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_minsort(n: int, width: int = DEFAULT_WIDTH) -> str:
+    """Lower the length-`n` sort variant to HLO text."""
+    lowered = jax.jit(lambda x: minsort(x, width=width)).lower(*example_args(n, width))
+    return to_hlo_text(lowered)
+
+
+def artifact_name(n: int, width: int = DEFAULT_WIDTH) -> str:
+    return f"minsort_n{n}_w{width}.hlo.txt"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--sizes", default=",".join(str(s) for s in DEFAULT_SIZES))
+    ap.add_argument("--width", type=int, default=DEFAULT_WIDTH)
+    args = ap.parse_args()
+
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+    sizes = [int(s) for s in args.sizes.split(",") if s]
+
+    manifest_lines = []
+    for n in sizes:
+        text = lower_minsort(n, args.width)
+        name = artifact_name(n, args.width)
+        path = os.path.join(out_dir, name)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest_lines.append(f"{name} n={n} w={args.width}")
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote manifest with {len(sizes)} variants")
+
+
+if __name__ == "__main__":
+    main()

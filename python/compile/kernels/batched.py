@@ -1,0 +1,87 @@
+"""L1 Pallas kernel, batched variant: min-search over a batch of arrays.
+
+This is the compute-path analogue of the paper's multi-bank operation: a
+`(B, N)` block of stored arrays is tiled over a Pallas **grid** along the
+batch dimension — one program instance per bank — with `BlockSpec`
+carving the `(1, N)` VMEM-resident row block each instance works on.
+On TPU this is exactly the HBM→VMEM schedule the multi-bank manager
+implements spatially; under `interpret=True` it lowers to plain HLO that
+the Rust PJRT client can run.
+
+Used by `model.minsort_batched` (the batched rank pass) and swept by
+hypothesis in `tests/test_batched.py`.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _batched_kernel(x_ref, alive_ref, onehot_ref, value_ref, *, width: int):
+    """One grid instance = one bank's min search (block shapes (1, N))."""
+    x = x_ref[0, :]
+    alive = alive_ref[0, :]
+    n = x.shape[0]
+
+    def step(i, active):
+        j = jnp.uint32(width - 1) - jnp.uint32(i)
+        col = (x >> j) & jnp.uint32(1)
+        ones = active * col
+        zeros = active * (jnp.uint32(1) - col)
+        informative = (jnp.sum(ones) > 0) & (jnp.sum(zeros) > 0)
+        return jnp.where(informative, zeros, active)
+
+    active = jax.lax.fori_loop(0, width, step, alive.astype(jnp.uint32))
+    idx = jax.lax.iota(jnp.int32, n)
+    any_alive = (jnp.sum(active) > 0).astype(jnp.uint32)
+    first = jnp.min(jnp.where(active > 0, idx, jnp.int32(n)))
+    onehot = (idx == first).astype(jnp.uint32) * any_alive
+    onehot_ref[0, :] = onehot
+    value_ref[0, 0] = jnp.sum(x * onehot).astype(jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("width",))
+def batched_min_search(x: jnp.ndarray, alive: jnp.ndarray, width: int = 32):
+    """Min search over a batch: x, alive are uint32[B, N].
+
+    Returns (onehot u32[B, N], values u32[B, 1]).
+    """
+    b, n = x.shape
+    kernel = functools.partial(_batched_kernel, width=width)
+    return pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=(
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+        ),
+        out_specs=(
+            pl.BlockSpec((1, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((b, n), jnp.uint32),
+            jax.ShapeDtypeStruct((b, 1), jnp.uint32),
+        ),
+        interpret=True,
+    )(x.astype(jnp.uint32), alive.astype(jnp.uint32))
+
+
+@functools.partial(jax.jit, static_argnames=("width",))
+def minsort_batched(x: jnp.ndarray, width: int = 32):
+    """Full rank pass over a batch of arrays: x uint32[B, N] → sorted[B, N]."""
+    b, n = x.shape
+    x = x.astype(jnp.uint32)
+
+    def body(alive, _):
+        onehot, values = batched_min_search(x, alive, width=width)
+        alive = alive * (jnp.uint32(1) - onehot)
+        return alive, values[:, 0]
+
+    alive0 = jnp.ones((b, n), jnp.uint32)
+    _, vals = jax.lax.scan(body, alive0, None, length=n)
+    return vals.T  # [B, N]

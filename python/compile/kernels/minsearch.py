@@ -1,0 +1,84 @@
+"""L1 Pallas kernel: one in-memory min-search iteration.
+
+The 1T1R crossbar's analog compute — sense every select line of one bit
+column at once, judge all-0s/all-1s, exclude — is a column-parallel
+reduction. On TPU terms (see DESIGN.md §Hardware-Adaptation): each column
+read is a width-N elementwise mask op on the VPU; the w-step MSB→LSB
+traversal is a sequential `fori_loop` whose carry (the active mask) is
+the wordline register. Rows are tiled into VMEM via the BlockSpec below;
+the bit-plane dimension stays inside the kernel, mirroring how the sense
+amps + row controller iterate columns against a resident array.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret-mode lowers the kernel into plain HLO ops so
+the AOT artifact runs on the Rust `xla`-crate client (see
+/opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _min_search_kernel(x_ref, alive_ref, onehot_ref, value_ref, stats_ref, *, width: int):
+    """Pallas kernel body: bit traversal over the resident block.
+
+    Outputs:
+      onehot_ref: uint32[N] one-hot of the emitted (first) min row.
+      value_ref: uint32[1] the min value.
+      stats_ref: int32[2] = [informative_count, top_informative_col].
+    """
+    x = x_ref[...]
+    alive = alive_ref[...]
+    n = x.shape[0]
+
+    def step(i, carry):
+        active, info_count, top_col = carry
+        j = jnp.uint32(width - 1) - jnp.uint32(i)
+        col = (x >> j) & jnp.uint32(1)
+        ones = active * col
+        zeros = active * (jnp.uint32(1) - col)
+        informative = (jnp.sum(ones) > 0) & (jnp.sum(zeros) > 0)
+        active = jnp.where(informative, zeros, active)
+        info_count = info_count + informative.astype(jnp.int32)
+        top_col = jnp.where(
+            informative & (top_col < 0), j.astype(jnp.int32), top_col
+        )
+        return active, info_count, top_col
+
+    active0 = alive.astype(jnp.uint32)
+    active, info_count, top_col = jax.lax.fori_loop(
+        0, width, step, (active0, jnp.int32(0), jnp.int32(-1))
+    )
+
+    # Priority encoder: first surviving row wins (hardware row mux).
+    idx = jax.lax.iota(jnp.int32, n)
+    any_alive = (jnp.sum(active) > 0).astype(jnp.uint32)
+    first = jnp.min(jnp.where(active > 0, idx, jnp.int32(n)))
+    onehot = (idx == first).astype(jnp.uint32) * any_alive
+    onehot_ref[...] = onehot
+    value_ref[...] = jnp.sum(x * onehot, keepdims=True).astype(jnp.uint32)
+    stats_ref[...] = jnp.stack([info_count, top_col])
+
+
+@functools.partial(jax.jit, static_argnames=("width",))
+def min_search(x: jnp.ndarray, alive: jnp.ndarray, width: int = 32):
+    """One min-search iteration as a Pallas call (interpret mode).
+
+    Returns (min_onehot u32[N], min_value u32[1], stats i32[2]).
+    """
+    n = x.shape[0]
+    kernel = functools.partial(_min_search_kernel, width=width)
+    return pl.pallas_call(
+        kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((n,), jnp.uint32),
+            jax.ShapeDtypeStruct((1,), jnp.uint32),
+            jax.ShapeDtypeStruct((2,), jnp.int32),
+        ),
+        interpret=True,
+    )(x.astype(jnp.uint32), alive.astype(jnp.uint32))

@@ -1,0 +1,100 @@
+"""Pure-jnp oracle for the in-memory min-search compute (L1 reference).
+
+This is the *digital contract* of the 1T1R array + sense amps during one
+min-search iteration of the paper (§II.B): traverse bit columns MSB→LSB;
+a column restricted to the active rows that is neither all-0s nor all-1s
+("informative") excludes the rows that read 1; after the full traversal
+the surviving rows hold the minimum of the active set.
+
+The Pallas kernel (`minsearch.py`) must match these functions bit-exactly
+for every shape/width the tests sweep (pytest + hypothesis). The Rust
+simulator implements the same contract over real bank state; the
+integration tests close the triangle rust == pallas == ref.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def min_search_ref(x: jnp.ndarray, alive: jnp.ndarray, width: int):
+    """One min-search iteration over the active rows (pure jnp).
+
+    Args:
+      x: uint32[N] stored values.
+      alive: uint32[N] 0/1 mask of rows still in the array.
+      width: bit width w of the stored values.
+
+    Returns:
+      (min_onehot, min_value, informative_count, top_informative_col)
+      - min_onehot: uint32[N], 1 only at the first (lowest-index) row
+        holding the minimum among alive rows (the hardware priority
+        encoder's pick); all-zero if no row is alive.
+      - min_value: uint32[] the minimum value (0 if none alive).
+      - informative_count: int32[] number of informative columns seen.
+      - top_informative_col: int32[] highest informative column (-1 if
+        none) — the quantity the lead register latches.
+    """
+    x = x.astype(jnp.uint32)
+    active = alive.astype(jnp.uint32)
+    n = x.shape[0]
+    info_count = jnp.int32(0)
+    top_col = jnp.int32(-1)
+    for j in range(width - 1, -1, -1):
+        col = (x >> jnp.uint32(j)) & jnp.uint32(1)
+        ones = active * col
+        zeros = active * (jnp.uint32(1) - col)
+        informative = (ones.sum() > 0) & (zeros.sum() > 0)
+        active = jnp.where(informative, zeros, active)
+        info_count = info_count + informative.astype(jnp.int32)
+        top_col = jnp.where(informative & (top_col < 0), jnp.int32(j), top_col)
+    # Priority encode the first surviving row.
+    idx = jnp.arange(n)
+    any_alive = (active.sum() > 0).astype(jnp.uint32)
+    first = jnp.min(jnp.where(active > 0, idx, n))
+    min_onehot = (idx == first).astype(jnp.uint32) * any_alive
+    min_value = (x * min_onehot).sum().astype(jnp.uint32)
+    return min_onehot, min_value, info_count, top_col
+
+
+def sort_ref(x: jnp.ndarray, width: int):
+    """Full iterative in-memory sort (pure jnp, python loop).
+
+    Returns (sorted_values, top_cols, info_counts) — the same outputs as
+    the AOT model in `model.py`.
+    """
+    n = x.shape[0]
+    alive = jnp.ones((n,), jnp.uint32)
+    out_vals, out_tops, out_infos = [], [], []
+    for _ in range(n):
+        onehot, val, info, top = min_search_ref(x, alive, width)
+        out_vals.append(val)
+        out_tops.append(top)
+        out_infos.append(info)
+        alive = alive * (jnp.uint32(1) - onehot)
+    return jnp.stack(out_vals), jnp.stack(out_tops), jnp.stack(out_infos)
+
+
+def min_search_numpy(x: np.ndarray, alive: np.ndarray, width: int):
+    """Plain-numpy double check of `min_search_ref` (no jax at all)."""
+    active = alive.astype(np.uint64).copy()
+    xs = x.astype(np.uint64)
+    info_count = 0
+    top_col = -1
+    for j in range(width - 1, -1, -1):
+        col = (xs >> j) & 1
+        ones = active * col
+        zeros = active * (1 - col)
+        if ones.sum() > 0 and zeros.sum() > 0:
+            active = zeros
+            info_count += 1
+            if top_col < 0:
+                top_col = j
+    onehot = np.zeros_like(active)
+    nz = np.nonzero(active)[0]
+    min_value = 0
+    if len(nz) > 0:
+        onehot[nz[0]] = 1
+        min_value = int(xs[nz[0]])
+    return onehot.astype(np.uint32), np.uint32(min_value), info_count, top_col

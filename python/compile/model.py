@@ -1,0 +1,51 @@
+"""L2 JAX model: the full iterative in-memory sort as a scan over the L1
+Pallas min-search kernel.
+
+This is the compute graph the Rust runtime executes through PJRT: given
+the stored array, run N min-search iterations (the paper's Fig. 2 outer
+loop), retiring the emitted row each time. Outputs per iteration feed the
+Rust coordinator's cycle accounting:
+
+  sorted[N]   — the values in ascending order (functional result);
+  top_cols[N] — highest informative column of each iteration (what the
+                lead register / state controller would latch);
+  infos[N]    — number of informative columns (= RE count) per iteration.
+
+The paper's system has no fwd/bwd pair — the "model" is this rank pass;
+see DESIGN.md §3 for the adaptation note. Lowered once by `aot.py` to HLO
+text; Python never runs at request time.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.minsearch import min_search
+
+
+@functools.partial(jax.jit, static_argnames=("width",))
+def minsort(x: jnp.ndarray, width: int = 32):
+    """Full in-memory sort of `x` (uint32[N]) via iterative min search.
+
+    Returns (sorted u32[N], top_cols i32[N], infos i32[N]).
+    """
+    n = x.shape[0]
+    x = x.astype(jnp.uint32)
+
+    def body(alive, _):
+        onehot, value, stats = min_search(x, alive, width=width)
+        alive = alive * (jnp.uint32(1) - onehot)
+        return alive, (value[0], stats[1], stats[0])
+
+    alive0 = jnp.ones((n,), jnp.uint32)
+    _, (vals, tops, infos) = jax.lax.scan(body, alive0, None, length=n)
+    return vals, tops, infos
+
+
+def example_args(n: int, width: int = 32):
+    """Shape-only example arguments for AOT lowering."""
+    del width
+    return (jax.ShapeDtypeStruct((n,), jnp.uint32),)

@@ -1,0 +1,84 @@
+//! Bench: ablation study over the design choices DESIGN.md calls out —
+//! what each mechanism of the column-skipping circuit is worth, per
+//! dataset, at N=1024, w=32:
+//!
+//!   full        k=2 + leading-zero skip + duplicate stall (the paper)
+//!   -state      k=0 (no state recording; skips + stall only)
+//!   -leading    k=2, no leading-zero skip
+//!   -stall      k=2, no duplicate stall
+//!   none        k=0, no skips, no stall  (== the HPCA'21 baseline)
+//!
+//! Run: `cargo bench --bench ablations`
+
+use memsort::datasets::{Dataset, DatasetKind};
+use memsort::report::render_table;
+use memsort::sorter::colskip::{ColSkipConfig, ColSkipSorter};
+use memsort::sorter::InMemorySorter;
+
+fn variant(k: usize, skip_leading: bool, stall: bool) -> ColSkipConfig {
+    ColSkipConfig { width: 32, k, skip_leading, stall_on_duplicates: stall }
+}
+
+fn main() {
+    let n = 1024;
+    let trials = 5u64;
+    let variants: [(&str, ColSkipConfig); 5] = [
+        ("full (paper)", variant(2, true, true)),
+        ("-state (k=0)", variant(0, true, true)),
+        ("-leading", variant(2, false, true)),
+        ("-stall", variant(2, true, false)),
+        ("none (=baseline)", variant(0, false, false)),
+    ];
+
+    println!("=== ablations: cycles/number by mechanism (N={n}, w=32, {trials} trials) ===");
+    let mut rows = Vec::new();
+    let mut speeds: Vec<Vec<f64>> = Vec::new();
+    for (name, cfg) in &variants {
+        let mut row = vec![name.to_string()];
+        let mut srow = Vec::new();
+        for kind in DatasetKind::ALL {
+            let mut cyc = 0.0;
+            for t in 0..trials {
+                let d = Dataset::generate32(kind, n, 42 + t);
+                let mut s = ColSkipSorter::new(cfg.clone());
+                cyc += s.sort_with_stats(&d.values).stats.cycles_per_number(n);
+            }
+            cyc /= trials as f64;
+            row.push(format!("{:.2}", cyc));
+            srow.push(32.0 / cyc);
+        }
+        rows.push(row);
+        speeds.push(srow);
+    }
+    let mut headers = vec!["variant"];
+    headers.extend(DatasetKind::ALL.iter().map(|k| k.name()));
+    print!("{}", render_table(&headers, &rows));
+
+    println!();
+    println!("speedup contribution on MapReduce (×32/cyc):");
+    for ((name, _), s) in variants.iter().zip(&speeds) {
+        println!("  {:<18} {:.2}x", name, s[4]);
+    }
+
+    // Gates: each mechanism must contribute on its target workload.
+    let full = &speeds[0];
+    let no_state = &speeds[1];
+    let no_lead = &speeds[2];
+    let no_stall = &speeds[3];
+    let none = &speeds[4];
+    // State recording matters on every dataset (vs k=0).
+    for (i, kind) in DatasetKind::ALL.iter().enumerate() {
+        assert!(
+            full[i] > no_state[i] * 0.99,
+            "state recording should not hurt on {}",
+            kind.name()
+        );
+    }
+    // Leading-zero skip is the main k-independent win on clustered/small data.
+    assert!(no_lead[2] < full[2], "leading-zero skip must pay on clustered");
+    // Stall matters on repetition-heavy data (mapreduce idx 4).
+    assert!(no_stall[4] < full[4], "stall must pay on mapreduce");
+    // Everything off reduces to the baseline's 32 cyc/num.
+    assert!((32.0 / none[4] - 32.0).abs() < 1e-9, "none variant must be 32 cyc/num");
+    println!("\nablation gates OK");
+}

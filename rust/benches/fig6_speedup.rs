@@ -1,0 +1,44 @@
+//! Bench: regenerate **Fig. 6** — normalized speedup over the baseline on
+//! all five datasets, N=1024, w=32, k = 1..8 — and time the sorter on
+//! each dataset.
+//!
+//! Run: `cargo bench --bench fig6_speedup`
+
+use memsort::bench::run;
+use memsort::datasets::{Dataset, DatasetKind};
+use memsort::report;
+use memsort::sorter::colskip::ColSkipSorter;
+use memsort::sorter::InMemorySorter;
+
+fn main() {
+    let (n, w) = report::paper_defaults();
+    let trials = 5;
+    println!("=== Fig. 6: speedup over baseline (N={n}, w={w}, {trials} trials/point) ===");
+    let pts = report::fig6(n, w, 8, trials, 42);
+    let rows: Vec<Vec<String>> = pts
+        .iter()
+        .map(|p| {
+            vec![
+                p.dataset.name().to_string(),
+                p.k.to_string(),
+                format!("{:.2}", p.cycles_per_number),
+                format!("{:.2}", p.speedup),
+            ]
+        })
+        .collect();
+    print!("{}", report::render_table(&["dataset", "k", "cyc/num", "speedup"], &rows));
+
+    println!();
+    println!("--- simulator wall-clock (k=2) ---");
+    for kind in DatasetKind::ALL {
+        let d = Dataset::generate32(kind, n, 42);
+        let r = run(&format!("colskip_sort/{}/n{n}", kind.name()), 300, || {
+            let mut s = ColSkipSorter::with_k(2);
+            s.sort_with_stats(&d.values).stats.crs
+        });
+        println!(
+            "    -> {:.2} Melem/s simulated-sort rate",
+            r.throughput(n) / 1e6
+        );
+    }
+}

@@ -1,0 +1,48 @@
+//! Bench: regenerate **Fig. 7** — normalized area and power over the
+//! baseline (plus area/energy efficiency) vs state recording k, on the
+//! MapReduce dataset at N=1024, w=32.
+//!
+//! Run: `cargo bench --bench fig7_area_power`
+
+use memsort::report;
+
+fn main() {
+    let (n, w) = report::paper_defaults();
+    let trials = 5;
+    println!("=== Fig. 7: area/power vs k on MapReduce (N={n}, w={w}) ===");
+    let pts = report::fig7(n, w, 8, trials, 42);
+    let rows: Vec<Vec<String>> = pts
+        .iter()
+        .map(|p| {
+            vec![
+                p.k.to_string(),
+                format!("{:.2}", p.cycles_per_number),
+                format!("{:.1}", p.area_kum2),
+                format!("{:.1}", p.power_mw),
+                format!("{:.3}", p.norm_area),
+                format!("{:.3}", p.norm_power),
+                format!("{:.2}", p.area_eff_ratio),
+                format!("{:.2}", p.energy_eff_ratio),
+            ]
+        })
+        .collect();
+    print!(
+        "{}",
+        report::render_table(
+            &["k", "cyc/num", "area Kµm²", "power mW", "n.area", "n.power", "AE x", "EE x"],
+            &rows
+        )
+    );
+    println!();
+    println!("paper anchors: k=1 area-eff >3.2x; k=2 energy-eff peak 3.39x;");
+    println!("area monotone up in k; both efficiencies decline past k=2-3.");
+
+    // Shape assertions (the bench doubles as a regression gate).
+    let ae_peak = pts.iter().map(|p| p.area_eff_ratio).fold(0.0, f64::max);
+    let ee_peak = pts.iter().map(|p| p.energy_eff_ratio).fold(0.0, f64::max);
+    let ae_k1 = pts[0].area_eff_ratio;
+    assert!(pts.windows(2).all(|p| p[1].norm_area > p[0].norm_area), "area must rise with k");
+    assert!(ae_k1 >= ae_peak * 0.95, "area efficiency must peak at small k");
+    assert!(ee_peak > 2.5, "energy-efficiency peak {ee_peak:.2} too low");
+    println!("shape checks OK (AE peak {ae_peak:.2}x, EE peak {ee_peak:.2}x)");
+}

@@ -1,0 +1,62 @@
+//! Bench: regenerate **Fig. 8(a)** — the implementation summary table
+//! (cycles/number, area + area efficiency, power + energy efficiency) for
+//! baseline / merge / col-skip k=2 / col-skip k=2 @ Ns=64, on MapReduce.
+//!
+//! Run: `cargo bench --bench fig8a_summary`
+
+use memsort::bench::run;
+use memsort::datasets::{Dataset, DatasetKind};
+use memsort::report;
+use memsort::sorter::baseline::BaselineSorter;
+use memsort::sorter::colskip::ColSkipSorter;
+use memsort::sorter::merge::MergeSorter;
+use memsort::sorter::InMemorySorter;
+
+fn main() {
+    let (n, w) = report::paper_defaults();
+    println!("=== Fig. 8(a): implementation summary (MapReduce, N={n}, w={w}) ===");
+    let rows_data = report::fig8a(n, w, 5, 42);
+    let rows: Vec<Vec<String>> = rows_data
+        .iter()
+        .map(|r| {
+            vec![
+                r.name.to_string(),
+                format!("{:.2}", r.cycles_per_number),
+                format!("{:.1} ({:.2})", r.area_kum2, r.area_eff),
+                format!("{:.1} ({:.1})", r.power_mw, r.energy_eff),
+            ]
+        })
+        .collect();
+    print!(
+        "{}",
+        report::render_table(&["sorter", "cyc/num", "area Kµm² (AE)", "power mW (EE)"], &rows)
+    );
+    println!();
+    println!("paper row:   baseline 32 | 77.8 (0.20) | 319.7 (48.9)");
+    println!("paper row:   merge    10 | 246.1 (0.20) | 825.9 (60.5)");
+    println!("paper row:   k=2    7.84 | 101.1 (0.63) | 385.2 (165.6)");
+    println!("paper row:   Ns=64  7.84 |  86.9 (0.73) | 349.3 (182.6)");
+
+    println!();
+    println!("--- simulator wall-clock per sorter (MapReduce n={n}) ---");
+    let d = Dataset::generate32(DatasetKind::MapReduce, n, 42);
+    run("baseline_sort", 300, || {
+        let mut s = BaselineSorter::with_width(w);
+        s.sort_with_stats(&d.values).stats.crs
+    });
+    run("colskip_sort_k2", 300, || {
+        let mut s = ColSkipSorter::with_k(2);
+        s.sort_with_stats(&d.values).stats.crs
+    });
+    run("merge_sort", 300, || {
+        let mut s = MergeSorter::new();
+        s.sort_with_stats(&d.values).stats.crs
+    });
+
+    // Regression gates on the headline ratios.
+    let base = &rows_data[0];
+    let cs = &rows_data[2];
+    let speedup = base.cycles_per_number / cs.cycles_per_number;
+    assert!(speedup > 3.4 && speedup < 5.2, "headline speedup {speedup:.2} out of regime");
+    println!("\nheadline speedup {speedup:.2}x (paper 4.08x) — shape OK");
+}

@@ -1,0 +1,64 @@
+//! Bench: regenerate **Fig. 8(b)** — normalized area and power of the
+//! multi-bank column-skipping sorter vs sub-sorter length Ns, at N=1024,
+//! w=32, k=2 — and verify the §V.C invariant that banking leaves the
+//! cycle count untouched while timing the multibank simulator.
+//!
+//! Run: `cargo bench --bench fig8b_multibank`
+
+use memsort::bench::run;
+use memsort::datasets::{Dataset, DatasetKind};
+use memsort::multibank::{MultiBankConfig, MultiBankSorter};
+use memsort::report;
+use memsort::sorter::colskip::ColSkipSorter;
+use memsort::sorter::InMemorySorter;
+
+fn main() {
+    let (n, w) = report::paper_defaults();
+    println!("=== Fig. 8(b): multibank area/power (N={n}, w={w}, k=2) ===");
+    let pts = report::fig8b(n, w);
+    let rows: Vec<Vec<String>> = pts
+        .iter()
+        .map(|p| {
+            vec![
+                p.sub_len.to_string(),
+                p.banks.to_string(),
+                format!("{:.3}", p.norm_area),
+                format!("{:.3}", p.norm_power),
+            ]
+        })
+        .collect();
+    print!("{}", report::render_table(&["Ns", "banks", "norm area", "norm power"], &rows));
+    println!();
+    println!("paper: area and power decrease with smaller Ns; at Ns=64 the");
+    println!("reduction is up to 14% (area) and 9% (power).");
+
+    // §V.C: "multi-bank management does not change the speedup".
+    let d = Dataset::generate32(DatasetKind::MapReduce, n, 42);
+    let single = ColSkipSorter::with_k(2).sort_with_stats(&d.values).stats.cycles();
+    println!();
+    println!("--- cycle invariance + simulator wall-clock ---");
+    for banks in [2usize, 4, 16] {
+        let mut mb =
+            MultiBankSorter::new(MultiBankConfig { banks, k: 2, ..Default::default() });
+        let cycles = mb.sort_with_stats(&d.values).stats.cycles();
+        assert_eq!(cycles, single, "C={banks} must match single-bank cycles");
+        run(&format!("multibank_sort/C{banks}/n{n}"), 200, || {
+            let mut s =
+                MultiBankSorter::new(MultiBankConfig { banks, k: 2, ..Default::default() });
+            s.sort_with_stats(&d.values).stats.crs
+        });
+    }
+    println!("cycle invariance OK ({single} cycles at every C)");
+
+    // Fig. 8(b) shape gates.
+    assert!(pts.windows(2).all(|p| p[0].norm_area < p[1].norm_area));
+    assert!(pts.windows(2).all(|p| p[0].norm_power < p[1].norm_power));
+    let ns64 = &pts[0];
+    assert!((1.0 - ns64.norm_area) > 0.10, "area saving at Ns=64: {}", ns64.norm_area);
+    assert!((1.0 - ns64.norm_power) > 0.05, "power saving at Ns=64: {}", ns64.norm_power);
+    println!(
+        "shape checks OK (Ns=64 saves {:.1}% area, {:.1}% power)",
+        (1.0 - ns64.norm_area) * 100.0,
+        (1.0 - ns64.norm_power) * 100.0
+    );
+}

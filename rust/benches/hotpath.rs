@@ -1,0 +1,86 @@
+//! Bench: hot-path microbenchmarks for the perf pass (EXPERIMENTS.md
+//! §Perf) — column reads, full sorts across k/datasets, multibank
+//! overhead, PJRT engine execution, and service throughput.
+//!
+//! Run: `cargo bench --bench hotpath`
+
+use memsort::bench::run;
+use memsort::bits::RowMask;
+use memsort::coordinator::{ServiceConfig, SortService};
+use memsort::datasets::{Dataset, DatasetKind};
+use memsort::memory::Bank;
+use memsort::multibank::{MultiBankConfig, MultiBankSorter};
+use memsort::runtime::PjrtEngine;
+use memsort::sorter::colskip::ColSkipSorter;
+use memsort::sorter::InMemorySorter;
+
+fn main() {
+    let n = 1024;
+    let d = Dataset::generate32(DatasetKind::MapReduce, n, 42);
+
+    println!("--- L3 primitive: column read (n={n}) ---");
+    let mut bank = Bank::load(&d.values, 32);
+    let active = RowMask::new_full(n);
+    let mut ones = RowMask::new_empty(n);
+    let r = run("bank_column_read/n1024", 200, || {
+        bank.column_read_into(17, &active, &mut ones)
+    });
+    println!("    -> {:.1} M column-reads/s", 1e9 / r.median_ns / 1e6);
+
+    println!("--- L3 sorter: colskip across k (MapReduce n={n}) ---");
+    for k in [0usize, 1, 2, 4, 8] {
+        let r = run(&format!("colskip_sort/k{k}/n{n}"), 250, || {
+            let mut s = ColSkipSorter::with_k(k);
+            s.sort_with_stats(&d.values).stats.crs
+        });
+        println!("    -> {:.2} Melem/s", r.throughput(n) / 1e6);
+    }
+
+    println!("--- L3 sorter: colskip k=2 across datasets (n={n}) ---");
+    for kind in DatasetKind::ALL {
+        let dd = Dataset::generate32(kind, n, 42);
+        run(&format!("colskip_sort/{}/k2", kind.name()), 250, || {
+            let mut s = ColSkipSorter::with_k(2);
+            s.sort_with_stats(&dd.values).stats.crs
+        });
+    }
+
+    println!("--- L3 multibank overhead (n={n}, k=2) ---");
+    for banks in [1usize, 4, 16] {
+        run(&format!("multibank/C{banks}"), 250, || {
+            let mut s =
+                MultiBankSorter::new(MultiBankConfig { banks, k: 2, ..Default::default() });
+            s.sort_with_stats(&d.values).stats.crs
+        });
+    }
+
+    println!("--- bank load (bit-plane build) ---");
+    run("bank_load/n1024_w32", 200, || Bank::load(&d.values, 32).rows());
+
+    if PjrtEngine::default_dir().join("manifest.txt").exists() {
+        println!("--- L2/L1 via PJRT: AOT rank pass ---");
+        let mut eng = PjrtEngine::new(PjrtEngine::default_dir()).unwrap();
+        let small = Dataset::generate32(DatasetKind::MapReduce, 64, 1);
+        eng.rank(&small.values).unwrap(); // compile outside timing
+        let r = run("pjrt_rank/n64", 400, || eng.rank(&small.values).unwrap().sorted[0]);
+        println!("    -> {:.2} Kelem/s through PJRT", 64.0 / (r.median_ns / 1e9) / 1e3);
+        eng.rank(&d.values).unwrap();
+        let r = run("pjrt_rank/n1024", 1500, || eng.rank(&d.values).unwrap().sorted[0]);
+        println!("    -> {:.2} Kelem/s through PJRT", 1024.0 / (r.median_ns / 1e9) / 1e3);
+    } else {
+        println!("(skipping PJRT benches: run `make artifacts`)");
+    }
+
+    println!("--- service throughput (native engine, 4 workers) ---");
+    let svc = SortService::start(ServiceConfig { workers: 4, ..Default::default() }).unwrap();
+    let batch: Vec<Vec<u32>> =
+        (0..32).map(|i| Dataset::generate32(DatasetKind::MapReduce, n, i).values).collect();
+    let r = run("service_batch32_n1024", 1000, || {
+        svc.submit_batch(batch.clone()).unwrap().len()
+    });
+    println!(
+        "    -> {:.2} Melem/s service throughput",
+        (32 * n) as f64 / (r.median_ns / 1e9) / 1e6
+    );
+    svc.shutdown();
+}

@@ -1,0 +1,129 @@
+//! In-tree micro-benchmark harness (the offline registry has no
+//! criterion): warmup + timed runs with median / mean / MAD reporting,
+//! plus figure-style table output for the paper harnesses.
+//!
+//! Used by the `rust/benches/*.rs` targets (all `harness = false`).
+
+use std::time::Instant;
+
+/// Result of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    /// Median absolute deviation (robust spread).
+    pub mad_ns: f64,
+}
+
+impl BenchResult {
+    /// Criterion-style one-liner.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<40} time: [{} median, {} mean ± {} MAD] ({} iters)",
+            self.name,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.mad_ns),
+            self.iters
+        )
+    }
+
+    /// Throughput helper: elements per second given elements per iter.
+    pub fn throughput(&self, elems_per_iter: usize) -> f64 {
+        elems_per_iter as f64 / (self.median_ns / 1e9)
+    }
+}
+
+/// Format nanoseconds human-readably.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark `f`, auto-scaling iteration count to `target_ms` per batch.
+pub fn bench<T>(name: &str, target_ms: u64, mut f: impl FnMut() -> T) -> BenchResult {
+    // Warmup + calibration.
+    let t0 = Instant::now();
+    std::hint::black_box(f());
+    let once = t0.elapsed().as_nanos().max(1) as f64;
+    let target = target_ms as f64 * 1e6;
+    let samples = 15usize;
+    let per_sample = ((target / samples as f64 / once).ceil() as usize).clamp(1, 1_000_000);
+
+    let mut times: Vec<f64> = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        for _ in 0..per_sample {
+            std::hint::black_box(f());
+        }
+        times.push(t.elapsed().as_nanos() as f64 / per_sample as f64);
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = times[times.len() / 2];
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    let mut devs: Vec<f64> = times.iter().map(|t| (t - median).abs()).collect();
+    devs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mad = devs[devs.len() / 2];
+    BenchResult {
+        name: name.to_string(),
+        iters: samples * per_sample,
+        median_ns: median,
+        mean_ns: mean,
+        mad_ns: mad,
+    }
+}
+
+/// Run and print a benchmark.
+pub fn run<T>(name: &str, target_ms: u64, f: impl FnMut() -> T) -> BenchResult {
+    let r = bench(name, target_ms, f);
+    println!("{}", r.line());
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("noop-ish", 5, || {
+            let mut s = 0u64;
+            for i in 0..100u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert!(r.median_ns > 0.0);
+        assert!(r.iters >= 15);
+        assert!(r.mad_ns <= r.median_ns);
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert!(fmt_ns(12.0).ends_with("ns"));
+        assert!(fmt_ns(12_000.0).ends_with("µs"));
+        assert!(fmt_ns(12_000_000.0).ends_with("ms"));
+        assert!(fmt_ns(2.0e9).ends_with(" s"));
+    }
+
+    #[test]
+    fn throughput_inverse_of_time() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            median_ns: 1e9,
+            mean_ns: 1e9,
+            mad_ns: 0.0,
+        };
+        assert!((r.throughput(1000) - 1000.0).abs() < 1e-9);
+    }
+}

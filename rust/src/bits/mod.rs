@@ -1,0 +1,422 @@
+//! Bit-level data structures shared by the memory model and the sorters.
+//!
+//! The 1T1R crossbar stores one bit per cell; a length-`N` array of `w`-bit
+//! numbers occupies an `N × w` cell grid with the MSB in the leftmost
+//! column (paper §III.B). Two views are provided:
+//!
+//! * [`RowMask`] — a dense bitset over rows (wordline / RE state, sense-amp
+//!   outputs). All hot-path set algebra is word-parallel over `u64` limbs.
+//! * [`BitPlanes`] — the column-major (bit-plane) view of the stored
+//!   array: `plane[j]` is the [`RowMask`] of rows whose j-th bit is 1.
+//!   A column read is then two `AND`s against the active mask.
+
+/// Dense bitset over the rows of a memory bank.
+///
+/// Used for wordline (row-exclusion) state, sense-amp column images and
+/// state-controller snapshots. Operations are word-parallel; the hot loop
+/// never allocates (see [`RowMask::and_not_assign`] and friends).
+#[derive(Clone, PartialEq, Eq, Debug)]
+pub struct RowMask {
+    words: Vec<u64>,
+    n: usize,
+}
+
+impl RowMask {
+    /// Mask with all `n` rows cleared.
+    pub fn new_empty(n: usize) -> Self {
+        RowMask { words: vec![0; n.div_ceil(64)], n }
+    }
+
+    /// Mask with all `n` rows set.
+    pub fn new_full(n: usize) -> Self {
+        let mut m = Self::new_empty(n);
+        for w in m.words.iter_mut() {
+            *w = u64::MAX;
+        }
+        m.trim();
+        m
+    }
+
+    /// Build from an iterator of row indexes.
+    pub fn from_rows(n: usize, rows: impl IntoIterator<Item = usize>) -> Self {
+        let mut m = Self::new_empty(n);
+        for r in rows {
+            m.set(r);
+        }
+        m
+    }
+
+    /// Number of rows the mask covers (bank height, not popcount).
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    /// True if the mask covers zero rows.
+    #[inline]
+    pub fn is_len_zero(&self) -> bool {
+        self.n == 0
+    }
+
+    #[inline]
+    fn trim(&mut self) {
+        let tail = self.n % 64;
+        if tail != 0 {
+            if let Some(last) = self.words.last_mut() {
+                *last &= (1u64 << tail) - 1;
+            }
+        }
+    }
+
+    /// Set row `r`.
+    #[inline]
+    pub fn set(&mut self, r: usize) {
+        debug_assert!(r < self.n);
+        self.words[r / 64] |= 1u64 << (r % 64);
+    }
+
+    /// Clear row `r`.
+    #[inline]
+    pub fn clear(&mut self, r: usize) {
+        debug_assert!(r < self.n);
+        self.words[r / 64] &= !(1u64 << (r % 64));
+    }
+
+    /// Read row `r`.
+    #[inline]
+    pub fn get(&self, r: usize) -> bool {
+        debug_assert!(r < self.n);
+        (self.words[r / 64] >> (r % 64)) & 1 == 1
+    }
+
+    /// Number of set rows.
+    #[inline]
+    pub fn count(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// True if no row is set.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+
+    /// Index of the lowest set row, if any. Models the hardware priority
+    /// encoder that selects the emitted min row.
+    #[inline]
+    pub fn first_set(&self) -> Option<usize> {
+        for (i, &w) in self.words.iter().enumerate() {
+            if w != 0 {
+                return Some(i * 64 + w.trailing_zeros() as usize);
+            }
+        }
+        None
+    }
+
+    /// `self &= other`.
+    #[inline]
+    pub fn and_assign(&mut self, other: &RowMask) {
+        debug_assert_eq!(self.n, other.n);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a &= b;
+        }
+    }
+
+    /// `self &= !other` — the row-exclusion update (RE).
+    #[inline]
+    pub fn and_not_assign(&mut self, other: &RowMask) {
+        debug_assert_eq!(self.n, other.n);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a &= !b;
+        }
+    }
+
+    /// `self |= other`.
+    #[inline]
+    pub fn or_assign(&mut self, other: &RowMask) {
+        debug_assert_eq!(self.n, other.n);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a |= b;
+        }
+    }
+
+    /// Write `a & b` into `self` without allocating.
+    #[inline]
+    pub fn assign_and(&mut self, a: &RowMask, b: &RowMask) {
+        debug_assert_eq!(a.n, b.n);
+        debug_assert_eq!(self.n, a.n);
+        for ((d, x), y) in self.words.iter_mut().zip(&a.words).zip(&b.words) {
+            *d = x & y;
+        }
+    }
+
+    /// Clear every row.
+    #[inline]
+    pub fn clear_all(&mut self) {
+        self.words.fill(0);
+    }
+
+    /// Copy `other` into `self` without allocating.
+    #[inline]
+    pub fn copy_from(&mut self, other: &RowMask) {
+        debug_assert_eq!(self.n, other.n);
+        self.words.copy_from_slice(&other.words);
+    }
+
+    /// True if `self & other` is non-empty (no temporary allocated).
+    #[inline]
+    pub fn intersects(&self, other: &RowMask) -> bool {
+        debug_assert_eq!(self.n, other.n);
+        self.words.iter().zip(&other.words).any(|(a, b)| a & b != 0)
+    }
+
+    /// Popcount of `self & other` without a temporary.
+    #[inline]
+    pub fn intersect_count(&self, other: &RowMask) -> usize {
+        debug_assert_eq!(self.n, other.n);
+        self.words
+            .iter()
+            .zip(&other.words)
+            .map(|(a, b)| (a & b).count_ones() as usize)
+            .sum()
+    }
+
+    /// True if `self & !other` is non-empty.
+    #[inline]
+    pub fn has_bit_outside(&self, other: &RowMask) -> bool {
+        debug_assert_eq!(self.n, other.n);
+        self.words.iter().zip(&other.words).any(|(a, b)| a & !b != 0)
+    }
+
+    /// Iterate the indexes of set rows, ascending.
+    pub fn iter_set(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(i, &w0)| {
+            let mut w = w0;
+            std::iter::from_fn(move || {
+                if w == 0 {
+                    None
+                } else {
+                    let b = w.trailing_zeros() as usize;
+                    w &= w - 1;
+                    Some(i * 64 + b)
+                }
+            })
+        })
+    }
+
+    /// Raw limb view (used by the PJRT bridge and tests).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Mutable limb view (hot-path fused kernels in `memory::Bank`).
+    pub(crate) fn words_mut(&mut self) -> &mut [u64] {
+        &mut self.words
+    }
+}
+
+/// Column-major (bit-plane) image of an array stored in a bank.
+///
+/// `plane(j)` is the set of rows whose bit `j` is 1 — exactly the pattern
+/// of cell conductances along bit column `j` of the 1T1R crossbar.
+#[derive(Clone, Debug)]
+pub struct BitPlanes {
+    planes: Vec<RowMask>,
+    n: usize,
+    width: u32,
+}
+
+impl BitPlanes {
+    /// Build the planes for `values`, keeping the `width` low bits of each.
+    ///
+    /// Panics if any value needs more than `width` bits (a real crossbar
+    /// would silently truncate; truncation here would mis-sort, so we fail
+    /// loudly instead).
+    pub fn new(values: &[u32], width: u32) -> Self {
+        assert!(width >= 1 && width <= 32, "width must be in 1..=32");
+        if width < 32 {
+            if let Some(&v) = values.iter().find(|&&v| v >> width != 0) {
+                panic!("value {v:#x} does not fit in {width} bits");
+            }
+        }
+        let n = values.len();
+        let mut planes = vec![RowMask::new_empty(n); width as usize];
+        for (r, &v) in values.iter().enumerate() {
+            let mut bits = v;
+            while bits != 0 {
+                let j = bits.trailing_zeros();
+                planes[j as usize].set(r);
+                bits &= bits - 1;
+            }
+        }
+        BitPlanes { planes, n, width }
+    }
+
+    /// Number of rows.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.n
+    }
+
+    /// Word width in bits.
+    #[inline]
+    pub fn width(&self) -> u32 {
+        self.width
+    }
+
+    /// The rows whose bit `j` is 1.
+    #[inline]
+    pub fn plane(&self, j: u32) -> &RowMask {
+        &self.planes[j as usize]
+    }
+
+    /// Flip the stored bit at (`row`, `col`) — used by fault injection.
+    pub fn flip_bit(&mut self, row: usize, col: u32) {
+        let p = &mut self.planes[col as usize];
+        if p.get(row) {
+            p.clear(row);
+        } else {
+            p.set(row);
+        }
+    }
+
+    /// Force the stored bit at (`row`, `col`) — used by fault injection.
+    pub fn set_bit(&mut self, row: usize, col: u32, v: bool) {
+        let p = &mut self.planes[col as usize];
+        if v {
+            p.set(row);
+        } else {
+            p.clear(row);
+        }
+    }
+
+    /// Reconstruct the value stored in `row` (a full row read).
+    pub fn read_row(&self, row: usize) -> u32 {
+        let mut v = 0u32;
+        for j in 0..self.width {
+            if self.planes[j as usize].get(row) {
+                v |= 1 << j;
+            }
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rowmask_basic_set_clear_get() {
+        let mut m = RowMask::new_empty(130);
+        assert_eq!(m.count(), 0);
+        m.set(0);
+        m.set(64);
+        m.set(129);
+        assert!(m.get(0) && m.get(64) && m.get(129));
+        assert!(!m.get(1));
+        assert_eq!(m.count(), 3);
+        m.clear(64);
+        assert!(!m.get(64));
+        assert_eq!(m.count(), 2);
+    }
+
+    #[test]
+    fn rowmask_full_trims_tail() {
+        let m = RowMask::new_full(70);
+        assert_eq!(m.count(), 70);
+        assert_eq!(m.words().len(), 2);
+        assert_eq!(m.words()[1], (1u64 << 6) - 1);
+    }
+
+    #[test]
+    fn rowmask_full_exact_word_boundary() {
+        let m = RowMask::new_full(128);
+        assert_eq!(m.count(), 128);
+        assert_eq!(m.words()[1], u64::MAX);
+    }
+
+    #[test]
+    fn rowmask_first_set_and_iter() {
+        let m = RowMask::from_rows(200, [5, 77, 199]);
+        assert_eq!(m.first_set(), Some(5));
+        assert_eq!(m.iter_set().collect::<Vec<_>>(), vec![5, 77, 199]);
+        assert_eq!(RowMask::new_empty(10).first_set(), None);
+    }
+
+    #[test]
+    fn rowmask_set_algebra() {
+        let a = RowMask::from_rows(100, [1, 2, 3, 70]);
+        let b = RowMask::from_rows(100, [2, 3, 4, 99]);
+        let mut and = a.clone();
+        and.and_assign(&b);
+        assert_eq!(and.iter_set().collect::<Vec<_>>(), vec![2, 3]);
+        let mut andnot = a.clone();
+        andnot.and_not_assign(&b);
+        assert_eq!(andnot.iter_set().collect::<Vec<_>>(), vec![1, 70]);
+        let mut or = a.clone();
+        or.or_assign(&b);
+        assert_eq!(or.count(), 6);
+        assert!(a.intersects(&b));
+        assert_eq!(a.intersect_count(&b), 2);
+        assert!(a.has_bit_outside(&b));
+        let sub = RowMask::from_rows(100, [2, 3]);
+        assert!(!sub.has_bit_outside(&b));
+    }
+
+    #[test]
+    fn rowmask_assign_and_no_alloc_path() {
+        let a = RowMask::from_rows(64, [0, 1, 2]);
+        let b = RowMask::from_rows(64, [1, 2, 3]);
+        let mut d = RowMask::new_empty(64);
+        d.assign_and(&a, &b);
+        assert_eq!(d.iter_set().collect::<Vec<_>>(), vec![1, 2]);
+        d.copy_from(&a);
+        assert_eq!(d, a);
+    }
+
+    #[test]
+    fn bitplanes_roundtrip() {
+        let vals = [8u32, 9, 10, 0, 15];
+        let bp = BitPlanes::new(&vals, 4);
+        for (r, &v) in vals.iter().enumerate() {
+            assert_eq!(bp.read_row(r), v, "row {r}");
+        }
+    }
+
+    #[test]
+    fn bitplanes_plane_contents() {
+        // 8=1000 9=1001 10=1010 (paper's Fig. 1 example)
+        let bp = BitPlanes::new(&[8, 9, 10], 4);
+        assert_eq!(bp.plane(3).iter_set().collect::<Vec<_>>(), vec![0, 1, 2]);
+        assert_eq!(bp.plane(2).count(), 0);
+        assert_eq!(bp.plane(1).iter_set().collect::<Vec<_>>(), vec![2]);
+        assert_eq!(bp.plane(0).iter_set().collect::<Vec<_>>(), vec![1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not fit")]
+    fn bitplanes_rejects_overflow() {
+        BitPlanes::new(&[16], 4);
+    }
+
+    #[test]
+    fn bitplanes_fault_flip() {
+        let mut bp = BitPlanes::new(&[8, 9, 10], 4);
+        bp.flip_bit(0, 0); // 8 -> 9
+        assert_eq!(bp.read_row(0), 9);
+        bp.set_bit(0, 0, false); // back to 8
+        assert_eq!(bp.read_row(0), 8);
+        bp.set_bit(0, 0, false); // idempotent
+        assert_eq!(bp.read_row(0), 8);
+    }
+
+    #[test]
+    fn bitplanes_width_32_full_range() {
+        let vals = [u32::MAX, 0, 0x8000_0000, 1];
+        let bp = BitPlanes::new(&vals, 32);
+        for (r, &v) in vals.iter().enumerate() {
+            assert_eq!(bp.read_row(r), v);
+        }
+    }
+}

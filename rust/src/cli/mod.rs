@@ -1,0 +1,107 @@
+//! Hand-rolled CLI argument parsing (no clap offline): `--key value` /
+//! `--flag` pairs with typed accessors and helpful errors.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed arguments: a subcommand plus `--key value` options.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    opts: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (excluding argv[0]).
+    pub fn parse(raw: impl IntoIterator<Item = String>) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with("--") {
+                args.command = it.next();
+            }
+        }
+        while let Some(tok) = it.next() {
+            let Some(key) = tok.strip_prefix("--") else {
+                bail!("unexpected positional argument `{tok}` (options are --key value)");
+            };
+            match it.peek() {
+                Some(v) if !v.starts_with("--") => {
+                    args.opts.insert(key.to_string(), it.next().expect("peeked"));
+                }
+                _ => args.flags.push(key.to_string()),
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn parse_num<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<T>()
+                .map_err(|e| anyhow!("--{name} `{s}`: {e}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["fig", "--id", "6", "--trials", "3", "--json"]);
+        assert_eq!(a.command.as_deref(), Some("fig"));
+        assert_eq!(a.get("id"), Some("6"));
+        assert_eq!(a.parse_num::<u64>("trials", 1).unwrap(), 3);
+        assert!(a.flag("json"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["sort"]);
+        assert_eq!(a.parse_num::<usize>("n", 1024).unwrap(), 1024);
+        assert_eq!(a.get_or("dataset", "mapreduce"), "mapreduce");
+    }
+
+    #[test]
+    fn bad_number_is_an_error() {
+        let a = parse(&["sort", "--n", "abc"]);
+        assert!(a.parse_num::<usize>("n", 1).is_err());
+    }
+
+    #[test]
+    fn rejects_positional_garbage() {
+        assert!(Args::parse(vec!["sort".into(), "oops".into()]).is_err());
+    }
+
+    #[test]
+    fn no_command() {
+        let a = parse(&["--n", "5"]);
+        assert_eq!(a.command, None);
+        assert_eq!(a.get("n"), Some("5"));
+    }
+}

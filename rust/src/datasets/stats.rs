@@ -1,0 +1,107 @@
+//! Workload statistics that predict column-skipping performance.
+//!
+//! The paper's speedups are driven by two dataset properties (§III):
+//! leading-zero runs (scenario 1) and shared prefixes / repetitions
+//! (scenario 2). This module quantifies both so the figure harnesses can
+//! report *why* a dataset speeds up, not just by how much.
+
+/// Summary statistics of a sorting workload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkloadStats {
+    pub n: usize,
+    pub min: u32,
+    pub max: u32,
+    /// Mean leading-zero count within `width` bits.
+    pub mean_leading_zeros: f64,
+    /// Unique values / n.
+    pub unique_fraction: f64,
+    /// Mean shared-prefix length (bits, within `width`) between
+    /// *consecutive values of the sorted order* — the quantity state
+    /// recording exploits when it resumes below a recorded column.
+    pub mean_sorted_prefix: f64,
+}
+
+/// Compute [`WorkloadStats`] for `values` at the given bit width.
+pub fn analyze(values: &[u32], width: u32) -> WorkloadStats {
+    assert!(!values.is_empty());
+    assert!(width >= 1 && width <= 32);
+    let n = values.len();
+    let mut sorted = values.to_vec();
+    sorted.sort_unstable();
+    let min = sorted[0];
+    let max = sorted[n - 1];
+    let mean_leading_zeros = values
+        .iter()
+        .map(|&v| (v.leading_zeros().min(32) as i64 - (32 - width) as i64).max(0) as f64)
+        .sum::<f64>()
+        / n as f64;
+    let mut uniq = 1usize;
+    let mut prefix_sum = 0f64;
+    for i in 1..n {
+        if sorted[i] != sorted[i - 1] {
+            uniq += 1;
+        }
+        let x = sorted[i] ^ sorted[i - 1];
+        let shared = if x == 0 { width } else { x.leading_zeros().saturating_sub(32 - width) };
+        prefix_sum += shared as f64;
+    }
+    WorkloadStats {
+        n,
+        min,
+        max,
+        mean_leading_zeros,
+        unique_fraction: uniq as f64 / n as f64,
+        mean_sorted_prefix: if n > 1 { prefix_sum / (n - 1) as f64 } else { width as f64 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{Dataset, DatasetKind};
+
+    #[test]
+    fn constant_array_stats() {
+        let s = analyze(&[5, 5, 5, 5], 8);
+        assert_eq!(s.min, 5);
+        assert_eq!(s.max, 5);
+        assert_eq!(s.unique_fraction, 0.25);
+        assert_eq!(s.mean_sorted_prefix, 8.0);
+        assert_eq!(s.mean_leading_zeros, 5.0); // 5 = 00000101 in 8 bits
+    }
+
+    #[test]
+    fn leading_zeros_respects_width() {
+        let s = analyze(&[1], 4);
+        assert_eq!(s.mean_leading_zeros, 3.0);
+        let s32 = analyze(&[1], 32);
+        assert_eq!(s32.mean_leading_zeros, 31.0);
+    }
+
+    #[test]
+    fn prefix_of_adjacent_values() {
+        // 8=1000, 9=1001 share 3 bits; 9,10=1010 share 2 bits (width 4).
+        let s = analyze(&[8, 9, 10], 4);
+        assert!((s.mean_sorted_prefix - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mapreduce_beats_uniform_on_both_axes() {
+        let u = Dataset::generate32(DatasetKind::Uniform, 1024, 1);
+        let m = Dataset::generate32(DatasetKind::MapReduce, 1024, 1);
+        let su = analyze(&u.values, 32);
+        let sm = analyze(&m.values, 32);
+        assert!(sm.mean_leading_zeros > su.mean_leading_zeros + 8.0);
+        assert!(sm.mean_sorted_prefix > su.mean_sorted_prefix + 8.0);
+        assert!(sm.unique_fraction < su.unique_fraction);
+    }
+
+    #[test]
+    fn clustered_has_more_leading_zeros_than_normal() {
+        let c = Dataset::generate32(DatasetKind::Clustered, 1024, 2);
+        let n = Dataset::generate32(DatasetKind::Normal, 1024, 2);
+        let sc = analyze(&c.values, 32);
+        let sn = analyze(&n.values, 32);
+        assert!(sc.mean_leading_zeros > sn.mean_leading_zeros);
+    }
+}

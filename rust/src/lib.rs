@@ -1,0 +1,76 @@
+//! # memsort — memristive in-memory sorting with column skipping
+//!
+//! A production-grade reproduction of *"Fast and Scalable Memristive
+//! In-Memory Sorting with Column-Skipping Algorithm"* (Yu, Jing, Yang, Tao;
+//! cs.AR 2022), built as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's contribution: the near-memory
+//!   circuit (column processor, row processor, k-entry state controller),
+//!   the column-skipping sort algorithm, multi-bank management, the
+//!   HPCA'21 bit-traversal baseline, a digital merge-sorter comparison
+//!   point, dataset generators, a calibrated 40nm area/power/energy cost
+//!   model, and a multi-threaded sort service.
+//! * **L2/L1 (python/, build-time only)** — the in-memory *array compute*
+//!   (iterative min search over bit columns) expressed as a JAX scan over
+//!   a Pallas kernel, AOT-lowered to HLO text.
+//! * **Runtime** — [`runtime::PjrtEngine`] loads the AOT artifacts via the
+//!   PJRT C API (`xla` crate) and executes them from the Rust hot path;
+//!   Python never runs at request time.
+//!
+//! ## Quick start
+//!
+//! ```
+//! use memsort::prelude::*;
+//!
+//! let data = vec![8u32, 9, 10];
+//! let mut sorter = ColSkipSorter::new(ColSkipConfig { width: 4, k: 2, ..Default::default() });
+//! let out = sorter.sort_with_stats(&data);
+//! assert_eq!(out.sorted, vec![8, 9, 10]);
+//! assert_eq!(out.stats.crs, 7); // Fig. 3 of the paper: 7 CRs vs baseline's 12
+//! ```
+//!
+//! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
+//! the paper-vs-measured record of every figure and table.
+
+pub mod bench;
+pub mod bits;
+pub mod cli;
+pub mod coordinator;
+pub mod cost;
+pub mod datasets;
+pub mod memory;
+pub mod multibank;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod sorter;
+pub mod testing;
+
+/// Convenience re-exports for the common entry points.
+pub mod prelude {
+    pub use crate::bits::{BitPlanes, RowMask};
+    pub use crate::cost::{CostModel, SorterArch};
+    pub use crate::datasets::{Dataset, DatasetKind};
+    pub use crate::memory::{Bank, BankConfig};
+    pub use crate::multibank::{MultiBankConfig, MultiBankSorter};
+    pub use crate::sorter::{
+        baseline::BaselineSorter,
+        colskip::{ColSkipConfig, ColSkipSorter},
+        merge::MergeSorter,
+        InMemorySorter, SortOutput, SortStats,
+    };
+}
+
+/// Paper-level constants shared across the stack.
+pub mod params {
+    /// Clock frequency of all prototype sorters in the paper (§V): 500 MHz.
+    pub const CLOCK_HZ: f64 = 500.0e6;
+    /// Default data precision (bits) used in the evaluation (§V).
+    pub const DEFAULT_WIDTH: u32 = 32;
+    /// Default array length used in the evaluation (§V).
+    pub const DEFAULT_N: usize = 1024;
+    /// RRAM high-resistance state (§V): 10 MΩ.
+    pub const RRAM_HRS_OHM: f64 = 10.0e6;
+    /// RRAM low-resistance state (§V): 100 kΩ.
+    pub const RRAM_LRS_OHM: f64 = 100.0e3;
+}

@@ -1,0 +1,434 @@
+//! `memsort` — CLI for the column-skipping memristive in-memory sorting
+//! reproduction. Subcommands:
+//!
+//! * `sort`   — sort a generated dataset on a chosen sorter, print stats
+//! * `gen`    — emit a dataset (one value per line)
+//! * `stats`  — workload statistics (leading zeros, repetitions, prefixes)
+//! * `fig`    — regenerate a paper figure (6, 7, 8a, 8b) as table/JSON
+//! * `report` — headline paper-vs-measured summary (abstract numbers)
+//! * `serve`  — run the sort service demo (native/pjrt/hybrid engines)
+
+use anyhow::{anyhow, bail, Result};
+
+use memsort::cli::Args;
+use memsort::coordinator::{EngineKind, ServiceConfig, SortService};
+use memsort::cost::{Activity, CostModel, SorterArch};
+use memsort::datasets::{stats::analyze, Dataset, DatasetKind};
+use memsort::multibank::{MultiBankConfig, MultiBankSorter};
+use memsort::report::{self, json::Json};
+use memsort::sorter::baseline::BaselineSorter;
+use memsort::sorter::colskip::{ColSkipConfig, ColSkipSorter};
+use memsort::sorter::merge::MergeSorter;
+use memsort::sorter::InMemorySorter;
+
+fn main() {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n");
+            usage();
+            std::process::exit(2);
+        }
+    };
+    let r = match args.command.as_deref() {
+        Some("sort") => cmd_sort(&args),
+        Some("gen") => cmd_gen(&args),
+        Some("stats") => cmd_stats(&args),
+        Some("fig") => cmd_fig(&args),
+        Some("report") => cmd_report(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("trace") => cmd_trace(&args),
+        Some("energy") => cmd_energy(&args),
+        Some(other) => {
+            eprintln!("unknown command `{other}`\n");
+            usage();
+            std::process::exit(2);
+        }
+        None => {
+            usage();
+            Ok(())
+        }
+    };
+    if let Err(e) = r {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() {
+    println!(
+        "memsort — column-skipping memristive in-memory sorting (cs.AR 2022)\n\
+         \n\
+         USAGE: memsort <command> [--key value ...]\n\
+         \n\
+         COMMANDS\n\
+           sort    --dataset <uniform|normal|clustered|kruskal|mapreduce>\n\
+                   --sorter <colskip|baseline|merge|multibank> --n 1024\n\
+                   --width 32 --k 2 --banks 16 --seed 42\n\
+           gen     --dataset <kind> --n 1024 --seed 42\n\
+           stats   --dataset <kind> --n 1024 --seed 42\n\
+           fig     --id <6|7|8a|8b> [--trials 5] [--n 1024] [--json]\n\
+           report  [--trials 5] [--seed 42]\n\
+           serve   --engine <native|pjrt|hybrid> --workers 4\n\
+                   --requests 64 --n 1024 [--artifacts artifacts]\n\
+           trace   --dataset <kind> --n 8 --width 8 --k 2 [--iters 6]\n\
+                   (Fig. 2/3-style near-memory circuit schedule)\n\
+           energy  --dataset <kind> --n 1024 --k 2\n\
+                   (per-op energy breakdown from the metered run)\n"
+    );
+}
+
+fn dataset_from(args: &Args) -> Result<Dataset> {
+    if let Some(path) = args.get("file") {
+        // Real-data path: one unsigned decimal value per line.
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("reading --file {path}: {e}"))?;
+        let values = text
+            .lines()
+            .map(str::trim)
+            .filter(|l| !l.is_empty() && !l.starts_with('#'))
+            .map(|l| l.parse::<u32>().map_err(|e| anyhow!("--file {path}: `{l}`: {e}")))
+            .collect::<Result<Vec<u32>>>()?;
+        if values.is_empty() {
+            bail!("--file {path} contains no values");
+        }
+        return Ok(Dataset { kind: DatasetKind::Uniform, seed: 0, values });
+    }
+    let kind = DatasetKind::parse(args.get_or("dataset", "mapreduce"))
+        .ok_or_else(|| anyhow!("unknown dataset (see usage)"))?;
+    let n = args.parse_num("n", 1024usize)?;
+    let width = args.parse_num("width", 32u32)?;
+    let seed = args.parse_num("seed", 42u64)?;
+    Ok(Dataset::generate(kind, n, width, seed))
+}
+
+fn cmd_sort(args: &Args) -> Result<()> {
+    let d = dataset_from(args)?;
+    let width = args.parse_num("width", 32u32)?;
+    let k = args.parse_num("k", 2usize)?;
+    let banks = args.parse_num("banks", 16usize)?;
+    let name = args.get_or("sorter", "colskip");
+    let mut sorter: Box<dyn InMemorySorter> = match name {
+        "colskip" => Box::new(ColSkipSorter::new(ColSkipConfig { width, k, ..Default::default() })),
+        "baseline" => Box::new(BaselineSorter::with_width(width)),
+        "merge" => Box::new(MergeSorter::new()),
+        "multibank" => Box::new(MultiBankSorter::new(MultiBankConfig {
+            width,
+            k,
+            banks,
+            ..Default::default()
+        })),
+        other => bail!("unknown sorter `{other}`"),
+    };
+    let out = sorter.sort_with_stats(&d.values);
+    let n = d.values.len();
+    let mut check = d.values.clone();
+    check.sort_unstable();
+    println!("sorter        : {}", sorter.name());
+    println!("dataset       : {} (n={n}, w={width}, seed={})", d.kind.name(), d.seed);
+    println!("correct       : {}", out.sorted == check);
+    println!("column reads  : {}", out.stats.crs);
+    println!("state loads   : {}", out.stats.sls);
+    println!("drains        : {}", out.stats.drains);
+    println!("cycles        : {}", out.stats.cycles());
+    println!("cycles/number : {:.3}", out.stats.cycles_per_number(n));
+    println!(
+        "speedup vs [18]: {:.2}x",
+        (n as u64 * width as u64) as f64 / out.stats.cycles() as f64
+    );
+    println!("throughput    : {:.2} Mnum/s @500MHz", out.stats.throughput(n) / 1e6);
+    Ok(())
+}
+
+fn cmd_gen(args: &Args) -> Result<()> {
+    let d = dataset_from(args)?;
+    for v in &d.values {
+        println!("{v}");
+    }
+    Ok(())
+}
+
+fn cmd_stats(args: &Args) -> Result<()> {
+    let d = dataset_from(args)?;
+    let width = args.parse_num("width", 32u32)?;
+    let s = analyze(&d.values, width);
+    println!("dataset             : {}", d.kind.name());
+    println!("n                   : {}", s.n);
+    println!("min / max           : {} / {}", s.min, s.max);
+    println!("mean leading zeros  : {:.2} bits", s.mean_leading_zeros);
+    println!("unique fraction     : {:.3}", s.unique_fraction);
+    println!("mean sorted prefix  : {:.2} bits", s.mean_sorted_prefix);
+    Ok(())
+}
+
+fn cmd_fig(args: &Args) -> Result<()> {
+    let id = args.get("id").ok_or_else(|| anyhow!("--id <6|7|8a|8b> required"))?;
+    let n = args.parse_num("n", 1024usize)?;
+    let width = args.parse_num("width", 32u32)?;
+    let trials = args.parse_num("trials", 5u64)?;
+    let seed = args.parse_num("seed", 42u64)?;
+    let kmax = args.parse_num("kmax", 8usize)?;
+    let json = args.flag("json");
+    match id {
+        "6" => {
+            let pts = report::fig6(n, width, kmax, trials, seed);
+            if json {
+                println!(
+                    "{}",
+                    Json::arr(pts.iter().map(|p| Json::obj([
+                        ("dataset", p.dataset.name().into()),
+                        ("k", p.k.into()),
+                        ("cycles_per_number", p.cycles_per_number.into()),
+                        ("speedup", p.speedup.into()),
+                    ])))
+                    .render()
+                );
+            } else {
+                let rows: Vec<Vec<String>> = pts
+                    .iter()
+                    .map(|p| {
+                        vec![
+                            p.dataset.name().to_string(),
+                            p.k.to_string(),
+                            format!("{:.2}", p.cycles_per_number),
+                            format!("{:.2}", p.speedup),
+                        ]
+                    })
+                    .collect();
+                println!("Fig. 6 — normalized speedup over baseline (N={n}, w={width})");
+                print!("{}", report::render_table(&["dataset", "k", "cyc/num", "speedup"], &rows));
+            }
+        }
+        "7" => {
+            let pts = report::fig7(n, width, kmax, trials, seed);
+            if json {
+                println!(
+                    "{}",
+                    Json::arr(pts.iter().map(|p| Json::obj([
+                        ("k", p.k.into()),
+                        ("cycles_per_number", p.cycles_per_number.into()),
+                        ("area_kum2", p.area_kum2.into()),
+                        ("power_mw", p.power_mw.into()),
+                        ("norm_area", p.norm_area.into()),
+                        ("norm_power", p.norm_power.into()),
+                        ("area_eff_ratio", p.area_eff_ratio.into()),
+                        ("energy_eff_ratio", p.energy_eff_ratio.into()),
+                    ])))
+                    .render()
+                );
+            } else {
+                let rows: Vec<Vec<String>> = pts
+                    .iter()
+                    .map(|p| {
+                        vec![
+                            p.k.to_string(),
+                            format!("{:.2}", p.cycles_per_number),
+                            format!("{:.1}", p.area_kum2),
+                            format!("{:.1}", p.power_mw),
+                            format!("{:.3}", p.norm_area),
+                            format!("{:.3}", p.norm_power),
+                            format!("{:.2}", p.area_eff_ratio),
+                            format!("{:.2}", p.energy_eff_ratio),
+                        ]
+                    })
+                    .collect();
+                println!("Fig. 7 — area/power vs k on MapReduce (N={n}, w={width})");
+                print!(
+                    "{}",
+                    report::render_table(
+                        &["k", "cyc/num", "area", "power", "n.area", "n.power", "AE x", "EE x"],
+                        &rows
+                    )
+                );
+            }
+        }
+        "8a" => {
+            let rows_data = report::fig8a(n, width, trials, seed);
+            if json {
+                println!(
+                    "{}",
+                    Json::arr(rows_data.iter().map(|r| Json::obj([
+                        ("name", r.name.into()),
+                        ("cycles_per_number", r.cycles_per_number.into()),
+                        ("area_kum2", r.area_kum2.into()),
+                        ("area_eff", r.area_eff.into()),
+                        ("power_mw", r.power_mw.into()),
+                        ("energy_eff", r.energy_eff.into()),
+                    ])))
+                    .render()
+                );
+            } else {
+                let rows: Vec<Vec<String>> = rows_data
+                    .iter()
+                    .map(|r| {
+                        vec![
+                            r.name.to_string(),
+                            format!("{:.2}", r.cycles_per_number),
+                            format!("{:.1} ({:.2})", r.area_kum2, r.area_eff),
+                            format!("{:.1} ({:.1})", r.power_mw, r.energy_eff),
+                        ]
+                    })
+                    .collect();
+                println!("Fig. 8(a) — implementation summary (MapReduce, N={n}, w={width})");
+                print!(
+                    "{}",
+                    report::render_table(
+                        &["sorter", "cyc/num", "area Kµm² (AE)", "power mW (EE)"],
+                        &rows
+                    )
+                );
+            }
+        }
+        "8b" => {
+            let pts = report::fig8b(n, width);
+            if json {
+                println!(
+                    "{}",
+                    Json::arr(pts.iter().map(|p| Json::obj([
+                        ("sub_len", p.sub_len.into()),
+                        ("banks", p.banks.into()),
+                        ("norm_area", p.norm_area.into()),
+                        ("norm_power", p.norm_power.into()),
+                    ])))
+                    .render()
+                );
+            } else {
+                let rows: Vec<Vec<String>> = pts
+                    .iter()
+                    .map(|p| {
+                        vec![
+                            p.sub_len.to_string(),
+                            p.banks.to_string(),
+                            format!("{:.3}", p.norm_area),
+                            format!("{:.3}", p.norm_power),
+                        ]
+                    })
+                    .collect();
+                println!("Fig. 8(b) — multibank area/power (N={n}, w={width}, k=2)");
+                print!("{}", report::render_table(&["Ns", "banks", "n.area", "n.power"], &rows));
+            }
+        }
+        other => bail!("unknown figure `{other}` (6, 7, 8a, 8b)"),
+    }
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let trials = args.parse_num("trials", 5u64)?;
+    let seed = args.parse_num("seed", 42u64)?;
+    let (n, width) = report::paper_defaults();
+    let rows = report::fig8a(n, width, trials, seed);
+    let base = &rows[0];
+    let cs = &rows[2];
+    let model = CostModel::calibrated();
+    let speedup = base.cycles_per_number / cs.cycles_per_number;
+    let ae = cs.area_eff / base.area_eff;
+    let ee = cs.energy_eff / base.energy_eff;
+    println!("headline (paper abstract vs measured, MapReduce, N={n}, w={width}, k=2)");
+    println!("  speedup           : paper 4.08x | measured {speedup:.2}x");
+    println!("  area efficiency   : paper 3.14x | measured {ae:.2}x");
+    println!("  energy efficiency : paper 3.39x | measured {ee:.2}x");
+    println!(
+        "  col-skip cyc/num  : paper 7.84  | measured {:.2}",
+        cs.cycles_per_number
+    );
+    println!(
+        "  col-skip area     : paper 101.1 | model {:.1} Kµm²",
+        model.area_kum2(SorterArch::ColSkip { n, w: width, k: 2 })
+    );
+    println!(
+        "  col-skip power    : paper 385.2 | model(nominal) {:.1} mW",
+        model.power_mw(SorterArch::ColSkip { n, w: width, k: 2 }, Activity::nominal_colskip())
+    );
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    let kind = DatasetKind::parse(args.get_or("dataset", "clustered"))
+        .ok_or_else(|| anyhow!("unknown dataset (see usage)"))?;
+    let n = args.parse_num("n", 8usize)?;
+    let width = args.parse_num("width", 8u32)?;
+    let k = args.parse_num("k", 2usize)?;
+    let seed = args.parse_num("seed", 42u64)?;
+    let iters = args.parse_num("iters", 6usize)?;
+    let d = Dataset::generate(kind, n, width, seed);
+    println!("values: {:?}", d.values);
+    let (out, run) = memsort::sim::trace_sort(
+        &d.values,
+        &ColSkipConfig { width, k, ..Default::default() },
+    );
+    print!("{}", memsort::sim::render_schedule(&run, iters));
+    println!(
+        "total: {} CRs, {} SLs, {} drains, {} cycles ({:.2} cyc/num)",
+        out.stats.crs,
+        out.stats.sls,
+        out.stats.drains,
+        out.stats.cycles(),
+        out.stats.cycles_per_number(n)
+    );
+    Ok(())
+}
+
+fn cmd_energy(args: &Args) -> Result<()> {
+    use memsort::cost::energy::EnergyModel;
+    use memsort::memory::Bank;
+    let d = dataset_from(args)?;
+    let width = args.parse_num("width", 32u32)?;
+    let k = args.parse_num("k", 2usize)?;
+    let n = d.values.len();
+    let mut bank = Bank::load(&d.values, width);
+    let sorter = ColSkipSorter::new(ColSkipConfig { width, k, ..Default::default() });
+    let out = sorter.sort_bank(&mut bank);
+    let em = EnergyModel::default();
+    let b = em.breakdown(bank.meter(), &out.stats, n, width, k);
+    println!("energy breakdown ({} n={n} w={width} k={k}):", d.kind.name());
+    println!("  array sensing    : {:.3} nJ", b.array_sense_j * 1e9);
+    println!("  circuit CR path  : {:.3} nJ", b.circuit_cr_j * 1e9);
+    println!("  wordline updates : {:.3} nJ", b.circuit_re_j * 1e9);
+    println!("  state table      : {:.3} nJ", b.state_table_j * 1e9);
+    println!("  (array load      : {:.3} nJ, one-time)", b.write_j * 1e9);
+    println!("  total / element  : {:.3} pJ", b.per_element_j(n) * 1e12);
+    println!(
+        "  avg power @500MHz: {:.1} mW over {} cycles",
+        b.average_power_w(out.stats.cycles()) * 1e3,
+        out.stats.cycles()
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let engine = EngineKind::parse(args.get_or("engine", "native"))
+        .ok_or_else(|| anyhow!("--engine must be native|pjrt|hybrid"))?;
+    let workers = args.parse_num("workers", 4usize)?;
+    let requests = args.parse_num("requests", 64usize)?;
+    let n = args.parse_num("n", 1024usize)?;
+    let seed = args.parse_num("seed", 42u64)?;
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let svc = SortService::start(ServiceConfig {
+        workers,
+        engine,
+        artifacts_dir: artifacts.into(),
+        ..Default::default()
+    })?;
+    let t0 = std::time::Instant::now();
+    let batch: Vec<Vec<u32>> = (0..requests)
+        .map(|i| Dataset::generate32(DatasetKind::MapReduce, n, seed + i as u64).values)
+        .collect();
+    let resps = svc.submit_batch(batch)?;
+    let wall = t0.elapsed();
+    let m = svc.metrics();
+    println!("engine          : {}", engine.name());
+    println!("workers         : {workers}");
+    println!("requests        : {} ok, {} errors", m.completed, m.errors);
+    println!("elements sorted : {}", m.elements);
+    println!("wall time       : {:.1} ms", wall.as_secs_f64() * 1e3);
+    println!(
+        "service rate    : {:.2} Mnum/s",
+        m.elements as f64 / wall.as_secs_f64() / 1e6
+    );
+    println!("latency p50/p99 : {} µs / {} µs", m.p50_us, m.p99_us);
+    println!("sim cyc/num     : {:.2}", m.cycles_per_number);
+    debug_assert_eq!(resps.len(), requests);
+    svc.shutdown();
+    Ok(())
+}

@@ -1,0 +1,129 @@
+//! Stuck-at fault injection for the 1T1R array.
+//!
+//! Memristive cells fail predominantly as stuck-at faults (a cell frozen
+//! in its low- or high-resistance state). The paper assumes a pristine
+//! array; we add an injection layer so the `fault_injection` example can
+//! quantify how device yield translates into sorting errors — a substrate
+//! any deployable in-memory sorter needs.
+
+use crate::bits::BitPlanes;
+use crate::datasets::rng::Rng;
+
+/// The failure mode of a single cell.
+#[derive(Copy, Clone, PartialEq, Eq, Debug)]
+pub enum FaultKind {
+    /// Cell reads 0 regardless of what was written (stuck in HRS).
+    StuckAt0,
+    /// Cell reads 1 regardless of what was written (stuck in LRS).
+    StuckAt1,
+}
+
+/// A set of faulty cells, addressed by (row, bit column).
+#[derive(Clone, Debug, Default)]
+pub struct FaultMap {
+    faults: Vec<(usize, u32, FaultKind)>,
+}
+
+impl FaultMap {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a fault at (`row`, `col`).
+    pub fn add(&mut self, row: usize, col: u32, kind: FaultKind) {
+        self.faults.push((row, col, kind));
+    }
+
+    /// Draw a random fault map with per-cell Bernoulli rate `ber`
+    /// (split evenly between stuck-at-0 and stuck-at-1).
+    pub fn random(rows: usize, width: u32, ber: f64, rng: &mut Rng) -> Self {
+        let mut fm = FaultMap::new();
+        for r in 0..rows {
+            for c in 0..width {
+                if rng.f64() < ber {
+                    let kind =
+                        if rng.f64() < 0.5 { FaultKind::StuckAt0 } else { FaultKind::StuckAt1 };
+                    fm.add(r, c, kind);
+                }
+            }
+        }
+        fm
+    }
+
+    /// Number of faulty cells.
+    pub fn len(&self) -> usize {
+        self.faults.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// Force the stored planes to reflect the stuck cells.
+    pub fn apply(&self, planes: &mut BitPlanes) {
+        for &(row, col, kind) in &self.faults {
+            planes.set_bit(row, col, kind == FaultKind::StuckAt1);
+        }
+    }
+
+    /// The corrupted value a given pristine value would read back as.
+    pub fn corrupt_value(&self, row: usize, value: u32) -> u32 {
+        let mut v = value;
+        for &(r, c, kind) in &self.faults {
+            if r == row {
+                match kind {
+                    FaultKind::StuckAt0 => v &= !(1 << c),
+                    FaultKind::StuckAt1 => v |= 1 << c,
+                }
+            }
+        }
+        v
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &(usize, u32, FaultKind)> {
+        self.faults.iter()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn apply_forces_bits() {
+        let mut planes = BitPlanes::new(&[0b1010, 0b0101], 4);
+        let mut fm = FaultMap::new();
+        fm.add(0, 1, FaultKind::StuckAt0);
+        fm.add(1, 3, FaultKind::StuckAt1);
+        fm.apply(&mut planes);
+        assert_eq!(planes.read_row(0), 0b1000);
+        assert_eq!(planes.read_row(1), 0b1101);
+    }
+
+    #[test]
+    fn corrupt_value_matches_apply() {
+        let vals = [0b1010u32, 0b0101];
+        let mut fm = FaultMap::new();
+        fm.add(0, 1, FaultKind::StuckAt0);
+        fm.add(0, 0, FaultKind::StuckAt1);
+        let mut planes = BitPlanes::new(&vals, 4);
+        fm.apply(&mut planes);
+        assert_eq!(planes.read_row(0), fm.corrupt_value(0, vals[0]));
+        assert_eq!(planes.read_row(1), fm.corrupt_value(1, vals[1]));
+    }
+
+    #[test]
+    fn random_rate_is_roughly_ber() {
+        let mut rng = Rng::new(21);
+        let fm = FaultMap::random(1000, 32, 0.01, &mut rng);
+        let cells = 1000.0 * 32.0;
+        let rate = fm.len() as f64 / cells;
+        assert!((rate - 0.01).abs() < 0.003, "rate={rate}");
+    }
+
+    #[test]
+    fn zero_ber_is_clean() {
+        let mut rng = Rng::new(22);
+        assert!(FaultMap::random(100, 32, 0.0, &mut rng).is_empty());
+    }
+}

@@ -1,0 +1,280 @@
+//! Bit-accurate model of the 1T1R memristive memory bank (paper §II.B,
+//! Fig. 4).
+//!
+//! The bank stores the array as bit planes (MSB in the leftmost column)
+//! and exposes the single analog primitive the near-memory circuit relies
+//! on: a **column read (CR)** — sense amplifiers on every select line
+//! measure the cell currents of one bit column, restricted to rows whose
+//! wordlines are still enabled. Everything else (row exclusion, state
+//! recording, skipping) is digital and lives in [`crate::sorter`].
+//!
+//! The model meters every operation so the cost model (area/power/energy)
+//! can be driven by *measured* switching activity, as the paper does with
+//! PowerArtist (§V.B).
+
+pub mod fault;
+pub mod sense;
+
+use crate::bits::{BitPlanes, RowMask};
+use fault::FaultMap;
+
+/// Static configuration of a bank.
+#[derive(Clone, Debug)]
+pub struct BankConfig {
+    /// Number of rows (array elements) the bank holds.
+    pub rows: usize,
+    /// Bit width of each element.
+    pub width: u32,
+}
+
+/// Result of a column read as produced by the sense amplifiers plus the
+/// row controller's all-0s/all-1s judgement (paper Fig. 4).
+#[derive(Clone, Debug)]
+pub struct ColumnRead {
+    /// Rows (among the queried active set) whose cell in this column is 1.
+    pub ones: RowMask,
+    /// At least one active row read 1.
+    pub any_one: bool,
+    /// At least one active row read 0.
+    pub any_zero: bool,
+}
+
+impl ColumnRead {
+    /// A column is *informative* when it is neither all-0s nor all-1s over
+    /// the active rows — only then does a row exclusion change state.
+    #[inline]
+    pub fn informative(&self) -> bool {
+        self.any_one && self.any_zero
+    }
+}
+
+/// Operation counters for one bank (CRs, REs, row senses, writes).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct OpMeter {
+    /// Column reads issued.
+    pub column_reads: u64,
+    /// Total select lines sensed across all CRs (= Σ active rows per CR).
+    pub rows_sensed: u64,
+    /// Wordline (RE-state) register updates.
+    pub wordline_updates: u64,
+    /// Cell writes (array load).
+    pub cell_writes: u64,
+    /// Full row reads (value readout of an identified min row).
+    pub row_reads: u64,
+}
+
+/// A single 1T1R memory bank with near-memory sense circuitry.
+#[derive(Clone, Debug)]
+pub struct Bank {
+    config: BankConfig,
+    planes: BitPlanes,
+    values: Vec<u32>,
+    meter: OpMeter,
+    faults: Option<FaultMap>,
+}
+
+impl Bank {
+    /// Load `values` into a fresh bank (programs every cell once).
+    pub fn load(values: &[u32], width: u32) -> Self {
+        let planes = BitPlanes::new(values, width);
+        let mut meter = OpMeter::default();
+        meter.cell_writes = values.len() as u64 * width as u64;
+        Bank {
+            config: BankConfig { rows: values.len(), width },
+            planes,
+            values: values.to_vec(),
+            meter,
+            faults: None,
+        }
+    }
+
+    /// Load with a fault map applied (stuck-at cells override the data).
+    pub fn load_with_faults(values: &[u32], width: u32, faults: FaultMap) -> Self {
+        let mut bank = Self::load(values, width);
+        faults.apply(&mut bank.planes);
+        bank.faults = Some(faults);
+        bank
+    }
+
+    pub fn config(&self) -> &BankConfig {
+        &self.config
+    }
+
+    pub fn rows(&self) -> usize {
+        self.config.rows
+    }
+
+    pub fn width(&self) -> u32 {
+        self.config.width
+    }
+
+    /// The operation meter (for the activity-driven power model).
+    pub fn meter(&self) -> &OpMeter {
+        &self.meter
+    }
+
+    /// Column read: sense bit column `col` over the rows in `active`.
+    ///
+    /// Writes the sensed 1-pattern into `ones_out` (no allocation) and
+    /// returns the all-0s/all-1s judgement. `ones_out` must span the bank.
+    pub fn column_read_into(
+        &mut self,
+        col: u32,
+        active: &RowMask,
+        ones_out: &mut RowMask,
+    ) -> (bool, bool) {
+        debug_assert!(col < self.config.width);
+        debug_assert_eq!(active.len(), self.config.rows);
+        self.meter.column_reads += 1;
+        // Fused single pass over the limbs: sensed-row popcount, the
+        // ones image, and both all-0s/all-1s judgements. (This is the
+        // simulator's hottest loop — 86% of sort time before fusion; see
+        // EXPERIMENTS.md §Perf.)
+        let mut any_one = 0u64;
+        let mut any_zero = 0u64;
+        let mut sensed = 0u64;
+        let plane = self.planes.plane(col);
+        for ((o, &p), &a) in ones_out
+            .words_mut()
+            .iter_mut()
+            .zip(plane.words())
+            .zip(active.words())
+        {
+            let ones_w = p & a;
+            *o = ones_w;
+            any_one |= ones_w;
+            any_zero |= a & !p;
+            sensed += a.count_ones() as u64;
+        }
+        self.meter.rows_sensed += sensed;
+        (any_one != 0, any_zero != 0)
+    }
+
+    /// Column read, judgement only: sense column `col` over `active` and
+    /// return (any_one, any_zero) without materializing the ones image.
+    ///
+    /// This is the sorter hot path: the wordline update needs only
+    /// `active &= !plane` (rows that sensed 1 drop out), so the ones
+    /// image of [`Bank::column_read_into`] is redundant — see
+    /// EXPERIMENTS.md §Perf. Pair with [`Bank::plane_for_exclusion`].
+    pub fn column_read_judge(&mut self, col: u32, active: &RowMask) -> (bool, bool) {
+        debug_assert!(col < self.config.width);
+        debug_assert_eq!(active.len(), self.config.rows);
+        self.meter.column_reads += 1;
+        let mut any_one = 0u64;
+        let mut any_zero = 0u64;
+        let mut sensed = 0u64;
+        for (&p, &a) in self.planes.plane(col).words().iter().zip(active.words()) {
+            any_one |= p & a;
+            any_zero |= a & !p;
+            sensed += a.count_ones() as u64;
+        }
+        self.meter.rows_sensed += sensed;
+        (any_one != 0, any_zero != 0)
+    }
+
+    /// The stored bit pattern of column `col`, for the row-exclusion
+    /// update after an informative [`Bank::column_read_judge`].
+    pub fn plane_for_exclusion(&self, col: u32) -> &RowMask {
+        self.planes.plane(col)
+    }
+
+    /// Column read returning an owned [`ColumnRead`] (test/API convenience;
+    /// the sorter hot path uses [`Bank::column_read_judge`]).
+    pub fn column_read(&mut self, col: u32, active: &RowMask) -> ColumnRead {
+        let mut ones = RowMask::new_empty(self.config.rows);
+        let (any_one, any_zero) = self.column_read_into(col, active, &mut ones);
+        ColumnRead { ones, any_one, any_zero }
+    }
+
+    /// Meter a wordline (RE-state) register update.
+    pub fn note_wordline_update(&mut self) {
+        self.meter.wordline_updates += 1;
+    }
+
+    /// Read the full value stored in `row` **as the cells hold it** (i.e.
+    /// including any injected faults). Metered as a row read.
+    pub fn read_row(&mut self, row: usize) -> u32 {
+        self.meter.row_reads += 1;
+        self.planes.read_row(row)
+    }
+
+    /// The pristine value loaded into `row` (oracle for fault experiments).
+    pub fn loaded_value(&self, row: usize) -> u32 {
+        self.values[row]
+    }
+
+    /// All pristine values (oracle view).
+    pub fn loaded_values(&self) -> &[u32] {
+        &self.values
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn column_read_matches_bit_patterns() {
+        // {8,9,10} in 4 bits — paper Fig. 1.
+        let mut bank = Bank::load(&[8, 9, 10], 4);
+        let all = RowMask::new_full(3);
+        let cr3 = bank.column_read(3, &all);
+        assert!(cr3.any_one && !cr3.any_zero && !cr3.informative());
+        let cr2 = bank.column_read(2, &all);
+        assert!(!cr2.any_one && cr2.any_zero && !cr2.informative());
+        let cr1 = bank.column_read(1, &all);
+        assert!(cr1.informative());
+        assert_eq!(cr1.ones.iter_set().collect::<Vec<_>>(), vec![2]);
+    }
+
+    #[test]
+    fn column_read_respects_active_mask() {
+        let mut bank = Bank::load(&[8, 9, 10], 4);
+        // Exclude row 2 (value 10): column 1 becomes all-0s.
+        let active = RowMask::from_rows(3, [0, 1]);
+        let cr = bank.column_read(1, &active);
+        assert!(!cr.any_one && cr.any_zero);
+    }
+
+    #[test]
+    fn empty_active_set_reads_nothing() {
+        let mut bank = Bank::load(&[8, 9, 10], 4);
+        let cr = bank.column_read(0, &RowMask::new_empty(3));
+        assert!(!cr.any_one && !cr.any_zero && !cr.informative());
+    }
+
+    #[test]
+    fn meter_counts_ops() {
+        let mut bank = Bank::load(&[1, 2, 3, 4], 8);
+        assert_eq!(bank.meter().cell_writes, 32);
+        let all = RowMask::new_full(4);
+        bank.column_read(0, &all);
+        bank.column_read(1, &all);
+        let half = RowMask::from_rows(4, [0, 1]);
+        bank.column_read(2, &half);
+        assert_eq!(bank.meter().column_reads, 3);
+        assert_eq!(bank.meter().rows_sensed, 4 + 4 + 2);
+        bank.read_row(0);
+        assert_eq!(bank.meter().row_reads, 1);
+    }
+
+    #[test]
+    fn read_row_roundtrips() {
+        let vals = [0u32, 1, 0xFFFF_FFFF, 0x8000_0001];
+        let mut bank = Bank::load(&vals, 32);
+        for (r, &v) in vals.iter().enumerate() {
+            assert_eq!(bank.read_row(r), v);
+        }
+    }
+
+    #[test]
+    fn faulty_bank_diverges_from_loaded_values() {
+        use fault::{FaultKind, FaultMap};
+        let mut fm = FaultMap::new();
+        fm.add(0, 3, FaultKind::StuckAt0); // clears MSB of value 8
+        let mut bank = Bank::load_with_faults(&[8, 9, 10], 4, fm);
+        assert_eq!(bank.read_row(0), 0);
+        assert_eq!(bank.loaded_value(0), 8);
+    }
+}

@@ -1,0 +1,139 @@
+//! Sense-amplifier margin model for the 1T1R column read.
+//!
+//! The paper's devices have HRS = 10 MΩ and LRS = 100 kΩ (§V) — a 100×
+//! resistance contrast. During a column read every select line carries the
+//! current of one cell, so the sense amp must distinguish
+//! `I_LRS = V_read / R_LRS` from `I_HRS = V_read / R_HRS`. This module
+//! computes the nominal read currents, the sense margin under log-normal
+//! device variation, and the expected bit-error rate for a given
+//! threshold — the physical justification for treating column reads as
+//! digital in the rest of the stack (at the paper's 100× contrast the
+//! misread probability is negligible; the model lets users check *their*
+//! device corner).
+
+use crate::params::{RRAM_HRS_OHM, RRAM_LRS_OHM};
+
+/// Device + readout parameters for one sense operation.
+#[derive(Clone, Debug)]
+pub struct SenseModel {
+    /// Read voltage on the bitline (V).
+    pub v_read: f64,
+    /// Low-resistance state (Ω).
+    pub r_lrs: f64,
+    /// High-resistance state (Ω).
+    pub r_hrs: f64,
+    /// Log-normal sigma of device resistance (relative, e.g. 0.3 = 30%).
+    pub sigma_rel: f64,
+}
+
+impl Default for SenseModel {
+    fn default() -> Self {
+        SenseModel { v_read: 0.2, r_lrs: RRAM_LRS_OHM, r_hrs: RRAM_HRS_OHM, sigma_rel: 0.25 }
+    }
+}
+
+impl SenseModel {
+    /// Nominal LRS read current (A).
+    pub fn i_lrs(&self) -> f64 {
+        self.v_read / self.r_lrs
+    }
+
+    /// Nominal HRS read current (A).
+    pub fn i_hrs(&self) -> f64 {
+        self.v_read / self.r_hrs
+    }
+
+    /// Geometric-mean threshold current (A) — optimal for log-normal states.
+    pub fn threshold(&self) -> f64 {
+        (self.i_lrs() * self.i_hrs()).sqrt()
+    }
+
+    /// Sense margin in decades of current between the two states.
+    pub fn margin_decades(&self) -> f64 {
+        (self.r_hrs / self.r_lrs).log10()
+    }
+
+    /// Probability a single cell read flips, assuming log-normal resistance
+    /// with relative sigma `sigma_rel` in both states and the geometric
+    /// threshold. Uses the Gaussian tail in log-domain.
+    pub fn bit_error_rate(&self) -> f64 {
+        // Distance from either state to the threshold in log10-current:
+        // half the margin; sigma in log10 units is sigma_rel / ln(10).
+        let half_margin = self.margin_decades() / 2.0;
+        let sigma_log10 = self.sigma_rel / std::f64::consts::LN_10;
+        q_function(half_margin / sigma_log10)
+    }
+
+    /// Per-column-read energy (J) for `active_rows` sensed lines, assuming
+    /// half the cells in each state on average and `t_sense` seconds.
+    pub fn column_read_energy(&self, active_rows: usize, t_sense: f64) -> f64 {
+        let i_avg = 0.5 * (self.i_lrs() + self.i_hrs());
+        self.v_read * i_avg * t_sense * active_rows as f64
+    }
+}
+
+/// Gaussian tail Q(x) = P(Z > x), via Abramowitz–Stegun 7.1.26 erfc.
+fn q_function(x: f64) -> f64 {
+    0.5 * erfc(x / std::f64::consts::SQRT_2)
+}
+
+fn erfc(x: f64) -> f64 {
+    // A&S 7.1.26, |error| <= 1.5e-7; extend to negative x by symmetry.
+    if x < 0.0 {
+        return 2.0 - erfc(-x);
+    }
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let poly = t
+        * (0.254829592
+            + t * (-0.284496736 + t * (1.421413741 + t * (-1.453152027 + t * 1.061405429))));
+    poly * (-x * x).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_contrast_is_two_decades() {
+        let m = SenseModel::default();
+        assert!((m.margin_decades() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn currents_ordered() {
+        let m = SenseModel::default();
+        assert!(m.i_lrs() > m.i_hrs());
+        let t = m.threshold();
+        assert!(t < m.i_lrs() && t > m.i_hrs());
+    }
+
+    #[test]
+    fn paper_device_ber_is_negligible() {
+        let m = SenseModel::default();
+        // One decade of separation vs ~0.11 decades of sigma ⇒ ~9 sigma.
+        assert!(m.bit_error_rate() < 1e-15, "ber={}", m.bit_error_rate());
+    }
+
+    #[test]
+    fn degraded_contrast_raises_ber() {
+        let bad =
+            SenseModel { r_hrs: 2.0 * RRAM_LRS_OHM, sigma_rel: 0.5, ..SenseModel::default() };
+        assert!(bad.bit_error_rate() > 1e-3);
+        assert!(bad.bit_error_rate() < 0.5);
+    }
+
+    #[test]
+    fn erfc_sanity() {
+        assert!((erfc(0.0) - 1.0).abs() < 1e-7);
+        assert!(erfc(3.0) < 1e-4);
+        assert!((erfc(-3.0) - 2.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn energy_scales_with_rows() {
+        let m = SenseModel::default();
+        let e1 = m.column_read_energy(1, 1e-9);
+        let e1024 = m.column_read_energy(1024, 1e-9);
+        assert!((e1024 / e1 - 1024.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,354 @@
+//! **Multi-bank management** (paper §IV, Fig. 5): a length-`N` array
+//! striped over `C` memristive banks, each with its own near-memory
+//! circuit (a length-`N/C` sub-sorter), synchronized by a thin manager so
+//! the ensemble behaves exactly like one length-`N` sorter.
+//!
+//! Synchronization rules from the paper:
+//! * **CR / SL** — broadcast: all column processors step the same column
+//!   in lockstep (`en_sync = OR(en_i)` through the OR gates of Fig. 5).
+//! * **RE / SR** — the all-0s/all-1s judgement "needs to be considered
+//!   globally": a column is informative iff the *union* of active rows
+//!   across banks is mixed; only then do the row processors exclude and
+//!   the state controllers record.
+//! * **Output select** — the manager monitors the sub-sorters and picks
+//!   the winning bank (and drains repetitions across banks).
+//!
+//! The key invariant — multi-banking changes area/power but **not** the
+//! cycle count ("multi-bank management does not change the speedup brought
+//! by column-skipping", §V.C) — is asserted in the integration tests:
+//! identical sorted output, identical CR/SL/drain trace to the equivalent
+//! single-bank sorter.
+
+use crate::bits::RowMask;
+use crate::memory::Bank;
+use crate::sorter::column::ColumnProcessor;
+use crate::sorter::state::StateTable;
+use crate::sorter::{InMemorySorter, SortOutput, SortStats};
+
+/// Configuration of a multi-bank column-skipping sorter.
+#[derive(Clone, Debug)]
+pub struct MultiBankConfig {
+    /// Bit width of the stored elements.
+    pub width: u32,
+    /// State-recording depth per sub-sorter.
+    pub k: usize,
+    /// Number of banks (sub-sorters). Must divide the array length.
+    pub banks: usize,
+    /// Leading-zero skipping (shared column processor policy).
+    pub skip_leading: bool,
+    /// Duplicate-drain stalling.
+    pub stall_on_duplicates: bool,
+}
+
+impl Default for MultiBankConfig {
+    fn default() -> Self {
+        MultiBankConfig {
+            width: crate::params::DEFAULT_WIDTH,
+            k: 2,
+            banks: 4,
+            skip_leading: true,
+            stall_on_duplicates: true,
+        }
+    }
+}
+
+/// Per-bank state: memory, wordline registers, state table.
+struct SubSorter {
+    bank: Bank,
+    /// Rows of this bank not yet emitted.
+    alive: RowMask,
+    /// Wordline register (current candidates).
+    active: RowMask,
+    /// Local state controller (records this bank's slice of the RE state).
+    table: StateTable,
+    /// Global row index of this bank's row 0.
+    base: usize,
+}
+
+/// The multi-bank sorter: C sub-sorters + the manager.
+pub struct MultiBankSorter {
+    config: MultiBankConfig,
+}
+
+impl MultiBankSorter {
+    pub fn new(config: MultiBankConfig) -> Self {
+        assert!(config.banks >= 1);
+        assert!(config.width >= 1 && config.width <= 32);
+        MultiBankSorter { config }
+    }
+
+    pub fn config(&self) -> &MultiBankConfig {
+        &self.config
+    }
+
+    fn sort_inner(&self, data: &[u32]) -> SortOutput {
+        let n = data.len();
+        let c = self.config.banks;
+        assert!(
+            n % c == 0,
+            "array length {n} must divide evenly across {c} banks (pad the workload)"
+        );
+        let ns = n / c;
+        let w = self.config.width;
+        let mut stats = SortStats::default();
+
+        // Stripe the array block-wise: bank i holds rows [i*ns, (i+1)*ns).
+        let mut subs: Vec<SubSorter> = (0..c)
+            .map(|i| SubSorter {
+                bank: Bank::load(&data[i * ns..(i + 1) * ns], w),
+                alive: RowMask::new_full(ns),
+                active: RowMask::new_full(ns),
+                table: StateTable::new(self.config.k),
+                base: i * ns,
+            })
+            .collect();
+
+        // The shared column processor (manager-side; `en_sync` lockstep).
+        let mut cp = ColumnProcessor::new(w, self.config.skip_leading);
+        let mut sorted = Vec::with_capacity(n);
+        let mut order = Vec::with_capacity(n);
+
+        while sorted.len() < n {
+            stats.iterations += 1;
+
+            // --- Synchronized SL: the SR gating is global, so every
+            // bank's table records the same column sequence — the tables
+            // are column-aligned mirrors of the global RE state. An entry
+            // is *globally* live iff ANY bank's snapshot still intersects
+            // its alive rows (the manager ORs the local `len` enables);
+            // globally-dead entries are popped from every bank at once.
+            let mut start_col: Option<u32> = None;
+            loop {
+                let top_col = subs.iter().find_map(|s| s.table.entries().last().map(|e| e.col));
+                let Some(col) = top_col else { break };
+                debug_assert!(
+                    subs.iter().all(|s| s
+                        .table
+                        .entries()
+                        .last()
+                        .map(|e| e.col == col)
+                        .unwrap_or(true)),
+                    "bank state tables must stay column-aligned"
+                );
+                let live = subs.iter().any(|s| {
+                    s.table
+                        .entries()
+                        .last()
+                        .map(|e| e.snapshot.intersects(&s.alive))
+                        .unwrap_or(false)
+                });
+                if live {
+                    start_col = Some(col);
+                    break;
+                }
+                // Globally dead: synchronized pop (one invalidation event).
+                for s in subs.iter_mut() {
+                    s.table.pop_most_recent();
+                }
+                stats.invalidations += 1;
+            }
+
+            let from_msb = match start_col {
+                Some(col) => {
+                    stats.sls += 1;
+                    for s in subs.iter_mut() {
+                        s.begin_from_top_snapshot(col);
+                    }
+                    false
+                }
+                None => {
+                    for s in subs.iter_mut() {
+                        s.active.copy_from(&s.alive);
+                    }
+                    start_col = Some(cp.full_start());
+                    true
+                }
+            };
+            let start_col = start_col.expect("set in both branches");
+
+            // --- Synchronized bit traversal. ---
+            let mut first_informative: Option<u32> = None;
+            for col in (0..=start_col).rev() {
+                // One synchronized CR cycle: all banks sense in parallel.
+                stats.crs += 1;
+                let mut any_one = false;
+                let mut any_zero = false;
+                for s in subs.iter_mut() {
+                    let SubSorter { bank, active, .. } = s;
+                    let (o, z) = bank.column_read_judge(col, active);
+                    any_one |= o;
+                    any_zero |= z;
+                }
+                // Global judgement gates RE and SR in every bank.
+                if any_one && any_zero {
+                    if from_msb {
+                        if first_informative.is_none() {
+                            first_informative = Some(col);
+                        }
+                        for s in subs.iter_mut() {
+                            s.table.record(&s.active, col);
+                        }
+                        stats.srs += 1;
+                    }
+                    for s in subs.iter_mut() {
+                        s.active.and_not_assign(s.bank.plane_for_exclusion(col));
+                        s.bank.note_wordline_update();
+                    }
+                    stats.res += 1;
+                }
+            }
+            if from_msb {
+                if let Some(col) = first_informative {
+                    cp.observe_first_informative(col);
+                }
+            }
+
+            // --- Output select across banks (manager priority mux). ---
+            let (bi, row) = subs
+                .iter()
+                .enumerate()
+                .find_map(|(i, s)| s.active.first_set().map(|r| (i, r)))
+                .expect("min search always leaves an active row in some bank");
+            subs[bi].emit(row, &mut sorted, &mut order);
+
+            if self.config.stall_on_duplicates {
+                // Drain remaining active rows in all banks (repetitions).
+                for s in subs.iter_mut() {
+                    while sorted.len() < n {
+                        match s.active.first_set() {
+                            Some(r) => {
+                                stats.drains += 1;
+                                s.emit(r, &mut sorted, &mut order);
+                            }
+                            None => break,
+                        }
+                    }
+                }
+            } else {
+                for s in subs.iter_mut() {
+                    // Candidates persist only within the iteration.
+                    s.active.clear_all();
+                }
+            }
+        }
+
+        SortOutput { sorted, order, stats }
+    }
+}
+
+impl SubSorter {
+    /// Load the wordline register from the top snapshot if it records
+    /// column `col`; otherwise this bank contributes no candidates.
+    fn begin_from_top_snapshot(&mut self, col: u32) {
+        match self.table.entries().last() {
+            Some(e) if e.col == col => {
+                // Disjoint field borrows: `table` (shared) vs `active` (mut).
+                self.active.assign_and(&e.snapshot, &self.alive)
+            }
+            _ => self.active.clear_all(),
+        }
+    }
+
+    fn emit(&mut self, row: usize, sorted: &mut Vec<u32>, order: &mut Vec<usize>) {
+        sorted.push(self.bank.read_row(row));
+        order.push(self.base + row);
+        self.active.clear(row);
+        self.alive.clear(row);
+    }
+}
+
+impl InMemorySorter for MultiBankSorter {
+    fn sort_with_stats(&mut self, data: &[u32]) -> SortOutput {
+        if data.is_empty() {
+            return SortOutput { sorted: vec![], order: vec![], stats: SortStats::default() };
+        }
+        self.sort_inner(data)
+    }
+
+    fn name(&self) -> &'static str {
+        "column-skipping-multibank"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{Dataset, DatasetKind};
+    use crate::sorter::colskip::{ColSkipConfig, ColSkipSorter};
+
+    fn single(k: usize) -> ColSkipSorter {
+        ColSkipSorter::new(ColSkipConfig { k, ..Default::default() })
+    }
+
+    #[test]
+    fn multibank_sorts_correctly() {
+        for kind in DatasetKind::ALL {
+            let d = Dataset::generate32(kind, 256, 17);
+            let mut mb = MultiBankSorter::new(MultiBankConfig { banks: 4, ..Default::default() });
+            let out = mb.sort_with_stats(&d.values);
+            let mut expect = d.values.clone();
+            expect.sort_unstable();
+            assert_eq!(out.sorted, expect, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn cycle_trace_matches_single_bank() {
+        // §V.C: multi-banking must not change the speedup — same CRs, SLs
+        // and drains as the single-bank sorter for every dataset and C.
+        for kind in DatasetKind::ALL {
+            let d = Dataset::generate32(kind, 256, 23);
+            let sref = single(2).sort_with_stats(&d.values);
+            for banks in [1usize, 2, 4, 8, 16] {
+                let mut mb = MultiBankSorter::new(MultiBankConfig {
+                    banks,
+                    k: 2,
+                    ..Default::default()
+                });
+                let out = mb.sort_with_stats(&d.values);
+                assert_eq!(out.sorted, sref.sorted, "{kind:?} C={banks}");
+                assert_eq!(out.stats.crs, sref.stats.crs, "{kind:?} C={banks} CRs");
+                assert_eq!(out.stats.sls, sref.stats.sls, "{kind:?} C={banks} SLs");
+                assert_eq!(out.stats.drains, sref.stats.drains, "{kind:?} C={banks} drains");
+                assert_eq!(
+                    out.stats.cycles(),
+                    sref.stats.cycles(),
+                    "{kind:?} C={banks} total cycles"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn order_respects_global_row_indexes() {
+        let data: Vec<u32> = vec![40, 30, 20, 10, 35, 25, 15, 5];
+        let mut mb = MultiBankSorter::new(MultiBankConfig {
+            banks: 2,
+            width: 8,
+            ..Default::default()
+        });
+        let out = mb.sort_with_stats(&data);
+        for (i, &row) in out.order.iter().enumerate() {
+            assert_eq!(data[row], out.sorted[i]);
+        }
+    }
+
+    #[test]
+    fn uneven_length_panics_with_guidance() {
+        let mut mb = MultiBankSorter::new(MultiBankConfig { banks: 3, ..Default::default() });
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            mb.sort_with_stats(&[1, 2, 3, 4])
+        }));
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn one_bank_is_identical_to_colskip() {
+        let d = Dataset::generate32(DatasetKind::Clustered, 128, 3);
+        let mut mb = MultiBankSorter::new(MultiBankConfig { banks: 1, ..Default::default() });
+        let a = mb.sort_with_stats(&d.values);
+        let b = single(2).sort_with_stats(&d.values);
+        assert_eq!(a.sorted, b.sorted);
+        assert_eq!(a.stats, b.stats);
+    }
+}

@@ -1,0 +1,324 @@
+//! Figure/table emitters: regenerate every evaluation artifact of the
+//! paper (§V) from simulator runs + the calibrated cost model, in both
+//! human-readable table form and machine-readable JSON (hand-rolled —
+//! no serde offline).
+
+pub mod json;
+
+use crate::cost::{Activity, CostModel, SorterArch};
+use crate::datasets::{Dataset, DatasetKind};
+use crate::multibank::{MultiBankConfig, MultiBankSorter};
+use crate::params::{DEFAULT_N, DEFAULT_WIDTH};
+use crate::sorter::baseline::BaselineSorter;
+use crate::sorter::colskip::ColSkipSorter;
+use crate::sorter::merge::MergeSorter;
+use crate::sorter::{InMemorySorter, SortStats};
+
+/// One measured point of Fig. 6: normalized speedup over the baseline.
+#[derive(Clone, Debug)]
+pub struct Fig6Point {
+    pub dataset: DatasetKind,
+    pub k: usize,
+    pub cycles_per_number: f64,
+    pub speedup: f64,
+}
+
+/// Regenerate Fig. 6: speedup vs k for every dataset
+/// (N=1024, w=32, k = 1..=k_max), averaged over `trials` seeds.
+pub fn fig6(n: usize, width: u32, k_max: usize, trials: u64, seed: u64) -> Vec<Fig6Point> {
+    let mut out = Vec::new();
+    for kind in DatasetKind::ALL {
+        for k in 1..=k_max {
+            let mut cyc_sum = 0.0;
+            for t in 0..trials {
+                let d = Dataset::generate(kind, n, width, seed + t);
+                let mut s = ColSkipSorter::new(crate::sorter::colskip::ColSkipConfig {
+                    width,
+                    k,
+                    ..Default::default()
+                });
+                cyc_sum += s.sort_with_stats(&d.values).stats.cycles_per_number(n);
+            }
+            let cycles_per_number = cyc_sum / trials as f64;
+            out.push(Fig6Point {
+                dataset: kind,
+                k,
+                cycles_per_number,
+                speedup: width as f64 / cycles_per_number,
+            });
+        }
+    }
+    out
+}
+
+/// One measured point of Fig. 7: normalized area/power and efficiencies
+/// vs k on the MapReduce dataset.
+#[derive(Clone, Debug)]
+pub struct Fig7Point {
+    pub k: usize,
+    pub cycles_per_number: f64,
+    pub area_kum2: f64,
+    pub power_mw: f64,
+    pub norm_area: f64,
+    pub norm_power: f64,
+    pub area_eff_ratio: f64,
+    pub energy_eff_ratio: f64,
+}
+
+/// Regenerate Fig. 7 (MapReduce, N=1024, w=32, k sweep).
+pub fn fig7(n: usize, width: u32, k_max: usize, trials: u64, seed: u64) -> Vec<Fig7Point> {
+    let model = CostModel::calibrated();
+    let base_arch = SorterArch::Baseline { n, w: width };
+    let base_area = model.area_kum2(base_arch);
+    let base_power = model.power_mw(base_arch, Activity::nominal_baseline());
+    let base_ae = model.area_efficiency(base_arch, width as f64);
+    let base_ee =
+        model.energy_efficiency(base_arch, width as f64, Activity::nominal_baseline());
+    (1..=k_max)
+        .map(|k| {
+            let mut cyc = 0.0;
+            let mut agg = SortStats::default();
+            for t in 0..trials {
+                let d = Dataset::generate(DatasetKind::MapReduce, n, width, seed + t);
+                let mut s = ColSkipSorter::new(crate::sorter::colskip::ColSkipConfig {
+                    width,
+                    k,
+                    ..Default::default()
+                });
+                let out = s.sort_with_stats(&d.values);
+                cyc += out.stats.cycles_per_number(n);
+                agg.merge_from(&out.stats);
+            }
+            let cyc = cyc / trials as f64;
+            let act = Activity::from_stats(&agg);
+            let arch = SorterArch::ColSkip { n, w: width, k };
+            let area = model.area_kum2(arch);
+            let power = model.power_mw(arch, act);
+            Fig7Point {
+                k,
+                cycles_per_number: cyc,
+                area_kum2: area,
+                power_mw: power,
+                norm_area: area / base_area,
+                norm_power: power / base_power,
+                area_eff_ratio: model.area_efficiency(arch, cyc) / base_ae,
+                energy_eff_ratio: model.energy_efficiency(arch, cyc, act) / base_ee,
+            }
+        })
+        .collect()
+}
+
+/// One row of the Fig. 8(a) implementation summary.
+#[derive(Clone, Debug)]
+pub struct Fig8aRow {
+    pub name: &'static str,
+    pub cycles_per_number: f64,
+    pub area_kum2: f64,
+    pub area_eff: f64,
+    pub power_mw: f64,
+    pub energy_eff: f64,
+}
+
+/// Regenerate Fig. 8(a): baseline / merge / col-skip k=2 / k=2 Ns=64 on
+/// the MapReduce dataset.
+pub fn fig8a(n: usize, width: u32, trials: u64, seed: u64) -> Vec<Fig8aRow> {
+    let model = CostModel::calibrated();
+    let mut rows = Vec::new();
+
+    let mut run = |name: &'static str,
+                   arch: SorterArch,
+                   sorter: &mut dyn InMemorySorter,
+                   nominal: Option<Activity>| {
+        let mut cyc = 0.0;
+        let mut agg = SortStats::default();
+        for t in 0..trials {
+            let d = Dataset::generate(DatasetKind::MapReduce, n, width, seed + t);
+            let out = sorter.sort_with_stats(&d.values);
+            cyc += out.stats.cycles_per_number(n);
+            agg.merge_from(&out.stats);
+        }
+        let cyc = cyc / trials as f64;
+        let act = nominal.unwrap_or_else(|| Activity::from_stats(&agg));
+        rows.push(Fig8aRow {
+            name,
+            cycles_per_number: cyc,
+            area_kum2: model.area_kum2(arch),
+            area_eff: model.area_efficiency(arch, cyc),
+            power_mw: model.power_mw(arch, act),
+            energy_eff: model.energy_efficiency(arch, cyc, act),
+        });
+    };
+
+    run(
+        "baseline",
+        SorterArch::Baseline { n, w: width },
+        &mut BaselineSorter::with_width(width),
+        Some(Activity::nominal_baseline()),
+    );
+    run(
+        "merge",
+        SorterArch::Merge { n },
+        &mut MergeSorter::new(),
+        Some(Activity::nominal_baseline()),
+    );
+    run(
+        "col-skip k=2",
+        SorterArch::ColSkip { n, w: width, k: 2 },
+        &mut ColSkipSorter::new(crate::sorter::colskip::ColSkipConfig {
+            width,
+            k: 2,
+            ..Default::default()
+        }),
+        None,
+    );
+    run(
+        "col-skip k=2 Ns=64",
+        SorterArch::MultiBank { n, w: width, k: 2, banks: (n / 64).max(1) },
+        &mut MultiBankSorter::new(MultiBankConfig {
+            width,
+            k: 2,
+            banks: (n / 64).max(1),
+            ..Default::default()
+        }),
+        None,
+    );
+    rows
+}
+
+/// One point of Fig. 8(b): normalized area/power vs sub-sorter length.
+#[derive(Clone, Debug)]
+pub struct Fig8bPoint {
+    pub sub_len: usize,
+    pub banks: usize,
+    pub norm_area: f64,
+    pub norm_power: f64,
+}
+
+/// Regenerate Fig. 8(b): Ns ∈ {64, 256, 512, 1024} at N=1024, k=2.
+pub fn fig8b(n: usize, width: u32) -> Vec<Fig8bPoint> {
+    let model = CostModel::calibrated();
+    let act = Activity::nominal_colskip();
+    let single = SorterArch::ColSkip { n, w: width, k: 2 };
+    let a0 = model.area_kum2(single);
+    let p0 = model.power_mw(single, act);
+    [64usize, 256, 512, n]
+        .into_iter()
+        .map(|ns| {
+            let banks = n / ns;
+            let arch = if banks == 1 {
+                single
+            } else {
+                SorterArch::MultiBank { n, w: width, k: 2, banks }
+            };
+            Fig8bPoint {
+                sub_len: ns,
+                banks,
+                norm_area: model.area_kum2(arch) / a0,
+                norm_power: model.power_mw(arch, act) / p0,
+            }
+        })
+        .collect()
+}
+
+/// Render a text table with aligned columns.
+pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+        cells
+            .iter()
+            .zip(widths)
+            .map(|(c, w)| format!("{c:>w$}", w = w))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    out.push_str(&fmt_row(
+        &headers.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+        &widths,
+    ));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row, &widths));
+        out.push('\n');
+    }
+    out
+}
+
+/// Paper defaults for the figure harnesses.
+pub fn paper_defaults() -> (usize, u32) {
+    (DEFAULT_N, DEFAULT_WIDTH)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6_small_run_shapes() {
+        // Small N for test speed; shape checks only.
+        let pts = fig6(128, 32, 3, 1, 7);
+        assert_eq!(pts.len(), 5 * 3);
+        for p in &pts {
+            // Large k on prefix-poor data can dip slightly below 1×
+            // (paper: speedup "goes down" past k=2–3).
+            assert!(p.speedup >= 0.9, "{:?} k={} speedup {}", p.dataset, p.k, p.speedup);
+        }
+        // MapReduce at k=2 beats uniform at k=2 (the paper's ordering).
+        let get = |kind, k| {
+            pts.iter().find(|p| p.dataset == kind && p.k == k).unwrap().speedup
+        };
+        assert!(get(DatasetKind::MapReduce, 2) > get(DatasetKind::Uniform, 2));
+        assert!(get(DatasetKind::Clustered, 2) > get(DatasetKind::Normal, 2));
+    }
+
+    #[test]
+    fn fig7_small_run_shapes() {
+        let pts = fig7(128, 32, 4, 1, 7);
+        assert_eq!(pts.len(), 4);
+        // Area strictly grows with k.
+        assert!(pts.windows(2).all(|w| w[1].norm_area > w[0].norm_area));
+        // Area efficiency beats baseline at k=1 (paper: >3.2× at N=1024).
+        assert!(pts[0].area_eff_ratio > 1.5, "{}", pts[0].area_eff_ratio);
+    }
+
+    #[test]
+    fn fig8a_rows_present_and_ordered() {
+        let rows = fig8a(256, 32, 1, 7);
+        assert_eq!(rows.len(), 4);
+        assert_eq!(rows[0].name, "baseline");
+        assert!((rows[0].cycles_per_number - 32.0).abs() < 1e-9);
+        // col-skip beats baseline on cycles; multibank matches col-skip.
+        assert!(rows[2].cycles_per_number < rows[0].cycles_per_number);
+        assert!((rows[3].cycles_per_number - rows[2].cycles_per_number).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fig8b_normalized_monotone() {
+        let pts = fig8b(1024, 32);
+        assert_eq!(pts.len(), 4);
+        assert_eq!(pts.last().unwrap().sub_len, 1024);
+        assert!((pts.last().unwrap().norm_area - 1.0).abs() < 1e-12);
+        // Smaller Ns ⇒ smaller area and power (Fig. 8b).
+        assert!(pts.windows(2).all(|w| w[0].norm_area < w[1].norm_area));
+        assert!(pts.windows(2).all(|w| w[0].norm_power < w[1].norm_power));
+    }
+
+    #[test]
+    fn render_table_aligns() {
+        let t = render_table(
+            &["name", "v"],
+            &[vec!["a".into(), "1.00".into()], vec!["longer".into(), "2".into()]],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("name"));
+        assert!(lines[2].ends_with("1.00"));
+    }
+}

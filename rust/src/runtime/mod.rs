@@ -1,0 +1,195 @@
+//! PJRT runtime: load and execute the AOT-compiled in-memory rank pass.
+//!
+//! The compile path (`python/compile/aot.py`, run once by `make
+//! artifacts`) lowers the L2 JAX model — a scan of the L1 Pallas
+//! min-search kernel — to HLO *text*. This module wraps the `xla` crate's
+//! PJRT CPU client to load those artifacts, compile them once per array
+//! size, and execute them from the request path with zero Python.
+//!
+//! The engine is the "memristive array compute" backend of the sort
+//! service: the functional result (sorted values) plus the per-iteration
+//! traces (`top_cols`, `infos`) the coordinator's cycle accounting can
+//! consume. Integration tests assert the PJRT engine agrees bit-exactly
+//! with the native bit-accurate simulator on every dataset family.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Result of one AOT rank-pass execution.
+#[derive(Clone, Debug)]
+pub struct RankPass {
+    /// Values ascending (functional sort result).
+    pub sorted: Vec<u32>,
+    /// Highest informative column per iteration (-1 when none).
+    pub top_cols: Vec<i32>,
+    /// Informative-column (= RE) count per iteration.
+    pub infos: Vec<i32>,
+}
+
+/// A compiled artifact for one array-size variant.
+struct Variant {
+    exe: xla::PjRtLoadedExecutable,
+    n: usize,
+}
+
+/// PJRT CPU engine holding one compiled executable per artifact variant.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    variants: HashMap<usize, Variant>,
+    artifacts_dir: PathBuf,
+    width: u32,
+}
+
+impl PjrtEngine {
+    /// Create a CPU engine rooted at an artifacts directory (as produced
+    /// by `make artifacts`). Variants are compiled lazily per size.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(PjrtEngine {
+            client,
+            variants: HashMap::new(),
+            artifacts_dir: artifacts_dir.as_ref().to_path_buf(),
+            width: crate::params::DEFAULT_WIDTH,
+        })
+    }
+
+    /// Default artifacts location relative to the repo root, overridable
+    /// with `MEMSORT_ARTIFACTS`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("MEMSORT_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// PJRT platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Array sizes with an available artifact, per the manifest.
+    pub fn available_sizes(&self) -> Result<Vec<usize>> {
+        let manifest = self.artifacts_dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {manifest:?} — run `make artifacts` first"))?;
+        let mut sizes = Vec::new();
+        for line in text.lines() {
+            if let Some(n) = line
+                .split_whitespace()
+                .find_map(|tok| tok.strip_prefix("n=").and_then(|v| v.parse::<usize>().ok()))
+            {
+                sizes.push(n);
+            }
+        }
+        sizes.sort_unstable();
+        Ok(sizes)
+    }
+
+    fn artifact_path(&self, n: usize) -> PathBuf {
+        self.artifacts_dir.join(format!("minsort_n{n}_w{}.hlo.txt", self.width))
+    }
+
+    /// Compile (once) and cache the variant for array size `n`.
+    pub fn ensure_variant(&mut self, n: usize) -> Result<()> {
+        if self.variants.contains_key(&n) {
+            return Ok(());
+        }
+        let path = self.artifact_path(n);
+        if !path.exists() {
+            bail!(
+                "no AOT artifact for n={n} at {path:?}; run `make artifacts` \
+                 (available: {:?})",
+                self.available_sizes().unwrap_or_default()
+            );
+        }
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe =
+            self.client.compile(&comp).map_err(|e| anyhow!("compiling n={n}: {e:?}"))?;
+        self.variants.insert(n, Variant { exe, n });
+        Ok(())
+    }
+
+    /// Execute the rank pass for `data` (length must match a variant).
+    pub fn rank(&mut self, data: &[u32]) -> Result<RankPass> {
+        let n = data.len();
+        self.ensure_variant(n)?;
+        let variant = self.variants.get(&n).expect("ensured above");
+        debug_assert_eq!(variant.n, n);
+        let x = xla::Literal::vec1(data);
+        let result = variant.exe.execute::<xla::Literal>(&[x]).map_err(|e| {
+            anyhow!("execute n={n}: {e:?}")
+        })?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch n={n}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: (sorted, top_cols, infos).
+        let elems = result.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        if elems.len() != 3 {
+            bail!("expected 3 outputs, got {}", elems.len());
+        }
+        let sorted = elems[0].to_vec::<u32>().map_err(|e| anyhow!("sorted: {e:?}"))?;
+        let top_cols = elems[1].to_vec::<i32>().map_err(|e| anyhow!("top_cols: {e:?}"))?;
+        let infos = elems[2].to_vec::<i32>().map_err(|e| anyhow!("infos: {e:?}"))?;
+        Ok(RankPass { sorted, top_cols, infos })
+    }
+
+    /// Sizes currently compiled into this engine.
+    pub fn compiled_sizes(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.variants.keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_exist() -> bool {
+        PjrtEngine::default_dir().join("manifest.txt").exists()
+    }
+
+    #[test]
+    fn engine_loads_and_ranks_small_artifact() {
+        if !artifacts_exist() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return;
+        }
+        let mut eng = PjrtEngine::new(PjrtEngine::default_dir()).unwrap();
+        let data: Vec<u32> =
+            vec![300, 5, 5, 0, 65535, 77, 1024, 2, 9, 9, 1, 8, 4, 3, 2, 1];
+        let pass = eng.rank(&data).unwrap();
+        let mut expect = data.clone();
+        expect.sort_unstable();
+        assert_eq!(pass.sorted, expect);
+        assert_eq!(pass.top_cols.len(), 16);
+        assert_eq!(pass.infos.len(), 16);
+        // Last iteration has one row left: nothing informative.
+        assert_eq!(*pass.infos.last().unwrap(), 0);
+        assert_eq!(*pass.top_cols.last().unwrap(), -1);
+    }
+
+    #[test]
+    fn missing_size_reports_helpfully() {
+        if !artifacts_exist() {
+            return;
+        }
+        let mut eng = PjrtEngine::new(PjrtEngine::default_dir()).unwrap();
+        let err = eng.rank(&[1, 2, 3]).unwrap_err().to_string();
+        assert!(err.contains("no AOT artifact for n=3"), "{err}");
+    }
+
+    #[test]
+    fn manifest_lists_sizes() {
+        if !artifacts_exist() {
+            return;
+        }
+        let eng = PjrtEngine::new(PjrtEngine::default_dir()).unwrap();
+        let sizes = eng.available_sizes().unwrap();
+        assert!(sizes.contains(&16), "{sizes:?}");
+        assert!(sizes.contains(&1024), "{sizes:?}");
+    }
+}

@@ -1,0 +1,173 @@
+//! Cycle-accurate operation tracing: record the near-memory circuit's
+//! schedule (which operation touched which column/rows on every cycle)
+//! and render it in the style of the paper's Fig. 1 / Fig. 3 walkthroughs.
+//!
+//! The traced sorter wraps the same near-memory modules as
+//! [`crate::sorter::colskip::ColSkipSorter`] but emits a [`TraceEvent`]
+//! per operation. Used by the `memsort trace` CLI command, the Fig. 3
+//! regression test (the trace must reproduce the paper's published
+//! schedule exactly), and by users debugging their own datasets.
+
+pub mod trace;
+
+pub use trace::{render_schedule, TraceEvent, TraceKind, TracedRun};
+
+use crate::bits::RowMask;
+use crate::memory::Bank;
+use crate::sorter::colskip::ColSkipConfig;
+use crate::sorter::column::ColumnProcessor;
+use crate::sorter::row::RowProcessor;
+use crate::sorter::state::StateTable;
+use crate::sorter::{SortOutput, SortStats};
+
+/// Run a column-skipping sort while recording every operation.
+pub fn trace_sort(data: &[u32], config: &ColSkipConfig) -> (SortOutput, TracedRun) {
+    let n = data.len();
+    let w = config.width;
+    let mut bank = Bank::load(data, w);
+    let mut stats = SortStats::default();
+    let mut cp = ColumnProcessor::new(w, config.skip_leading);
+    let mut rp = RowProcessor::new(n);
+    let mut table = StateTable::new(config.k);
+    let mut ones = RowMask::new_empty(n);
+    let mut sorted = Vec::with_capacity(n);
+    let mut order = Vec::with_capacity(n);
+    let mut run = TracedRun::new(n, w);
+
+    while sorted.len() < n {
+        stats.iterations += 1;
+        run.begin_iteration(sorted.len());
+
+        let (entry, invalidated) = table.load_most_recent(rp.alive());
+        stats.invalidations += invalidated;
+        for _ in 0..invalidated {
+            run.push(TraceEvent::invalidate());
+        }
+        let (start_col, from_msb) = match entry {
+            Some(e) => {
+                stats.sls += 1;
+                run.push(TraceEvent::sl(e.col, e.snapshot.count()));
+                rp.begin_from_snapshot(&e.snapshot);
+                (e.col, false)
+            }
+            None => {
+                rp.begin_full();
+                (cp.full_start(), true)
+            }
+        };
+
+        let mut first_informative: Option<u32> = None;
+        for col in (0..=start_col).rev() {
+            stats.crs += 1;
+            let (any_one, any_zero) = bank.column_read_into(col, rp.active(), &mut ones);
+            let informative = any_one && any_zero;
+            run.push(TraceEvent::cr(col, rp.active().count(), informative));
+            if informative {
+                if from_msb {
+                    if first_informative.is_none() {
+                        first_informative = Some(col);
+                    }
+                    table.record(rp.active(), col);
+                    stats.srs += 1;
+                    run.push(TraceEvent::sr(col, rp.active().count()));
+                }
+                let excluded = ones.count();
+                rp.exclude(&ones);
+                bank.note_wordline_update();
+                stats.res += 1;
+                run.push(TraceEvent::re(col, excluded));
+            }
+        }
+        if from_msb {
+            if let Some(col) = first_informative {
+                cp.observe_first_informative(col);
+            }
+        }
+
+        let row = rp.emit_first();
+        sorted.push(bank.read_row(row));
+        order.push(row);
+        run.push(TraceEvent::emit(row, *sorted.last().expect("pushed")));
+        if config.stall_on_duplicates {
+            while rp.has_pending_duplicates() && sorted.len() < n {
+                stats.drains += 1;
+                let row = rp.emit_first();
+                sorted.push(bank.read_row(row));
+                order.push(row);
+                run.push(TraceEvent::drain(row, *sorted.last().expect("pushed")));
+            }
+        }
+    }
+    (SortOutput { sorted, order, stats }, run)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sorter::colskip::ColSkipSorter;
+    use crate::sorter::InMemorySorter;
+
+    fn cfg(width: u32, k: usize) -> ColSkipConfig {
+        ColSkipConfig { width, k, ..Default::default() }
+    }
+
+    #[test]
+    fn traced_run_matches_untraced_sorter() {
+        use crate::datasets::{Dataset, DatasetKind};
+        for kind in DatasetKind::ALL {
+            let d = Dataset::generate32(kind, 128, 77);
+            let (out, _) = trace_sort(&d.values, &cfg(32, 2));
+            let mut plain = ColSkipSorter::with_k(2);
+            let expect = plain.sort_with_stats(&d.values);
+            assert_eq!(out.sorted, expect.sorted, "{kind:?}");
+            assert_eq!(out.stats, expect.stats, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn fig3_schedule_is_reproduced() {
+        // The paper's Fig. 3 walkthrough for {8,9,10}, w=4, k=2:
+        // iteration 1: CR c3, CR c2, CR c1 (+SR,RE), CR c0 (+SR,RE) → emit 8
+        // iteration 2: SL(c0), CR c0 → emit 9
+        // iteration 3: invalidate, SL(c1), CR c1, CR c0 → emit 10
+        let (out, run) = trace_sort(&[8, 9, 10], &cfg(4, 2));
+        assert_eq!(out.stats.crs, 7);
+        let crs_per_iter: Vec<usize> = (0..3)
+            .map(|i| run.iteration(i).filter(|e| e.kind == TraceKind::ColumnRead).count())
+            .collect();
+        assert_eq!(crs_per_iter, vec![4, 1, 2], "Fig. 3's per-iteration CR split");
+        // Iteration 2 resumes at column 0; iteration 3 at column 1.
+        let sl_cols: Vec<u32> = run
+            .events()
+            .iter()
+            .filter(|e| e.kind == TraceKind::StateLoad)
+            .map(|e| e.col)
+            .collect();
+        assert_eq!(sl_cols, vec![0, 1]);
+        // Emitted mins in order.
+        let emitted: Vec<u32> = run
+            .events()
+            .iter()
+            .filter(|e| matches!(e.kind, TraceKind::Emit | TraceKind::Drain))
+            .map(|e| e.value)
+            .collect();
+        assert_eq!(emitted, vec![8, 9, 10]);
+    }
+
+    #[test]
+    fn trace_counts_match_stats() {
+        let d = crate::datasets::Dataset::generate32(
+            crate::datasets::DatasetKind::Kruskal,
+            256,
+            3,
+        );
+        let (out, run) = trace_sort(&d.values, &cfg(32, 2));
+        let count = |k: TraceKind| run.events().iter().filter(|e| e.kind == k).count() as u64;
+        assert_eq!(count(TraceKind::ColumnRead), out.stats.crs);
+        assert_eq!(count(TraceKind::RowExclude), out.stats.res);
+        assert_eq!(count(TraceKind::StateRecord), out.stats.srs);
+        assert_eq!(count(TraceKind::StateLoad), out.stats.sls);
+        assert_eq!(count(TraceKind::Drain), out.stats.drains);
+        assert_eq!(count(TraceKind::Invalidate), out.stats.invalidations);
+    }
+}

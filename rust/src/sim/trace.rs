@@ -1,0 +1,234 @@
+//! Trace event model + Fig. 3-style schedule rendering.
+
+/// The operation classes of the near-memory circuit (paper Fig. 2).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum TraceKind {
+    /// Column read (sense one bit column over the active rows).
+    ColumnRead,
+    /// Row exclusion (wordline update after an informative column).
+    RowExclude,
+    /// State recording into the k-entry table.
+    StateRecord,
+    /// State load from the table (iteration resume).
+    StateLoad,
+    /// A dead table entry discarded.
+    Invalidate,
+    /// Min row emitted.
+    Emit,
+    /// Duplicate row drained under column-processor stall.
+    Drain,
+}
+
+/// One recorded operation.
+#[derive(Copy, Clone, Debug)]
+pub struct TraceEvent {
+    pub kind: TraceKind,
+    /// Bit column involved (CR/RE/SR/SL), otherwise 0.
+    pub col: u32,
+    /// Active-row count (CR/SR/SL), excluded count (RE), or row (Emit).
+    pub rows: usize,
+    /// Emitted value (Emit/Drain), otherwise 0.
+    pub value: u32,
+    /// Whether a CR was informative.
+    pub informative: bool,
+    /// Iteration index this event belongs to.
+    pub iteration: usize,
+}
+
+impl TraceEvent {
+    pub fn cr(col: u32, rows: usize, informative: bool) -> Self {
+        TraceEvent { kind: TraceKind::ColumnRead, col, rows, value: 0, informative, iteration: 0 }
+    }
+    pub fn re(col: u32, excluded: usize) -> Self {
+        TraceEvent {
+            kind: TraceKind::RowExclude,
+            col,
+            rows: excluded,
+            value: 0,
+            informative: true,
+            iteration: 0,
+        }
+    }
+    pub fn sr(col: u32, rows: usize) -> Self {
+        TraceEvent { kind: TraceKind::StateRecord, col, rows, value: 0, informative: true, iteration: 0 }
+    }
+    pub fn sl(col: u32, rows: usize) -> Self {
+        TraceEvent { kind: TraceKind::StateLoad, col, rows, value: 0, informative: false, iteration: 0 }
+    }
+    pub fn invalidate() -> Self {
+        TraceEvent {
+            kind: TraceKind::Invalidate,
+            col: 0,
+            rows: 0,
+            value: 0,
+            informative: false,
+            iteration: 0,
+        }
+    }
+    pub fn emit(row: usize, value: u32) -> Self {
+        TraceEvent { kind: TraceKind::Emit, col: 0, rows: row, value, informative: false, iteration: 0 }
+    }
+    pub fn drain(row: usize, value: u32) -> Self {
+        TraceEvent { kind: TraceKind::Drain, col: 0, rows: row, value, informative: false, iteration: 0 }
+    }
+}
+
+/// A complete traced sort.
+#[derive(Clone, Debug)]
+pub struct TracedRun {
+    events: Vec<TraceEvent>,
+    n: usize,
+    width: u32,
+    current_iteration: usize,
+}
+
+impl TracedRun {
+    pub fn new(n: usize, width: u32) -> Self {
+        TracedRun { events: Vec::new(), n, width, current_iteration: 0 }
+    }
+
+    pub fn begin_iteration(&mut self, emitted_so_far: usize) {
+        let _ = emitted_so_far;
+        self.current_iteration = self.current_iteration.saturating_add(1);
+    }
+
+    pub fn push(&mut self, mut e: TraceEvent) {
+        e.iteration = self.current_iteration.saturating_sub(1);
+        self.events.push(e);
+    }
+
+    pub fn events(&self) -> &[TraceEvent] {
+        &self.events
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn width(&self) -> u32 {
+        self.width
+    }
+
+    /// Events of iteration `i`.
+    pub fn iteration(&self, i: usize) -> impl Iterator<Item = &TraceEvent> {
+        self.events.iter().filter(move |e| e.iteration == i)
+    }
+
+    pub fn iterations(&self) -> usize {
+        self.current_iteration
+    }
+}
+
+/// Render the first `max_iters` iterations as a Fig. 3-style schedule:
+///
+/// ```text
+/// iter 1 (full traversal)
+///   CR c3 [3 rows]        all-1s
+///   CR c2 [3 rows]        all-0s
+///   CR c1 [3 rows]  SR RE(1 excluded)
+///   ...
+///   => emit 8 (row 0)
+/// ```
+pub fn render_schedule(run: &TracedRun, max_iters: usize) -> String {
+    let mut out = String::new();
+    for it in 0..run.iterations().min(max_iters) {
+        let events: Vec<&TraceEvent> = run.iteration(it).collect();
+        let resumed = events.iter().any(|e| e.kind == TraceKind::StateLoad);
+        out.push_str(&format!(
+            "iter {} ({})\n",
+            it + 1,
+            if resumed { "resumed from state" } else { "full traversal" }
+        ));
+        let mut i = 0;
+        while i < events.len() {
+            let e = events[i];
+            match e.kind {
+                TraceKind::Invalidate => out.push_str("  state entry invalidated\n"),
+                TraceKind::StateLoad => out.push_str(&format!(
+                    "  SL c{} [{} snapshot rows] -> resume at c{}\n",
+                    e.col, e.rows, e.col
+                )),
+                TraceKind::ColumnRead => {
+                    // Fold the SR/RE that follow this CR onto one line.
+                    let mut suffix = String::new();
+                    let mut j = i + 1;
+                    while j < events.len()
+                        && matches!(
+                            events[j].kind,
+                            TraceKind::StateRecord | TraceKind::RowExclude
+                        )
+                    {
+                        match events[j].kind {
+                            TraceKind::StateRecord => suffix.push_str("  SR"),
+                            TraceKind::RowExclude => {
+                                suffix.push_str(&format!("  RE({} excluded)", events[j].rows))
+                            }
+                            _ => unreachable!(),
+                        }
+                        j += 1;
+                    }
+                    if !e.informative {
+                        suffix.push_str("  (uninformative: skip RE)");
+                    }
+                    out.push_str(&format!("  CR c{} [{} rows]{}\n", e.col, e.rows, suffix));
+                    i = j;
+                    continue;
+                }
+                TraceKind::Emit => {
+                    out.push_str(&format!("  => emit {} (row {})\n", e.value, e.rows))
+                }
+                TraceKind::Drain => {
+                    out.push_str(&format!("  => drain {} (row {}, stalled)\n", e.value, e.rows))
+                }
+                TraceKind::StateRecord | TraceKind::RowExclude => {
+                    // Only reached if not folded (defensive).
+                    out.push_str(&format!("  {:?} c{}\n", e.kind, e.col));
+                }
+            }
+            i += 1;
+        }
+    }
+    if run.iterations() > max_iters {
+        out.push_str(&format!("... ({} more iterations)\n", run.iterations() - max_iters));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::trace_sort;
+    use crate::sorter::colskip::ColSkipConfig;
+
+    #[test]
+    fn render_fig3_example() {
+        let (_, run) =
+            trace_sort(&[8, 9, 10], &ColSkipConfig { width: 4, k: 2, ..Default::default() });
+        let text = render_schedule(&run, 10);
+        assert!(text.contains("iter 1 (full traversal)"));
+        assert!(text.contains("iter 2 (resumed from state)"));
+        assert!(text.contains("=> emit 8"));
+        assert!(text.contains("=> emit 10"));
+        assert!(text.contains("SR"), "{text}");
+        assert!(text.contains("RE(1 excluded)"), "{text}");
+        // 7 CR lines in total (the paper's count).
+        assert_eq!(text.matches("  CR c").count(), 7, "{text}");
+    }
+
+    #[test]
+    fn render_truncates() {
+        let data: Vec<u32> = (0..32).rev().collect();
+        let (_, run) =
+            trace_sort(&data, &ColSkipConfig { width: 8, k: 2, ..Default::default() });
+        let text = render_schedule(&run, 2);
+        assert!(text.contains("more iterations"), "{text}");
+    }
+
+    #[test]
+    fn drain_renders_as_stalled() {
+        let (_, run) =
+            trace_sort(&[5, 5, 5], &ColSkipConfig { width: 4, k: 2, ..Default::default() });
+        let text = render_schedule(&run, 5);
+        assert!(text.contains("stalled"), "{text}");
+    }
+}

@@ -1,0 +1,167 @@
+//! The HPCA'21 memristive in-memory sorting baseline (paper [18],
+//! "Memristive data ranking" — §II.B and Fig. 1 of our paper).
+//!
+//! Each of the `N` output positions is produced by a full `w`-step bit
+//! traversal: CR every column MSB→LSB, excluding rows that read 1 whenever
+//! the column is informative. The near-memory circuit keeps no state
+//! across iterations — so the latency is exactly `N·w` column reads
+//! (32 cycles/number at `w = 32`) for *any* dataset, the number the
+//! paper's speedups are normalized against.
+
+use crate::bits::RowMask;
+use crate::memory::Bank;
+
+use super::{InMemorySorter, SortOutput, SortStats};
+
+/// Configuration for the baseline sorter.
+#[derive(Clone, Debug)]
+pub struct BaselineConfig {
+    /// Bit width of the stored elements.
+    pub width: u32,
+}
+
+impl Default for BaselineConfig {
+    fn default() -> Self {
+        BaselineConfig { width: crate::params::DEFAULT_WIDTH }
+    }
+}
+
+/// The bit-traversal min-search sorter of [18].
+#[derive(Clone, Debug)]
+pub struct BaselineSorter {
+    config: BaselineConfig,
+}
+
+impl BaselineSorter {
+    pub fn new(config: BaselineConfig) -> Self {
+        BaselineSorter { config }
+    }
+
+    /// Baseline with the paper's default width (32 bits).
+    pub fn with_width(width: u32) -> Self {
+        Self::new(BaselineConfig { width })
+    }
+
+    /// Sort the contents of an already-loaded bank (shared with the
+    /// fault-injection experiment, which pre-loads a faulty bank).
+    pub fn sort_bank(&self, bank: &mut Bank) -> SortOutput {
+        let n = bank.rows();
+        let w = bank.width();
+        let mut stats = SortStats::default();
+        let mut alive = RowMask::new_full(n);
+        let mut active = RowMask::new_empty(n);
+        let mut sorted = Vec::with_capacity(n);
+        let mut order = Vec::with_capacity(n);
+
+        for _ in 0..n {
+            stats.iterations += 1;
+            // Wordline registers reset to "all alive" — no memory of
+            // previous traversals (the redundancy column skipping removes).
+            active.copy_from(&alive);
+            for col in (0..w).rev() {
+                stats.crs += 1;
+                let (any_one, any_zero) = bank.column_read_judge(col, &active);
+                if any_one && any_zero {
+                    // Informative column: exclude the rows that read 1
+                    // (active &= !plane ≡ drop rows that sensed 1).
+                    active.and_not_assign(bank.plane_for_exclusion(col));
+                    bank.note_wordline_update();
+                    stats.res += 1;
+                }
+            }
+            let row = active
+                .first_set()
+                .expect("min search always leaves at least one active row");
+            sorted.push(bank.read_row(row));
+            order.push(row);
+            alive.clear(row);
+        }
+        SortOutput { sorted, order, stats }
+    }
+}
+
+impl InMemorySorter for BaselineSorter {
+    fn sort_with_stats(&mut self, data: &[u32]) -> SortOutput {
+        if data.is_empty() {
+            return SortOutput { sorted: vec![], order: vec![], stats: SortStats::default() };
+        }
+        let mut bank = Bank::load(data, self.config.width);
+        self.sort_bank(&mut bank)
+    }
+
+    fn name(&self) -> &'static str {
+        "baseline-hpca21"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_fig1_example_is_12_crs() {
+        // Fig. 1: sorting {8,9,10} at w=4 takes N·w = 12 CRs.
+        let mut s = BaselineSorter::with_width(4);
+        let out = s.sort_with_stats(&[8, 9, 10]);
+        assert_eq!(out.sorted, vec![8, 9, 10]);
+        assert_eq!(out.stats.crs, 12);
+        assert_eq!(out.stats.cycles(), 12);
+    }
+
+    #[test]
+    fn latency_is_dataset_independent() {
+        // §V.A: "fixed sorting speed of 32 cycles per number for any
+        // datasets".
+        for data in [
+            vec![0u32; 64],
+            (0..64u32).collect::<Vec<_>>(),
+            (0..64u32).rev().collect::<Vec<_>>(),
+            vec![u32::MAX; 64],
+        ] {
+            let mut s = BaselineSorter::with_width(32);
+            let out = s.sort_with_stats(&data);
+            assert_eq!(out.stats.crs, 64 * 32);
+            assert!((out.stats.cycles_per_number(64) - 32.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn sorts_correctly_with_duplicates() {
+        let data = vec![5u32, 3, 5, 1, 3, 3, 0, 5];
+        let mut s = BaselineSorter::with_width(8);
+        let out = s.sort_with_stats(&data);
+        let mut expect = data.clone();
+        expect.sort_unstable();
+        assert_eq!(out.sorted, expect);
+    }
+
+    #[test]
+    fn order_is_a_valid_argsort() {
+        let data = vec![9u32, 1, 8, 2, 7, 3];
+        let mut s = BaselineSorter::with_width(8);
+        let out = s.sort_with_stats(&data);
+        for (i, &row) in out.order.iter().enumerate() {
+            assert_eq!(data[row], out.sorted[i]);
+        }
+        let mut seen = out.order.clone();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..6).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_element_and_empty() {
+        let mut s = BaselineSorter::with_width(8);
+        assert_eq!(s.sort(&[]), Vec::<u32>::new());
+        let out = s.sort_with_stats(&[42]);
+        assert_eq!(out.sorted, vec![42]);
+        assert_eq!(out.stats.crs, 8);
+    }
+
+    #[test]
+    fn full_width_extremes() {
+        let data = vec![u32::MAX, 0, 1, u32::MAX - 1, 0x8000_0000];
+        let mut s = BaselineSorter::with_width(32);
+        let out = s.sort_with_stats(&data);
+        assert_eq!(out.sorted, vec![0, 1, 0x8000_0000, u32::MAX - 1, u32::MAX]);
+    }
+}

@@ -1,0 +1,380 @@
+//! The paper's contribution: **column-skipping memristive in-memory
+//! sorting with state recording** (§III, Figs. 2–4).
+//!
+//! The sorter composes the three near-memory-circuit modules:
+//! [`ColumnProcessor`] (column address + leading-zero skip + stall),
+//! [`RowProcessor`] (wordline/RE state + duplicate drain) and
+//! [`StateTable`] (the k-entry state controller), over a [`Bank`].
+//!
+//! ## Skip semantics
+//!
+//! A recorded entry `(snapshot, s)` means: *entering column `s`, the
+//! candidate set was `snapshot`*. Because every row outside the snapshot
+//! was excluded at an informative column above `s` — i.e. is strictly
+//! greater than every snapshot row — the next minimum is guaranteed to lie
+//! in `snapshot ∩ alive` whenever that set is non-empty. The traversal
+//! therefore reloads the snapshot (SL), resumes the CR sequence *at*
+//! column `s`, and every column above `s` is skipped. Dead entries
+//! (snapshot fully sorted out) are discarded; when the table empties, a
+//! full traversal runs and re-records fresh states (SR).
+//!
+//! This reproduces the paper's Fig. 3 walkthrough exactly: sorting
+//! `{8, 9, 10}` at `w=4, k=2` costs 4 + 1 + 2 = **7 CRs** against the
+//! baseline's 12 (asserted in the tests below).
+
+use crate::memory::Bank;
+
+use super::column::ColumnProcessor;
+use super::row::RowProcessor;
+use super::state::StateTable;
+use super::{InMemorySorter, SortOutput, SortStats};
+
+/// Configuration of a column-skipping sorter.
+#[derive(Clone, Debug)]
+pub struct ColSkipConfig {
+    /// Bit width of the stored elements.
+    pub width: u32,
+    /// State-recording depth (the paper's parameter k; k = 0 degenerates
+    /// to the baseline traversal plus the leading-zero/stall skips).
+    pub k: usize,
+    /// Skip leading non-informative columns in full traversals (§III.A
+    /// scenario 1). The paper's design has this on.
+    pub skip_leading: bool,
+    /// Stall the column processor and drain duplicates through the row
+    /// processor (§III.B). The paper's design has this on.
+    pub stall_on_duplicates: bool,
+}
+
+impl Default for ColSkipConfig {
+    fn default() -> Self {
+        ColSkipConfig {
+            width: crate::params::DEFAULT_WIDTH,
+            k: 2,
+            skip_leading: true,
+            stall_on_duplicates: true,
+        }
+    }
+}
+
+/// The column-skipping in-memory sorter.
+#[derive(Clone, Debug)]
+pub struct ColSkipSorter {
+    config: ColSkipConfig,
+}
+
+impl ColSkipSorter {
+    pub fn new(config: ColSkipConfig) -> Self {
+        assert!(config.width >= 1 && config.width <= 32);
+        ColSkipSorter { config }
+    }
+
+    /// Sorter with paper defaults (w=32) and the given k.
+    pub fn with_k(k: usize) -> Self {
+        Self::new(ColSkipConfig { k, ..Default::default() })
+    }
+
+    pub fn config(&self) -> &ColSkipConfig {
+        &self.config
+    }
+
+    /// Sort the contents of an already-loaded bank.
+    pub fn sort_bank(&self, bank: &mut Bank) -> SortOutput {
+        let n = bank.rows();
+        let w = bank.width();
+        debug_assert_eq!(w, self.config.width);
+        let mut stats = SortStats::default();
+        let mut cp = ColumnProcessor::new(w, self.config.skip_leading);
+        let mut rp = RowProcessor::new(n);
+        let mut table = StateTable::new(self.config.k);
+        let mut sorted = Vec::with_capacity(n);
+        let mut order = Vec::with_capacity(n);
+
+        while sorted.len() < n {
+            stats.iterations += 1;
+
+            // --- Iteration start: SL if a recorded state is live. ---
+            let (entry, invalidated) = table.load_most_recent(rp.alive());
+            stats.invalidations += invalidated;
+            let (start_col, from_msb) = match entry {
+                Some(e) => {
+                    stats.sls += 1;
+                    let col = e.col;
+                    rp.begin_from_snapshot(&e.snapshot);
+                    (col, false)
+                }
+                None => {
+                    rp.begin_full();
+                    (cp.full_start(), true)
+                }
+            };
+
+            // --- Bit traversal (CRs from start_col down to the LSB). ---
+            let mut first_informative: Option<u32> = None;
+            for col in (0..=start_col).rev() {
+                stats.crs += 1;
+                let (any_one, any_zero) = bank.column_read_judge(col, rp.active());
+                if any_one && any_zero {
+                    if from_msb {
+                        if first_informative.is_none() {
+                            first_informative = Some(col);
+                        }
+                        // SR: snapshot the state *entering* this column.
+                        table.record(rp.active(), col);
+                        stats.srs += 1;
+                    }
+                    // RE: rows that sensed 1 drop out (active &= !plane).
+                    rp.exclude(bank.plane_for_exclusion(col));
+                    bank.note_wordline_update();
+                    stats.res += 1;
+                }
+            }
+            if from_msb {
+                if let Some(col) = first_informative {
+                    cp.observe_first_informative(col);
+                }
+            }
+
+            // --- Emit the minimum; drain duplicates under stall. ---
+            let row = rp.emit_first();
+            sorted.push(bank.read_row(row));
+            order.push(row);
+            if self.config.stall_on_duplicates {
+                while rp.has_pending_duplicates() && sorted.len() < n {
+                    stats.drains += 1;
+                    let row = rp.emit_first();
+                    sorted.push(bank.read_row(row));
+                    order.push(row);
+                }
+            }
+        }
+        SortOutput { sorted, order, stats }
+    }
+}
+
+impl InMemorySorter for ColSkipSorter {
+    fn sort_with_stats(&mut self, data: &[u32]) -> SortOutput {
+        if data.is_empty() {
+            return SortOutput { sorted: vec![], order: vec![], stats: SortStats::default() };
+        }
+        let mut bank = Bank::load(data, self.config.width);
+        self.sort_bank(&mut bank)
+    }
+
+    fn name(&self) -> &'static str {
+        "column-skipping"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sorter::baseline::BaselineSorter;
+
+    fn sort_ref(data: &[u32]) -> Vec<u32> {
+        let mut v = data.to_vec();
+        v.sort_unstable();
+        v
+    }
+
+    /// Paper Fig. 3: sorting {8, 9, 10} at w=4 with k=2 costs exactly
+    /// 7 CRs (4 in the first search, 1 in the second, 2 in the third)
+    /// versus the baseline's 12 (Fig. 1).
+    #[test]
+    fn fig1_fig3_worked_example() {
+        let data = [8u32, 9, 10];
+        let mut base = BaselineSorter::with_width(4);
+        let bout = base.sort_with_stats(&data);
+        assert_eq!(bout.stats.crs, 12);
+
+        let mut cs = ColSkipSorter::new(ColSkipConfig {
+            width: 4,
+            k: 2,
+            // The worked example has no leading zeros at the MSB and no
+            // duplicates; both skips are idle. Keep them on (paper config).
+            ..Default::default()
+        });
+        let out = cs.sort_with_stats(&data);
+        assert_eq!(out.sorted, vec![8, 9, 10]);
+        assert_eq!(out.stats.crs, 7, "paper Fig. 3: total latency 7 CRs");
+        assert_eq!(out.stats.sls, 2, "2nd and 3rd searches reload state");
+    }
+
+    /// The per-iteration CR split of Fig. 3: 4, then 1, then 2.
+    #[test]
+    fn fig3_per_iteration_cr_split() {
+        // Run the first min search alone (n=1 emission) by instrumenting
+        // through progressively longer prefixes is awkward; instead check
+        // the arithmetic: 4 CRs (full) + 1 CR (resume at col 0) +
+        // 2 CRs (resume at col 1) = 7 with 2 SLs, 2 invalidations.
+        // Iteration 2 reloads the (col 0, {8,9}) entry (9 is still alive);
+        // iteration 3 finds it dead (1 invalidation) and falls back to the
+        // (col 1, {8,9,10}) entry.
+        let mut cs = ColSkipSorter::new(ColSkipConfig { width: 4, k: 2, ..Default::default() });
+        let out = cs.sort_with_stats(&[8, 9, 10]);
+        assert_eq!(out.stats.invalidations, 1);
+        assert_eq!(out.stats.srs, 2); // columns 1 and 0 recorded once each
+        assert_eq!(out.stats.iterations, 3);
+    }
+
+    #[test]
+    fn matches_std_sort_on_all_kinds() {
+        use crate::datasets::{Dataset, DatasetKind};
+        for kind in DatasetKind::ALL {
+            let d = Dataset::generate32(kind, 512, 99);
+            for k in [0usize, 1, 2, 4] {
+                let mut cs = ColSkipSorter::with_k(k);
+                let out = cs.sort_with_stats(&d.values);
+                assert_eq!(out.sorted, sort_ref(&d.values), "{kind:?} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn never_slower_than_baseline() {
+        // With the paper's CR-count latency metric, a resumed traversal
+        // reads at most as many columns as a full one and a drain is
+        // cheaper than a traversal — so column skipping can never lose,
+        // at any k (it merely gains less when reloads are stale).
+        use crate::datasets::{Dataset, DatasetKind};
+        for kind in DatasetKind::ALL {
+            let d = Dataset::generate32(kind, 256, 5);
+            let mut base = BaselineSorter::with_width(32);
+            let bcr = base.sort_with_stats(&d.values).stats.crs;
+            for k in [0usize, 1, 2, 3, 8] {
+                let mut cs = ColSkipSorter::with_k(k);
+                let s = cs.sort_with_stats(&d.values).stats;
+                assert!(
+                    s.cycles() <= bcr,
+                    "{kind:?} k={k}: {} cycles vs baseline {bcr}",
+                    s.cycles()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn duplicates_drain_without_crs() {
+        // 64 equal values: one full traversal (all columns uninformative),
+        // then 63 drains with zero further CRs.
+        let data = vec![7u32; 64];
+        let mut cs = ColSkipSorter::new(ColSkipConfig { width: 8, k: 2, ..Default::default() });
+        let out = cs.sort_with_stats(&data);
+        assert_eq!(out.sorted, data);
+        assert_eq!(out.stats.iterations, 1);
+        assert_eq!(out.stats.drains, 63);
+        assert_eq!(out.stats.crs, 8, "one traversal's worth of CRs");
+    }
+
+    #[test]
+    fn stall_disabled_costs_more() {
+        let data = vec![7u32; 16];
+        let mut on = ColSkipSorter::new(ColSkipConfig { width: 8, k: 2, ..Default::default() });
+        let mut off = ColSkipSorter::new(ColSkipConfig {
+            width: 8,
+            k: 2,
+            stall_on_duplicates: false,
+            ..Default::default()
+        });
+        let c_on = on.sort_with_stats(&data).stats.cycles();
+        let c_off = off.sort_with_stats(&data).stats.cycles();
+        assert!(c_on < c_off, "stall should pay on duplicate-heavy data: {c_on} vs {c_off}");
+        assert_eq!(off.sort(&data), data);
+    }
+
+    #[test]
+    fn leading_zero_skip_pays_on_small_values() {
+        // All values < 2^8 in a 32-bit sorter: 24 leading-zero columns.
+        let data: Vec<u32> = (0..64u32).rev().collect();
+        let mut on = ColSkipSorter::new(ColSkipConfig { k: 0, ..Default::default() });
+        let mut off = ColSkipSorter::new(ColSkipConfig {
+            k: 0,
+            skip_leading: false,
+            ..Default::default()
+        });
+        let c_on = on.sort_with_stats(&data).stats.crs;
+        let c_off = off.sort_with_stats(&data).stats.crs;
+        assert!(c_on < c_off, "{c_on} vs {c_off}");
+        assert_eq!(on.sort(&data), sort_ref(&data));
+    }
+
+    #[test]
+    fn k_zero_with_skips_off_equals_baseline_cr_count() {
+        use crate::datasets::{Dataset, DatasetKind};
+        let d = Dataset::generate32(DatasetKind::Uniform, 128, 3);
+        let mut cs = ColSkipSorter::new(ColSkipConfig {
+            k: 0,
+            skip_leading: false,
+            stall_on_duplicates: false,
+            ..Default::default()
+        });
+        let mut base = BaselineSorter::with_width(32);
+        assert_eq!(
+            cs.sort_with_stats(&d.values).stats.crs,
+            base.sort_with_stats(&d.values).stats.crs,
+            "degenerate column skipping must reduce to the baseline"
+        );
+    }
+
+    #[test]
+    fn argsort_is_consistent() {
+        let data = vec![1000u32, 3, 3, 99, 0, 1 << 30];
+        let mut cs = ColSkipSorter::with_k(2);
+        let out = cs.sort_with_stats(&data);
+        for (i, &row) in out.order.iter().enumerate() {
+            assert_eq!(data[row], out.sorted[i]);
+        }
+        let mut rows = out.order.clone();
+        rows.sort_unstable();
+        assert_eq!(rows, (0..data.len()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_element_and_empty() {
+        let mut cs = ColSkipSorter::with_k(2);
+        assert_eq!(cs.sort(&[]), Vec::<u32>::new());
+        let out = cs.sort_with_stats(&[5]);
+        assert_eq!(out.sorted, vec![5]);
+        assert_eq!(out.stats.iterations, 1);
+    }
+
+    #[test]
+    fn already_sorted_and_reversed() {
+        let fwd: Vec<u32> = (0..256).collect();
+        let rev: Vec<u32> = (0..256).rev().collect();
+        for data in [fwd, rev] {
+            let mut cs = ColSkipSorter::with_k(2);
+            assert_eq!(cs.sort(&data), sort_ref(&data));
+        }
+    }
+
+    #[test]
+    fn extreme_values_full_width() {
+        let data = vec![u32::MAX, 0, u32::MAX, 1, 0x8000_0000, 0x7FFF_FFFF];
+        let mut cs = ColSkipSorter::with_k(3);
+        assert_eq!(cs.sort(&data), sort_ref(&data));
+    }
+
+    #[test]
+    fn mapreduce_speedup_exceeds_3x_at_k2() {
+        // The paper's headline regime (§V.A): clustered, small, repetitive
+        // keys ⇒ large CR savings. Exact factors are dataset-dependent;
+        // the shape requirement is >3× at N=1024, k=2.
+        use crate::datasets::{Dataset, DatasetKind};
+        let d = Dataset::generate32(DatasetKind::MapReduce, 1024, 42);
+        let mut cs = ColSkipSorter::with_k(2);
+        let cyc = cs.sort_with_stats(&d.values).stats.cycles();
+        let speedup = (1024.0 * 32.0) / cyc as f64;
+        assert!(speedup > 3.0, "MapReduce k=2 speedup {speedup:.2}");
+    }
+
+    #[test]
+    fn uniform_speedup_is_modest() {
+        // Fig. 6: uniform data gives only ~1.2× — most columns informative.
+        use crate::datasets::{Dataset, DatasetKind};
+        let d = Dataset::generate32(DatasetKind::Uniform, 1024, 42);
+        let mut cs = ColSkipSorter::with_k(2);
+        let cyc = cs.sort_with_stats(&d.values).stats.cycles();
+        let speedup = (1024.0 * 32.0) / cyc as f64;
+        assert!(speedup > 1.0 && speedup < 2.0, "uniform k=2 speedup {speedup:.2}");
+    }
+}

@@ -1,0 +1,94 @@
+//! The **column processor** of the near-memory circuit (paper Fig. 4): it
+//! owns the column-address register, decides where a traversal starts, and
+//! implements the two skip mechanisms of §III.A —
+//!
+//! 1. *leading-zero skipping*: full traversals start at the highest column
+//!    that can still be informative (tracked in the lead register — the
+//!    highest informative column ever observed can only move toward the
+//!    LSB as rows retire, so starting there is always sound);
+//! 2. *stalling*: when several rows stay active at the end of an iteration
+//!    (duplicates), the column processor stalls (`cen` deasserted) while
+//!    the row processor drains them, issuing zero CRs.
+
+/// Column-address control for one sorter.
+#[derive(Clone, Debug)]
+pub struct ColumnProcessor {
+    width: u32,
+    /// Highest column observed to be informative (lead register).
+    /// `None` until the first full traversal has run.
+    lead: Option<u32>,
+    /// Enable leading-zero skipping (scenario 1 of §III.A).
+    skip_leading: bool,
+}
+
+impl ColumnProcessor {
+    pub fn new(width: u32, skip_leading: bool) -> Self {
+        assert!(width >= 1 && width <= 32);
+        ColumnProcessor { width, lead: None, skip_leading }
+    }
+
+    pub fn width(&self) -> u32 {
+        self.width
+    }
+
+    /// Column where a *full* (from-MSB) traversal starts.
+    pub fn full_start(&self) -> u32 {
+        match (self.skip_leading, self.lead) {
+            (true, Some(l)) => l,
+            _ => self.width - 1,
+        }
+    }
+
+    /// Observe the first informative column of a full traversal; the lead
+    /// register latches it (it is non-increasing over the sort).
+    pub fn observe_first_informative(&mut self, col: u32) {
+        debug_assert!(self.lead.map_or(true, |l| col <= l));
+        self.lead = Some(col);
+    }
+
+    /// Reset for a new array.
+    pub fn reset(&mut self) {
+        self.lead = None;
+    }
+
+    /// Current lead register (tests/debug).
+    pub fn lead(&self) -> Option<u32> {
+        self.lead
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_at_msb_before_any_observation() {
+        let cp = ColumnProcessor::new(32, true);
+        assert_eq!(cp.full_start(), 31);
+    }
+
+    #[test]
+    fn lead_register_latches_and_lowers_start() {
+        let mut cp = ColumnProcessor::new(32, true);
+        cp.observe_first_informative(19);
+        assert_eq!(cp.full_start(), 19);
+        cp.observe_first_informative(12);
+        assert_eq!(cp.full_start(), 12);
+    }
+
+    #[test]
+    fn disabled_skipping_always_starts_at_msb() {
+        let mut cp = ColumnProcessor::new(32, false);
+        cp.observe_first_informative(5);
+        assert_eq!(cp.full_start(), 31);
+    }
+
+    #[test]
+    fn reset_clears_lead() {
+        let mut cp = ColumnProcessor::new(16, true);
+        cp.observe_first_informative(3);
+        cp.reset();
+        assert_eq!(cp.full_start(), 15);
+        assert_eq!(cp.lead(), None);
+    }
+}

@@ -1,0 +1,161 @@
+//! Order-preserving key transforms: signed fixed-point and IEEE-754
+//! float sorting on an unsigned bit-traversal sorter, plus descending
+//! order and top-k (paper §III: "easily applicable to signed fixed-point
+//! and floating-point number formats with small changes as described in
+//! [18]").
+//!
+//! The transforms are the classic radix-sort keys:
+//! * signed: flip the sign bit — two's-complement order becomes unsigned
+//!   order;
+//! * float: flip the sign bit for positives, flip *all* bits for
+//!   negatives — IEEE-754 totally ordered as unsigned (NaNs sort above
+//!   +inf by payload; ±0.0 compare equal in float terms but map to
+//!   distinct adjacent keys).
+//! * descending: bitwise complement.
+
+use super::{InMemorySorter, SortOutput};
+
+/// Map an `i32` to a `u32` whose unsigned order matches the signed order.
+#[inline]
+pub fn signed_key(v: i32) -> u32 {
+    (v as u32) ^ 0x8000_0000
+}
+
+/// Inverse of [`signed_key`].
+#[inline]
+pub fn signed_unkey(k: u32) -> i32 {
+    (k ^ 0x8000_0000) as i32
+}
+
+/// Map an `f32` to a `u32` whose unsigned order matches the IEEE total
+/// order (negative floats reversed, sign bit flipped).
+#[inline]
+pub fn float_key(v: f32) -> u32 {
+    let b = v.to_bits();
+    if b & 0x8000_0000 != 0 {
+        !b
+    } else {
+        b ^ 0x8000_0000
+    }
+}
+
+/// Inverse of [`float_key`].
+#[inline]
+pub fn float_unkey(k: u32) -> f32 {
+    let b = if k & 0x8000_0000 != 0 { k ^ 0x8000_0000 } else { !k };
+    f32::from_bits(b)
+}
+
+/// Key transform for descending unsigned order.
+#[inline]
+pub fn descending_key(v: u32) -> u32 {
+    !v
+}
+
+/// Sort `i32` data on any in-memory sorter via the signed key transform.
+pub fn sort_signed<S: InMemorySorter>(sorter: &mut S, data: &[i32]) -> (Vec<i32>, SortOutput) {
+    let keys: Vec<u32> = data.iter().map(|&v| signed_key(v)).collect();
+    let out = sorter.sort_with_stats(&keys);
+    let values = out.sorted.iter().map(|&k| signed_unkey(k)).collect();
+    (values, out)
+}
+
+/// Sort `f32` data on any in-memory sorter via the float key transform.
+pub fn sort_floats<S: InMemorySorter>(sorter: &mut S, data: &[f32]) -> (Vec<f32>, SortOutput) {
+    let keys: Vec<u32> = data.iter().map(|&v| float_key(v)).collect();
+    let out = sorter.sort_with_stats(&keys);
+    let values = out.sorted.iter().map(|&k| float_unkey(k)).collect();
+    (values, out)
+}
+
+/// Sort descending via the complement transform.
+pub fn sort_descending<S: InMemorySorter>(sorter: &mut S, data: &[u32]) -> (Vec<u32>, SortOutput) {
+    let keys: Vec<u32> = data.iter().map(|&v| descending_key(v)).collect();
+    let out = sorter.sort_with_stats(&keys);
+    let values = out.sorted.iter().map(|&k| !k).collect();
+    (values, out)
+}
+
+/// Stream only the `k` smallest elements (the min-search loop stops after
+/// `k` emissions — in-memory sorting is naturally a streaming top-k).
+pub fn top_k_min<S: InMemorySorter>(sorter: &mut S, data: &[u32], k: usize) -> Vec<u32> {
+    // The sorters emit mins in order; truncating the output is exactly the
+    // hardware behaviour of stopping the iteration counter at k.
+    let mut out = sorter.sort_with_stats(data).sorted;
+    out.truncate(k);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sorter::colskip::ColSkipSorter;
+
+    #[test]
+    fn signed_key_preserves_order() {
+        let vals = [i32::MIN, -5, -1, 0, 1, 5, i32::MAX];
+        let keys: Vec<u32> = vals.iter().map(|&v| signed_key(v)).collect();
+        assert!(keys.windows(2).all(|w| w[0] < w[1]));
+        for &v in &vals {
+            assert_eq!(signed_unkey(signed_key(v)), v);
+        }
+    }
+
+    #[test]
+    fn float_key_preserves_order() {
+        let vals = [f32::NEG_INFINITY, -1e30, -1.5, -0.0, 0.0, 1e-30, 2.5, f32::INFINITY];
+        let keys: Vec<u32> = vals.iter().map(|&v| float_key(v)).collect();
+        assert!(keys.windows(2).all(|w| w[0] <= w[1]));
+        // Bit-exact roundtrip (including -0.0).
+        for &v in &vals {
+            assert_eq!(float_unkey(float_key(v)).to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn nan_sorts_above_infinity() {
+        assert!(float_key(f32::NAN) > float_key(f32::INFINITY));
+    }
+
+    #[test]
+    fn sort_signed_end_to_end() {
+        let data = vec![3i32, -7, 0, i32::MIN, 42, -1, i32::MAX];
+        let mut s = ColSkipSorter::with_k(2);
+        let (sorted, _) = sort_signed(&mut s, &data);
+        let mut expect = data.clone();
+        expect.sort_unstable();
+        assert_eq!(sorted, expect);
+    }
+
+    #[test]
+    fn sort_floats_end_to_end() {
+        let data = vec![3.5f32, -7.25, 0.0, -0.0, 1e-10, -1e10, f32::INFINITY];
+        let mut s = ColSkipSorter::with_k(2);
+        let (sorted, _) = sort_floats(&mut s, &data);
+        let mut expect = data.clone();
+        expect.sort_by(|a, b| a.total_cmp(b));
+        assert_eq!(
+            sorted.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            expect.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn sort_descending_end_to_end() {
+        let data = vec![5u32, 0, u32::MAX, 17, 17];
+        let mut s = ColSkipSorter::with_k(2);
+        let (sorted, _) = sort_descending(&mut s, &data);
+        let mut expect = data.clone();
+        expect.sort_unstable_by(|a, b| b.cmp(a));
+        assert_eq!(sorted, expect);
+    }
+
+    #[test]
+    fn top_k_streams_smallest() {
+        let data = vec![9u32, 1, 8, 2, 7, 3, 6, 4, 5];
+        let mut s = ColSkipSorter::with_k(2);
+        assert_eq!(top_k_min(&mut s, &data, 3), vec![1, 2, 3]);
+        assert_eq!(top_k_min(&mut s, &data, 0), Vec::<u32>::new());
+        assert_eq!(top_k_min(&mut s, &data, 100).len(), 9);
+    }
+}

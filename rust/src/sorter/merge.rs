@@ -1,0 +1,152 @@
+//! The conventional digital merge sorter used as the non-in-memory
+//! comparison point (§V: 246.1 Kµm², 825.9 mW, 3.2× the baseline's speed
+//! at N=1024).
+//!
+//! Hardware model: a fully pipelined binary merge tree — `ceil(log2 N)`
+//! merge passes, each streaming one element per cycle. Passes run
+//! back-to-back over the block, so the latency for a length-N block is
+//! `N · ceil(log2 N)` cycles — exactly 10 cycles/number at N=1024, which
+//! reproduces the paper's 3.2× speed over the 32-cycle baseline.
+//! Functionally we run a real bottom-up merge sort and meter comparisons,
+//! so the cycle model is backed by an actual sort.
+
+use super::{InMemorySorter, SortOutput, SortStats};
+
+/// Cycle-modelled digital merge sorter.
+#[derive(Clone, Debug, Default)]
+pub struct MergeSorter {
+    /// Comparator operations performed by the last sort (metered).
+    pub comparisons: u64,
+}
+
+impl MergeSorter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Latency of a length-`n` block in cycles under the pipeline model.
+    pub fn model_cycles(n: usize) -> u64 {
+        if n <= 1 {
+            return n as u64;
+        }
+        let passes = usize::BITS - (n - 1).leading_zeros(); // ceil(log2 n)
+        n as u64 * passes as u64
+    }
+
+    /// Bottom-up merge sort over (value, original index) pairs, metering
+    /// comparator activity. Stable, so `order` breaks ties by row index.
+    fn merge_sort(&mut self, data: &[u32]) -> Vec<(u32, usize)> {
+        let mut cur: Vec<(u32, usize)> = data.iter().copied().zip(0..).collect();
+        let mut buf = cur.clone();
+        let n = cur.len();
+        let mut width = 1;
+        while width < n {
+            let mut lo = 0;
+            while lo < n {
+                let mid = (lo + width).min(n);
+                let hi = (lo + 2 * width).min(n);
+                let (mut i, mut j, mut o) = (lo, mid, lo);
+                while i < mid && j < hi {
+                    self.comparisons += 1;
+                    if cur[i].0 <= cur[j].0 {
+                        buf[o] = cur[i];
+                        i += 1;
+                    } else {
+                        buf[o] = cur[j];
+                        j += 1;
+                    }
+                    o += 1;
+                }
+                buf[o..o + (mid - i)].copy_from_slice(&cur[i..mid]);
+                let o2 = o + (mid - i);
+                buf[o2..o2 + (hi - j)].copy_from_slice(&cur[j..hi]);
+                lo = hi;
+            }
+            std::mem::swap(&mut cur, &mut buf);
+            width *= 2;
+        }
+        cur
+    }
+}
+
+impl InMemorySorter for MergeSorter {
+    fn sort_with_stats(&mut self, data: &[u32]) -> SortOutput {
+        self.comparisons = 0;
+        let pairs = self.merge_sort(data);
+        let stats = SortStats {
+            // The cycle model is surfaced through `crs` so that
+            // `SortStats::cycles()` reports the modelled latency uniformly
+            // across sorter kinds (a merge sorter has no actual CRs).
+            crs: Self::model_cycles(data.len()),
+            iterations: data.len() as u64,
+            ..Default::default()
+        };
+        SortOutput {
+            sorted: pairs.iter().map(|&(v, _)| v).collect(),
+            order: pairs.iter().map(|&(_, i)| i).collect(),
+            stats,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "merge-digital"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_reproduces_paper_speed() {
+        // N=1024 ⇒ 10 cycles/number ⇒ 3.2× over the 32-cycle baseline.
+        let c = MergeSorter::model_cycles(1024);
+        assert_eq!(c, 10240);
+        assert!((32.0 / (c as f64 / 1024.0) - 3.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn model_edge_sizes() {
+        assert_eq!(MergeSorter::model_cycles(0), 0);
+        assert_eq!(MergeSorter::model_cycles(1), 1);
+        assert_eq!(MergeSorter::model_cycles(2), 2);
+        assert_eq!(MergeSorter::model_cycles(3), 6); // 2 passes
+        assert_eq!(MergeSorter::model_cycles(1000), 10_000); // non-power-of-2
+    }
+
+    #[test]
+    fn sorts_correctly() {
+        let data = vec![5u32, 1, 4, 1, 5, 9, 2, 6, 5, 3, 5];
+        let mut m = MergeSorter::new();
+        let out = m.sort_with_stats(&data);
+        let mut expect = data.clone();
+        expect.sort_unstable();
+        assert_eq!(out.sorted, expect);
+        assert!(m.comparisons > 0);
+    }
+
+    #[test]
+    fn stable_argsort_on_ties() {
+        let data = vec![7u32, 7, 7];
+        let mut m = MergeSorter::new();
+        let out = m.sort_with_stats(&data);
+        assert_eq!(out.order, vec![0, 1, 2], "stability: tie order = row order");
+    }
+
+    #[test]
+    fn comparison_count_is_n_log_n_ish() {
+        let data: Vec<u32> = (0..1024u32).rev().collect();
+        let mut m = MergeSorter::new();
+        m.sort_with_stats(&data);
+        // Reverse order is the worst case-ish: between n/2·log n and n·log n.
+        assert!(m.comparisons >= 512 * 10);
+        assert!(m.comparisons <= 1024 * 10);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let mut m = MergeSorter::new();
+        assert_eq!(m.sort(&[]), Vec::<u32>::new());
+        assert_eq!(m.sort(&[3]), vec![3]);
+    }
+}

@@ -1,0 +1,144 @@
+//! In-memory sorters: the paper's column-skipping sorter, the HPCA'21
+//! bit-traversal baseline it improves on, and the digital merge sorter the
+//! evaluation compares against.
+//!
+//! All sorters implement [`InMemorySorter`] and return a [`SortOutput`]
+//! carrying the sorted values, the row order (argsort — needed by the
+//! Kruskal example), and fully itemized operation counts ([`SortStats`])
+//! from which the latency and activity-driven power models are computed.
+
+pub mod baseline;
+pub mod colskip;
+pub mod column;
+pub mod keys;
+pub mod merge;
+pub mod row;
+pub mod state;
+
+/// Operation counts accumulated while sorting one array.
+///
+/// Cycle accounting follows the paper: a column read is one cycle (the
+/// baseline's `N·w` CRs ⇒ 32 cycles/number at `w=32`, and Fig. 3's
+/// "total latency is reduced to only 7 CRs"); a duplicate drain occupies
+/// one row-processor cycle; row exclusions, state recordings and state
+/// loads overlap the CR pipeline (SR/SL are register-mux selects gated by
+/// `sen`/`len`) and are free.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct SortStats {
+    /// Column reads (CR) issued.
+    pub crs: u64,
+    /// Row exclusions (RE) applied (informative columns only).
+    pub res: u64,
+    /// State recordings (SR) into the k-entry table.
+    pub srs: u64,
+    /// State loads (SL) from the table.
+    pub sls: u64,
+    /// State-table entries discarded because their snapshot died.
+    pub invalidations: u64,
+    /// Duplicate elements drained with the column processor stalled.
+    pub drains: u64,
+    /// Min-search iterations executed (= emitted elements minus drains).
+    pub iterations: u64,
+}
+
+impl SortStats {
+    /// Total latency in near-memory-circuit cycles.
+    pub fn cycles(&self) -> u64 {
+        self.crs + self.drains
+    }
+
+    /// Cycles per sorted element.
+    pub fn cycles_per_number(&self, n: usize) -> f64 {
+        if n == 0 {
+            0.0
+        } else {
+            self.cycles() as f64 / n as f64
+        }
+    }
+
+    /// Wall-clock seconds at the paper's 500 MHz clock.
+    pub fn seconds(&self) -> f64 {
+        self.cycles() as f64 / crate::params::CLOCK_HZ
+    }
+
+    /// Sorted numbers per second at the paper's clock.
+    pub fn throughput(&self, n: usize) -> f64 {
+        if self.cycles() == 0 {
+            0.0
+        } else {
+            n as f64 * crate::params::CLOCK_HZ / self.cycles() as f64
+        }
+    }
+
+    /// Merge counters from another run (used by the service metrics).
+    pub fn merge_from(&mut self, other: &SortStats) {
+        self.crs += other.crs;
+        self.res += other.res;
+        self.srs += other.srs;
+        self.sls += other.sls;
+        self.invalidations += other.invalidations;
+        self.drains += other.drains;
+        self.iterations += other.iterations;
+    }
+}
+
+/// Result of sorting one array.
+#[derive(Clone, Debug)]
+pub struct SortOutput {
+    /// Values in ascending order.
+    pub sorted: Vec<u32>,
+    /// `order[i]` = original row index of `sorted[i]` (argsort).
+    pub order: Vec<usize>,
+    /// Itemized operation counts.
+    pub stats: SortStats,
+}
+
+/// Common interface over all sorter implementations.
+pub trait InMemorySorter {
+    /// Sort `data` ascending, returning values, order and statistics.
+    fn sort_with_stats(&mut self, data: &[u32]) -> SortOutput;
+
+    /// Human-readable name for reports.
+    fn name(&self) -> &'static str;
+
+    /// Sort and return just the values.
+    fn sort(&mut self, data: &[u32]) -> Vec<u32> {
+        self.sort_with_stats(data).sorted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cycles_weights() {
+        let s = SortStats { crs: 10, sls: 2, drains: 3, res: 99, srs: 99, ..Default::default() };
+        assert_eq!(s.cycles(), 13); // REs, SRs and SLs are free (overlapped)
+    }
+
+    #[test]
+    fn throughput_at_paper_clock() {
+        let s = SortStats { crs: 32 * 1024, ..Default::default() };
+        // Baseline at N=1024, w=32: 32 cycles/number ⇒ 15.625 Mnum/s.
+        assert!((s.cycles_per_number(1024) - 32.0).abs() < 1e-12);
+        assert!((s.throughput(1024) - 15.625e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn merge_from_accumulates() {
+        let mut a = SortStats { crs: 1, res: 2, ..Default::default() };
+        let b = SortStats { crs: 10, drains: 5, ..Default::default() };
+        a.merge_from(&b);
+        assert_eq!(a.crs, 11);
+        assert_eq!(a.drains, 5);
+        assert_eq!(a.res, 2);
+    }
+
+    #[test]
+    fn empty_input_edge_cases() {
+        let s = SortStats::default();
+        assert_eq!(s.cycles_per_number(0), 0.0);
+        assert_eq!(s.throughput(0), 0.0);
+    }
+}

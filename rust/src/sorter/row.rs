@@ -1,0 +1,118 @@
+//! The **row processor** of the near-memory circuit (paper Fig. 4): it
+//! owns the wordline (RE-state) registers and the sorted-row bookkeeping,
+//! applies row exclusions, and drains duplicate rows while the column
+//! processor stalls.
+
+use crate::bits::RowMask;
+
+/// Wordline-side state for one sorter.
+#[derive(Clone, Debug)]
+pub struct RowProcessor {
+    /// Rows not yet emitted to the sorted output.
+    alive: RowMask,
+    /// Rows still active in the current min search (wordline register).
+    active: RowMask,
+}
+
+impl RowProcessor {
+    pub fn new(rows: usize) -> Self {
+        RowProcessor { alive: RowMask::new_full(rows), active: RowMask::new_full(rows) }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.alive.len()
+    }
+
+    /// Rows not yet sorted out.
+    pub fn alive(&self) -> &RowMask {
+        &self.alive
+    }
+
+    /// The wordline register (current min-search candidates).
+    pub fn active(&self) -> &RowMask {
+        &self.active
+    }
+
+    /// Number of rows not yet emitted.
+    pub fn remaining(&self) -> usize {
+        self.alive.count()
+    }
+
+    /// Begin an iteration from scratch: all alive rows are candidates.
+    pub fn begin_full(&mut self) {
+        self.active.copy_from(&self.alive);
+    }
+
+    /// Begin an iteration from a recorded snapshot: candidates are the
+    /// snapshot rows still alive (the SL path).
+    pub fn begin_from_snapshot(&mut self, snapshot: &RowMask) {
+        self.active.assign_and(snapshot, &self.alive);
+    }
+
+    /// Apply a row exclusion: candidates that sensed 1 drop out.
+    pub fn exclude(&mut self, ones: &RowMask) {
+        self.active.and_not_assign(ones);
+    }
+
+    /// Emit the priority-encoded first active row and retire it.
+    /// Returns the retired row index.
+    pub fn emit_first(&mut self) -> usize {
+        let row = self.active.first_set().expect("emit with no active row");
+        self.active.clear(row);
+        self.alive.clear(row);
+        row
+    }
+
+    /// True if candidates remain after an emission (duplicates pending).
+    pub fn has_pending_duplicates(&self) -> bool {
+        !self.active.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn begin_full_tracks_alive() {
+        let mut rp = RowProcessor::new(4);
+        rp.begin_full();
+        assert_eq!(rp.active().count(), 4);
+        rp.emit_first();
+        rp.begin_full();
+        assert_eq!(rp.active().count(), 3);
+        assert!(!rp.alive().get(0));
+    }
+
+    #[test]
+    fn exclude_removes_ones() {
+        let mut rp = RowProcessor::new(4);
+        rp.begin_full();
+        rp.exclude(&RowMask::from_rows(4, [1, 3]));
+        assert_eq!(rp.active().iter_set().collect::<Vec<_>>(), vec![0, 2]);
+    }
+
+    #[test]
+    fn snapshot_start_intersects_alive() {
+        let mut rp = RowProcessor::new(4);
+        rp.begin_full();
+        // Retire row 1.
+        rp.exclude(&RowMask::from_rows(4, [0, 2, 3]));
+        assert_eq!(rp.emit_first(), 1);
+        // Snapshot {0,1,2}: row 1 is gone, candidates = {0,2}.
+        rp.begin_from_snapshot(&RowMask::from_rows(4, [0, 1, 2]));
+        assert_eq!(rp.active().iter_set().collect::<Vec<_>>(), vec![0, 2]);
+    }
+
+    #[test]
+    fn emit_priority_is_lowest_index() {
+        let mut rp = RowProcessor::new(8);
+        rp.begin_from_snapshot(&RowMask::from_rows(8, [5, 2, 7]));
+        assert_eq!(rp.emit_first(), 2);
+        assert!(rp.has_pending_duplicates());
+        assert_eq!(rp.emit_first(), 5);
+        assert_eq!(rp.emit_first(), 7);
+        assert!(!rp.has_pending_duplicates());
+        assert_eq!(rp.remaining(), 5);
+    }
+}

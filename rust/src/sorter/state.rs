@@ -1,0 +1,206 @@
+//! The k-entry **state controller** of the column-skipping near-memory
+//! circuit (paper §III.B, Fig. 4).
+//!
+//! Each entry holds a wordline (RE-state) snapshot and the bit-column
+//! index it belongs to. Semantics (derived from Fig. 2/3 and validated
+//! against the paper's worked example — see `colskip::tests`):
+//!
+//! * **SR (state recording)** — during an iteration that started from the
+//!   MSB, every informative column records the RE state *with which the
+//!   column was entered* plus its index. Only the `k` most recent
+//!   recordings are kept (the table is a shift register; older entries
+//!   fall off).
+//! * **SL (state loading)** — a new min search peeks the most recent
+//!   entry. If its snapshot still contains an unsorted row, the wordline
+//!   register is loaded from it and the traversal resumes at that entry's
+//!   column (every column above it is provably redundant). Entries whose
+//!   snapshots contain only already-sorted rows are permanently discarded
+//!   (their rows can never come back).
+
+use crate::bits::RowMask;
+
+/// One recorded (RE state, column index) pair.
+#[derive(Clone, Debug)]
+pub struct StateEntry {
+    /// Wordline snapshot: the active-row set entering column `col`.
+    pub snapshot: RowMask,
+    /// The bit column the snapshot belongs to.
+    pub col: u32,
+}
+
+/// The k-entry recording table.
+#[derive(Clone, Debug)]
+pub struct StateTable {
+    entries: Vec<StateEntry>,
+    k: usize,
+    /// Spare snapshot buffers recycled from evicted/invalidated entries so
+    /// steady-state recording never allocates.
+    pool: Vec<RowMask>,
+}
+
+impl StateTable {
+    /// A table with capacity `k` (k = 0 disables recording entirely).
+    pub fn new(k: usize) -> Self {
+        StateTable { entries: Vec::with_capacity(k), k, pool: Vec::with_capacity(k + 1) }
+    }
+
+    /// Capacity (the paper's parameter k).
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Current number of stored entries.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Record the state `active` entering informative column `col`
+    /// (the SR operation). Evicts the oldest entry when full.
+    pub fn record(&mut self, active: &RowMask, col: u32) {
+        if self.k == 0 {
+            return;
+        }
+        let mut snapshot = if self.entries.len() == self.k {
+            // Shift register full: oldest entry's buffer is recycled.
+            self.entries.remove(0).snapshot
+        } else {
+            self.pool.pop().unwrap_or_else(|| RowMask::new_empty(active.len()))
+        };
+        snapshot.copy_from(active);
+        self.entries.push(StateEntry { snapshot, col });
+    }
+
+    /// The SL operation: discard dead entries (snapshot disjoint from
+    /// `alive`), then return the most recent live one. Returns the number
+    /// of entries invalidated alongside the entry.
+    pub fn load_most_recent(&mut self, alive: &RowMask) -> (Option<&StateEntry>, u64) {
+        let mut invalidated = 0;
+        while let Some(last) = self.entries.last() {
+            if last.snapshot.intersects(alive) {
+                return (self.entries.last(), invalidated);
+            }
+            let dead = self.entries.pop().expect("last() was Some");
+            self.pool.push(dead.snapshot);
+            invalidated += 1;
+        }
+        (None, invalidated)
+    }
+
+    /// Pop the most recent entry unconditionally (multi-bank manager use:
+    /// an entry that is dead *globally* is popped in every bank even if
+    /// some local snapshot is empty). Returns whether an entry was popped.
+    pub fn pop_most_recent(&mut self) -> bool {
+        match self.entries.pop() {
+            Some(e) => {
+                self.pool.push(e.snapshot);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Drop all entries (used when switching arrays).
+    pub fn clear(&mut self) {
+        while let Some(e) = self.entries.pop() {
+            self.pool.push(e.snapshot);
+        }
+    }
+
+    /// Read-only view of the entries, oldest first (for tests/debug).
+    pub fn entries(&self) -> &[StateEntry] {
+        &self.entries
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mask(n: usize, rows: &[usize]) -> RowMask {
+        RowMask::from_rows(n, rows.iter().copied())
+    }
+
+    #[test]
+    fn k_zero_records_nothing() {
+        let mut t = StateTable::new(0);
+        t.record(&mask(8, &[0, 1]), 3);
+        assert!(t.is_empty());
+        let alive = mask(8, &[0]);
+        let (e, inv) = t.load_most_recent(&alive);
+        assert!(e.is_none());
+        assert_eq!(inv, 0);
+    }
+
+    #[test]
+    fn keeps_k_most_recent() {
+        let mut t = StateTable::new(2);
+        t.record(&mask(8, &[0, 1, 2]), 5);
+        t.record(&mask(8, &[0, 1]), 4);
+        t.record(&mask(8, &[0]), 3);
+        assert_eq!(t.len(), 2);
+        // Oldest (col 5) evicted.
+        assert_eq!(t.entries()[0].col, 4);
+        assert_eq!(t.entries()[1].col, 3);
+    }
+
+    #[test]
+    fn load_returns_most_recent_live() {
+        let mut t = StateTable::new(3);
+        t.record(&mask(8, &[0, 1, 2]), 5);
+        t.record(&mask(8, &[1, 2]), 4);
+        let alive = mask(8, &[1, 2, 7]);
+        let (e, inv) = t.load_most_recent(&alive);
+        assert_eq!(e.unwrap().col, 4);
+        assert_eq!(inv, 0);
+    }
+
+    #[test]
+    fn dead_entries_are_discarded_permanently() {
+        let mut t = StateTable::new(3);
+        t.record(&mask(8, &[0, 1, 2]), 5);
+        t.record(&mask(8, &[1]), 4);
+        // Row 1 got sorted: entry at col 4 is dead.
+        let alive = mask(8, &[0, 2]);
+        let (e, inv) = t.load_most_recent(&alive);
+        assert_eq!(e.unwrap().col, 5);
+        assert_eq!(inv, 1);
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn all_dead_empties_table() {
+        let mut t = StateTable::new(2);
+        t.record(&mask(8, &[0]), 5);
+        t.record(&mask(8, &[1]), 4);
+        let alive = mask(8, &[6, 7]);
+        let (e, inv) = t.load_most_recent(&alive);
+        assert!(e.is_none());
+        assert_eq!(inv, 2);
+        assert!(t.is_empty());
+    }
+
+    #[test]
+    fn snapshot_is_a_copy_not_a_reference() {
+        let mut t = StateTable::new(1);
+        let mut m = mask(8, &[0, 1]);
+        t.record(&m, 3);
+        m.clear(0);
+        m.clear(1);
+        assert_eq!(t.entries()[0].snapshot.count(), 2);
+    }
+
+    #[test]
+    fn clear_resets() {
+        let mut t = StateTable::new(2);
+        t.record(&mask(8, &[0]), 1);
+        t.clear();
+        assert!(t.is_empty());
+        // Buffers recycle through the pool: record again without growth.
+        t.record(&mask(8, &[1]), 2);
+        assert_eq!(t.len(), 1);
+    }
+}

@@ -1,0 +1,181 @@
+//! Minimal property-testing harness (the vendored registry has no
+//! `proptest`, so we carry our own): seeded random case generation with
+//! automatic shrinking of failing `Vec<u32>` inputs.
+//!
+//! Used by `rust/tests/proptests.rs` to check the coordinator/sorter
+//! invariants the paper relies on (output sortedness, permutation
+//! property, cycle-count bounds, multi-bank equivalence).
+
+use crate::datasets::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Debug)]
+pub struct PropConfig {
+    /// Number of random cases.
+    pub cases: usize,
+    /// Base seed (each case derives its own stream).
+    pub seed: u64,
+    /// Max length of generated vectors.
+    pub max_len: usize,
+    /// Max bit width of generated values.
+    pub max_width: u32,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 256, seed: 0xC0FFEE, max_len: 200, max_width: 32 }
+    }
+}
+
+/// A generated case: values plus the width they fit in.
+#[derive(Clone, Debug)]
+pub struct Case {
+    pub values: Vec<u32>,
+    pub width: u32,
+}
+
+/// Generate a random case biased toward sorter-hostile shapes: small
+/// widths, duplicates, runs, extremes.
+pub fn gen_case(rng: &mut Rng, cfg: &PropConfig) -> Case {
+    let width = 1 + rng.below(cfg.max_width as u64) as u32;
+    let len = rng.below(cfg.max_len as u64 + 1) as usize;
+    let max_val = if width == 32 { u32::MAX } else { (1u32 << width) - 1 };
+    let mode = rng.below(5);
+    let values: Vec<u32> = (0..len)
+        .map(|i| match mode {
+            // Uniform over the full width.
+            0 => (rng.next_u64() & max_val as u64) as u32,
+            // Heavy duplicates from a tiny pool.
+            1 => {
+                let pool = 1 + rng.below(4) as u32;
+                (rng.below(pool as u64 + 1) as u32).min(max_val)
+            }
+            // Small values (leading zeros).
+            2 => (rng.below(16.min(max_val as u64 + 1)) as u32).min(max_val),
+            // Sorted / reverse runs.
+            3 => (i as u32).min(max_val),
+            _ => (max_val).saturating_sub(i as u32),
+        })
+        .collect();
+    Case { values, width }
+}
+
+/// Run `prop` over random cases; on failure, shrink the input and panic
+/// with the minimal reproduction.
+pub fn check(name: &str, cfg: PropConfig, prop: impl Fn(&Case) -> Result<(), String>) {
+    let mut rng = Rng::new(cfg.seed);
+    for case_idx in 0..cfg.cases {
+        let case = gen_case(&mut rng, &cfg);
+        if let Err(msg) = prop(&case) {
+            let minimal = shrink(&case, &prop);
+            panic!(
+                "property `{name}` failed (case {case_idx}): {msg}\n\
+                 minimal repro: width={} values={:?}",
+                minimal.width, minimal.values
+            );
+        }
+    }
+}
+
+/// Greedy shrink: try removing chunks, then halving values.
+fn shrink(case: &Case, prop: &impl Fn(&Case) -> Result<(), String>) -> Case {
+    let mut cur = case.clone();
+    // Remove chunks while the property still fails.
+    let mut chunk = (cur.values.len() / 2).max(1);
+    while chunk >= 1 && !cur.values.is_empty() {
+        let mut i = 0;
+        let mut progressed = false;
+        while i < cur.values.len() {
+            let mut cand = cur.clone();
+            let hi = (i + chunk).min(cand.values.len());
+            cand.values.drain(i..hi);
+            if prop(&cand).is_err() {
+                cur = cand;
+                progressed = true;
+            } else {
+                i += chunk;
+            }
+        }
+        if chunk == 1 && !progressed {
+            break;
+        }
+        chunk = (chunk / 2).max(1);
+        if chunk == 1 && !progressed && cur.values.len() <= 1 {
+            break;
+        }
+    }
+    // Shrink individual values toward zero.
+    loop {
+        let mut progressed = false;
+        for i in 0..cur.values.len() {
+            while cur.values[i] > 0 {
+                let mut cand = cur.clone();
+                cand.values[i] /= 2;
+                if prop(&cand).is_err() {
+                    cur = cand;
+                    progressed = true;
+                } else {
+                    break;
+                }
+            }
+        }
+        if !progressed {
+            break;
+        }
+    }
+    cur
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        check("tautology", PropConfig { cases: 50, ..Default::default() }, |_| Ok(()));
+    }
+
+    #[test]
+    #[should_panic(expected = "property `fails-on-nonempty` failed")]
+    fn failing_property_panics_with_repro() {
+        check(
+            "fails-on-nonempty",
+            PropConfig { cases: 50, ..Default::default() },
+            |c| {
+                if c.values.len() > 3 {
+                    Err("too long".into())
+                } else {
+                    Ok(())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn shrink_finds_small_repro() {
+        // Property fails iff any value >= 8: minimal repro is one value 8.
+        let prop = |c: &Case| -> Result<(), String> {
+            if c.values.iter().any(|&v| v >= 8) {
+                Err("has big value".into())
+            } else {
+                Ok(())
+            }
+        };
+        let case = Case { values: vec![3, 100, 5, 64, 9], width: 8 };
+        let min = shrink(&case, &prop);
+        assert_eq!(min.values.len(), 1, "{min:?}");
+        assert!(min.values[0] >= 8 && min.values[0] <= 12, "{min:?}");
+    }
+
+    #[test]
+    fn gen_case_respects_width() {
+        let mut rng = Rng::new(1);
+        let cfg = PropConfig::default();
+        for _ in 0..200 {
+            let c = gen_case(&mut rng, &cfg);
+            if c.width < 32 {
+                assert!(c.values.iter().all(|&v| v < (1 << c.width)));
+            }
+        }
+    }
+}

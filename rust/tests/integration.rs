@@ -1,0 +1,201 @@
+//! Cross-layer integration tests: native simulator vs the AOT/PJRT rank
+//! pass, multi-bank vs single-bank, service-level behaviour, and the
+//! paper's figure harnesses at full scale.
+
+use memsort::coordinator::{EngineKind, ServiceConfig, SortService};
+use memsort::datasets::{Dataset, DatasetKind};
+use memsort::multibank::{MultiBankConfig, MultiBankSorter};
+use memsort::runtime::PjrtEngine;
+use memsort::sorter::baseline::BaselineSorter;
+use memsort::sorter::colskip::{ColSkipConfig, ColSkipSorter};
+use memsort::sorter::{InMemorySorter, SortOutput};
+
+fn artifacts_ready() -> bool {
+    let ok = PjrtEngine::default_dir().join("manifest.txt").exists();
+    if !ok {
+        eprintln!("skipping PJRT test: run `make artifacts` first");
+    }
+    ok
+}
+
+fn colskip(k: usize, width: u32) -> ColSkipSorter {
+    ColSkipSorter::new(ColSkipConfig { width, k, ..Default::default() })
+}
+
+/// The three-layer contract: the PJRT-executed AOT artifact (L2 scan of
+/// the L1 Pallas kernel) and the native L3 simulator agree bit-exactly on
+/// the sorted output for every dataset family.
+#[test]
+fn pjrt_and_native_agree_on_all_datasets() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mut engine = PjrtEngine::new(PjrtEngine::default_dir()).unwrap();
+    for kind in DatasetKind::ALL {
+        let d = Dataset::generate32(kind, 64, 31);
+        let pass = engine.rank(&d.values).unwrap();
+        let native = colskip(2, 32).sort_with_stats(&d.values);
+        assert_eq!(pass.sorted, native.sorted, "{kind:?}");
+        let mut expect = d.values.clone();
+        expect.sort_unstable();
+        assert_eq!(pass.sorted, expect, "{kind:?}");
+    }
+}
+
+/// The AOT traces must match the native sorter's view of the iteration
+/// structure: per-iteration informative-column counts sum to the native
+/// RE count when duplicates are drained one-per-iteration on both sides.
+#[test]
+fn pjrt_traces_are_consistent_with_baseline_res() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mut engine = PjrtEngine::new(PjrtEngine::default_dir()).unwrap();
+    let d = Dataset::generate32(DatasetKind::Clustered, 64, 5);
+    let pass = engine.rank(&d.values).unwrap();
+    // The baseline sorter also emits exactly one row per iteration, so
+    // its RE count equals the sum of per-iteration informative columns.
+    let mut base = BaselineSorter::with_width(32);
+    let bout = base.sort_with_stats(&d.values);
+    let trace_res: i64 = pass.infos.iter().map(|&x| x as i64).sum();
+    assert_eq!(trace_res, bout.stats.res as i64);
+}
+
+#[test]
+fn pjrt_full_1024_artifact_runs() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mut engine = PjrtEngine::new(PjrtEngine::default_dir()).unwrap();
+    let d = Dataset::generate32(DatasetKind::MapReduce, 1024, 42);
+    let pass = engine.rank(&d.values).unwrap();
+    let mut expect = d.values.clone();
+    expect.sort_unstable();
+    assert_eq!(pass.sorted, expect);
+}
+
+/// §V.C invariant at full paper scale: banking never changes the cycle
+/// trace, only area/power.
+#[test]
+fn multibank_scale_invariance_at_n1024() {
+    let d = Dataset::generate32(DatasetKind::MapReduce, 1024, 42);
+    let single: SortOutput = colskip(2, 32).sort_with_stats(&d.values);
+    for banks in [2usize, 4, 16] {
+        let mut mb =
+            MultiBankSorter::new(MultiBankConfig { banks, k: 2, ..Default::default() });
+        let out = mb.sort_with_stats(&d.values);
+        assert_eq!(out.sorted, single.sorted, "C={banks}");
+        assert_eq!(out.stats.cycles(), single.stats.cycles(), "C={banks}");
+    }
+}
+
+#[test]
+fn service_hybrid_engine_cross_checks() {
+    if !artifacts_ready() {
+        return;
+    }
+    let svc = SortService::start(ServiceConfig {
+        workers: 2,
+        engine: EngineKind::Hybrid,
+        ..Default::default()
+    })
+    .unwrap();
+    for seed in 0..4u64 {
+        let d = Dataset::generate32(DatasetKind::Kruskal, 64, seed);
+        let resp = svc.submit_wait(d.values.clone()).unwrap();
+        let mut expect = d.values;
+        expect.sort_unstable();
+        assert_eq!(resp.sorted, expect);
+    }
+    assert_eq!(svc.metrics().errors, 0);
+    svc.shutdown();
+}
+
+#[test]
+fn service_pjrt_engine_reports_estimated_stats() {
+    if !artifacts_ready() {
+        return;
+    }
+    let svc = SortService::start(ServiceConfig {
+        workers: 1,
+        engine: EngineKind::Pjrt,
+        ..Default::default()
+    })
+    .unwrap();
+    let d = Dataset::generate32(DatasetKind::Uniform, 64, 3);
+    let resp = svc.submit_wait(d.values.clone()).unwrap();
+    let mut expect = d.values;
+    expect.sort_unstable();
+    assert_eq!(resp.sorted, expect);
+    assert!(resp.stats.cycles() > 0, "estimated stats must be non-trivial");
+    svc.shutdown();
+}
+
+/// Full-scale Fig. 6 shape: the paper's dataset ordering holds at
+/// N=1024/w=32 with the real harness.
+#[test]
+fn fig6_full_scale_ordering() {
+    let pts = memsort::report::fig6(1024, 32, 3, 2, 42);
+    let best = |kind: DatasetKind| -> f64 {
+        pts.iter()
+            .filter(|p| p.dataset == kind)
+            .map(|p| p.speedup)
+            .fold(0.0, f64::max)
+    };
+    let (u, n, c, k, m) = (
+        best(DatasetKind::Uniform),
+        best(DatasetKind::Normal),
+        best(DatasetKind::Clustered),
+        best(DatasetKind::Kruskal),
+        best(DatasetKind::MapReduce),
+    );
+    // Paper Fig. 6: mapreduce > kruskal > clustered > {normal, uniform}.
+    assert!(m > k, "mapreduce {m} vs kruskal {k}");
+    assert!(k > c, "kruskal {k} vs clustered {c}");
+    assert!(c > n.max(u), "clustered {c} vs normal {n}/uniform {u}");
+    // Magnitudes in the paper's regime.
+    assert!(m > 3.5 && m < 5.5, "mapreduce best {m}");
+    assert!(k > 2.5 && k < 4.5, "kruskal best {k}");
+    assert!(c > 1.5 && c < 3.0, "clustered best {c}");
+    assert!(u > 1.0 && u < 1.5, "uniform best {u}");
+}
+
+/// Full-scale Fig. 8(a): headline ratios in the paper's regime.
+#[test]
+fn fig8a_full_scale_headline() {
+    let rows = memsort::report::fig8a(1024, 32, 3, 42);
+    let base = &rows[0];
+    let merge = &rows[1];
+    let cs = &rows[2];
+    let mb = &rows[3];
+    assert!((base.cycles_per_number - 32.0).abs() < 1e-9);
+    assert!((merge.cycles_per_number - 10.0).abs() < 1e-9);
+    let speedup = base.cycles_per_number / cs.cycles_per_number;
+    assert!(speedup > 3.4 && speedup < 5.0, "speedup {speedup}");
+    // multibank == colskip on speed; better area efficiency.
+    assert!((mb.cycles_per_number - cs.cycles_per_number).abs() < 1e-9);
+    assert!(mb.area_eff > cs.area_eff);
+    // Area-eff and energy-eff ratios near the abstract's 3.14x / 3.39x.
+    let ae = cs.area_eff / base.area_eff;
+    let ee = cs.energy_eff / base.energy_eff;
+    assert!(ae > 2.5 && ae < 4.5, "area-eff ratio {ae}");
+    assert!(ee > 2.5 && ee < 4.8, "energy-eff ratio {ee}");
+}
+
+/// Keys workflow at service level: Kruskal's MST via argsort.
+#[test]
+fn kruskal_mst_via_in_memory_argsort() {
+    use memsort::datasets::kruskal::{mst_from_sorted, random_graph};
+    use memsort::datasets::rng::Rng;
+    let mut rng = Rng::new(8);
+    let edges = random_graph(128, 256, &mut rng);
+    let weights: Vec<u32> = edges.iter().map(|e| e.weight).collect();
+    let out = colskip(2, 32).sort_with_stats(&weights);
+    let (total, chosen) = mst_from_sorted(128, &edges, &out.order);
+    // Reference MST via std sort.
+    let mut order: Vec<usize> = (0..edges.len()).collect();
+    order.sort_by_key(|&i| edges[i].weight);
+    let (ref_total, ref_chosen) = mst_from_sorted(128, &edges, &order);
+    assert_eq!(total, ref_total);
+    assert_eq!(chosen.len(), ref_chosen.len());
+}

@@ -1,0 +1,199 @@
+//! Property-based tests over the coordinator/sorter invariants, driven by
+//! the in-tree `memsort::testing` harness (seeded generation + shrinking).
+//!
+//! Invariants checked (256 random cases each, shrunk on failure):
+//! 1. every sorter's output is sorted and a permutation of its input;
+//! 2. the argsort order is a valid permutation mapping input → output;
+//! 3. column-skipping at k ≤ 2 never exceeds the baseline's CR count and
+//!    its cycle count is bounded by baseline + SL overhead for any k;
+//! 4. multi-bank sorting (any C dividing n) is cycle-trace-identical to
+//!    the single-bank sorter;
+//! 5. state recording is a pure optimization: results are identical for
+//!    every k;
+//! 6. stall/leading-zero ablations preserve the functional result.
+
+use memsort::multibank::{MultiBankConfig, MultiBankSorter};
+use memsort::sorter::baseline::BaselineSorter;
+use memsort::sorter::colskip::{ColSkipConfig, ColSkipSorter};
+use memsort::sorter::merge::MergeSorter;
+use memsort::sorter::InMemorySorter;
+use memsort::testing::{check, Case, PropConfig};
+
+fn sorted_ref(values: &[u32]) -> Vec<u32> {
+    let mut v = values.to_vec();
+    v.sort_unstable();
+    v
+}
+
+fn assert_sorted_permutation(case: &Case, out: &memsort::sorter::SortOutput) -> Result<(), String> {
+    let expect = sorted_ref(&case.values);
+    if out.sorted != expect {
+        return Err(format!("output {:?} != sorted input {:?}", out.sorted, expect));
+    }
+    if out.order.len() != case.values.len() {
+        return Err("order length mismatch".into());
+    }
+    let mut seen = vec![false; case.values.len()];
+    for (&row, &val) in out.order.iter().zip(&out.sorted) {
+        if row >= case.values.len() || seen[row] {
+            return Err(format!("order is not a permutation: row {row}"));
+        }
+        seen[row] = true;
+        if case.values[row] != val {
+            return Err(format!("order[{row}] maps to {} != {val}", case.values[row]));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_colskip_sorts_any_input() {
+    check("colskip-sorts", PropConfig { seed: 1, ..Default::default() }, |case| {
+        for k in [0usize, 1, 2, 5] {
+            let mut s =
+                ColSkipSorter::new(ColSkipConfig { width: case.width, k, ..Default::default() });
+            assert_sorted_permutation(case, &s.sort_with_stats(&case.values))
+                .map_err(|e| format!("k={k}: {e}"))?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_baseline_and_merge_sort_any_input() {
+    check("baseline-merge-sort", PropConfig { seed: 2, ..Default::default() }, |case| {
+        let mut b = BaselineSorter::with_width(case.width);
+        assert_sorted_permutation(case, &b.sort_with_stats(&case.values))?;
+        let mut m = MergeSorter::new();
+        assert_sorted_permutation(case, &m.sort_with_stats(&case.values))?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_colskip_never_exceeds_baseline_at_any_k() {
+    check("colskip-cycle-bound", PropConfig { seed: 3, ..Default::default() }, |case| {
+        if case.values.is_empty() {
+            return Ok(());
+        }
+        let mut b = BaselineSorter::with_width(case.width);
+        let bcr = b.sort_with_stats(&case.values).stats.crs;
+        for k in [0usize, 1, 2, 8] {
+            let mut s =
+                ColSkipSorter::new(ColSkipConfig { width: case.width, k, ..Default::default() });
+            let st = s.sort_with_stats(&case.values).stats;
+            if st.cycles() > bcr {
+                return Err(format!("k={k} cycles {} > baseline {}", st.cycles(), bcr));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_results_identical_across_k() {
+    check("k-is-pure-optimization", PropConfig { seed: 4, ..Default::default() }, |case| {
+        let mut expect: Option<Vec<u32>> = None;
+        for k in [0usize, 1, 3, 8] {
+            let mut s =
+                ColSkipSorter::new(ColSkipConfig { width: case.width, k, ..Default::default() });
+            let out = s.sort(&case.values);
+            match &expect {
+                None => expect = Some(out),
+                Some(e) => {
+                    if &out != e {
+                        return Err(format!("k={k} changed the output"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_multibank_trace_identical() {
+    check(
+        "multibank-equivalence",
+        PropConfig { seed: 5, cases: 128, ..Default::default() },
+        |case| {
+            if case.values.is_empty() {
+                return Ok(());
+            }
+            let mut single =
+                ColSkipSorter::new(ColSkipConfig { width: case.width, k: 2, ..Default::default() });
+            let sref = single.sort_with_stats(&case.values);
+            for banks in [2usize, 4, 8] {
+                if !case.values.len().is_multiple_of(banks) || case.values.len() / banks == 0 {
+                    continue;
+                }
+                let mut mb = MultiBankSorter::new(MultiBankConfig {
+                    width: case.width,
+                    k: 2,
+                    banks,
+                    ..Default::default()
+                });
+                let out = mb.sort_with_stats(&case.values);
+                if out.sorted != sref.sorted {
+                    return Err(format!("C={banks}: output mismatch"));
+                }
+                if out.stats.cycles() != sref.stats.cycles() {
+                    return Err(format!(
+                        "C={banks}: cycles {} != single {}",
+                        out.stats.cycles(),
+                        sref.stats.cycles()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_ablations_preserve_results() {
+    check("ablations-preserve", PropConfig { seed: 6, cases: 128, ..Default::default() }, |case| {
+        let expect = sorted_ref(&case.values);
+        for (skip_leading, stall) in [(false, false), (false, true), (true, false)] {
+            let mut s = ColSkipSorter::new(ColSkipConfig {
+                width: case.width,
+                k: 2,
+                skip_leading,
+                stall_on_duplicates: stall,
+            });
+            if s.sort(&case.values) != expect {
+                return Err(format!("ablation ({skip_leading},{stall}) broke sorting"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_stats_are_internally_consistent() {
+    check("stats-consistency", PropConfig { seed: 7, ..Default::default() }, |case| {
+        let mut s =
+            ColSkipSorter::new(ColSkipConfig { width: case.width, k: 2, ..Default::default() });
+        let out = s.sort_with_stats(&case.values);
+        let st = &out.stats;
+        // Every emitted element is either an iteration's min or a drain.
+        if st.iterations + st.drains != case.values.len() as u64 {
+            return Err(format!(
+                "iterations {} + drains {} != n {}",
+                st.iterations,
+                st.drains,
+                case.values.len()
+            ));
+        }
+        // SRs can only happen on full traversals; SLs at most one per
+        // iteration.
+        if st.sls > st.iterations {
+            return Err("more SLs than iterations".into());
+        }
+        // REs never exceed CRs (an RE requires a CR's judgement).
+        if st.res > st.crs {
+            return Err("more REs than CRs".into());
+        }
+        Ok(())
+    });
+}
