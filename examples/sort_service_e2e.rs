@@ -25,10 +25,13 @@ fn main() -> anyhow::Result<()> {
     let workers = 4;
 
     let have_artifacts =
-        memsort::runtime::PjrtEngine::default_dir().join("manifest.txt").exists();
+        memsort::runtime::pjrt_ready(memsort::runtime::PjrtEngine::default_dir());
     let engine = if have_artifacts { EngineKind::Hybrid } else { EngineKind::Native };
     if !have_artifacts {
-        eprintln!("warning: artifacts/ missing — run `make artifacts`; using native engine");
+        eprintln!(
+            "warning: PJRT unavailable (needs the xla dep + --features pjrt, and \
+             `make artifacts`); using native engine"
+        );
     }
 
     let svc = SortService::start(ServiceConfig {

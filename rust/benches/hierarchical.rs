@@ -1,0 +1,80 @@
+//! Bench: the hierarchical out-of-bank pipeline (EXPERIMENTS.md
+//! §Hierarchical) — loser-tree merge-stage throughput across fanouts,
+//! chunk-sort throughput on the worker pool, and the end-to-end
+//! 1M-element chunk → column-skip → k-way-merge sort.
+//!
+//! Run: `cargo bench --bench hierarchical`
+
+use memsort::bench::run;
+use memsort::coordinator::hierarchical::HierarchicalConfig;
+use memsort::coordinator::{ServiceConfig, SortService};
+use memsort::datasets::{Dataset, DatasetKind};
+use memsort::sorter::merge::merge_runs;
+
+/// Pre-sorted (value, index) runs over one large dataset.
+fn make_runs(values: &[u32], chunk: usize) -> Vec<Vec<(u32, usize)>> {
+    values
+        .chunks(chunk)
+        .enumerate()
+        .map(|(c, vals)| {
+            let base = c * chunk;
+            let mut run: Vec<(u32, usize)> =
+                vals.iter().enumerate().map(|(i, &v)| (v, base + i)).collect();
+            run.sort_unstable();
+            run
+        })
+        .collect()
+}
+
+fn main() {
+    let n = 1_000_000usize;
+    let d = Dataset::generate32(DatasetKind::MapReduce, n, 42);
+
+    println!("--- merge stage: loser tree over 977 runs of <=1024 (n=1M) ---");
+    let runs = make_runs(&d.values, 1024);
+    for fanout in [2usize, 4, 8, 16, 64] {
+        let r = run(&format!("merge_runs/f{fanout}/n1M"), 1500, || {
+            merge_runs(runs.clone(), fanout).merged.len()
+        });
+        let out = merge_runs(runs.clone(), fanout);
+        println!(
+            "    -> {:.1} Melem/s host ({} passes, {} comparisons, {} model cycles)",
+            r.throughput(n) / 1e6,
+            out.passes,
+            out.comparisons,
+            out.cycles
+        );
+    }
+
+    println!("--- merge stage scaling in run count (fanout 4) ---");
+    for chunk in [256usize, 1024, 8192] {
+        let runs = make_runs(&d.values, chunk);
+        let label = format!("merge_runs/f4/chunks{}", runs.len());
+        let r = run(&label, 1000, || merge_runs(runs.clone(), 4).merged.len());
+        println!("    -> {:.1} Melem/s host", r.throughput(n) / 1e6);
+    }
+
+    println!("--- end-to-end: chunk -> column-skip -> 4-way merge ---");
+    let workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4).min(8);
+    let svc = SortService::start(ServiceConfig { workers, ..Default::default() }).unwrap();
+    let cfg = HierarchicalConfig { capacity: 1024, fanout: 4 };
+    for nn in [100_000usize, 1_000_000] {
+        let dd = Dataset::generate32(DatasetKind::MapReduce, nn, 42);
+        let label = format!("hier_sort/n{}k/cap1024", nn / 1000);
+        let r = run(&label, 2000, || {
+            svc.sort_hierarchical(&dd.values, &cfg).unwrap().output.sorted.len()
+        });
+        let out = svc.sort_hierarchical(&dd.values, &cfg).unwrap();
+        println!(
+            "    -> {:.2} Melem/s host | model: {} chunks, {} cycles latency \
+             ({:.2} cyc/num, {:.1}% merge), {:.1} Mnum/s @500MHz",
+            r.throughput(nn) / 1e6,
+            out.chunks(),
+            out.latency_cycles,
+            out.latency_cycles as f64 / nn as f64,
+            out.merge_fraction() * 100.0,
+            out.throughput() / 1e6
+        );
+    }
+    svc.shutdown();
+}

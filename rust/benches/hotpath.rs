@@ -10,7 +10,7 @@ use memsort::coordinator::{ServiceConfig, SortService};
 use memsort::datasets::{Dataset, DatasetKind};
 use memsort::memory::Bank;
 use memsort::multibank::{MultiBankConfig, MultiBankSorter};
-use memsort::runtime::PjrtEngine;
+use memsort::runtime::{pjrt_ready, PjrtEngine};
 use memsort::sorter::colskip::ColSkipSorter;
 use memsort::sorter::InMemorySorter;
 
@@ -57,7 +57,7 @@ fn main() {
     println!("--- bank load (bit-plane build) ---");
     run("bank_load/n1024_w32", 200, || Bank::load(&d.values, 32).rows());
 
-    if PjrtEngine::default_dir().join("manifest.txt").exists() {
+    if pjrt_ready(PjrtEngine::default_dir()) {
         println!("--- L2/L1 via PJRT: AOT rank pass ---");
         let mut eng = PjrtEngine::new(PjrtEngine::default_dir()).unwrap();
         let small = Dataset::generate32(DatasetKind::MapReduce, 64, 1);
@@ -68,7 +68,9 @@ fn main() {
         let r = run("pjrt_rank/n1024", 1500, || eng.rank(&d.values).unwrap().sorted[0]);
         println!("    -> {:.2} Kelem/s through PJRT", 1024.0 / (r.median_ns / 1e9) / 1e3);
     } else {
-        println!("(skipping PJRT benches: run `make artifacts`)");
+        println!(
+            "(skipping PJRT benches: needs the xla dep + --features pjrt, and `make artifacts`)"
+        );
     }
 
     println!("--- service throughput (native engine, 4 workers) ---");

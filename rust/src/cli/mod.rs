@@ -60,6 +60,24 @@ impl Args {
                 .map_err(|e| anyhow!("--{name} `{s}`: {e}")),
         }
     }
+
+    /// Parse a human-friendly element count: plain digits plus an
+    /// optional decimal `k`/`m`/`g` suffix (case-insensitive), so
+    /// `--n 1m` and `--n 1000000` are the same request.
+    pub fn parse_size(&self, name: &str, default: usize) -> Result<usize> {
+        let Some(s) = self.get(name) else { return Ok(default) };
+        let (digits, mult) = match s.char_indices().last() {
+            Some((i, c)) if c.eq_ignore_ascii_case(&'k') => (&s[..i], 1_000usize),
+            Some((i, c)) if c.eq_ignore_ascii_case(&'m') => (&s[..i], 1_000_000),
+            Some((i, c)) if c.eq_ignore_ascii_case(&'g') => (&s[..i], 1_000_000_000),
+            _ => (s, 1),
+        };
+        let base: usize = digits
+            .parse()
+            .map_err(|e| anyhow!("--{name} `{s}`: {e} (use digits with an optional k/m/g)"))?;
+        base.checked_mul(mult)
+            .ok_or_else(|| anyhow!("--{name} `{s}`: overflows usize"))
+    }
 }
 
 #[cfg(test)]
@@ -96,6 +114,18 @@ mod tests {
     #[test]
     fn rejects_positional_garbage() {
         assert!(Args::parse(vec!["sort".into(), "oops".into()]).is_err());
+    }
+
+    #[test]
+    fn size_suffixes() {
+        let a = parse(&["sort", "--n", "1M", "--capacity", "2k", "--x", "3g", "--plain", "77"]);
+        assert_eq!(a.parse_size("n", 0).unwrap(), 1_000_000);
+        assert_eq!(a.parse_size("capacity", 0).unwrap(), 2_000);
+        assert_eq!(a.parse_size("x", 0).unwrap(), 3_000_000_000);
+        assert_eq!(a.parse_size("plain", 0).unwrap(), 77);
+        assert_eq!(a.parse_size("missing", 42).unwrap(), 42);
+        assert!(parse(&["sort", "--n", "q5k"]).parse_size("n", 0).is_err());
+        assert!(parse(&["sort", "--n", "k"]).parse_size("n", 0).is_err());
     }
 
     #[test]

@@ -1,0 +1,324 @@
+//! Hierarchical out-of-bank sorting: chunk → column-skip → k-way merge.
+//!
+//! The paper's sorters (and the §IV multi-bank ensemble) operate on one
+//! logical memristive array; the evaluation tops out at N = 1024. This
+//! module opens the "array larger than the hardware" dimension: a
+//! capacity-aware partitioner ([`super::planner::partition`]) splits a
+//! request of arbitrary length into bank-sized chunks, the service's
+//! worker pool sorts the chunks concurrently (each worker owns a
+//! [`crate::sorter::colskip::ColSkipSorter`] or a
+//! [`crate::multibank::MultiBankSorter`]), and a loser-tree merge network
+//! ([`crate::sorter::merge::merge_runs`]) combines the per-chunk runs
+//! into the global order — the standard sort-then-merge recipe for
+//! scaling in-memory sorters past array capacity (cf. arXiv:2012.09918,
+//! arXiv:2310.07903).
+//!
+//! ## Accounting
+//!
+//! Two views are reported and must not be conflated:
+//!
+//! * **Work** — `output.stats` is the *sum* of the per-chunk simulator
+//!   stats (every CR/RE/SR/SL/drain issued anywhere). The integration
+//!   tests pin `output.stats == Σ chunk_stats`.
+//! * **Latency** — `latency_cycles` is the critical path: chunks sort in
+//!   parallel banks (max over chunks), then the merge network streams
+//!   the whole dataset once per merge pass.
+//!
+//! Cost totals (area/power) come from the calibrated model's
+//! [`crate::cost::SorterArch::Hierarchical`] arch, using the service's
+//! engine configuration (width, k, sub-banks).
+
+use anyhow::{anyhow, Result};
+
+use super::planner::partition;
+use super::{SortResponse, SortService};
+use crate::cost::{Activity, CostModel, SorterArch};
+use crate::sorter::merge::merge_runs;
+use crate::sorter::{SortOutput, SortStats};
+
+/// Configuration of one hierarchical sort. Engine parameters (width, k,
+/// sub-banks per chunk) come from the [`super::ServiceConfig`] the
+/// service was started with.
+#[derive(Clone, Debug)]
+pub struct HierarchicalConfig {
+    /// Bank capacity: rows per chunk (the hardware's array length).
+    pub capacity: usize,
+    /// Fanout of the merge network combining the sorted runs.
+    pub fanout: usize,
+}
+
+impl Default for HierarchicalConfig {
+    fn default() -> Self {
+        HierarchicalConfig { capacity: crate::params::DEFAULT_N, fanout: 4 }
+    }
+}
+
+/// Merge-stage accounting of one hierarchical sort.
+#[derive(Clone, Debug)]
+pub struct MergeMetrics {
+    /// Comparator operations performed by the loser trees (all passes).
+    pub comparisons: u64,
+    /// Merge passes (`ceil(log_fanout(chunks))`).
+    pub passes: u32,
+    /// Modelled merge-network latency in cycles.
+    pub cycles: u64,
+    /// Fanout the merge ran with.
+    pub fanout: usize,
+}
+
+/// Result of one hierarchical sort.
+#[derive(Clone, Debug)]
+pub struct HierarchicalOutput {
+    /// Global sorted values + argsort; `stats` is the summed per-chunk
+    /// work (see the module docs for work vs latency).
+    pub output: SortOutput,
+    /// Per-chunk simulator stats, in chunk order.
+    pub chunk_stats: Vec<SortStats>,
+    /// Bank capacity the partitioner used.
+    pub capacity: usize,
+    /// Merge-stage accounting.
+    pub merge: MergeMetrics,
+    /// Critical-path latency: max chunk cycles + merge cycles.
+    pub latency_cycles: u64,
+    /// Calibrated silicon area of the modelled hardware (Kµm²).
+    pub area_kum2: f64,
+    /// Calibrated power under the measured switching activity (mW).
+    pub power_mw: f64,
+}
+
+impl HierarchicalOutput {
+    /// Number of chunks the request was split into.
+    pub fn chunks(&self) -> usize {
+        self.chunk_stats.len()
+    }
+
+    /// Critical-path latency in seconds at the paper's 500 MHz clock.
+    pub fn latency_seconds(&self) -> f64 {
+        self.latency_cycles as f64 / crate::params::CLOCK_HZ
+    }
+
+    /// Sorted elements per second at the paper's clock (latency view).
+    pub fn throughput(&self) -> f64 {
+        if self.latency_cycles == 0 {
+            0.0
+        } else {
+            self.output.sorted.len() as f64 * crate::params::CLOCK_HZ / self.latency_cycles as f64
+        }
+    }
+
+    /// Fraction of the critical path spent in the merge network.
+    pub fn merge_fraction(&self) -> f64 {
+        if self.latency_cycles == 0 {
+            0.0
+        } else {
+            self.merge.cycles as f64 / self.latency_cycles as f64
+        }
+    }
+}
+
+impl SortService {
+    /// Sort a dataset of arbitrary length through the hierarchical
+    /// pipeline: partition into `cfg.capacity`-row chunks, sort every
+    /// chunk on the worker pool, merge the runs through a
+    /// `cfg.fanout`-way loser-tree network.
+    pub fn sort_hierarchical(
+        &self,
+        data: &[u32],
+        cfg: &HierarchicalConfig,
+    ) -> Result<HierarchicalOutput> {
+        assert!(cfg.capacity >= 1, "bank capacity must be positive");
+        assert!(cfg.fanout >= 2, "merge fanout must be at least 2");
+        let n = data.len();
+        let spans = partition(n, cfg.capacity);
+        let chunks = spans.len();
+
+        // Fan the chunks out to the worker pool (parallel banks), then
+        // collect in chunk order.
+        let rxs: Vec<_> = spans
+            .iter()
+            .map(|s| self.submit(data[s.clone()].to_vec()))
+            .collect::<Result<_>>()?;
+        let resps: Vec<SortResponse> = rxs
+            .into_iter()
+            .map(|rx| rx.recv().map_err(|_| anyhow!("worker dropped a chunk response"))?)
+            .collect::<Result<_>>()?;
+
+        let mut chunk_stats = Vec::with_capacity(chunks);
+        let mut total = SortStats::default();
+        let mut max_chunk_cycles = 0u64;
+        let mut have_order = true;
+        let mut runs: Vec<Vec<(u32, usize)>> = Vec::with_capacity(chunks);
+        for (span, resp) in spans.iter().zip(&resps) {
+            if resp.sorted.len() != span.len() {
+                return Err(anyhow!(
+                    "chunk [{}, {}) returned {} elements",
+                    span.start,
+                    span.end,
+                    resp.sorted.len()
+                ));
+            }
+            max_chunk_cycles = max_chunk_cycles.max(resp.stats.cycles());
+            total.merge_from(&resp.stats);
+            chunk_stats.push(resp.stats.clone());
+            // Rebase chunk-local argsort rows to global indices. A
+            // backend without row provenance (pure PJRT) degrades the
+            // global order to empty rather than inventing one.
+            if resp.order.len() == resp.sorted.len() {
+                runs.push(
+                    resp.sorted
+                        .iter()
+                        .zip(&resp.order)
+                        .map(|(&v, &r)| (v, span.start + r))
+                        .collect(),
+                );
+            } else {
+                have_order = false;
+                runs.push(resp.sorted.iter().map(|&v| (v, 0)).collect());
+            }
+        }
+
+        let merge = merge_runs(runs, cfg.fanout);
+        debug_assert_eq!(merge.merged.len(), n);
+        let sorted = merge.values();
+        let order = if have_order { merge.order() } else { Vec::new() };
+
+        let latency_cycles = max_chunk_cycles + merge.cycles;
+        let metrics = MergeMetrics {
+            comparisons: merge.comparisons,
+            passes: merge.passes,
+            cycles: merge.cycles,
+            fanout: cfg.fanout,
+        };
+        self.metrics.record_hierarchical(n, chunks, metrics.cycles, metrics.comparisons);
+
+        // Cost totals for the modelled hardware ensemble, under the
+        // activity the chunks actually exhibited.
+        let svc = self.config();
+        let arch = SorterArch::Hierarchical {
+            bank_n: cfg.capacity,
+            w: svc.colskip.width,
+            k: svc.colskip.k,
+            chunks: chunks.max(1),
+            banks_per_chunk: svc.banks,
+            fanout: cfg.fanout,
+        };
+        let model = CostModel::calibrated();
+        let act = if total.cycles() > 0 {
+            Activity::from_stats(&total)
+        } else {
+            Activity::nominal_colskip()
+        };
+
+        Ok(HierarchicalOutput {
+            output: SortOutput { sorted, order, stats: total },
+            chunk_stats,
+            capacity: cfg.capacity,
+            merge: metrics,
+            latency_cycles,
+            area_kum2: model.area_kum2(arch),
+            power_mw: model.power_mw(arch, act),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ServiceConfig;
+    use crate::datasets::{Dataset, DatasetKind};
+    use crate::sorter::merge::{model_merge_cycles, model_merge_passes};
+
+    fn service(workers: usize) -> SortService {
+        SortService::start(ServiceConfig { workers, ..Default::default() }).unwrap()
+    }
+
+    #[test]
+    fn sorts_past_bank_capacity() {
+        let svc = service(4);
+        let cfg = HierarchicalConfig { capacity: 256, fanout: 4 };
+        for n in [1usize, 255, 256, 257, 1000, 5000] {
+            let d = Dataset::generate32(DatasetKind::MapReduce, n, 13);
+            let out = svc.sort_hierarchical(&d.values, &cfg).unwrap();
+            let mut expect = d.values.clone();
+            expect.sort_unstable();
+            assert_eq!(out.output.sorted, expect, "n={n}");
+            assert_eq!(out.chunks(), n.div_ceil(256), "n={n}");
+            // Global argsort maps original rows to sorted values.
+            assert_eq!(out.output.order.len(), n);
+            for (i, &row) in out.output.order.iter().enumerate() {
+                assert_eq!(d.values[row], out.output.sorted[i], "n={n}");
+            }
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn work_is_sum_latency_is_critical_path() {
+        let svc = service(2);
+        let cfg = HierarchicalConfig { capacity: 128, fanout: 2 };
+        let d = Dataset::generate32(DatasetKind::Clustered, 1000, 3);
+        let out = svc.sort_hierarchical(&d.values, &cfg).unwrap();
+        let mut summed = SortStats::default();
+        let mut max_cycles = 0;
+        for s in &out.chunk_stats {
+            summed.merge_from(s);
+            max_cycles = max_cycles.max(s.cycles());
+        }
+        assert_eq!(out.output.stats, summed, "stats must be the summed chunk work");
+        assert_eq!(out.latency_cycles, max_cycles + out.merge.cycles);
+        assert_eq!(out.merge.cycles, model_merge_cycles(1000, 8, 2));
+        assert_eq!(out.merge.passes, model_merge_passes(8, 2));
+        assert!(out.merge.comparisons > 0);
+        assert!(out.merge_fraction() > 0.0 && out.merge_fraction() < 1.0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn empty_input_is_trivial() {
+        let svc = service(1);
+        let out = svc
+            .sort_hierarchical(&[], &HierarchicalConfig::default())
+            .unwrap();
+        assert!(out.output.sorted.is_empty());
+        assert_eq!(out.chunks(), 0);
+        assert_eq!(out.latency_cycles, 0);
+        assert_eq!(out.throughput(), 0.0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn service_metrics_see_the_pipeline() {
+        let svc = service(2);
+        let cfg = HierarchicalConfig { capacity: 64, fanout: 4 };
+        let d = Dataset::generate32(DatasetKind::Uniform, 300, 5);
+        svc.sort_hierarchical(&d.values, &cfg).unwrap();
+        let m = svc.metrics();
+        assert_eq!(m.hier_completed, 1);
+        assert_eq!(m.hier_elements, 300);
+        assert_eq!(m.hier_chunks, 5);
+        assert!(m.merge_cycles > 0);
+        assert!(m.merge_comparisons > 0);
+        // Chunk jobs flowed through the normal request path too.
+        assert_eq!(m.completed, 5);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn finer_chunking_is_cheaper_silicon() {
+        // Fig. 8(b) carried to the chunk dimension: the row processor
+        // scales as Ns·log2(Ns), so 16 banks of 256 rows undercut 2 banks
+        // of 2048 rows even with the larger merge tree.
+        let svc = service(2);
+        let d = Dataset::generate32(DatasetKind::MapReduce, 4096, 9);
+        let coarse = svc
+            .sort_hierarchical(&d.values, &HierarchicalConfig { capacity: 2048, fanout: 4 })
+            .unwrap();
+        let fine = svc
+            .sort_hierarchical(&d.values, &HierarchicalConfig { capacity: 256, fanout: 4 })
+            .unwrap();
+        assert!(fine.area_kum2 < coarse.area_kum2, "{} vs {}", fine.area_kum2, coarse.area_kum2);
+        assert!(fine.power_mw < coarse.power_mw, "{} vs {}", fine.power_mw, coarse.power_mw);
+        assert!(fine.area_kum2 > 0.0 && fine.power_mw > 0.0);
+        svc.shutdown();
+    }
+}

@@ -16,6 +16,11 @@ pub struct ServiceMetrics {
     elements: AtomicU64,
     sim_cycles: AtomicU64,
     sim_crs: AtomicU64,
+    hier_completed: AtomicU64,
+    hier_elements: AtomicU64,
+    hier_chunks: AtomicU64,
+    merge_cycles: AtomicU64,
+    merge_comparisons: AtomicU64,
     latencies_us: Mutex<Vec<u64>>,
 }
 
@@ -29,6 +34,16 @@ pub struct Snapshot {
     pub sim_cycles: u64,
     /// Total simulated column reads.
     pub sim_crs: u64,
+    /// Hierarchical (out-of-bank) sorts completed.
+    pub hier_completed: u64,
+    /// Elements that went through the hierarchical pipeline.
+    pub hier_elements: u64,
+    /// Bank-sized chunks sorted on behalf of hierarchical requests.
+    pub hier_chunks: u64,
+    /// Modelled merge-network cycles spent by the hierarchical pipeline.
+    pub merge_cycles: u64,
+    /// Comparator operations performed by the loser-tree merge stage.
+    pub merge_comparisons: u64,
     pub p50_us: u64,
     pub p99_us: u64,
     pub max_us: u64,
@@ -45,6 +60,11 @@ impl ServiceMetrics {
             elements: AtomicU64::new(0),
             sim_cycles: AtomicU64::new(0),
             sim_crs: AtomicU64::new(0),
+            hier_completed: AtomicU64::new(0),
+            hier_elements: AtomicU64::new(0),
+            hier_chunks: AtomicU64::new(0),
+            merge_cycles: AtomicU64::new(0),
+            merge_comparisons: AtomicU64::new(0),
             latencies_us: Mutex::new(Vec::with_capacity(RESERVOIR_CAP)),
         }
     }
@@ -69,6 +89,23 @@ impl ServiceMetrics {
         self.errors.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Record a completed hierarchical (chunk → sort → merge) request.
+    /// The per-chunk simulator work was already recorded by the workers;
+    /// this adds the pipeline-level view.
+    pub fn record_hierarchical(
+        &self,
+        elements: usize,
+        chunks: usize,
+        merge_cycles: u64,
+        merge_comparisons: u64,
+    ) {
+        self.hier_completed.fetch_add(1, Ordering::Relaxed);
+        self.hier_elements.fetch_add(elements as u64, Ordering::Relaxed);
+        self.hier_chunks.fetch_add(chunks as u64, Ordering::Relaxed);
+        self.merge_cycles.fetch_add(merge_cycles, Ordering::Relaxed);
+        self.merge_comparisons.fetch_add(merge_comparisons, Ordering::Relaxed);
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let mut lat = self.latencies_us.lock().expect("metrics poisoned").clone();
         lat.sort_unstable();
@@ -87,6 +124,11 @@ impl ServiceMetrics {
             elements,
             sim_cycles: cycles,
             sim_crs: self.sim_crs.load(Ordering::Relaxed),
+            hier_completed: self.hier_completed.load(Ordering::Relaxed),
+            hier_elements: self.hier_elements.load(Ordering::Relaxed),
+            hier_chunks: self.hier_chunks.load(Ordering::Relaxed),
+            merge_cycles: self.merge_cycles.load(Ordering::Relaxed),
+            merge_comparisons: self.merge_comparisons.load(Ordering::Relaxed),
             p50_us: pct(0.50),
             p99_us: pct(0.99),
             max_us: lat.last().copied().unwrap_or(0),
@@ -143,6 +185,19 @@ mod tests {
         m.record_error();
         m.record_error();
         assert_eq!(m.snapshot().errors, 2);
+    }
+
+    #[test]
+    fn hierarchical_counters_accumulate() {
+        let m = ServiceMetrics::new();
+        m.record_hierarchical(5000, 5, 10_000, 60_000);
+        m.record_hierarchical(2000, 2, 2_000, 20_000);
+        let s = m.snapshot();
+        assert_eq!(s.hier_completed, 2);
+        assert_eq!(s.hier_elements, 7000);
+        assert_eq!(s.hier_chunks, 7);
+        assert_eq!(s.merge_cycles, 12_000);
+        assert_eq!(s.merge_comparisons, 80_000);
     }
 
     #[test]

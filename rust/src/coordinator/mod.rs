@@ -13,7 +13,13 @@
 //! `std::sync::mpsc`, which for a CPU-bound service is the right tool
 //! anyway (the PJRT client is not `Send`, so each worker constructs its
 //! own engine).
+//!
+//! Requests longer than one bank go through the [`hierarchical`] pipeline
+//! ([`SortService::sort_hierarchical`]): partition into bank-sized chunks
+//! ([`planner::partition`]), sort the chunks on this worker pool, and
+//! combine the runs in a k-way loser-tree merge network.
 
+pub mod hierarchical;
 pub mod metrics;
 pub mod planner;
 
@@ -24,9 +30,10 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
+use crate::multibank::{MultiBankConfig, MultiBankSorter};
 use crate::runtime::PjrtEngine;
 use crate::sorter::colskip::{ColSkipConfig, ColSkipSorter};
-use crate::sorter::{InMemorySorter, SortStats};
+use crate::sorter::{InMemorySorter, SortOutput, SortStats};
 use metrics::ServiceMetrics;
 
 /// Which compute backend workers use.
@@ -68,6 +75,9 @@ pub struct ServiceConfig {
     pub workers: usize,
     /// Column-skipping configuration for the native engine.
     pub colskip: ColSkipConfig,
+    /// Sub-banks per native sorter: 1 uses a single-bank [`ColSkipSorter`];
+    /// >1 uses a [`MultiBankSorter`] striped over this many banks (§IV).
+    pub banks: usize,
     /// Compute backend.
     pub engine: EngineKind,
     /// Artifacts directory for PJRT engines.
@@ -81,6 +91,7 @@ impl Default for ServiceConfig {
         ServiceConfig {
             workers: 4,
             colskip: ColSkipConfig::default(),
+            banks: 1,
             engine: EngineKind::Native,
             artifacts_dir: PjrtEngine::default_dir(),
             queue_depth: 256,
@@ -100,6 +111,10 @@ pub struct SortRequest {
 pub struct SortResponse {
     pub id: u64,
     pub sorted: Vec<u32>,
+    /// `order[i]` = original index of `sorted[i]` (argsort). Empty when
+    /// the backend cannot provide it (pure PJRT executes only the rank
+    /// pass, which returns values and traces, not row provenance).
+    pub order: Vec<usize>,
     /// Simulated near-memory-circuit stats (native/hybrid; estimated for
     /// pure PJRT from the iteration traces).
     pub stats: SortStats,
@@ -120,12 +135,14 @@ pub struct SortService {
     workers: Vec<JoinHandle<()>>,
     metrics: Arc<ServiceMetrics>,
     next_id: AtomicU64,
+    config: ServiceConfig,
 }
 
 impl SortService {
     /// Start the worker pool.
     pub fn start(config: ServiceConfig) -> Result<Self> {
         assert!(config.workers >= 1);
+        assert!(config.banks >= 1);
         let (tx, rx) = mpsc::sync_channel::<Job>(config.queue_depth);
         let rx = Arc::new(Mutex::new(rx));
         let metrics = Arc::new(ServiceMetrics::new());
@@ -136,7 +153,12 @@ impl SortService {
             let cfg = config.clone();
             workers.push(std::thread::spawn(move || worker_loop(wid, cfg, rx, metrics)));
         }
-        Ok(SortService { tx, workers, metrics, next_id: AtomicU64::new(0) })
+        Ok(SortService { tx, workers, metrics, next_id: AtomicU64::new(0), config })
+    }
+
+    /// The configuration this service was started with.
+    pub fn config(&self) -> &ServiceConfig {
+        &self.config
     }
 
     /// Submit a job; returns a receiver for the response. Blocks when the
@@ -181,6 +203,23 @@ impl SortService {
     }
 }
 
+/// Build the native simulation engine a worker owns: a single-bank
+/// column-skipping sorter, or the §IV multi-bank ensemble when the
+/// service is configured with `banks > 1`.
+fn native_engine(cfg: &ServiceConfig) -> Box<dyn InMemorySorter> {
+    if cfg.banks > 1 {
+        Box::new(MultiBankSorter::new(MultiBankConfig {
+            width: cfg.colskip.width,
+            k: cfg.colskip.k,
+            banks: cfg.banks,
+            skip_leading: cfg.colskip.skip_leading,
+            stall_on_duplicates: cfg.colskip.stall_on_duplicates,
+        }))
+    } else {
+        Box::new(ColSkipSorter::new(cfg.colskip.clone()))
+    }
+}
+
 fn worker_loop(
     wid: usize,
     cfg: ServiceConfig,
@@ -188,7 +227,7 @@ fn worker_loop(
     metrics: Arc<ServiceMetrics>,
 ) {
     // Engines are constructed per worker: the PJRT client is not Send.
-    let mut native = ColSkipSorter::new(cfg.colskip.clone());
+    let mut native = native_engine(&cfg);
     let mut pjrt: Option<PjrtEngine> = match cfg.engine {
         EngineKind::Native => None,
         _ => match PjrtEngine::new(&cfg.artifacts_dir) {
@@ -210,11 +249,18 @@ fn worker_loop(
             Job::Shutdown => return,
             Job::Sort(req, reply) => {
                 let t0 = Instant::now();
-                let result = serve_one(&cfg, &mut native, pjrt.as_mut(), &req);
+                let result = serve_one(&cfg, native.as_mut(), pjrt.as_mut(), &req);
                 let latency_us = t0.elapsed().as_micros() as u64;
-                let resp = result.map(|(sorted, stats)| {
-                    metrics.record(latency_us, &stats, sorted.len());
-                    SortResponse { id: req.id, sorted, stats, latency_us, worker: wid }
+                let resp = result.map(|out| {
+                    metrics.record(latency_us, &out.stats, out.sorted.len());
+                    SortResponse {
+                        id: req.id,
+                        sorted: out.sorted,
+                        order: out.order,
+                        stats: out.stats,
+                        latency_us,
+                        worker: wid,
+                    }
                 });
                 if resp.is_err() {
                     metrics.record_error();
@@ -227,15 +273,12 @@ fn worker_loop(
 
 fn serve_one(
     cfg: &ServiceConfig,
-    native: &mut ColSkipSorter,
+    native: &mut dyn InMemorySorter,
     pjrt: Option<&mut PjrtEngine>,
     req: &SortRequest,
-) -> Result<(Vec<u32>, SortStats)> {
+) -> Result<SortOutput> {
     match (cfg.engine, pjrt) {
-        (EngineKind::Native, _) | (_, None) => {
-            let out = native.sort_with_stats(&req.data);
-            Ok((out.sorted, out.stats))
-        }
+        (EngineKind::Native, _) | (_, None) => Ok(native.sort_with_stats(&req.data)),
         (EngineKind::Pjrt, Some(engine)) => {
             let pass = engine.rank(&req.data)?;
             // Estimate near-memory cycles from the iteration traces: a
@@ -243,7 +286,7 @@ fn serve_one(
             // per iteration; iterations with no informative column are
             // duplicate drains (1 cycle).
             let stats = estimate_stats_from_traces(&pass.top_cols, &pass.infos);
-            Ok((pass.sorted, stats))
+            Ok(SortOutput { sorted: pass.sorted, order: Vec::new(), stats })
         }
         (EngineKind::Hybrid, Some(engine)) => {
             let pass = engine.rank(&req.data)?;
@@ -254,7 +297,7 @@ fn serve_one(
                     req.id
                 ));
             }
-            Ok((out.sorted, out.stats))
+            Ok(out)
         }
     }
 }
@@ -343,6 +386,36 @@ mod tests {
         seen.sort_unstable();
         seen.dedup();
         assert!(seen.len() >= 2, "expected >=2 workers to serve: {seen:?}");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn responses_carry_a_valid_argsort() {
+        let svc = SortService::start(ServiceConfig::default()).unwrap();
+        let d = Dataset::generate32(DatasetKind::Kruskal, 96, 11);
+        let resp = svc.submit_wait(d.values.clone()).unwrap();
+        assert_eq!(resp.order.len(), d.values.len());
+        for (i, &row) in resp.order.iter().enumerate() {
+            assert_eq!(d.values[row], resp.sorted[i]);
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn multibank_engine_serves_uneven_lengths() {
+        // banks=4 with n % 4 != 0 exercises the sorter's internal padding.
+        let svc = SortService::start(ServiceConfig {
+            workers: 2,
+            banks: 4,
+            ..Default::default()
+        })
+        .unwrap();
+        let d = Dataset::generate32(DatasetKind::MapReduce, 130, 7);
+        let resp = svc.submit_wait(d.values.clone()).unwrap();
+        let mut expect = d.values.clone();
+        expect.sort_unstable();
+        assert_eq!(resp.sorted, expect);
+        assert_eq!(resp.order.len(), d.values.len());
         svc.shutdown();
     }
 

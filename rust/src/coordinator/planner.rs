@@ -8,15 +8,21 @@
 //! * **Pad** — if the length is within slack of a bank size, pad with
 //!   `u32::MAX` sentinels (they sort to the end and are dropped on
 //!   output). Cost: the sentinels' rows still participate in CRs.
-//! * **Chunk + merge** — split long arrays into bank-sized chunks,
-//!   sort each in its own bank (parallel in hardware, so chunk latency =
-//!   max, not sum), then stream through the digital merge network the
-//!   merge-sorter comparison point already models.
+//! * **Chunk + merge** — split long arrays into bank-sized chunks
+//!   ([`partition`]), sort each in its own bank (parallel in hardware, so
+//!   chunk latency = max, not sum), then stream the sorted runs through a
+//!   fanout-`f` loser-tree merge network
+//!   ([`crate::sorter::merge::merge_runs`]).
 //!
 //! The planner picks the cheaper plan under the paper's cycle model and
-//! executes it with any [`InMemorySorter`] factory.
+//! executes it with any [`InMemorySorter`] factory. The full
+//! out-of-bank pipeline — worker-pool chunk sorting plus aggregated
+//! stats/cost — lives in [`super::hierarchical`]; this module is the
+//! shared planning arithmetic.
 
-use crate::sorter::merge::MergeSorter;
+use std::ops::Range;
+
+use crate::sorter::merge::{merge_sorted_runs, model_merge_cycles};
 use crate::sorter::{InMemorySorter, SortStats};
 
 /// Fixed hardware geometry the planner targets.
@@ -27,12 +33,23 @@ pub struct Geometry {
     pub bank_sizes: Vec<usize>,
     /// Bit width of the banks.
     pub width: u32,
+    /// Fanout of the digital merge network behind the banks.
+    pub merge_fanout: usize,
 }
 
 impl Default for Geometry {
     fn default() -> Self {
-        Geometry { bank_sizes: vec![16, 64, 256, 1024], width: 32 }
+        Geometry { bank_sizes: vec![16, 64, 256, 1024], width: 32, merge_fanout: 4 }
     }
+}
+
+/// Split `[0, n)` into spans of at most `capacity` rows — the bank-sized
+/// chunks of the hierarchical pipeline. The last span may be short.
+pub fn partition(n: usize, capacity: usize) -> Vec<Range<usize>> {
+    assert!(capacity >= 1, "bank capacity must be positive");
+    (0..n.div_ceil(capacity))
+        .map(|c| c * capacity..((c + 1) * capacity).min(n))
+        .collect()
 }
 
 /// An execution plan for one request.
@@ -41,8 +58,8 @@ pub enum Plan {
     /// Sort in one bank of `bank` rows, padding with sentinels.
     Pad { bank: usize, sentinels: usize },
     /// Sort `chunks` banks of `bank` rows each (last chunk padded), then
-    /// merge the sorted runs through the digital merge tree.
-    ChunkMerge { bank: usize, chunks: usize, sentinels: usize },
+    /// merge the sorted runs through the fanout-`fanout` merge network.
+    ChunkMerge { bank: usize, chunks: usize, sentinels: usize, fanout: usize },
 }
 
 impl Plan {
@@ -51,11 +68,11 @@ impl Plan {
     pub fn estimated_cycles(&self, cyc_per_num: f64) -> f64 {
         match *self {
             Plan::Pad { bank, .. } => bank as f64 * cyc_per_num,
-            Plan::ChunkMerge { bank, chunks, .. } => {
+            Plan::ChunkMerge { bank, chunks, fanout, .. } => {
                 // Banks sort in parallel (multi-bank hardware): latency is
-                // one bank sort + the merge pass over all elements.
+                // one bank sort + the merge passes over all elements.
                 bank as f64 * cyc_per_num
-                    + MergeSorter::model_cycles(bank * chunks) as f64
+                    + model_merge_cycles(bank * chunks, chunks, fanout) as f64
             }
         }
     }
@@ -80,6 +97,7 @@ pub fn plan(n: usize, geo: &Geometry, cyc_per_num: f64) -> Plan {
         bank: largest,
         chunks,
         sentinels: chunks * largest - n,
+        fanout: geo.merge_fanout.max(2),
     };
     let _ = cyc_per_num; // single candidate today; hook for richer search
     candidate
@@ -88,7 +106,7 @@ pub fn plan(n: usize, geo: &Geometry, cyc_per_num: f64) -> Plan {
 /// Execute a plan with a sorter factory (`make(bank_size)` builds the
 /// sorter for one bank). Returns the sorted values and aggregate stats;
 /// `stats.crs`/`cycles` follow the plan's latency semantics (parallel
-/// banks: max over chunks; merge pass added on top).
+/// banks: max over chunks; merge passes added on top).
 pub fn execute<S: InMemorySorter>(
     data: &[u32],
     p: &Plan,
@@ -104,14 +122,12 @@ pub fn execute<S: InMemorySorter>(
             sorted.truncate(bank - sentinels);
             (sorted, out.stats)
         }
-        Plan::ChunkMerge { bank, chunks, .. } => {
+        Plan::ChunkMerge { bank, chunks, fanout, .. } => {
             let mut runs: Vec<Vec<u32>> = Vec::with_capacity(chunks);
             let mut agg = SortStats::default();
             let mut max_cycles = 0u64;
-            for c in 0..chunks {
-                let lo = c * bank;
-                let hi = ((c + 1) * bank).min(data.len());
-                let mut chunk = data[lo..hi].to_vec();
+            for span in partition(data.len(), bank) {
+                let mut chunk = data[span].to_vec();
                 chunk.resize(bank, u32::MAX);
                 let mut s = make(bank);
                 let out = s.sort_with_stats(&chunk);
@@ -119,48 +135,18 @@ pub fn execute<S: InMemorySorter>(
                 agg.merge_from(&out.stats);
                 runs.push(out.sorted);
             }
-            // Parallel-bank latency: only the slowest chunk counts, plus
-            // the merge network pass. Reflect that in the aggregate by
-            // replacing crs with the latency-equivalent count.
-            let merge_cycles = MergeSorter::model_cycles(bank * chunks);
-            let mut latency_stats = agg.clone();
-            latency_stats.crs = max_cycles + merge_cycles;
-            latency_stats.drains = 0;
-            // k-way merge of the sorted runs (binary merge tree).
-            let mut merged = runs;
-            while merged.len() > 1 {
-                let mut next = Vec::with_capacity(merged.len().div_ceil(2));
-                let mut it = merged.into_iter();
-                while let Some(a) = it.next() {
-                    match it.next() {
-                        Some(b) => next.push(merge2(&a, &b)),
-                        None => next.push(a),
-                    }
-                }
-                merged = next;
-            }
-            let mut sorted = merged.pop().unwrap_or_default();
+            // k-way merge of the sorted runs through the loser tree.
+            let mut sorted = merge_sorted_runs(runs, fanout).merged;
             sorted.truncate(data.len());
+            // Parallel-bank latency: only the slowest chunk counts, plus
+            // the merge network passes. Reflect that in the aggregate by
+            // replacing crs with the latency-equivalent count.
+            let mut latency_stats = agg.clone();
+            latency_stats.crs = max_cycles + model_merge_cycles(bank * chunks, chunks, fanout);
+            latency_stats.drains = 0;
             (sorted, latency_stats)
         }
     }
-}
-
-fn merge2(a: &[u32], b: &[u32]) -> Vec<u32> {
-    let mut out = Vec::with_capacity(a.len() + b.len());
-    let (mut i, mut j) = (0, 0);
-    while i < a.len() && j < b.len() {
-        if a[i] <= b[j] {
-            out.push(a[i]);
-            i += 1;
-        } else {
-            out.push(b[j]);
-            j += 1;
-        }
-    }
-    out.extend_from_slice(&a[i..]);
-    out.extend_from_slice(&b[j..]);
-    out
 }
 
 #[cfg(test)]
@@ -184,7 +170,22 @@ mod tests {
     #[test]
     fn large_requests_chunk() {
         let p = plan(3000, &geo(), 8.0);
-        assert_eq!(p, Plan::ChunkMerge { bank: 1024, chunks: 3, sentinels: 72 });
+        assert_eq!(p, Plan::ChunkMerge { bank: 1024, chunks: 3, sentinels: 72, fanout: 4 });
+    }
+
+    #[test]
+    fn partition_covers_range_without_overlap() {
+        for (n, cap) in [(0usize, 4usize), (1, 4), (4, 4), (5, 4), (1000, 64), (7, 1)] {
+            let spans = partition(n, cap);
+            assert_eq!(spans.len(), n.div_ceil(cap), "n={n} cap={cap}");
+            let mut covered = 0;
+            for s in &spans {
+                assert_eq!(s.start, covered, "contiguous");
+                assert!(s.len() <= cap && !s.is_empty());
+                covered = s.end;
+            }
+            assert_eq!(covered, n);
+        }
     }
 
     #[test]
@@ -215,9 +216,10 @@ mod tests {
         let p = plan(n, &geo(), 8.0);
         let (_, stats) = execute(&d.values, &p, |_| ColSkipSorter::with_k(2));
         // Latency must be far below 2 sequential bank sorts (parallel
-        // banks) + merge: bounded by one worst bank (≤ 32*1024) + merge.
+        // banks) + merge: bounded by one worst bank (≤ 32*1024) + one
+        // merge pass over the stream (2 runs at fanout 4).
         assert!(
-            stats.cycles() <= 32 * 1024 + MergeSorter::model_cycles(2048),
+            stats.cycles() <= 32 * 1024 + model_merge_cycles(2048, 2, 4),
             "{}",
             stats.cycles()
         );
@@ -235,7 +237,7 @@ mod tests {
     #[test]
     fn estimated_cycles_orders_plans() {
         let pad = Plan::Pad { bank: 1024, sentinels: 0 };
-        let cm = Plan::ChunkMerge { bank: 1024, chunks: 4, sentinels: 0 };
+        let cm = Plan::ChunkMerge { bank: 1024, chunks: 4, sentinels: 0, fanout: 4 };
         assert!(pad.estimated_cycles(8.0) < cm.estimated_cycles(8.0));
     }
 

@@ -50,6 +50,18 @@ pub enum SorterArch {
     MultiBank { n: usize, w: u32, k: usize, banks: usize },
     /// Conventional digital merge sorter.
     Merge { n: usize },
+    /// Hierarchical out-of-bank pipeline: `chunks` column-skipping banks
+    /// of `bank_n` rows each (each possibly striped over
+    /// `banks_per_chunk` sub-banks, §IV), feeding a fanout-`fanout`
+    /// digital merge network that combines the per-bank sorted runs.
+    Hierarchical {
+        bank_n: usize,
+        w: u32,
+        k: usize,
+        chunks: usize,
+        banks_per_chunk: usize,
+        fanout: usize,
+    },
 }
 
 /// Switching-activity factors extracted from a (simulated) run — the
@@ -140,6 +152,26 @@ fn nlog2n(n: usize) -> f64 {
     }
 }
 
+/// Fanout-`f` merge units needed to reduce `runs` sorted runs to one
+/// (levels of `ceil(r/f)` groups until a single run remains). A
+/// remainder group of a single run passes through without a merge unit,
+/// so it is not counted. Each unit is modelled as an `f·log2 f`
+/// comparator tree, extrapolating the calibrated binary merge-sorter
+/// coefficient.
+fn merge_units(runs: usize, fanout: usize) -> f64 {
+    if runs <= 1 || fanout < 2 {
+        return 0.0;
+    }
+    let mut units = 0usize;
+    let mut r = runs;
+    while r > 1 {
+        let groups = r.div_ceil(fanout);
+        units += groups - usize::from(r % fanout == 1);
+        r = groups;
+    }
+    units as f64
+}
+
 impl CostModel {
     /// The model calibrated against the paper's Fig. 8(a) (see module docs
     /// and [`calibration::calibrate`]).
@@ -163,6 +195,18 @@ impl CostModel {
                 banks as f64 * self.bank_area(ns, w, k, true)
                     + mgr
                     + self.a_cell * n as f64 * w as f64
+            }
+            SorterArch::Hierarchical { bank_n, w, k, chunks, banks_per_chunk, fanout } => {
+                let per_chunk = if banks_per_chunk > 1 {
+                    let ns = bank_n / banks_per_chunk;
+                    banks_per_chunk as f64 * self.bank_area(ns, w, k, true)
+                        + self.a_mgr * banks_per_chunk as f64
+                } else {
+                    self.bank_area(bank_n, w, k, true)
+                };
+                chunks as f64 * per_chunk
+                    + self.a_merge * merge_units(chunks, fanout) * nlog2n(fanout)
+                    + self.a_cell * (chunks * bank_n) as f64 * w as f64
             }
         }
     }
@@ -190,6 +234,20 @@ impl CostModel {
                 let ns = n / banks;
                 let mgr = if banks > 1 { self.p_mgr * banks as f64 } else { 0.0 };
                 banks as f64 * self.bank_power(ns, w, k, true, act) + mgr + self.p_glob
+            }
+            SorterArch::Hierarchical { bank_n, w, k, chunks, banks_per_chunk, fanout } => {
+                // Chunks sort simultaneously (parallel banks), so their
+                // power sums; the merge tree mirrors its area term.
+                let per_chunk = if banks_per_chunk > 1 {
+                    let ns = bank_n / banks_per_chunk;
+                    banks_per_chunk as f64 * self.bank_power(ns, w, k, true, act)
+                        + self.p_mgr * banks_per_chunk as f64
+                } else {
+                    self.bank_power(bank_n, w, k, true, act)
+                };
+                chunks as f64 * per_chunk
+                    + self.p_merge * merge_units(chunks, fanout) * nlog2n(fanout)
+                    + self.p_glob
             }
         }
     }
@@ -357,6 +415,76 @@ mod tests {
         let ee = m.energy_efficiency(cs, 7.84, Activity::nominal_colskip())
             / m.energy_efficiency(base, 32.0, Activity::nominal_baseline());
         assert!(close(ee, 3.39, 0.01), "energy-eff ratio {ee}");
+    }
+
+    #[test]
+    fn hierarchical_with_one_chunk_is_a_colskip_bank() {
+        // chunks=1 has no merge tree, so the pipeline degenerates to the
+        // plain column-skipping sorter's area/power exactly.
+        let m = CostModel::calibrated();
+        let hier = SorterArch::Hierarchical {
+            bank_n: N,
+            w: W,
+            k: 2,
+            chunks: 1,
+            banks_per_chunk: 1,
+            fanout: 4,
+        };
+        let cs = SorterArch::ColSkip { n: N, w: W, k: 2 };
+        assert!((m.area_kum2(hier) - m.area_kum2(cs)).abs() < 1e-9);
+        let act = Activity::nominal_colskip();
+        assert!((m.power_mw(hier, act) - m.power_mw(cs, act)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hierarchical_cost_grows_with_chunks_and_shrinks_with_fanout() {
+        let m = CostModel::calibrated();
+        let arch = |chunks: usize, fanout: usize| SorterArch::Hierarchical {
+            bank_n: N,
+            w: W,
+            k: 2,
+            chunks,
+            banks_per_chunk: 1,
+            fanout,
+        };
+        let act = Activity::nominal_colskip();
+        // More chunks: strictly more silicon and more parallel power.
+        let areas: Vec<f64> = [1usize, 4, 16, 64].map(|c| m.area_kum2(arch(c, 4))).to_vec();
+        assert!(areas.windows(2).all(|p| p[1] > p[0]), "{areas:?}");
+        let powers: Vec<f64> = [1usize, 4, 16, 64].map(|c| m.power_mw(arch(c, 4), act)).to_vec();
+        assert!(powers.windows(2).all(|p| p[1] > p[0]), "{powers:?}");
+        // Wider fanout buys fewer merge passes (latency/energy) at the
+        // price of richer merge units: slightly more merge silicon.
+        assert!(m.area_kum2(arch(64, 8)) > m.area_kum2(arch(64, 2)));
+        // The merge tree stays a small fraction of the bank silicon.
+        let with_merge = m.area_kum2(arch(64, 4));
+        let banks_only = 64.0 * (m.area_kum2(arch(1, 4)) - m.a_cell * N as f64 * W as f64)
+            + 64.0 * m.a_cell * N as f64 * W as f64;
+        assert!((with_merge - banks_only) / banks_only < 0.01, "merge tree dominates?");
+    }
+
+    #[test]
+    fn hierarchical_sub_banked_chunks_are_cheaper() {
+        // Fig. 8(b) carries over: striping each chunk over 16 sub-banks
+        // shrinks the per-chunk circuit.
+        let m = CostModel::calibrated();
+        let flat = SorterArch::Hierarchical {
+            bank_n: N,
+            w: W,
+            k: 2,
+            chunks: 8,
+            banks_per_chunk: 1,
+            fanout: 4,
+        };
+        let banked = SorterArch::Hierarchical {
+            bank_n: N,
+            w: W,
+            k: 2,
+            chunks: 8,
+            banks_per_chunk: 16,
+            fanout: 4,
+        };
+        assert!(m.area_kum2(banked) < m.area_kum2(flat));
     }
 
     #[test]

@@ -9,7 +9,9 @@
 //!   the column-skipping sort algorithm, multi-bank management, the
 //!   HPCA'21 bit-traversal baseline, a digital merge-sorter comparison
 //!   point, dataset generators, a calibrated 40nm area/power/energy cost
-//!   model, and a multi-threaded sort service.
+//!   model, a multi-threaded sort service, and a hierarchical out-of-bank
+//!   pipeline (chunk → column-skip → k-way loser-tree merge) that sorts
+//!   datasets far beyond one array's capacity.
 //! * **L2/L1 (python/, build-time only)** — the in-memory *array compute*
 //!   (iterative min search over bit columns) expressed as a JAX scan over
 //!   a Pallas kernel, AOT-lowered to HLO text.
@@ -49,6 +51,8 @@ pub mod testing;
 /// Convenience re-exports for the common entry points.
 pub mod prelude {
     pub use crate::bits::{BitPlanes, RowMask};
+    pub use crate::coordinator::hierarchical::{HierarchicalConfig, HierarchicalOutput};
+    pub use crate::coordinator::{ServiceConfig, SortService};
     pub use crate::cost::{CostModel, SorterArch};
     pub use crate::datasets::{Dataset, DatasetKind};
     pub use crate::memory::{Bank, BankConfig};
@@ -56,7 +60,7 @@ pub mod prelude {
     pub use crate::sorter::{
         baseline::BaselineSorter,
         colskip::{ColSkipConfig, ColSkipSorter},
-        merge::MergeSorter,
+        merge::{merge_runs, LoserTree, MergeSorter},
         InMemorySorter, SortOutput, SortStats,
     };
 }

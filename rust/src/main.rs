@@ -1,16 +1,20 @@
 //! `memsort` — CLI for the column-skipping memristive in-memory sorting
 //! reproduction. Subcommands:
 //!
-//! * `sort`   — sort a generated dataset on a chosen sorter, print stats
+//! * `sort`   — sort a generated dataset on a chosen sorter, print stats;
+//!   datasets longer than `--capacity` automatically run through the
+//!   hierarchical chunk → column-skip → k-way-merge pipeline
 //! * `gen`    — emit a dataset (one value per line)
 //! * `stats`  — workload statistics (leading zeros, repetitions, prefixes)
 //! * `fig`    — regenerate a paper figure (6, 7, 8a, 8b) as table/JSON
+//! * `scale`  — out-of-bank scaling sweep of the hierarchical pipeline
 //! * `report` — headline paper-vs-measured summary (abstract numbers)
 //! * `serve`  — run the sort service demo (native/pjrt/hybrid engines)
 
 use anyhow::{anyhow, bail, Result};
 
 use memsort::cli::Args;
+use memsort::coordinator::hierarchical::HierarchicalConfig;
 use memsort::coordinator::{EngineKind, ServiceConfig, SortService};
 use memsort::cost::{Activity, CostModel, SorterArch};
 use memsort::datasets::{stats::analyze, Dataset, DatasetKind};
@@ -35,6 +39,7 @@ fn main() {
         Some("gen") => cmd_gen(&args),
         Some("stats") => cmd_stats(&args),
         Some("fig") => cmd_fig(&args),
+        Some("scale") => cmd_scale(&args),
         Some("report") => cmd_report(&args),
         Some("serve") => cmd_serve(&args),
         Some("trace") => cmd_trace(&args),
@@ -65,9 +70,14 @@ fn usage() {
            sort    --dataset <uniform|normal|clustered|kruskal|mapreduce>\n\
                    --sorter <colskip|baseline|merge|multibank> --n 1024\n\
                    --width 32 --k 2 --banks 16 --seed 42\n\
+                   (--n above --capacity, default 1024, runs the\n\
+                    hierarchical pipeline: --n 1m --capacity 1024\n\
+                    --fanout 4 --workers 4; sizes accept k/m/g)\n\
            gen     --dataset <kind> --n 1024 --seed 42\n\
            stats   --dataset <kind> --n 1024 --seed 42\n\
            fig     --id <6|7|8a|8b> [--trials 5] [--n 1024] [--json]\n\
+           scale   --max 1m --capacity 1024 --fanout 4 [--json]\n\
+                   (hierarchical sweep: chunks, latency, merge share)\n\
            report  [--trials 5] [--seed 42]\n\
            serve   --engine <native|pjrt|hybrid> --workers 4\n\
                    --requests 64 --n 1024 [--artifacts artifacts]\n\
@@ -96,7 +106,7 @@ fn dataset_from(args: &Args) -> Result<Dataset> {
     }
     let kind = DatasetKind::parse(args.get_or("dataset", "mapreduce"))
         .ok_or_else(|| anyhow!("unknown dataset (see usage)"))?;
-    let n = args.parse_num("n", 1024usize)?;
+    let n = args.parse_size("n", 1024)?;
     let width = args.parse_num("width", 32u32)?;
     let seed = args.parse_num("seed", 42u64)?;
     Ok(Dataset::generate(kind, n, width, seed))
@@ -108,6 +118,20 @@ fn cmd_sort(args: &Args) -> Result<()> {
     let k = args.parse_num("k", 2usize)?;
     let banks = args.parse_num("banks", 16usize)?;
     let name = args.get_or("sorter", "colskip");
+    let capacity = args.parse_size("capacity", memsort::params::DEFAULT_N)?;
+    // Datasets beyond one bank go hierarchical. A multibank ensemble has
+    // no fixed capacity of its own (it stripes whatever it is given), so
+    // it is rerouted only when the user states the bank capacity
+    // explicitly — `--sorter multibank --n 4096` alone keeps sorting one
+    // 4096-row ensemble as before.
+    let hier = match name {
+        "colskip" => d.values.len() > capacity,
+        "multibank" => args.get("capacity").is_some() && d.values.len() > capacity,
+        _ => false,
+    };
+    if hier {
+        return cmd_sort_hierarchical(args, &d, width, k, banks, capacity);
+    }
     let mut sorter: Box<dyn InMemorySorter> = match name {
         "colskip" => Box::new(ColSkipSorter::new(ColSkipConfig { width, k, ..Default::default() })),
         "baseline" => Box::new(BaselineSorter::with_width(width)),
@@ -137,6 +161,139 @@ fn cmd_sort(args: &Args) -> Result<()> {
         (n as u64 * width as u64) as f64 / out.stats.cycles() as f64
     );
     println!("throughput    : {:.2} Mnum/s @500MHz", out.stats.throughput(n) / 1e6);
+    Ok(())
+}
+
+/// `sort` for datasets longer than the bank capacity: partition into
+/// bank-sized chunks, sort them on the worker pool, k-way merge.
+fn cmd_sort_hierarchical(
+    args: &Args,
+    d: &Dataset,
+    width: u32,
+    k: usize,
+    banks: usize,
+    capacity: usize,
+) -> Result<()> {
+    let fanout = args.parse_num("fanout", 4usize)?;
+    let workers = args.parse_num("workers", 4usize)?;
+    if capacity == 0 {
+        bail!("--capacity must be at least 1");
+    }
+    if fanout < 2 {
+        bail!("--fanout must be at least 2");
+    }
+    if workers == 0 {
+        bail!("--workers must be at least 1");
+    }
+    let sub_banks = if args.get_or("sorter", "colskip") == "multibank" { banks } else { 1 };
+    let svc = SortService::start(ServiceConfig {
+        workers,
+        banks: sub_banks,
+        colskip: ColSkipConfig { width, k, ..Default::default() },
+        ..Default::default()
+    })?;
+    let t0 = std::time::Instant::now();
+    let out = svc.sort_hierarchical(&d.values, &HierarchicalConfig { capacity, fanout })?;
+    let wall = t0.elapsed();
+    let n = d.values.len();
+    let mut check = d.values.clone();
+    check.sort_unstable();
+    println!("pipeline      : chunk({capacity}) -> column-skip -> {fanout}-way merge");
+    println!("dataset       : {} (n={n}, w={width}, seed={})", d.kind.name(), d.seed);
+    println!("correct       : {}", out.output.sorted == check);
+    println!("chunks        : {} ({workers} workers, {sub_banks} banks/chunk)", out.chunks());
+    println!(
+        "chunk work    : {} CRs, {} SLs, {} drains (all banks)",
+        out.output.stats.crs, out.output.stats.sls, out.output.stats.drains
+    );
+    println!(
+        "merge         : {} passes, {} comparisons, {} cycles",
+        out.merge.passes, out.merge.comparisons, out.merge.cycles
+    );
+    println!(
+        "latency       : {} cycles ({:.3} ms @500MHz, {:.1}% in merge)",
+        out.latency_cycles,
+        out.latency_seconds() * 1e3,
+        out.merge_fraction() * 100.0
+    );
+    println!("cycles/number : {:.3}", out.latency_cycles as f64 / n as f64);
+    println!("throughput    : {:.2} Mnum/s @500MHz", out.throughput() / 1e6);
+    println!("area (model)  : {:.1} Kµm²", out.area_kum2);
+    println!("power (model) : {:.1} mW", out.power_mw);
+    println!("host wall     : {:.1} ms", wall.as_secs_f64() * 1e3);
+    svc.shutdown();
+    Ok(())
+}
+
+/// Out-of-bank scaling sweep: n from 4× capacity up to `--max`.
+fn cmd_scale(args: &Args) -> Result<()> {
+    let capacity = args.parse_size("capacity", memsort::params::DEFAULT_N)?;
+    let fanout = args.parse_num("fanout", 4usize)?;
+    let width = args.parse_num("width", 32u32)?;
+    let k = args.parse_num("k", 2usize)?;
+    let seed = args.parse_num("seed", 42u64)?;
+    let max = args.parse_size("max", 1_000_000)?;
+    if capacity == 0 {
+        bail!("--capacity must be at least 1");
+    }
+    if fanout < 2 {
+        bail!("--fanout must be at least 2");
+    }
+    if max <= capacity {
+        bail!("--max ({max}) must exceed --capacity ({capacity})");
+    }
+    let mut ns = Vec::new();
+    let mut n = capacity.saturating_mul(4);
+    while n < max {
+        ns.push(n);
+        n = n.saturating_mul(4);
+    }
+    ns.push(max);
+    let pts = report::scaling(&ns, capacity, fanout, width, k, seed);
+    if args.flag("json") {
+        println!(
+            "{}",
+            Json::arr(pts.iter().map(|p| Json::obj([
+                ("n", p.n.into()),
+                ("capacity", p.capacity.into()),
+                ("chunks", p.chunks.into()),
+                ("fanout", p.fanout.into()),
+                ("latency_cycles", p.latency_cycles.into()),
+                ("cycles_per_number", p.cycles_per_number.into()),
+                ("merge_fraction", p.merge_fraction.into()),
+                ("throughput_mnum_s", p.throughput_mnum_s.into()),
+                ("area_kum2", p.area_kum2.into()),
+                ("power_mw", p.power_mw.into()),
+            ])))
+            .render()
+        );
+    } else {
+        let rows: Vec<Vec<String>> = pts
+            .iter()
+            .map(|p| {
+                vec![
+                    p.n.to_string(),
+                    p.chunks.to_string(),
+                    p.latency_cycles.to_string(),
+                    format!("{:.2}", p.cycles_per_number),
+                    format!("{:.1}%", p.merge_fraction * 100.0),
+                    format!("{:.1}", p.throughput_mnum_s),
+                    format!("{:.0}", p.area_kum2),
+                    format!("{:.0}", p.power_mw),
+                ]
+            })
+            .collect();
+        println!(
+            "out-of-bank scaling (capacity={capacity}, fanout={fanout}, w={width}, k={k}, MapReduce)"
+        );
+        print!(
+            "{}",
+            report::render_table(
+                &["n", "chunks", "latency", "cyc/num", "merge", "Mnum/s", "Kµm²", "mW"],
+                &rows
+            )
+        );
+    }
     Ok(())
 }
 

@@ -32,7 +32,8 @@ pub struct MultiBankConfig {
     pub width: u32,
     /// State-recording depth per sub-sorter.
     pub k: usize,
-    /// Number of banks (sub-sorters). Must divide the array length.
+    /// Number of banks (sub-sorters). Lengths that do not divide evenly
+    /// are padded internally with `u32::MAX` sentinel rows.
     pub banks: usize,
     /// Leading-zero skipping (shared column processor policy).
     pub skip_leading: bool,
@@ -262,7 +263,28 @@ impl InMemorySorter for MultiBankSorter {
         if data.is_empty() {
             return SortOutput { sorted: vec![], order: vec![], stats: SortStats::default() };
         }
-        self.sort_inner(data)
+        let c = self.config.banks;
+        if data.len().is_multiple_of(c) {
+            return self.sort_inner(data);
+        }
+        // Pad to a bank-divisible length with `u32::MAX` sentinels (the
+        // planner's Pad semantics: sentinel rows still participate in the
+        // traversal and are metered), then drop the sentinel rows from
+        // the output by their row index — exact even when the data itself
+        // contains `u32::MAX`.
+        let n = data.len();
+        let mut padded = data.to_vec();
+        padded.resize(n.div_ceil(c) * c, u32::MAX);
+        let out = self.sort_inner(&padded);
+        let mut sorted = Vec::with_capacity(n);
+        let mut order = Vec::with_capacity(n);
+        for (v, r) in out.sorted.into_iter().zip(out.order) {
+            if r < n {
+                sorted.push(v);
+                order.push(r);
+            }
+        }
+        SortOutput { sorted, order, stats: out.stats }
     }
 
     fn name(&self) -> &'static str {
@@ -334,12 +356,22 @@ mod tests {
     }
 
     #[test]
-    fn uneven_length_panics_with_guidance() {
+    fn uneven_length_pads_internally() {
+        // 4 elements across 3 banks: the sorter pads to 6 with sentinels
+        // and drops them from the output by row index.
         let mut mb = MultiBankSorter::new(MultiBankConfig { banks: 3, ..Default::default() });
-        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            mb.sort_with_stats(&[1, 2, 3, 4])
-        }));
-        assert!(r.is_err());
+        let out = mb.sort_with_stats(&[4, 1, 3, 2]);
+        assert_eq!(out.sorted, vec![1, 2, 3, 4]);
+        assert_eq!(out.order, vec![1, 3, 2, 0]);
+    }
+
+    #[test]
+    fn uneven_length_preserves_real_max_values() {
+        let data = vec![u32::MAX, 5, u32::MAX, 0, 9];
+        let mut mb = MultiBankSorter::new(MultiBankConfig { banks: 2, ..Default::default() });
+        let out = mb.sort_with_stats(&data);
+        assert_eq!(out.sorted, vec![0, 5, 9, u32::MAX, u32::MAX]);
+        assert!(out.order.iter().all(|&r| r < data.len()));
     }
 
     #[test]

@@ -220,6 +220,76 @@ pub fn fig8b(n: usize, width: u32) -> Vec<Fig8bPoint> {
         .collect()
 }
 
+/// One measured point of the out-of-bank scaling sweep: a dataset of
+/// `n` elements sorted through the chunk → column-skip → k-way-merge
+/// pipeline on `chunks` banks of `capacity` rows.
+#[derive(Clone, Debug)]
+pub struct ScalePoint {
+    pub n: usize,
+    pub capacity: usize,
+    pub chunks: usize,
+    pub fanout: usize,
+    /// Critical-path latency (max chunk + merge passes), cycles.
+    pub latency_cycles: u64,
+    /// Latency per element — the hierarchical analogue of Fig. 6's
+    /// cycles/number (chunks sort in parallel banks).
+    pub cycles_per_number: f64,
+    /// Fraction of the critical path spent in the merge network.
+    pub merge_fraction: f64,
+    /// Sorted elements per second at the paper's 500 MHz clock, Mnum/s.
+    pub throughput_mnum_s: f64,
+    /// Calibrated silicon area of the whole ensemble (Kµm²).
+    pub area_kum2: f64,
+    /// Calibrated power under measured activity (mW).
+    pub power_mw: f64,
+}
+
+/// Sweep the hierarchical pipeline over dataset sizes `ns` (MapReduce
+/// traffic) at a fixed bank `capacity` and merge `fanout`. One service
+/// instance serves the whole sweep, so per-point cost is chunk sorting
+/// plus the merge, not thread spin-up.
+pub fn scaling(
+    ns: &[usize],
+    capacity: usize,
+    fanout: usize,
+    width: u32,
+    k: usize,
+    seed: u64,
+) -> Vec<ScalePoint> {
+    use crate::coordinator::hierarchical::HierarchicalConfig;
+    use crate::coordinator::{ServiceConfig, SortService};
+
+    let svc = SortService::start(ServiceConfig {
+        workers: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4).min(8),
+        colskip: crate::sorter::colskip::ColSkipConfig { width, k, ..Default::default() },
+        ..Default::default()
+    })
+    .expect("service start");
+    let cfg = HierarchicalConfig { capacity, fanout };
+    let pts = ns
+        .iter()
+        .map(|&n| {
+            let d = Dataset::generate(DatasetKind::MapReduce, n, width, seed);
+            let out = svc.sort_hierarchical(&d.values, &cfg).expect("hierarchical sort");
+            debug_assert!(out.output.sorted.windows(2).all(|w| w[0] <= w[1]));
+            ScalePoint {
+                n,
+                capacity,
+                chunks: out.chunks(),
+                fanout,
+                latency_cycles: out.latency_cycles,
+                cycles_per_number: out.latency_cycles as f64 / n.max(1) as f64,
+                merge_fraction: out.merge_fraction(),
+                throughput_mnum_s: out.throughput() / 1e6,
+                area_kum2: out.area_kum2,
+                power_mw: out.power_mw,
+            }
+        })
+        .collect();
+    svc.shutdown();
+    pts
+}
+
 /// Render a text table with aligned columns.
 pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
     let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
@@ -308,6 +378,27 @@ mod tests {
         // Smaller Ns ⇒ smaller area and power (Fig. 8b).
         assert!(pts.windows(2).all(|w| w[0].norm_area < w[1].norm_area));
         assert!(pts.windows(2).all(|w| w[0].norm_power < w[1].norm_power));
+    }
+
+    #[test]
+    fn scaling_sweep_shapes() {
+        let pts = scaling(&[512, 2048, 8192], 256, 4, 32, 2, 7);
+        assert_eq!(pts.len(), 3);
+        assert_eq!(pts[0].chunks, 2);
+        assert_eq!(pts[1].chunks, 8);
+        assert_eq!(pts[2].chunks, 32);
+        for p in &pts {
+            assert!(p.latency_cycles > 0, "n={}", p.n);
+            assert!(p.throughput_mnum_s > 0.0);
+            assert!(p.area_kum2 > 0.0 && p.power_mw > 0.0);
+            assert!((0.0..1.0).contains(&p.merge_fraction), "n={}", p.n);
+        }
+        // Deeper merge trees: the merge share of the critical path grows
+        // with the chunk count.
+        assert!(pts[2].merge_fraction > pts[0].merge_fraction);
+        // Column skipping keeps per-element latency under the baseline's
+        // 32 cycles even with the merge passes on top.
+        assert!(pts[2].cycles_per_number < 32.0, "{}", pts[2].cycles_per_number);
     }
 
     #[test]

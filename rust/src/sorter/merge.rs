@@ -1,16 +1,22 @@
-//! The conventional digital merge sorter used as the non-in-memory
-//! comparison point (§V: 246.1 Kµm², 825.9 mW, 3.2× the baseline's speed
-//! at N=1024).
+//! Digital merge hardware: the conventional merge *sorter* used as the
+//! non-in-memory comparison point (§V: 246.1 Kµm², 825.9 mW, 3.2× the
+//! baseline's speed at N=1024), plus the k-way **merge stage** of the
+//! hierarchical out-of-bank pipeline (a loser-tree merge network that
+//! combines per-bank sorted runs into the global order).
 //!
-//! Hardware model: a fully pipelined binary merge tree — `ceil(log2 N)`
-//! merge passes, each streaming one element per cycle. Passes run
-//! back-to-back over the block, so the latency for a length-N block is
-//! `N · ceil(log2 N)` cycles — exactly 10 cycles/number at N=1024, which
-//! reproduces the paper's 3.2× speed over the 32-cycle baseline.
-//! Functionally we run a real bottom-up merge sort and meter comparisons,
-//! so the cycle model is backed by an actual sort.
+//! Hardware model shared by both: a fully pipelined merge tree streams
+//! one element per cycle per pass. The sorter does `ceil(log2 N)` binary
+//! passes over a length-N block — `N · ceil(log2 N)` cycles, exactly
+//! 10 cycles/number at N=1024, reproducing the paper's 3.2× speed over
+//! the 32-cycle baseline. The k-way stage does `ceil(log_f R)` passes to
+//! reduce R runs through fanout-f merge units ([`model_merge_cycles`]).
+//! Functionally we run real merges and meter comparator activity, so the
+//! cycle models are backed by actual sorts.
 
 use super::{InMemorySorter, SortOutput, SortStats};
+
+/// Sentinel for an empty loser-tree slot (pre-initialization).
+const EMPTY: usize = usize::MAX;
 
 /// Cycle-modelled digital merge sorter.
 #[derive(Clone, Debug, Default)]
@@ -93,6 +99,196 @@ impl InMemorySorter for MergeSorter {
     }
 }
 
+/// Streaming `k`-way merger over sorted runs, implemented as a classic
+/// array loser tree: `k` leaves (one per run), `k` internal slots
+/// holding match losers, winner at slot 0. Each [`LoserTree::pop`]
+/// emits the global minimum and replays exactly one leaf-to-root path
+/// (`ceil(log2 k)` comparisons), which is what a hardware fanout-`k`
+/// merge unit does per output cycle.
+///
+/// Items only need `Copy + Ord`: the hierarchical pipeline merges
+/// `(value, original_index)` runs (so ties break by original position,
+/// keeping the global argsort stable), the planner merges plain `u32`
+/// runs. Remaining ties break by run index.
+pub struct LoserTree<'a, T> {
+    runs: &'a [Vec<T>],
+    /// Cursor into each run.
+    pos: Vec<usize>,
+    /// Internal nodes (losers); `tree[0]` is the current overall winner.
+    tree: Vec<usize>,
+    comparisons: u64,
+}
+
+impl<'a, T: Copy + Ord> LoserTree<'a, T> {
+    /// Build the tournament over `runs` (each must be sorted ascending).
+    pub fn new(runs: &'a [Vec<T>]) -> Self {
+        let k = runs.len();
+        let mut lt = LoserTree {
+            runs,
+            pos: vec![0; k],
+            tree: vec![EMPTY; k.max(1)],
+            comparisons: 0,
+        };
+        for leaf in (0..k).rev() {
+            lt.replay(leaf);
+        }
+        lt
+    }
+
+    /// Comparator operations performed so far.
+    pub fn comparisons(&self) -> u64 {
+        self.comparisons
+    }
+
+    /// Emit the next element of the merged order, or `None` when every
+    /// run is exhausted.
+    pub fn pop(&mut self) -> Option<T> {
+        let w = self.tree[0];
+        let item = *self.runs.get(w)?.get(self.pos[w])?;
+        self.pos[w] += 1;
+        self.replay(w);
+        Some(item)
+    }
+
+    /// Current head of run `i` as a tie-broken key; `None` = exhausted
+    /// (which compares greater than every real key).
+    fn key(&self, i: usize) -> Option<(T, usize)> {
+        self.runs.get(i)?.get(self.pos[i]).map(|&v| (v, i))
+    }
+
+    /// Does run `a`'s head sort strictly before run `b`'s head?
+    fn beats(&mut self, a: usize, b: usize) -> bool {
+        match (self.key(a), self.key(b)) {
+            (None, _) => false,
+            (Some(_), None) => true,
+            (Some(x), Some(y)) => {
+                self.comparisons += 1;
+                x < y
+            }
+        }
+    }
+
+    /// Replay the matches on `leaf`'s path to the root. During
+    /// construction a contestant parks in the first empty slot it meets
+    /// (its first match is pending until the opponent arrives); once the
+    /// tree is full this is the standard loser-tree update.
+    fn replay(&mut self, leaf: usize) {
+        let k = self.runs.len();
+        let mut winner = leaf;
+        let mut node = (leaf + k) / 2;
+        while node > 0 {
+            let held = self.tree[node];
+            if held == EMPTY {
+                self.tree[node] = winner;
+                return;
+            }
+            if self.beats(held, winner) {
+                self.tree[node] = winner;
+                winner = held;
+            }
+            node /= 2;
+        }
+        self.tree[0] = winner;
+    }
+}
+
+/// Result of merging sorted runs through the k-way merge network.
+#[derive(Clone, Debug)]
+pub struct KWayMerged<T> {
+    /// Globally merged stream.
+    pub merged: Vec<T>,
+    /// Comparator operations actually performed (all passes).
+    pub comparisons: u64,
+    /// Merge passes executed (`ceil(log_fanout(runs))`).
+    pub passes: u32,
+    /// Modelled merge-network latency: one element per cycle per pass.
+    pub cycles: u64,
+}
+
+/// The merge result of `(value, original_index)` runs — the hierarchical
+/// pipeline's merge-stage output.
+pub type KWayMergeOutput = KWayMerged<(u32, usize)>;
+
+impl KWayMergeOutput {
+    /// The merged values alone.
+    pub fn values(&self) -> Vec<u32> {
+        self.merged.iter().map(|&(v, _)| v).collect()
+    }
+
+    /// The merged original indices alone (the global argsort).
+    pub fn order(&self) -> Vec<usize> {
+        self.merged.iter().map(|&(_, i)| i).collect()
+    }
+}
+
+/// Merge passes needed to reduce `runs` sorted runs with fanout-`fanout`
+/// merge units: `ceil(log_fanout(runs))` (0 when nothing to merge).
+pub fn model_merge_passes(runs: usize, fanout: usize) -> u32 {
+    assert!(fanout >= 2, "merge fanout must be at least 2");
+    let mut passes = 0;
+    let mut r = runs;
+    while r > 1 {
+        r = r.div_ceil(fanout);
+        passes += 1;
+    }
+    passes
+}
+
+/// Merge-network latency in cycles for `n` total elements in `runs` runs:
+/// every pass streams the whole stream at one element per cycle. With
+/// `runs = n` singleton runs and `fanout = 2` this reduces to the binary
+/// merge sorter's `N · ceil(log2 N)` model.
+pub fn model_merge_cycles(n: usize, runs: usize, fanout: usize) -> u64 {
+    n as u64 * model_merge_passes(runs, fanout) as u64
+}
+
+/// Merge already-sorted runs of any `Copy + Ord` item through a
+/// fanout-`fanout` loser-tree merge network, in as many passes as the
+/// fanout requires.
+pub fn merge_sorted_runs<T: Copy + Ord>(runs: Vec<Vec<T>>, fanout: usize) -> KWayMerged<T> {
+    assert!(fanout >= 2, "merge fanout must be at least 2");
+    let total: usize = runs.iter().map(Vec::len).sum();
+    let mut runs = runs;
+    runs.retain(|r| !r.is_empty());
+    let mut comparisons = 0u64;
+    let mut passes = 0u32;
+    while runs.len() > 1 {
+        passes += 1;
+        let mut next = Vec::with_capacity(runs.len().div_ceil(fanout));
+        let mut it = runs.into_iter();
+        loop {
+            let group: Vec<Vec<T>> = it.by_ref().take(fanout).collect();
+            match group.len() {
+                0 => break,
+                1 => next.push(group.into_iter().next().expect("one run")),
+                _ => {
+                    let mut lt = LoserTree::new(&group);
+                    let mut out = Vec::with_capacity(group.iter().map(Vec::len).sum());
+                    while let Some(x) = lt.pop() {
+                        out.push(x);
+                    }
+                    comparisons += lt.comparisons();
+                    next.push(out);
+                }
+            }
+        }
+        runs = next;
+    }
+    KWayMerged {
+        merged: runs.pop().unwrap_or_default(),
+        comparisons,
+        passes,
+        cycles: total as u64 * passes as u64,
+    }
+}
+
+/// Merge already-sorted `(value, original_index)` runs — the merge stage
+/// of the hierarchical pipeline: the runs are per-bank sort results and
+/// the output is the global order plus the global argsort.
+pub fn merge_runs(runs: Vec<Vec<(u32, usize)>>, fanout: usize) -> KWayMergeOutput {
+    merge_sorted_runs(runs, fanout)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -148,5 +344,111 @@ mod tests {
         let mut m = MergeSorter::new();
         assert_eq!(m.sort(&[]), Vec::<u32>::new());
         assert_eq!(m.sort(&[3]), vec![3]);
+    }
+
+    fn indexed_runs(chunks: &[&[u32]]) -> Vec<Vec<(u32, usize)>> {
+        let mut base = 0usize;
+        chunks
+            .iter()
+            .map(|c| {
+                let mut run: Vec<(u32, usize)> =
+                    c.iter().enumerate().map(|(i, &v)| (v, base + i)).collect();
+                run.sort_unstable();
+                base += c.len();
+                run
+            })
+            .collect()
+    }
+
+    #[test]
+    fn loser_tree_merges_to_global_order() {
+        let runs = indexed_runs(&[&[5u32, 1, 9][..], &[2, 2, 8, 30], &[0], &[7, 7]]);
+        let mut flat: Vec<u32> = runs.iter().flatten().map(|&(v, _)| v).collect();
+        flat.sort_unstable();
+        let mut lt = LoserTree::new(&runs);
+        let mut got = Vec::new();
+        while let Some((v, _)) = lt.pop() {
+            got.push(v);
+        }
+        assert_eq!(got, flat);
+        assert!(lt.comparisons() > 0);
+    }
+
+    #[test]
+    fn loser_tree_edge_shapes() {
+        // No runs at all.
+        let empty: Vec<Vec<(u32, usize)>> = vec![];
+        assert_eq!(LoserTree::new(&empty).pop(), None);
+        // One run passes through unchanged.
+        let one = indexed_runs(&[&[3u32, 1, 2][..]]);
+        let mut lt = LoserTree::new(&one);
+        let mut got = Vec::new();
+        while let Some(x) = lt.pop() {
+            got.push(x.0);
+        }
+        assert_eq!(got, vec![1, 2, 3]);
+        // Empty runs mixed in.
+        let mixed = indexed_runs(&[&[][..], &[4u32, 2][..], &[][..], &[3][..]]);
+        let mut lt = LoserTree::new(&mixed);
+        let mut got = Vec::new();
+        while let Some(x) = lt.pop() {
+            got.push(x.0);
+        }
+        assert_eq!(got, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn loser_tree_ties_break_by_run_order() {
+        let runs = indexed_runs(&[&[7u32, 7][..], &[7], &[5, 7]]);
+        let lt_order: Vec<usize> = {
+            let mut lt = LoserTree::new(&runs);
+            let mut got = Vec::new();
+            while let Some((_, i)) = lt.pop() {
+                got.push(i);
+            }
+            got
+        };
+        // 5 first (run 2), then all the 7s run-by-run: run 0, run 1, run 2.
+        assert_eq!(lt_order, vec![3, 0, 1, 2, 4]);
+    }
+
+    #[test]
+    fn merge_runs_matches_std_sort_across_fanouts() {
+        let chunks: Vec<Vec<u32>> = (0..13u32)
+            .map(|c| {
+                (0..17u32)
+                    .map(|i| i.wrapping_mul(2654435761).wrapping_add(c * 40503) >> 7)
+                    .collect()
+            })
+            .collect();
+        let refs: Vec<&[u32]> = chunks.iter().map(|c| c.as_slice()).collect();
+        let mut expect: Vec<u32> = chunks.iter().flatten().copied().collect();
+        expect.sort_unstable();
+        for fanout in [2usize, 3, 4, 8, 16] {
+            let out = merge_runs(indexed_runs(&refs), fanout);
+            assert_eq!(out.values(), expect, "fanout={fanout}");
+            assert_eq!(out.passes, model_merge_passes(13, fanout), "fanout={fanout}");
+            assert_eq!(out.cycles, model_merge_cycles(expect.len(), 13, fanout));
+            // The order is a permutation mapping original indices to values.
+            let flat: Vec<u32> = chunks.iter().flatten().copied().collect();
+            for (&val, &idx) in out.values().iter().zip(out.order().iter()) {
+                assert_eq!(flat[idx], val);
+            }
+        }
+    }
+
+    #[test]
+    fn merge_pass_model_reduces_to_binary_sorter() {
+        // Merging N singleton runs pairwise is exactly the merge sorter.
+        for n in [2usize, 3, 7, 1000, 1024] {
+            assert_eq!(model_merge_cycles(n, n, 2), MergeSorter::model_cycles(n), "n={n}");
+        }
+        // Fanout cuts passes logarithmically.
+        assert_eq!(model_merge_passes(16, 2), 4);
+        assert_eq!(model_merge_passes(16, 4), 2);
+        assert_eq!(model_merge_passes(16, 16), 1);
+        assert_eq!(model_merge_passes(17, 16), 2);
+        assert_eq!(model_merge_passes(1, 4), 0);
+        assert_eq!(model_merge_passes(0, 4), 0);
     }
 }

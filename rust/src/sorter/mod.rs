@@ -1,6 +1,8 @@
 //! In-memory sorters: the paper's column-skipping sorter, the HPCA'21
-//! bit-traversal baseline it improves on, and the digital merge sorter the
-//! evaluation compares against.
+//! bit-traversal baseline it improves on, the digital merge sorter the
+//! evaluation compares against, and the k-way merge stage
+//! ([`merge::LoserTree`] / [`merge::merge_runs`]) that the hierarchical
+//! out-of-bank pipeline uses to combine per-bank sorted runs.
 //!
 //! All sorters implement [`InMemorySorter`] and return a [`SortOutput`]
 //! carrying the sorted values, the row order (argsort — needed by the

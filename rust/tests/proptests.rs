@@ -10,8 +10,14 @@
 //!    the single-bank sorter;
 //! 5. state recording is a pure optimization: results are identical for
 //!    every k;
-//! 6. stall/leading-zero ablations preserve the functional result.
+//! 6. stall/leading-zero ablations preserve the functional result;
+//! 7. the hierarchical chunk → column-skip → k-way-merge pipeline equals
+//!    `std` sort for random lengths/widths/duplicates, its global argsort
+//!    is a valid permutation, and its aggregated stats are the sum of the
+//!    per-chunk stats.
 
+use memsort::coordinator::hierarchical::HierarchicalConfig;
+use memsort::coordinator::{ServiceConfig, SortService};
 use memsort::multibank::{MultiBankConfig, MultiBankSorter};
 use memsort::sorter::baseline::BaselineSorter;
 use memsort::sorter::colskip::{ColSkipConfig, ColSkipSorter};
@@ -167,6 +173,52 @@ fn prop_ablations_preserve_results() {
         }
         Ok(())
     });
+}
+
+#[test]
+fn prop_hierarchical_equals_std_sort() {
+    // One shared service: the property exercises chunking/merging, not
+    // thread spin-up. The engine sorts any u32 at the default width 32.
+    let svc = SortService::start(ServiceConfig { workers: 2, ..Default::default() }).unwrap();
+    check(
+        "hierarchical-chunk-merge",
+        PropConfig { seed: 8, cases: 96, max_len: 300, ..Default::default() },
+        |case| {
+            let expect = sorted_ref(&case.values);
+            for (capacity, fanout) in [(7usize, 2usize), (16, 3), (64, 4)] {
+                let cfg = HierarchicalConfig { capacity, fanout };
+                let out =
+                    svc.sort_hierarchical(&case.values, &cfg).map_err(|e| e.to_string())?;
+                if out.output.sorted != expect {
+                    return Err(format!("capacity={capacity} fanout={fanout}: wrong order"));
+                }
+                if out.chunks() != case.values.len().div_ceil(capacity) {
+                    return Err(format!("capacity={capacity}: wrong chunk count"));
+                }
+                // Global argsort is a permutation mapping rows to values.
+                let mut seen = vec![false; case.values.len()];
+                for (&row, &val) in out.output.order.iter().zip(&out.output.sorted) {
+                    if row >= case.values.len() || seen[row] {
+                        return Err(format!("capacity={capacity}: order not a permutation"));
+                    }
+                    seen[row] = true;
+                    if case.values[row] != val {
+                        return Err(format!("capacity={capacity}: order maps wrong row"));
+                    }
+                }
+                // Work accounting: aggregate == Σ per-chunk.
+                let mut summed = memsort::sorter::SortStats::default();
+                for s in &out.chunk_stats {
+                    summed.merge_from(s);
+                }
+                if out.output.stats != summed {
+                    return Err(format!("capacity={capacity}: stats are not the chunk sum"));
+                }
+            }
+            Ok(())
+        },
+    );
+    svc.shutdown();
 }
 
 #[test]
