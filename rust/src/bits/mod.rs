@@ -233,7 +233,7 @@ impl BitPlanes {
     /// would silently truncate; truncation here would mis-sort, so we fail
     /// loudly instead).
     pub fn new(values: &[u32], width: u32) -> Self {
-        assert!(width >= 1 && width <= 32, "width must be in 1..=32");
+        assert!((1..=32).contains(&width), "width must be in 1..=32");
         if width < 32 {
             if let Some(&v) = values.iter().find(|&&v| v >> width != 0) {
                 panic!("value {v:#x} does not fit in {width} bits");

@@ -304,6 +304,45 @@ mod tests {
     }
 
     #[test]
+    fn saturated_max_values_sort_exactly() {
+        // A dataset saturated with *real* `u32::MAX` values through the
+        // hierarchical path. Unlike `planner::execute` (which pads every
+        // chunk to the full bank with MAX sentinels and meters them —
+        // see `chunk_merge_meters_sentinel_work`), the pipeline sorts
+        // the short last chunk unpadded: the output, the argsort and
+        // the summed work stats cover exactly the n real rows.
+        let svc = service(2);
+        let cfg = HierarchicalConfig { capacity: 64, fanout: 4 };
+        let mut data = vec![u32::MAX; 150];
+        for (i, v) in data.iter_mut().enumerate() {
+            if i % 3 == 0 {
+                *v = i as u32;
+            }
+        }
+        let out = svc.sort_hierarchical(&data, &cfg).unwrap();
+        let mut expect = data.clone();
+        expect.sort_unstable();
+        assert_eq!(out.output.sorted, expect);
+        assert_eq!(out.chunks(), 3, "64 + 64 + 22 rows");
+        // The argsort is a permutation over the real rows only.
+        let mut seen = vec![false; data.len()];
+        for (&row, &val) in out.output.order.iter().zip(&out.output.sorted) {
+            assert!(!seen[row], "row {row} emitted twice");
+            seen[row] = true;
+            assert_eq!(data[row], val);
+        }
+        assert!(seen.iter().all(|&s| s));
+        // Work covers exactly n emissions — no sentinel rows anywhere.
+        let mut summed = SortStats::default();
+        for s in &out.chunk_stats {
+            summed.merge_from(s);
+        }
+        assert_eq!(summed.iterations + summed.drains, 150);
+        assert_eq!(out.output.stats, summed);
+        svc.shutdown();
+    }
+
+    #[test]
     fn finer_chunking_is_cheaper_silicon() {
         // Fig. 8(b) carried to the chunk dimension: the row processor
         // scales as Ns·log2(Ns), so 16 banks of 256 rows undercut 2 banks

@@ -78,35 +78,72 @@ impl Plan {
     }
 }
 
-/// Plan a request of length `n` onto the geometry.
+/// The candidate plan a request of length `n` gets on a bank of `bank`
+/// rows: pad into one bank when it fits, otherwise chunk-and-merge.
+pub fn candidate(n: usize, bank: usize, fanout: usize) -> Plan {
+    assert!(n > 0 && bank > 0);
+    if bank >= n {
+        Plan::Pad { bank, sentinels: bank - n }
+    } else {
+        let chunks = n.div_ceil(bank);
+        Plan::ChunkMerge { bank, chunks, sentinels: chunks * bank - n, fanout }
+    }
+}
+
+/// Plan a request of length `n` onto the geometry: every bank size is a
+/// candidate (pad if it fits, chunk + merge otherwise) and the cheapest
+/// under [`Plan::estimated_cycles`] at the observed `cyc_per_num` wins.
+/// Banks sort in parallel, so on cheap-per-element traffic a *smaller*
+/// bank often beats the largest one: more chunks cost only merge passes,
+/// while the per-bank sort latency shrinks linearly.
 pub fn plan(n: usize, geo: &Geometry, cyc_per_num: f64) -> Plan {
     assert!(n > 0, "cannot plan an empty sort");
-    let largest = *geo.bank_sizes.last().expect("geometry has banks");
-    if n <= largest {
-        // Smallest bank that fits.
-        let bank = *geo
-            .bank_sizes
-            .iter()
-            .find(|&&b| b >= n)
-            .expect("largest covers n");
-        return Plan::Pad { bank, sentinels: bank - n };
+    assert!(
+        cyc_per_num.is_finite() && cyc_per_num >= 0.0,
+        "cyc_per_num must be finite and non-negative, got {cyc_per_num}"
+    );
+    let fanout = geo.merge_fanout.max(2);
+    // Chunked candidates largest bank first, so a cost tie prefers fewer
+    // chunks (less merge silicon).
+    let mut best: Option<(Plan, f64)> = None;
+    for &bank in geo.bank_sizes.iter().rev().filter(|&&b| b < n) {
+        let cand = candidate(n, bank, fanout);
+        let cost = cand.estimated_cycles(cyc_per_num);
+        if best.as_ref().is_none_or(|(_, c)| cost < *c) {
+            best = Some((cand, cost));
+        }
     }
-    // Chunk into the largest banks.
-    let chunks = n.div_ceil(largest);
-    let candidate = Plan::ChunkMerge {
-        bank: largest,
-        chunks,
-        sentinels: chunks * largest - n,
-        fanout: geo.merge_fanout.max(2),
-    };
-    let _ = cyc_per_num; // single candidate today; hook for richer search
-    candidate
+    // Only the smallest fitting bank can be the best pad (cost and
+    // silicon both grow with the bank); scored with `<=` so a cost tie
+    // prefers the simplest hardware (one bank, no merge network).
+    if let Some(&bank) = geo.bank_sizes.iter().find(|&&b| b >= n) {
+        let cand = candidate(n, bank, fanout);
+        let cost = cand.estimated_cycles(cyc_per_num);
+        if best.as_ref().is_none_or(|(_, c)| cost <= *c) {
+            best = Some((cand, cost));
+        }
+    }
+    best.expect("geometry has banks").0
 }
 
 /// Execute a plan with a sorter factory (`make(bank_size)` builds the
 /// sorter for one bank). Returns the sorted values and aggregate stats;
 /// `stats.crs`/`cycles` follow the plan's latency semantics (parallel
 /// banks: max over chunks; merge passes added on top).
+///
+/// ## Sentinel accounting (vs the hierarchical pipeline)
+///
+/// This models *fixed-geometry hardware*: every chunk is padded to the
+/// full `bank` rows with `u32::MAX` sentinels, and the sentinel rows
+/// participate in (and are metered by) the traversal — exactly what a
+/// physical bank would do. `SortService::sort_hierarchical` instead
+/// sorts the short last chunk *unpadded* (its worker receives only the
+/// real elements), so its summed work stats carry no sentinel work.
+/// The two paths therefore agree on the sorted output but deliberately
+/// differ in summed work: `execute`'s iterations + drains equal
+/// `chunks · bank`, the hierarchical pipeline's equal `n`. Both
+/// behaviors are pinned by tests (`chunk_merge_meters_sentinel_work`
+/// here, `saturated_max_values_sort_exactly` in `hierarchical`).
 pub fn execute<S: InMemorySorter>(
     data: &[u32],
     p: &Plan,
@@ -160,17 +197,65 @@ mod tests {
     }
 
     #[test]
-    fn small_requests_pad_to_smallest_fit() {
+    fn smallest_fitting_bank_wins_when_chunking_cannot() {
+        // No bank is smaller than n=10, so the only candidates are pads;
+        // the smallest fitting bank costs least.
         assert_eq!(plan(10, &geo(), 8.0), Plan::Pad { bank: 16, sentinels: 6 });
         assert_eq!(plan(16, &geo(), 8.0), Plan::Pad { bank: 16, sentinels: 0 });
-        assert_eq!(plan(17, &geo(), 8.0), Plan::Pad { bank: 64, sentinels: 47 });
-        assert_eq!(plan(1024, &geo(), 8.0), Plan::Pad { bank: 1024, sentinels: 0 });
     }
 
     #[test]
-    fn large_requests_chunk() {
+    fn chunking_into_a_smaller_bank_beats_padding_up() {
+        // n=17 at 8 cyc/num: Pad{64} = 512 cycles, but two 16-row banks
+        // sort in parallel (128) plus one merge pass over 32 padded
+        // elements = 160 cycles. The planner must pick the cheap one.
+        let p = plan(17, &geo(), 8.0);
+        assert_eq!(p, Plan::ChunkMerge { bank: 16, chunks: 2, sentinels: 15, fanout: 4 });
+        assert!(
+            p.estimated_cycles(8.0) < Plan::Pad { bank: 64, sentinels: 47 }.estimated_cycles(8.0)
+        );
+    }
+
+    #[test]
+    fn smaller_bank_wins_past_the_largest_bank() {
+        // Regression for the dead cost hook: n=3000 at 8 cyc/num. The old
+        // planner always chunked into the largest bank (1024: 8192 sort +
+        // 3072 merge = 11264); 12 chunks of 256 cost 2048 + 6144 = 8192.
         let p = plan(3000, &geo(), 8.0);
+        assert_eq!(p, Plan::ChunkMerge { bank: 256, chunks: 12, sentinels: 72, fanout: 4 });
+        let largest = Plan::ChunkMerge { bank: 1024, chunks: 3, sentinels: 72, fanout: 4 };
+        assert!(p.estimated_cycles(8.0) < largest.estimated_cycles(8.0));
+    }
+
+    #[test]
+    fn cheap_traffic_prefers_the_largest_bank() {
+        // When the per-element sort cost is tiny, merge passes dominate
+        // and the largest bank (fewest chunks, fewest passes) wins.
+        let p = plan(3000, &geo(), 0.1);
         assert_eq!(p, Plan::ChunkMerge { bank: 1024, chunks: 3, sentinels: 72, fanout: 4 });
+    }
+
+    #[test]
+    fn zero_cost_traffic_still_pads_into_the_smallest_fit() {
+        // Degenerate cyc_per_num = 0: every pad candidate ties at zero
+        // cost; the tie-break must pick the smallest fitting bank, and
+        // padding (no merge network) must beat zero-sort-cost chunking.
+        assert_eq!(plan(10, &geo(), 0.0), Plan::Pad { bank: 16, sentinels: 6 });
+        assert_eq!(plan(17, &geo(), 0.0), Plan::Pad { bank: 64, sentinels: 47 });
+    }
+
+    #[test]
+    fn plan_always_picks_the_cheapest_candidate() {
+        // Exhaustive cross-check of plan() against brute-force scoring.
+        for n in [1usize, 10, 17, 100, 1000, 3000, 10_000] {
+            for cyc in [0.5, 2.0, 8.0, 32.0] {
+                let picked = plan(n, &geo(), cyc).estimated_cycles(cyc);
+                for &bank in &geo().bank_sizes {
+                    let cand = candidate(n, bank, 4).estimated_cycles(cyc);
+                    assert!(picked <= cand, "n={n} cyc={cyc} bank={bank}");
+                }
+            }
+        }
     }
 
     #[test]
@@ -214,15 +299,50 @@ mod tests {
         let n = 2048;
         let d = Dataset::generate32(DatasetKind::Uniform, n, 3);
         let p = plan(n, &geo(), 8.0);
+        let Plan::ChunkMerge { bank, chunks, fanout, .. } = p else {
+            panic!("2048 elements cannot pad into one bank: {p:?}");
+        };
         let (_, stats) = execute(&d.values, &p, |_| ColSkipSorter::with_k(2));
-        // Latency must be far below 2 sequential bank sorts (parallel
-        // banks) + merge: bounded by one worst bank (≤ 32*1024) + one
-        // merge pass over the stream (2 runs at fanout 4).
+        // Latency must be far below `chunks` sequential bank sorts
+        // (banks are parallel): bounded by one worst bank (≤ 32·bank)
+        // plus the merge passes over the padded stream.
         assert!(
-            stats.cycles() <= 32 * 1024 + model_merge_cycles(2048, 2, 4),
+            stats.cycles() <= 32 * bank as u64 + model_merge_cycles(bank * chunks, chunks, fanout),
             "{}",
             stats.cycles()
         );
+    }
+
+    #[test]
+    fn chunk_merge_meters_sentinel_work() {
+        // Fixed-geometry honesty: execute() pads every chunk to the full
+        // bank, so sentinel rows are metered — iterations + drains equal
+        // the padded `chunks · bank`, not n. (The hierarchical pipeline
+        // sorts the short chunk unpadded and reports exactly n; see
+        // `hierarchical::tests::saturated_max_values_sort_exactly`.)
+        use crate::sorter::InMemorySorter;
+        let n = 1025usize;
+        let d = Dataset::generate32(DatasetKind::MapReduce, n, 21);
+        let p = Plan::ChunkMerge { bank: 1024, chunks: 2, sentinels: 1023, fanout: 4 };
+        let (sorted, stats) = execute(&d.values, &p, |_| ColSkipSorter::with_k(2));
+        let mut expect = d.values.clone();
+        expect.sort_unstable();
+        assert_eq!(sorted, expect);
+        // Reference: sort the two padded chunks by hand. Every padded
+        // chunk emits the full bank (real rows + sentinels).
+        let mut manual = SortStats::default();
+        for span in partition(n, 1024) {
+            let mut chunk = d.values[span].to_vec();
+            chunk.resize(1024, u32::MAX);
+            manual.merge_from(&ColSkipSorter::with_k(2).sort_with_stats(&chunk).stats);
+        }
+        assert_eq!(manual.iterations + manual.drains, 2048, "sentinel rows are metered");
+        // execute() rewrites crs/drains into the latency view but keeps
+        // the itemized work fields — they must carry the sentinel work.
+        assert_eq!(stats.iterations, manual.iterations);
+        assert_eq!(stats.res, manual.res);
+        assert_eq!(stats.sls, manual.sls);
+        assert_eq!(stats.srs, manual.srs);
     }
 
     #[test]

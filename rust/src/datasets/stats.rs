@@ -24,7 +24,7 @@ pub struct WorkloadStats {
 /// Compute [`WorkloadStats`] for `values` at the given bit width.
 pub fn analyze(values: &[u32], width: u32) -> WorkloadStats {
     assert!(!values.is_empty());
-    assert!(width >= 1 && width <= 32);
+    assert!((1..=32).contains(&width));
     let n = values.len();
     let mut sorted = values.to_vec();
     sorted.sort_unstable();

@@ -77,8 +77,10 @@ impl Bank {
     /// Load `values` into a fresh bank (programs every cell once).
     pub fn load(values: &[u32], width: u32) -> Self {
         let planes = BitPlanes::new(values, width);
-        let mut meter = OpMeter::default();
-        meter.cell_writes = values.len() as u64 * width as u64;
+        let meter = OpMeter {
+            cell_writes: values.len() as u64 * width as u64,
+            ..OpMeter::default()
+        };
         Bank {
             config: BankConfig { rows: values.len(), width },
             planes,

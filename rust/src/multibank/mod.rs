@@ -74,7 +74,7 @@ pub struct MultiBankSorter {
 impl MultiBankSorter {
     pub fn new(config: MultiBankConfig) -> Self {
         assert!(config.banks >= 1);
-        assert!(config.width >= 1 && config.width <= 32);
+        assert!((1..=32).contains(&config.width));
         MultiBankSorter { config }
     }
 

@@ -303,7 +303,7 @@ pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
         cells
             .iter()
             .zip(widths)
-            .map(|(c, w)| format!("{c:>w$}", w = w))
+            .map(|(c, &w)| format!("{c:>w$}"))
             .collect::<Vec<_>>()
             .join("  ")
     };

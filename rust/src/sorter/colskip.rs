@@ -64,7 +64,7 @@ pub struct ColSkipSorter {
 
 impl ColSkipSorter {
     pub fn new(config: ColSkipConfig) -> Self {
-        assert!(config.width >= 1 && config.width <= 32);
+        assert!((1..=32).contains(&config.width));
         ColSkipSorter { config }
     }
 

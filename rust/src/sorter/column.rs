@@ -23,7 +23,7 @@ pub struct ColumnProcessor {
 
 impl ColumnProcessor {
     pub fn new(width: u32, skip_leading: bool) -> Self {
-        assert!(width >= 1 && width <= 32);
+        assert!((1..=32).contains(&width));
         ColumnProcessor { width, lead: None, skip_leading }
     }
 
@@ -42,7 +42,7 @@ impl ColumnProcessor {
     /// Observe the first informative column of a full traversal; the lead
     /// register latches it (it is non-increasing over the sort).
     pub fn observe_first_informative(&mut self, col: u32) {
-        debug_assert!(self.lead.map_or(true, |l| col <= l));
+        debug_assert!(self.lead.is_none_or(|l| col <= l));
         self.lead = Some(col);
     }
 
