@@ -13,7 +13,7 @@ fn main() -> Result<()> {
     let d = Dataset::generate32(DatasetKind::MapReduce, n, 42);
 
     let svc = SortService::start(ServiceConfig { workers: 4, ..Default::default() })?;
-    let cfg = HierarchicalConfig { capacity: 1024, fanout: 4 };
+    let cfg = HierarchicalConfig::fixed(1024, 4);
 
     let t0 = std::time::Instant::now();
     let out = svc.sort_hierarchical(&d.values, &cfg)?;
@@ -34,10 +34,16 @@ fn main() -> Result<()> {
         out.merge.passes, out.merge.comparisons, out.merge.cycles, out.merge.fanout
     );
     println!(
-        "  latency (model) : {} cycles = {:.2} cyc/num ({:.1}% in merge)",
+        "  latency (model) : {} cycles = {:.2} cyc/num ({:.1}% exposed merge)",
         out.latency_cycles,
         out.latency_cycles as f64 / n as f64,
         out.merge_fraction() * 100.0
+    );
+    println!(
+        "  overlap         : streamed {} vs barrier {} cycles ({:.1}% hidden)",
+        out.streamed_latency_cycles,
+        out.barrier_latency_cycles,
+        out.overlap_saving() * 100.0
     );
     println!("  throughput      : {:.1} Mnum/s @500MHz", out.throughput() / 1e6);
     println!("  silicon (model) : {:.0} Kµm², {:.0} mW", out.area_kum2, out.power_mw);

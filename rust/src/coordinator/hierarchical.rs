@@ -13,16 +13,35 @@
 //! scaling in-memory sorters past array capacity (cf. arXiv:2012.09918,
 //! arXiv:2310.07903).
 //!
+//! ## Streaming vs barrier
+//!
+//! The PR-1 pipeline barriered: every chunk response was collected
+//! before the first merge cycle, so the merge latency sat entirely on
+//! the critical path. The pipeline now *streams* by default
+//! ([`HierarchicalConfig::streaming`]): a [`StreamingMerge`] frontier
+//! owns the fixed merge tree and reduces each group of runs the moment
+//! its last member arrives, so merge cycles overlap the chunk sorts
+//! still in flight — the near-memory manager behaviour the paper's
+//! multi-bank coordination implies, and the standard sort-then-stream
+//! overlap of scaled memristive sorting designs (arXiv:2012.09918,
+//! arXiv:2310.07903). Both modes produce byte-identical output; only
+//! the schedule (and therefore the latency model) differs.
+//!
 //! ## Accounting
 //!
-//! Two views are reported and must not be conflated:
+//! Three views are reported and must not be conflated:
 //!
 //! * **Work** — `output.stats` is the *sum* of the per-chunk simulator
 //!   stats (every CR/RE/SR/SL/drain issued anywhere). The integration
 //!   tests pin `output.stats == Σ chunk_stats`.
-//! * **Latency** — `latency_cycles` is the critical path: chunks sort in
+//! * **Barrier latency** — `barrier_latency_cycles`: chunks sort in
 //!   parallel banks (max over chunks), then the merge network streams
 //!   the whole dataset once per merge pass.
+//! * **Streamed latency** — `streamed_latency_cycles`: the
+//!   deterministic overlap schedule of
+//!   [`crate::sorter::merge::model_streamed_completion`] over the
+//!   actual per-chunk arrival cycles; never above the barrier number,
+//!   never below the slowest chunk.
 //!
 //! Cost totals (area/power) come from the calibrated model's
 //! [`crate::cost::SorterArch::Hierarchical`] arch, using the service's
@@ -30,26 +49,68 @@
 
 use anyhow::{anyhow, Result};
 
-use super::planner::partition;
+use super::planner::{auto_tune, partition};
 use super::{SortResponse, SortService};
 use crate::cost::{Activity, CostModel, SorterArch};
-use crate::sorter::merge::merge_runs;
+use crate::sorter::merge::{merge_runs, model_streamed_completion, StreamingMerge};
 use crate::sorter::{SortOutput, SortStats};
+
+/// How the partitioner picks the bank capacity (rows per chunk).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Capacity {
+    /// Auto-tune: enumerate `(bank, fanout)` candidates over the
+    /// service's [`super::planner::Geometry`] and pick the cheapest
+    /// under the latency model ([`super::planner::auto_tune`]), fed by
+    /// the per-size-class cycles/number the service has observed
+    /// (falling back to the paper's nominal
+    /// [`crate::params::NOMINAL_COLSKIP_CYC_PER_NUM`] before any
+    /// traffic).
+    Auto,
+    /// Use exactly this many rows per chunk.
+    Fixed(usize),
+}
 
 /// Configuration of one hierarchical sort. Engine parameters (width, k,
 /// sub-banks per chunk) come from the [`super::ServiceConfig`] the
 /// service was started with.
 #[derive(Clone, Debug)]
 pub struct HierarchicalConfig {
-    /// Bank capacity: rows per chunk (the hardware's array length).
-    pub capacity: usize,
+    /// Bank capacity: rows per chunk (the hardware's array length),
+    /// fixed or auto-tuned.
+    pub capacity: Capacity,
     /// Fanout of the merge network combining the sorted runs.
+    /// [`Capacity::Auto`] may pick a different fanout when the model
+    /// scores it cheaper.
     pub fanout: usize,
+    /// Stream the merge (overlap chunk sorting with merge passes —
+    /// the default) instead of barriering on every chunk response
+    /// before the first merge cycle. Both modes produce byte-identical
+    /// output; they differ in the latency model and in when the host
+    /// does the merge work.
+    pub streaming: bool,
+}
+
+impl HierarchicalConfig {
+    /// Streaming pipeline at a fixed bank capacity.
+    pub fn fixed(capacity: usize, fanout: usize) -> Self {
+        HierarchicalConfig { capacity: Capacity::Fixed(capacity), fanout, streaming: true }
+    }
+
+    /// The PR-1 barrier pipeline at a fixed bank capacity: collect all
+    /// chunk responses, then merge.
+    pub fn barrier(capacity: usize, fanout: usize) -> Self {
+        HierarchicalConfig { capacity: Capacity::Fixed(capacity), fanout, streaming: false }
+    }
+
+    /// Streaming pipeline with auto-tuned chunking.
+    pub fn auto() -> Self {
+        HierarchicalConfig { capacity: Capacity::Auto, fanout: 4, streaming: true }
+    }
 }
 
 impl Default for HierarchicalConfig {
     fn default() -> Self {
-        HierarchicalConfig { capacity: crate::params::DEFAULT_N, fanout: 4 }
+        Self::fixed(crate::params::DEFAULT_N, 4)
     }
 }
 
@@ -74,12 +135,24 @@ pub struct HierarchicalOutput {
     pub output: SortOutput,
     /// Per-chunk simulator stats, in chunk order.
     pub chunk_stats: Vec<SortStats>,
-    /// Bank capacity the partitioner used.
+    /// Bank capacity the partitioner used (resolved, for `Auto`).
     pub capacity: usize,
     /// Merge-stage accounting.
     pub merge: MergeMetrics,
-    /// Critical-path latency: max chunk cycles + merge cycles.
+    /// Whether this sort ran the streaming pipeline.
+    pub streaming: bool,
+    /// Critical-path latency of the mode that ran: the streamed
+    /// completion under streaming, `max_chunk + merge` under barrier.
     pub latency_cycles: u64,
+    /// Barrier-model latency (`max_chunk_cycles + merge.cycles`),
+    /// reported in both modes for comparison.
+    pub barrier_latency_cycles: u64,
+    /// Overlap-model latency ([`model_streamed_completion`] over the
+    /// chunk arrivals), reported in both modes for comparison. Never
+    /// exceeds `barrier_latency_cycles`.
+    pub streamed_latency_cycles: u64,
+    /// Cycles of the slowest chunk sort (parallel banks).
+    pub max_chunk_cycles: u64,
     /// Calibrated silicon area of the modelled hardware (Kµm²).
     pub area_kum2: f64,
     /// Calibrated power under the measured switching activity (mW).
@@ -106,12 +179,25 @@ impl HierarchicalOutput {
         }
     }
 
-    /// Fraction of the critical path spent in the merge network.
+    /// Fraction of the critical path *not* hidden behind chunk sorting
+    /// — the exposed merge share. Under the barrier model this is
+    /// exactly `merge.cycles / latency_cycles`; under streaming it is
+    /// the merge tail the overlap failed to hide.
     pub fn merge_fraction(&self) -> f64 {
         if self.latency_cycles == 0 {
             0.0
         } else {
-            self.merge.cycles as f64 / self.latency_cycles as f64
+            (self.latency_cycles - self.max_chunk_cycles) as f64 / self.latency_cycles as f64
+        }
+    }
+
+    /// Cycles the streaming frontier hides relative to the barrier
+    /// model, as a fraction of the barrier latency.
+    pub fn overlap_saving(&self) -> f64 {
+        if self.barrier_latency_cycles == 0 {
+            0.0
+        } else {
+            1.0 - self.streamed_latency_cycles as f64 / self.barrier_latency_cycles as f64
         }
     }
 }
@@ -126,29 +212,37 @@ impl SortService {
         data: &[u32],
         cfg: &HierarchicalConfig,
     ) -> Result<HierarchicalOutput> {
-        assert!(cfg.capacity >= 1, "bank capacity must be positive");
         assert!(cfg.fanout >= 2, "merge fanout must be at least 2");
         let n = data.len();
-        let spans = partition(n, cfg.capacity);
+        let (capacity, fanout) = self.resolve_chunking(n, cfg);
+        assert!(capacity >= 1, "bank capacity must be positive");
+        let spans = partition(n, capacity);
         let chunks = spans.len();
 
-        // Fan the chunks out to the worker pool (parallel banks), then
-        // collect in chunk order.
+        // Fan the chunks out to the worker pool (parallel banks).
         let rxs: Vec<_> = spans
             .iter()
             .map(|s| self.submit(data[s.clone()].to_vec()))
-            .collect::<Result<_>>()?;
-        let resps: Vec<SortResponse> = rxs
-            .into_iter()
-            .map(|rx| rx.recv().map_err(|_| anyhow!("worker dropped a chunk response"))?)
             .collect::<Result<_>>()?;
 
         let mut chunk_stats = Vec::with_capacity(chunks);
         let mut total = SortStats::default();
         let mut max_chunk_cycles = 0u64;
         let mut have_order = true;
-        let mut runs: Vec<Vec<(u32, usize)>> = Vec::with_capacity(chunks);
-        for (span, resp) in spans.iter().zip(&resps) {
+        let mut arrivals: Vec<(u64, usize)> = Vec::with_capacity(chunks);
+        // Streaming mode feeds the merge frontier as responses are
+        // collected (in chunk-index order — std mpsc has no select, so
+        // a slow early chunk delays later, already-finished ones), so
+        // host merge work overlaps the chunk sorts still queued behind
+        // it; barrier mode (PR 1) parks every run and merges after all
+        // of them. The *modelled* latency is unaffected either way: it
+        // is computed from the recorded per-chunk arrival cycles, not
+        // from host timing.
+        let mut frontier = StreamingMerge::new(if cfg.streaming { chunks } else { 0 }, fanout);
+        let mut parked: Vec<Vec<(u32, usize)>> = Vec::new();
+        for (i, (span, rx)) in spans.iter().zip(rxs).enumerate() {
+            let resp: SortResponse =
+                rx.recv().map_err(|_| anyhow!("worker dropped a chunk response"))??;
             if resp.sorted.len() != span.len() {
                 return Err(anyhow!(
                     "chunk [{}, {}) returned {} elements",
@@ -158,49 +252,63 @@ impl SortService {
                 ));
             }
             max_chunk_cycles = max_chunk_cycles.max(resp.stats.cycles());
+            arrivals.push((resp.stats.cycles(), span.len()));
             total.merge_from(&resp.stats);
             chunk_stats.push(resp.stats.clone());
             // Rebase chunk-local argsort rows to global indices. A
             // backend without row provenance (pure PJRT) degrades the
             // global order to empty rather than inventing one.
-            if resp.order.len() == resp.sorted.len() {
-                runs.push(
-                    resp.sorted
-                        .iter()
-                        .zip(&resp.order)
-                        .map(|(&v, &r)| (v, span.start + r))
-                        .collect(),
-                );
+            let run: Vec<(u32, usize)> = if resp.order.len() == resp.sorted.len() {
+                resp.sorted
+                    .iter()
+                    .zip(&resp.order)
+                    .map(|(&v, &r)| (v, span.start + r))
+                    .collect()
             } else {
                 have_order = false;
-                runs.push(resp.sorted.iter().map(|&v| (v, 0)).collect());
+                resp.sorted.iter().map(|&v| (v, 0)).collect()
+            };
+            if cfg.streaming {
+                frontier.push(i, run, resp.stats.cycles());
+            } else {
+                parked.push(run);
             }
         }
 
-        let merge = merge_runs(runs, cfg.fanout);
-        debug_assert_eq!(merge.merged.len(), n);
-        let sorted = merge.values();
-        let order = if have_order { merge.order() } else { Vec::new() };
+        // Merge-stage result: identical output either way (same tree,
+        // same tie-breaking); only the schedule differs.
+        let (merged, comparisons, passes, merge_cycles, streamed_latency_cycles) =
+            if cfg.streaming {
+                let s = frontier.finish();
+                (s.merged, s.comparisons, s.passes, s.cycles, s.completion_cycles)
+            } else {
+                let m = merge_runs(parked, fanout);
+                let streamed = model_streamed_completion(&arrivals, fanout);
+                (m.merged, m.comparisons, m.passes, m.cycles, streamed)
+            };
+        debug_assert_eq!(merged.len(), n);
+        let sorted: Vec<u32> = merged.iter().map(|&(v, _)| v).collect();
+        let order: Vec<usize> =
+            if have_order { merged.iter().map(|&(_, r)| r).collect() } else { Vec::new() };
 
-        let latency_cycles = max_chunk_cycles + merge.cycles;
-        let metrics = MergeMetrics {
-            comparisons: merge.comparisons,
-            passes: merge.passes,
-            cycles: merge.cycles,
-            fanout: cfg.fanout,
-        };
+        let barrier_latency_cycles = max_chunk_cycles + merge_cycles;
+        debug_assert!(streamed_latency_cycles <= barrier_latency_cycles);
+        debug_assert!(streamed_latency_cycles >= max_chunk_cycles);
+        let latency_cycles =
+            if cfg.streaming { streamed_latency_cycles } else { barrier_latency_cycles };
+        let metrics = MergeMetrics { comparisons, passes, cycles: merge_cycles, fanout };
         self.metrics.record_hierarchical(n, chunks, metrics.cycles, metrics.comparisons);
 
         // Cost totals for the modelled hardware ensemble, under the
         // activity the chunks actually exhibited.
         let svc = self.config();
         let arch = SorterArch::Hierarchical {
-            bank_n: cfg.capacity,
+            bank_n: capacity,
             w: svc.colskip.width,
             k: svc.colskip.k,
             chunks: chunks.max(1),
             banks_per_chunk: svc.banks,
-            fanout: cfg.fanout,
+            fanout,
         };
         let model = CostModel::calibrated();
         let act = if total.cycles() > 0 {
@@ -212,12 +320,32 @@ impl SortService {
         Ok(HierarchicalOutput {
             output: SortOutput { sorted, order, stats: total },
             chunk_stats,
-            capacity: cfg.capacity,
+            capacity,
             merge: metrics,
+            streaming: cfg.streaming,
             latency_cycles,
+            barrier_latency_cycles,
+            streamed_latency_cycles,
+            max_chunk_cycles,
             area_kum2: model.area_kum2(arch),
             power_mw: model.power_mw(arch, act),
         })
+    }
+
+    /// Resolve the `(bank capacity, merge fanout)` a hierarchical sort
+    /// will use: fixed from the config, or auto-tuned over the service
+    /// geometry with the per-size-class cycles/number observed on
+    /// served traffic ([`super::planner::auto_tune`]).
+    pub fn resolve_chunking(&self, n: usize, cfg: &HierarchicalConfig) -> (usize, usize) {
+        match cfg.capacity {
+            Capacity::Fixed(c) => (c, cfg.fanout),
+            Capacity::Auto => {
+                let snap = self.metrics.snapshot();
+                auto_tune(n, &self.config().geometry, cfg.streaming, |bank| {
+                    snap.cyc_per_num_for(bank, crate::params::NOMINAL_COLSKIP_CYC_PER_NUM)
+                })
+            }
+        }
     }
 }
 
@@ -235,7 +363,7 @@ mod tests {
     #[test]
     fn sorts_past_bank_capacity() {
         let svc = service(4);
-        let cfg = HierarchicalConfig { capacity: 256, fanout: 4 };
+        let cfg = HierarchicalConfig::fixed(256, 4);
         for n in [1usize, 255, 256, 257, 1000, 5000] {
             let d = Dataset::generate32(DatasetKind::MapReduce, n, 13);
             let out = svc.sort_hierarchical(&d.values, &cfg).unwrap();
@@ -255,7 +383,7 @@ mod tests {
     #[test]
     fn work_is_sum_latency_is_critical_path() {
         let svc = service(2);
-        let cfg = HierarchicalConfig { capacity: 128, fanout: 2 };
+        let cfg = HierarchicalConfig::barrier(128, 2);
         let d = Dataset::generate32(DatasetKind::Clustered, 1000, 3);
         let out = svc.sort_hierarchical(&d.values, &cfg).unwrap();
         let mut summed = SortStats::default();
@@ -265,11 +393,71 @@ mod tests {
             max_cycles = max_cycles.max(s.cycles());
         }
         assert_eq!(out.output.stats, summed, "stats must be the summed chunk work");
+        assert!(!out.streaming);
         assert_eq!(out.latency_cycles, max_cycles + out.merge.cycles);
+        assert_eq!(out.latency_cycles, out.barrier_latency_cycles);
+        assert_eq!(out.max_chunk_cycles, max_cycles);
         assert_eq!(out.merge.cycles, model_merge_cycles(1000, 8, 2));
         assert_eq!(out.merge.passes, model_merge_passes(8, 2));
         assert!(out.merge.comparisons > 0);
         assert!(out.merge_fraction() > 0.0 && out.merge_fraction() < 1.0);
+        // The overlap model is reported alongside and can only help.
+        assert!(out.streamed_latency_cycles <= out.barrier_latency_cycles);
+        assert!(out.streamed_latency_cycles >= out.max_chunk_cycles);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn streamed_output_is_byte_identical_to_barrier() {
+        let svc = service(3);
+        for kind in DatasetKind::ALL {
+            let d = Dataset::generate32(kind, 1500, 7);
+            for (capacity, fanout) in [(64usize, 2usize), (256, 4), (2048, 4)] {
+                let s = svc
+                    .sort_hierarchical(&d.values, &HierarchicalConfig::fixed(capacity, fanout))
+                    .unwrap();
+                let b = svc
+                    .sort_hierarchical(&d.values, &HierarchicalConfig::barrier(capacity, fanout))
+                    .unwrap();
+                assert!(s.streaming && !b.streaming);
+                assert_eq!(s.output.sorted, b.output.sorted, "{kind:?} cap={capacity}");
+                assert_eq!(s.output.order, b.output.order, "{kind:?} cap={capacity}");
+                assert_eq!(s.output.stats, b.output.stats, "{kind:?} cap={capacity}");
+                assert_eq!(s.chunk_stats, b.chunk_stats, "{kind:?} cap={capacity}");
+                assert_eq!(s.merge.comparisons, b.merge.comparisons);
+                assert_eq!(s.merge.passes, b.merge.passes);
+                assert_eq!(s.merge.cycles, b.merge.cycles);
+                // Same model numbers on both sides; streaming's critical
+                // path is the overlapped one and never loses.
+                assert_eq!(s.barrier_latency_cycles, b.barrier_latency_cycles);
+                assert_eq!(s.streamed_latency_cycles, b.streamed_latency_cycles);
+                assert_eq!(s.latency_cycles, s.streamed_latency_cycles);
+                assert_eq!(b.latency_cycles, b.barrier_latency_cycles);
+                assert!(s.latency_cycles <= b.latency_cycles, "{kind:?} cap={capacity}");
+            }
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn streaming_hides_merge_cycles_on_uneven_chunks() {
+        // The last chunk of 1000 % 128 = 104 rows finishes well before
+        // the full 128-row chunks, and chunk cycle counts vary with the
+        // data — the frontier merges early groups inside that slack, so
+        // the streamed critical path must beat the barrier by a
+        // non-trivial margin on a multi-pass merge.
+        let svc = service(2);
+        let d = Dataset::generate32(DatasetKind::MapReduce, 1000, 3);
+        let out = svc.sort_hierarchical(&d.values, &HierarchicalConfig::fixed(128, 2)).unwrap();
+        assert!(out.streaming);
+        assert!(
+            out.streamed_latency_cycles < out.barrier_latency_cycles,
+            "{} vs {}",
+            out.streamed_latency_cycles,
+            out.barrier_latency_cycles
+        );
+        assert!(out.overlap_saving() > 0.0);
+        assert!(out.merge_fraction() < 1.0);
         svc.shutdown();
     }
 
@@ -289,7 +477,7 @@ mod tests {
     #[test]
     fn service_metrics_see_the_pipeline() {
         let svc = service(2);
-        let cfg = HierarchicalConfig { capacity: 64, fanout: 4 };
+        let cfg = HierarchicalConfig::fixed(64, 4);
         let d = Dataset::generate32(DatasetKind::Uniform, 300, 5);
         svc.sort_hierarchical(&d.values, &cfg).unwrap();
         let m = svc.metrics();
@@ -312,7 +500,7 @@ mod tests {
         // the short last chunk unpadded: the output, the argsort and
         // the summed work stats cover exactly the n real rows.
         let svc = service(2);
-        let cfg = HierarchicalConfig { capacity: 64, fanout: 4 };
+        let cfg = HierarchicalConfig::fixed(64, 4);
         let mut data = vec![u32::MAX; 150];
         for (i, v) in data.iter_mut().enumerate() {
             if i % 3 == 0 {
@@ -343,18 +531,95 @@ mod tests {
     }
 
     #[test]
+    fn auto_capacity_matches_planner_and_beats_the_largest_bank() {
+        use crate::coordinator::planner::{auto_tune, candidate};
+        use crate::params::NOMINAL_COLSKIP_CYC_PER_NUM;
+
+        let svc = service(2);
+        let geo = svc.config().geometry.clone();
+        let n = 3000usize;
+        let d = Dataset::generate32(DatasetKind::MapReduce, n, 9);
+        for streaming in [true, false] {
+            let cfg = HierarchicalConfig { capacity: Capacity::Auto, fanout: 4, streaming };
+            // A fresh service has served no traffic, so the tuner runs
+            // on the nominal cycles/number — fully deterministic.
+            let fresh = service(2);
+            let (bank, fanout) = fresh.resolve_chunking(n, &cfg);
+            let expect = auto_tune(n, &geo, streaming, |_| NOMINAL_COLSKIP_CYC_PER_NUM);
+            assert_eq!((bank, fanout), expect, "streaming={streaming}");
+            let out = fresh.sort_hierarchical(&d.values, &cfg).unwrap();
+            assert_eq!(out.capacity, bank);
+            assert_eq!(out.merge.fanout, fanout);
+            let mut check = d.values.clone();
+            check.sort_unstable();
+            assert_eq!(out.output.sorted, check);
+            // Regression: the largest bank must NOT win here — finer
+            // chunking sorts in parallel and the merge passes are
+            // cheaper than the saved in-bank cycles.
+            let largest = *geo.bank_sizes.last().unwrap();
+            assert_ne!(bank, largest, "streaming={streaming}");
+            // And the pick really is the cheapest candidate under the
+            // scoring model the mode uses.
+            let score = |b: usize, f: usize| {
+                let c = candidate(n, b, f);
+                if streaming {
+                    c.estimated_cycles_overlap(NOMINAL_COLSKIP_CYC_PER_NUM)
+                } else {
+                    c.estimated_cycles(NOMINAL_COLSKIP_CYC_PER_NUM)
+                }
+            };
+            let picked = score(bank, fanout);
+            for &b in &geo.bank_sizes {
+                for f in [2usize, 4, 8, 16] {
+                    assert!(
+                        picked <= score(b, f),
+                        "streaming={streaming}: ({bank},{fanout}) lost to ({b},{f})"
+                    );
+                }
+            }
+            fresh.shutdown();
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn auto_capacity_uses_observed_traffic_class_costs() {
+        // After serving traffic, the tuner must read the observed
+        // per-class cycles/number instead of the nominal constant.
+        let svc = service(2);
+        let d = Dataset::generate32(DatasetKind::Uniform, 256, 4);
+        svc.submit_wait(d.values.clone()).unwrap();
+        let snap = svc.metrics();
+        let observed = snap.cyc_per_num_for(256, crate::params::NOMINAL_COLSKIP_CYC_PER_NUM);
+        assert!(observed > 0.0);
+        // Uniform data is far more expensive than the nominal MapReduce
+        // 7.84 — the class observation must differ from the fallback.
+        assert!(
+            (observed - crate::params::NOMINAL_COLSKIP_CYC_PER_NUM).abs() > 1.0,
+            "{observed}"
+        );
+        let cfg = HierarchicalConfig { capacity: Capacity::Auto, fanout: 4, streaming: true };
+        let (bank, fanout) = svc.resolve_chunking(3000, &cfg);
+        let expect = crate::coordinator::planner::auto_tune(
+            3000,
+            &svc.config().geometry,
+            true,
+            |b| snap.cyc_per_num_for(b, crate::params::NOMINAL_COLSKIP_CYC_PER_NUM),
+        );
+        assert_eq!((bank, fanout), expect);
+        svc.shutdown();
+    }
+
+    #[test]
     fn finer_chunking_is_cheaper_silicon() {
         // Fig. 8(b) carried to the chunk dimension: the row processor
         // scales as Ns·log2(Ns), so 16 banks of 256 rows undercut 2 banks
         // of 2048 rows even with the larger merge tree.
         let svc = service(2);
         let d = Dataset::generate32(DatasetKind::MapReduce, 4096, 9);
-        let coarse = svc
-            .sort_hierarchical(&d.values, &HierarchicalConfig { capacity: 2048, fanout: 4 })
-            .unwrap();
-        let fine = svc
-            .sort_hierarchical(&d.values, &HierarchicalConfig { capacity: 256, fanout: 4 })
-            .unwrap();
+        let coarse =
+            svc.sort_hierarchical(&d.values, &HierarchicalConfig::fixed(2048, 4)).unwrap();
+        let fine = svc.sort_hierarchical(&d.values, &HierarchicalConfig::fixed(256, 4)).unwrap();
         assert!(fine.area_kum2 < coarse.area_kum2, "{} vs {}", fine.area_kum2, coarse.area_kum2);
         assert!(fine.power_mw < coarse.power_mw, "{} vs {}", fine.power_mw, coarse.power_mw);
         assert!(fine.area_kum2 > 0.0 && fine.power_mw > 0.0);

@@ -9,6 +9,17 @@ use crate::sorter::SortStats;
 
 const RESERVOIR_CAP: usize = 4096;
 
+/// Log2 size-class buckets for per-class cycle accounting: class `i`
+/// aggregates requests with `floor(log2(n)) == i` (n = 0 and n = 1
+/// share class 0). Bank-sized chunk requests land in the class of
+/// their bank, which is what the chunk-size auto-tuner reads.
+const SIZE_CLASSES: usize = 64;
+
+/// The size class a request of `n` elements belongs to.
+fn size_class(n: usize) -> usize {
+    (n.max(1).ilog2() as usize).min(SIZE_CLASSES - 1)
+}
+
 /// Aggregated service metrics.
 pub struct ServiceMetrics {
     completed: AtomicU64,
@@ -21,6 +32,9 @@ pub struct ServiceMetrics {
     hier_chunks: AtomicU64,
     merge_cycles: AtomicU64,
     merge_comparisons: AtomicU64,
+    /// Per-size-class simulated cycles / elements (see [`size_class`]).
+    class_cycles: Vec<AtomicU64>,
+    class_elements: Vec<AtomicU64>,
     latencies_us: Mutex<Vec<u64>>,
 }
 
@@ -50,6 +64,28 @@ pub struct Snapshot {
     /// Mean simulated cycles per element (the paper's speed metric,
     /// aggregated over served traffic).
     pub cycles_per_number: f64,
+    /// Mean simulated cycles per element, split by log2 request-size
+    /// class (0.0 for classes with no traffic). Indexed by
+    /// `floor(log2(n))`; feeds the chunk-size auto-tuner.
+    pub class_cyc_per_num: Vec<f64>,
+}
+
+impl Snapshot {
+    /// Observed cycles/number for requests in `n`'s size class,
+    /// falling back to the global average over all served traffic,
+    /// then to `fallback` (e.g. the paper's nominal
+    /// [`crate::params::NOMINAL_COLSKIP_CYC_PER_NUM`]) when the
+    /// service has seen nothing yet.
+    pub fn cyc_per_num_for(&self, n: usize, fallback: f64) -> f64 {
+        let class = self.class_cyc_per_num[size_class(n)];
+        if class > 0.0 {
+            class
+        } else if self.cycles_per_number > 0.0 {
+            self.cycles_per_number
+        } else {
+            fallback
+        }
+    }
 }
 
 impl ServiceMetrics {
@@ -65,6 +101,8 @@ impl ServiceMetrics {
             hier_chunks: AtomicU64::new(0),
             merge_cycles: AtomicU64::new(0),
             merge_comparisons: AtomicU64::new(0),
+            class_cycles: (0..SIZE_CLASSES).map(|_| AtomicU64::new(0)).collect(),
+            class_elements: (0..SIZE_CLASSES).map(|_| AtomicU64::new(0)).collect(),
             latencies_us: Mutex::new(Vec::with_capacity(RESERVOIR_CAP)),
         }
     }
@@ -75,6 +113,9 @@ impl ServiceMetrics {
         self.elements.fetch_add(n as u64, Ordering::Relaxed);
         self.sim_cycles.fetch_add(stats.cycles(), Ordering::Relaxed);
         self.sim_crs.fetch_add(stats.crs, Ordering::Relaxed);
+        let class = size_class(n);
+        self.class_cycles[class].fetch_add(stats.cycles(), Ordering::Relaxed);
+        self.class_elements[class].fetch_add(n as u64, Ordering::Relaxed);
         let mut lat = self.latencies_us.lock().expect("metrics poisoned");
         if lat.len() < RESERVOIR_CAP {
             lat.push(latency_us);
@@ -137,6 +178,15 @@ impl ServiceMetrics {
             } else {
                 cycles as f64 / elements as f64
             },
+            class_cyc_per_num: self
+                .class_cycles
+                .iter()
+                .zip(&self.class_elements)
+                .map(|(c, e)| {
+                    let e = e.load(Ordering::Relaxed);
+                    if e == 0 { 0.0 } else { c.load(Ordering::Relaxed) as f64 / e as f64 }
+                })
+                .collect(),
         }
     }
 }
@@ -198,6 +248,29 @@ mod tests {
         assert_eq!(s.hier_chunks, 7);
         assert_eq!(s.merge_cycles, 12_000);
         assert_eq!(s.merge_comparisons, 80_000);
+    }
+
+    #[test]
+    fn per_class_costs_are_tracked_separately() {
+        let m = ServiceMetrics::new();
+        // 256-element requests at 8 cyc/num; 1024-element at 30 cyc/num.
+        m.record(1, &stats(2048), 256);
+        m.record(1, &stats(2048), 256);
+        m.record(1, &stats(30_720), 1024);
+        let s = m.snapshot();
+        assert!((s.cyc_per_num_for(256, 7.84) - 8.0).abs() < 1e-12);
+        assert!((s.cyc_per_num_for(300, 7.84) - 8.0).abs() < 1e-12, "same log2 class");
+        assert!((s.cyc_per_num_for(1024, 7.84) - 30.0).abs() < 1e-12);
+        // Unseen class falls back to the global average, not 7.84.
+        let global = (2048.0 + 2048.0 + 30_720.0) / (256.0 + 256.0 + 1024.0);
+        assert!((s.cyc_per_num_for(16, 7.84) - global).abs() < 1e-12);
+        // Empty service falls back to the nominal constant.
+        let empty = ServiceMetrics::new().snapshot();
+        assert!((empty.cyc_per_num_for(256, 7.84) - 7.84).abs() < 1e-12);
+        // Degenerate n.
+        assert_eq!(size_class(0), 0);
+        assert_eq!(size_class(1), 0);
+        assert_eq!(size_class(usize::MAX), SIZE_CLASSES - 1);
     }
 
     #[test]

@@ -84,6 +84,9 @@ pub struct ServiceConfig {
     pub artifacts_dir: std::path::PathBuf,
     /// Bounded queue depth (backpressure): `submit` blocks beyond this.
     pub queue_depth: usize,
+    /// Bank geometry the chunk-size auto-tuner plans against
+    /// ([`hierarchical::Capacity::Auto`]).
+    pub geometry: planner::Geometry,
 }
 
 impl Default for ServiceConfig {
@@ -95,6 +98,7 @@ impl Default for ServiceConfig {
             engine: EngineKind::Native,
             artifacts_dir: PjrtEngine::default_dir(),
             queue_depth: 256,
+            geometry: planner::Geometry::default(),
         }
     }
 }

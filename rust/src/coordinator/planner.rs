@@ -22,7 +22,9 @@
 
 use std::ops::Range;
 
-use crate::sorter::merge::{merge_sorted_runs, model_merge_cycles};
+use crate::sorter::merge::{
+    merge_sorted_runs, model_merge_cycles, model_streamed_completion_uniform,
+};
 use crate::sorter::{InMemorySorter, SortStats};
 
 /// Fixed hardware geometry the planner targets.
@@ -76,6 +78,77 @@ impl Plan {
             }
         }
     }
+
+    /// Estimated latency under the *streaming* pipeline: chunk runs
+    /// arrive at `bank · cyc_per_num` (parallel banks, padded model)
+    /// and the merge engine starts the moment a group of runs exists
+    /// instead of barriering on every chunk. Uses the closed-form
+    /// uniform-arrival model
+    /// ([`model_streamed_completion_uniform`]), so scoring a candidate
+    /// is O(chunks) even at millions of elements. Pads have no merge
+    /// stage, so both models coincide there. Never exceeds
+    /// [`Plan::estimated_cycles`].
+    pub fn estimated_cycles_overlap(&self, cyc_per_num: f64) -> f64 {
+        match *self {
+            Plan::Pad { bank, .. } => bank as f64 * cyc_per_num,
+            Plan::ChunkMerge { bank, chunks, fanout, .. } => {
+                let arrival = (bank as f64 * cyc_per_num).round() as u64;
+                model_streamed_completion_uniform(chunks, bank, arrival, fanout) as f64
+            }
+        }
+    }
+}
+
+/// Merge fanouts the auto-tuner enumerates (a hardware fanout-f merge
+/// unit is an `f·log2 f` comparator tree; past 16 the silicon cost of a
+/// unit outgrows the pass savings on realistic chunk counts).
+pub const FANOUT_CANDIDATES: [usize; 4] = [2, 4, 8, 16];
+
+/// Auto-tune the hierarchical pipeline's chunking: enumerate every
+/// `(bank, fanout)` candidate over the geometry's bank sizes and
+/// [`FANOUT_CANDIDATES`], score each with the barrier or overlap
+/// latency model at the per-bank-class observed cost `cyc_for(bank)`,
+/// and return the cheapest `(bank, fanout)` pair. Ties prefer larger
+/// banks (fewer chunks, less merge silicon) and smaller fanouts.
+pub fn auto_tune(
+    n: usize,
+    geo: &Geometry,
+    streaming: bool,
+    mut cyc_for: impl FnMut(usize) -> f64,
+) -> (usize, usize) {
+    let fallback_fanout = geo.merge_fanout.max(2);
+    let largest = *geo.bank_sizes.last().expect("geometry has banks");
+    if n == 0 {
+        return (largest, fallback_fanout);
+    }
+    let mut fanouts: Vec<usize> = FANOUT_CANDIDATES.to_vec();
+    if !fanouts.contains(&fallback_fanout) {
+        fanouts.push(fallback_fanout);
+    }
+    let mut best: Option<(usize, usize, f64)> = None;
+    for &bank in geo.bank_sizes.iter().rev() {
+        let cyc = cyc_for(bank);
+        assert!(
+            cyc.is_finite() && cyc >= 0.0,
+            "cyc_for({bank}) must be finite and non-negative, got {cyc}"
+        );
+        for &fanout in &fanouts {
+            let cand = candidate(n, bank, fanout);
+            let cost = if streaming {
+                cand.estimated_cycles_overlap(cyc)
+            } else {
+                cand.estimated_cycles(cyc)
+            };
+            if best.is_none_or(|(.., c)| cost < c) {
+                best = Some((bank, fanout, cost));
+            }
+            if bank >= n {
+                break; // a pad has no merge stage: fanout is irrelevant
+            }
+        }
+    }
+    let (bank, fanout, _) = best.expect("geometry has banks");
+    (bank, fanout)
 }
 
 /// The candidate plan a request of length `n` gets on a bank of `bank`
@@ -352,6 +425,43 @@ mod tests {
         let p = plan(data.len(), &geo(), 8.0);
         let (sorted, _) = execute(&data, &p, |_| ColSkipSorter::with_k(2));
         assert_eq!(sorted, vec![5, u32::MAX, u32::MAX]);
+    }
+
+    #[test]
+    fn overlap_model_never_exceeds_barrier_model() {
+        for n in [100usize, 1025, 3000, 50_000] {
+            for bank in [16usize, 64, 256, 1024] {
+                for fanout in [2usize, 4, 16] {
+                    let c = candidate(n, bank, fanout);
+                    for cyc in [0.5, 7.84, 32.0] {
+                        // +0.5 covers the overlap model's integer
+                        // rounding of the arrival time.
+                        assert!(
+                            c.estimated_cycles_overlap(cyc) <= c.estimated_cycles(cyc) + 0.5,
+                            "n={n} bank={bank} fanout={fanout} cyc={cyc}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn auto_tune_picks_the_cheapest_bank_fanout_pair() {
+        let geo = Geometry::default();
+        // At the nominal 7.84 cyc/num, 12 chunks of 256 through one
+        // fanout-16 pass beat every other pair — including every plan
+        // on the largest bank (the PR-1 behavior).
+        assert_eq!(auto_tune(3000, &geo, false, |_| 7.84), (256, 16));
+        assert_eq!(auto_tune(3000, &geo, true, |_| 7.84), (256, 16));
+        // Degenerate sizes.
+        assert_eq!(auto_tune(0, &geo, true, |_| 7.84), (1024, 4));
+        let (bank, _) = auto_tune(10, &geo, true, |_| 7.84);
+        assert_eq!(bank, 16, "smallest fitting pad wins for tiny requests");
+        // Per-class observed costs steer the pick: when small banks are
+        // expensive on this traffic class, the largest bank wins.
+        let (bank, _) = auto_tune(3000, &geo, false, |b| if b <= 256 { 1000.0 } else { 0.1 });
+        assert_eq!(bank, 1024);
     }
 
     #[test]

@@ -51,7 +51,7 @@ pub mod testing;
 /// Convenience re-exports for the common entry points.
 pub mod prelude {
     pub use crate::bits::{BitPlanes, RowMask};
-    pub use crate::coordinator::hierarchical::{HierarchicalConfig, HierarchicalOutput};
+    pub use crate::coordinator::hierarchical::{Capacity, HierarchicalConfig, HierarchicalOutput};
     pub use crate::coordinator::{ServiceConfig, SortService};
     pub use crate::cost::{CostModel, SorterArch};
     pub use crate::datasets::{Dataset, DatasetKind};
@@ -73,6 +73,10 @@ pub mod params {
     pub const DEFAULT_WIDTH: u32 = 32;
     /// Default array length used in the evaluation (§V).
     pub const DEFAULT_N: usize = 1024;
+    /// The paper's measured column-skipping speed on MapReduce traffic
+    /// at k=2 (§V.A): 7.84 cycles/number. Used as the cost fallback by
+    /// the chunk-size auto-tuner before any traffic is observed.
+    pub const NOMINAL_COLSKIP_CYC_PER_NUM: f64 = 7.84;
     /// RRAM high-resistance state (§V): 10 MΩ.
     pub const RRAM_HRS_OHM: f64 = 10.0e6;
     /// RRAM low-resistance state (§V): 100 kΩ.

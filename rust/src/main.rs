@@ -14,7 +14,7 @@
 use anyhow::{anyhow, bail, Result};
 
 use memsort::cli::Args;
-use memsort::coordinator::hierarchical::HierarchicalConfig;
+use memsort::coordinator::hierarchical::{Capacity, HierarchicalConfig};
 use memsort::coordinator::{EngineKind, ServiceConfig, SortService};
 use memsort::cost::{Activity, CostModel, SorterArch};
 use memsort::datasets::{stats::analyze, Dataset, DatasetKind};
@@ -72,12 +72,15 @@ fn usage() {
                    --width 32 --k 2 --banks 16 --seed 42\n\
                    (--n above --capacity, default 1024, runs the\n\
                     hierarchical pipeline: --n 1m --capacity 1024\n\
-                    --fanout 4 --workers 4; sizes accept k/m/g)\n\
+                    --fanout 4 --workers 4; sizes accept k/m/g;\n\
+                    --capacity auto picks the cheapest bank/fanout,\n\
+                    --barrier disables the streaming merge overlap)\n\
            gen     --dataset <kind> --n 1024 --seed 42\n\
            stats   --dataset <kind> --n 1024 --seed 42\n\
            fig     --id <6|7|8a|8b> [--trials 5] [--n 1024] [--json]\n\
            scale   --max 1m --capacity 1024 --fanout 4 [--json]\n\
-                   (hierarchical sweep: chunks, latency, merge share)\n\
+                   [--streaming] (hierarchical sweep: chunks, latency,\n\
+                   merge share, streamed-vs-barrier overlap saving)\n\
            report  [--trials 5] [--seed 42]\n\
            serve   --engine <native|pjrt|hybrid> --workers 4\n\
                    --requests 64 --n 1024 [--artifacts artifacts]\n\
@@ -118,15 +121,26 @@ fn cmd_sort(args: &Args) -> Result<()> {
     let k = args.parse_num("k", 2usize)?;
     let banks = args.parse_num("banks", 16usize)?;
     let name = args.get_or("sorter", "colskip");
-    let capacity = args.parse_size("capacity", memsort::params::DEFAULT_N)?;
-    // Datasets beyond one bank go hierarchical. A multibank ensemble has
+    // `--capacity auto` asks the service to pick the chunking itself.
+    let auto = matches!(args.get("capacity"), Some("auto"));
+    let capacity = if auto {
+        Capacity::Auto
+    } else {
+        Capacity::Fixed(args.parse_size("capacity", memsort::params::DEFAULT_N)?)
+    };
+    // Datasets beyond one bank go hierarchical (auto mode always does:
+    // resolving the capacity is the point). A multibank ensemble has
     // no fixed capacity of its own (it stripes whatever it is given), so
     // it is rerouted only when the user states the bank capacity
     // explicitly — `--sorter multibank --n 4096` alone keeps sorting one
     // 4096-row ensemble as before.
+    let exceeds = match capacity {
+        Capacity::Auto => true,
+        Capacity::Fixed(c) => d.values.len() > c,
+    };
     let hier = match name {
-        "colskip" => d.values.len() > capacity,
-        "multibank" => args.get("capacity").is_some() && d.values.len() > capacity,
+        "colskip" => exceeds,
+        "multibank" => args.get("capacity").is_some() && exceeds,
         _ => false,
     };
     if hier {
@@ -172,12 +186,13 @@ fn cmd_sort_hierarchical(
     width: u32,
     k: usize,
     banks: usize,
-    capacity: usize,
+    capacity: Capacity,
 ) -> Result<()> {
     let fanout = args.parse_num("fanout", 4usize)?;
     let workers = args.parse_num("workers", 4usize)?;
-    if capacity == 0 {
-        bail!("--capacity must be at least 1");
+    let streaming = !args.flag("barrier");
+    if capacity == Capacity::Fixed(0) {
+        bail!("--capacity must be at least 1 (or `auto`)");
     }
     if fanout < 2 {
         bail!("--fanout must be at least 2");
@@ -192,13 +207,21 @@ fn cmd_sort_hierarchical(
         colskip: ColSkipConfig { width, k, ..Default::default() },
         ..Default::default()
     })?;
+    let auto = capacity == Capacity::Auto;
+    let cfg = HierarchicalConfig { capacity, fanout, streaming };
     let t0 = std::time::Instant::now();
-    let out = svc.sort_hierarchical(&d.values, &HierarchicalConfig { capacity, fanout })?;
+    let out = svc.sort_hierarchical(&d.values, &cfg)?;
     let wall = t0.elapsed();
     let n = d.values.len();
     let mut check = d.values.clone();
     check.sort_unstable();
-    println!("pipeline      : chunk({capacity}) -> column-skip -> {fanout}-way merge");
+    println!(
+        "pipeline      : chunk({}{}) -> column-skip -> {}-way {} merge",
+        out.capacity,
+        if auto { ", auto" } else { "" },
+        out.merge.fanout,
+        if streaming { "streaming" } else { "barrier" }
+    );
     println!("dataset       : {} (n={n}, w={width}, seed={})", d.kind.name(), d.seed);
     println!("correct       : {}", out.output.sorted == check);
     println!("chunks        : {} ({workers} workers, {sub_banks} banks/chunk)", out.chunks());
@@ -211,10 +234,16 @@ fn cmd_sort_hierarchical(
         out.merge.passes, out.merge.comparisons, out.merge.cycles
     );
     println!(
-        "latency       : {} cycles ({:.3} ms @500MHz, {:.1}% in merge)",
+        "latency       : {} cycles ({:.3} ms @500MHz, {:.1}% exposed merge)",
         out.latency_cycles,
         out.latency_seconds() * 1e3,
         out.merge_fraction() * 100.0
+    );
+    println!(
+        "overlap       : streamed {} vs barrier {} cycles ({:.1}% hidden)",
+        out.streamed_latency_cycles,
+        out.barrier_latency_cycles,
+        out.overlap_saving() * 100.0
     );
     println!("cycles/number : {:.3}", out.latency_cycles as f64 / n as f64);
     println!("throughput    : {:.2} Mnum/s @500MHz", out.throughput() / 1e6);
@@ -242,6 +271,7 @@ fn cmd_scale(args: &Args) -> Result<()> {
     if max <= capacity {
         bail!("--max ({max}) must exceed --capacity ({capacity})");
     }
+    let streaming = args.flag("streaming");
     let mut ns = Vec::new();
     let mut n = capacity.saturating_mul(4);
     while n < max {
@@ -249,7 +279,7 @@ fn cmd_scale(args: &Args) -> Result<()> {
         n = n.saturating_mul(4);
     }
     ns.push(max);
-    let pts = report::scaling(&ns, capacity, fanout, width, k, seed);
+    let pts = report::scaling(&ns, capacity, fanout, width, k, seed, streaming);
     if args.flag("json") {
         println!(
             "{}",
@@ -258,7 +288,11 @@ fn cmd_scale(args: &Args) -> Result<()> {
                 ("capacity", p.capacity.into()),
                 ("chunks", p.chunks.into()),
                 ("fanout", p.fanout.into()),
+                ("streaming", Json::Bool(p.streaming)),
                 ("latency_cycles", p.latency_cycles.into()),
+                ("barrier_cycles", p.barrier_cycles.into()),
+                ("streamed_cycles", p.streamed_cycles.into()),
+                ("overlap_saving", p.overlap_saving.into()),
                 ("cycles_per_number", p.cycles_per_number.into()),
                 ("merge_fraction", p.merge_fraction.into()),
                 ("throughput_mnum_s", p.throughput_mnum_s.into()),
@@ -277,6 +311,7 @@ fn cmd_scale(args: &Args) -> Result<()> {
                     p.latency_cycles.to_string(),
                     format!("{:.2}", p.cycles_per_number),
                     format!("{:.1}%", p.merge_fraction * 100.0),
+                    format!("{:.1}%", p.overlap_saving * 100.0),
                     format!("{:.1}", p.throughput_mnum_s),
                     format!("{:.0}", p.area_kum2),
                     format!("{:.0}", p.power_mw),
@@ -284,12 +319,14 @@ fn cmd_scale(args: &Args) -> Result<()> {
             })
             .collect();
         println!(
-            "out-of-bank scaling (capacity={capacity}, fanout={fanout}, w={width}, k={k}, MapReduce)"
+            "out-of-bank scaling (capacity={capacity}, fanout={fanout}, w={width}, k={k}, \
+             MapReduce, {} merge)",
+            if streaming { "streaming" } else { "barrier" }
         );
         print!(
             "{}",
             report::render_table(
-                &["n", "chunks", "latency", "cyc/num", "merge", "Mnum/s", "Kµm²", "mW"],
+                &["n", "chunks", "latency", "cyc/num", "merge", "hidden", "Mnum/s", "Kµm²", "mW"],
                 &rows
             )
         );

@@ -229,8 +229,16 @@ pub struct ScalePoint {
     pub capacity: usize,
     pub chunks: usize,
     pub fanout: usize,
-    /// Critical-path latency (max chunk + merge passes), cycles.
+    /// Whether the point ran the streaming merge frontier.
+    pub streaming: bool,
+    /// Critical-path latency of the mode that ran, cycles.
     pub latency_cycles: u64,
+    /// Barrier-model latency (max chunk + merge passes), cycles.
+    pub barrier_cycles: u64,
+    /// Overlap-model latency (streamed completion), cycles.
+    pub streamed_cycles: u64,
+    /// Fraction of the barrier latency the streaming overlap hides.
+    pub overlap_saving: f64,
     /// Latency per element — the hierarchical analogue of Fig. 6's
     /// cycles/number (chunks sort in parallel banks).
     pub cycles_per_number: f64,
@@ -255,8 +263,9 @@ pub fn scaling(
     width: u32,
     k: usize,
     seed: u64,
+    streaming: bool,
 ) -> Vec<ScalePoint> {
-    use crate::coordinator::hierarchical::HierarchicalConfig;
+    use crate::coordinator::hierarchical::{Capacity, HierarchicalConfig};
     use crate::coordinator::{ServiceConfig, SortService};
 
     let svc = SortService::start(ServiceConfig {
@@ -265,7 +274,7 @@ pub fn scaling(
         ..Default::default()
     })
     .expect("service start");
-    let cfg = HierarchicalConfig { capacity, fanout };
+    let cfg = HierarchicalConfig { capacity: Capacity::Fixed(capacity), fanout, streaming };
     let pts = ns
         .iter()
         .map(|&n| {
@@ -277,7 +286,11 @@ pub fn scaling(
                 capacity,
                 chunks: out.chunks(),
                 fanout,
+                streaming,
                 latency_cycles: out.latency_cycles,
+                barrier_cycles: out.barrier_latency_cycles,
+                streamed_cycles: out.streamed_latency_cycles,
+                overlap_saving: out.overlap_saving(),
                 cycles_per_number: out.latency_cycles as f64 / n.max(1) as f64,
                 merge_fraction: out.merge_fraction(),
                 throughput_mnum_s: out.throughput() / 1e6,
@@ -382,13 +395,16 @@ mod tests {
 
     #[test]
     fn scaling_sweep_shapes() {
-        let pts = scaling(&[512, 2048, 8192], 256, 4, 32, 2, 7);
+        let pts = scaling(&[512, 2048, 8192], 256, 4, 32, 2, 7, false);
         assert_eq!(pts.len(), 3);
         assert_eq!(pts[0].chunks, 2);
         assert_eq!(pts[1].chunks, 8);
         assert_eq!(pts[2].chunks, 32);
         for p in &pts {
             assert!(p.latency_cycles > 0, "n={}", p.n);
+            assert_eq!(p.latency_cycles, p.barrier_cycles, "barrier sweep");
+            assert!(p.streamed_cycles <= p.barrier_cycles, "n={}", p.n);
+            assert!((0.0..1.0).contains(&p.overlap_saving), "n={}", p.n);
             assert!(p.throughput_mnum_s > 0.0);
             assert!(p.area_kum2 > 0.0 && p.power_mw > 0.0);
             assert!((0.0..1.0).contains(&p.merge_fraction), "n={}", p.n);
@@ -399,6 +415,15 @@ mod tests {
         // Column skipping keeps per-element latency under the baseline's
         // 32 cycles even with the merge passes on top.
         assert!(pts[2].cycles_per_number < 32.0, "{}", pts[2].cycles_per_number);
+        // The streaming sweep produces identical results with a latency
+        // never above the barrier's.
+        let spts = scaling(&[512, 2048, 8192], 256, 4, 32, 2, 7, true);
+        for (s, b) in spts.iter().zip(&pts) {
+            assert!(s.streaming);
+            assert_eq!(s.latency_cycles, s.streamed_cycles);
+            assert_eq!(s.barrier_cycles, b.barrier_cycles, "same model numbers");
+            assert!(s.latency_cycles <= b.latency_cycles, "n={}", s.n);
+        }
     }
 
     #[test]

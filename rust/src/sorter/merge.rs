@@ -289,6 +289,275 @@ pub fn merge_runs(runs: Vec<Vec<(u32, usize)>>, fanout: usize) -> KWayMergeOutpu
     merge_sorted_runs(runs, fanout)
 }
 
+/// Deterministic overlap model of the streaming merge network.
+///
+/// `leaves` are the per-chunk sorted runs as `(arrival_cycles, len)` in
+/// chunk order: chunks sort in parallel banks starting at cycle 0, so
+/// chunk i's run exists from its own cycle count on. One fully-pipelined
+/// merge engine executes the fixed fanout-`fanout` merge tree (the same
+/// index grouping as [`merge_sorted_runs`]): a non-trivial merge op
+/// streams its inputs at one element per cycle and starts as soon as
+/// its inputs exist and the engine is free; ops are scheduled greedily
+/// earliest-ready first (ties: lower level, then lower group).
+/// Single-run groups pass through for free.
+///
+/// Returns the cycle the final merged stream drains. The result never
+/// exceeds the barrier model `max(arrival) + model_merge_cycles(n,
+/// runs, fanout)` — the engine idles only while the slowest chunks are
+/// still sorting, and the tree's total stream work is at most one full
+/// stream per pass — and it beats the barrier whenever early groups
+/// complete before the slowest chunk arrives.
+pub fn model_streamed_completion(leaves: &[(u64, usize)], fanout: usize) -> u64 {
+    assert!(fanout >= 2, "merge fanout must be at least 2");
+    if leaves.is_empty() {
+        return 0;
+    }
+    // Node (level, group): stream length and the cycle it is fully
+    // available (None until produced). Level 0 = the chunk runs.
+    let mut lens: Vec<Vec<usize>> = vec![leaves.iter().map(|&(_, l)| l).collect()];
+    let mut ready: Vec<Vec<Option<u64>>> = vec![leaves.iter().map(|&(a, _)| Some(a)).collect()];
+    while lens.last().expect("at least one level").len() > 1 {
+        let prev = lens.last().expect("at least one level");
+        let next: Vec<usize> = prev.chunks(fanout).map(|g| g.iter().sum()).collect();
+        ready.push(vec![None; next.len()]);
+        lens.push(next);
+    }
+    let depth = lens.len();
+    let mut engine_free = 0u64;
+    loop {
+        // Single-run groups pass through the tree for free.
+        let mut changed = true;
+        while changed {
+            changed = false;
+            for l in 1..depth {
+                for g in 0..lens[l].len() {
+                    let lo = g * fanout;
+                    let hi = (lo + fanout).min(lens[l - 1].len());
+                    if ready[l][g].is_none() && hi - lo == 1 {
+                        if let Some(r) = ready[l - 1][lo] {
+                            ready[l][g] = Some(r);
+                            changed = true;
+                        }
+                    }
+                }
+            }
+        }
+        if let Some(done) = ready[depth - 1][0] {
+            return done;
+        }
+        // Among unproduced real merges whose inputs all exist, run the
+        // earliest-ready one on the shared engine.
+        let mut pick: Option<(u64, usize, usize)> = None;
+        for l in 1..depth {
+            for g in 0..lens[l].len() {
+                if ready[l][g].is_some() {
+                    continue;
+                }
+                let lo = g * fanout;
+                let hi = (lo + fanout).min(lens[l - 1].len());
+                let inputs_ready = ready[l - 1][lo..hi]
+                    .iter()
+                    .copied()
+                    .try_fold(0u64, |m, r| r.map(|v| m.max(v)));
+                let Some(inputs_ready) = inputs_ready else { continue };
+                if pick.is_none_or(|p| (inputs_ready, l, g) < p) {
+                    pick = Some((inputs_ready, l, g));
+                }
+            }
+        }
+        let (inputs_ready, l, g) =
+            pick.expect("an op with ready inputs must exist before the root is produced");
+        let start = engine_free.max(inputs_ready);
+        let done = start + lens[l][g] as u64;
+        ready[l][g] = Some(done);
+        engine_free = done;
+    }
+}
+
+/// Streamed completion when every chunk run arrives at the same cycle
+/// with the same length — the planner's uniform scoring model. Closed
+/// form of [`model_streamed_completion`] for this case: with equal
+/// arrivals the engine starts at `arrival` and never idles, so the
+/// completion is `arrival` plus the total real-merge work (single-run
+/// groups pass through for free). O(chunks), unlike the general
+/// event-driven scheduler — this is what lets the auto-tuner score
+/// million-element candidates without simulating them.
+pub fn model_streamed_completion_uniform(
+    chunks: usize,
+    len: usize,
+    arrival: u64,
+    fanout: usize,
+) -> u64 {
+    assert!(fanout >= 2, "merge fanout must be at least 2");
+    if chunks == 0 {
+        return 0;
+    }
+    // counts[i] = original runs under node i of the current level.
+    let mut counts: Vec<usize> = vec![1; chunks];
+    let mut work = 0u64;
+    while counts.len() > 1 {
+        let mut next = Vec::with_capacity(counts.len().div_ceil(fanout));
+        for g in counts.chunks(fanout) {
+            let c: usize = g.iter().sum();
+            if g.len() > 1 {
+                work += c as u64 * len as u64;
+            }
+            next.push(c);
+        }
+        counts = next;
+    }
+    arrival + work
+}
+
+/// Result of a completed [`StreamingMerge`].
+#[derive(Clone, Debug)]
+pub struct StreamedMerge<T> {
+    /// Globally merged stream (byte-identical to [`merge_sorted_runs`]
+    /// over the same runs in chunk order).
+    pub merged: Vec<T>,
+    /// Comparator operations actually performed (all passes).
+    pub comparisons: u64,
+    /// Merge passes of the fixed tree (`ceil(log_fanout(runs))`).
+    pub passes: u32,
+    /// Barrier-model merge-network cycles (whole stream, once per pass).
+    pub cycles: u64,
+    /// Overlap-model completion: the cycle the final merged stream
+    /// drains, counted from when the parallel chunk sorts started
+    /// ([`model_streamed_completion`] over the pushed arrivals).
+    pub completion_cycles: u64,
+}
+
+impl StreamedMerge<(u32, usize)> {
+    /// The merged values alone.
+    pub fn values(&self) -> Vec<u32> {
+        self.merged.iter().map(|&(v, _)| v).collect()
+    }
+
+    /// The merged original indices alone (the global argsort).
+    pub fn order(&self) -> Vec<usize> {
+        self.merged.iter().map(|&(_, i)| i).collect()
+    }
+}
+
+/// Incremental merge frontier for the streaming hierarchical pipeline.
+///
+/// Runs are pushed as their chunks finish sorting (any arrival order)
+/// and the fixed fanout-`fanout` merge tree advances eagerly: a group is
+/// merged the moment its last member arrives, so host-side merge work
+/// overlaps the chunk sorts still in flight instead of barriering on
+/// all of them. The tree grouping is by chunk index — identical to
+/// [`merge_sorted_runs`] over the same runs in chunk order — so for
+/// **non-empty** runs (all the hierarchical pipeline ever produces:
+/// partition spans are never empty) the merged output, comparison
+/// count and pass count match the barrier path exactly (pinned by
+/// tests and the streamed-vs-barrier proptest). Empty runs still merge
+/// correctly, but the accounting diverges from `merge_sorted_runs`,
+/// which prunes them before building its tree while this fixed tree
+/// cannot (`streaming_merge_counts_empty_runs_in_its_tree`).
+///
+/// The latency model is decoupled from host arrival order: `finish`
+/// scores the recorded `(arrival_cycles, len)` leaves with the
+/// deterministic [`model_streamed_completion`] scheduler, so the
+/// modelled cycles are reproducible run-to-run.
+pub struct StreamingMerge<T> {
+    fanout: usize,
+    /// `levels[l][slot]`: a produced run waiting for its group to fill.
+    levels: Vec<Vec<Option<Vec<T>>>>,
+    /// `(arrival_cycles, len)` per leaf, for the latency model.
+    leaves: Vec<Option<(u64, usize)>>,
+    received: usize,
+    comparisons: u64,
+}
+
+impl<T: Copy + Ord> StreamingMerge<T> {
+    /// A frontier expecting exactly `expected` runs (chunk count).
+    pub fn new(expected: usize, fanout: usize) -> Self {
+        assert!(fanout >= 2, "merge fanout must be at least 2");
+        let mut levels: Vec<Vec<Option<Vec<T>>>> = vec![(0..expected).map(|_| None).collect()];
+        while levels.last().expect("at least one level").len() > 1 {
+            let next = levels.last().expect("at least one level").len().div_ceil(fanout);
+            levels.push((0..next).map(|_| None).collect());
+        }
+        StreamingMerge {
+            fanout,
+            levels,
+            leaves: vec![None; expected],
+            received: 0,
+            comparisons: 0,
+        }
+    }
+
+    /// Runs received so far.
+    pub fn received(&self) -> usize {
+        self.received
+    }
+
+    /// Feed chunk `idx`'s sorted run, which became available at
+    /// `arrival_cycles` in the parallel-bank model. Merges every group
+    /// the arrival completes, cascading up the tree.
+    pub fn push(&mut self, idx: usize, run: Vec<T>, arrival_cycles: u64) {
+        assert!(idx < self.leaves.len(), "run index {idx} out of range");
+        assert!(self.leaves[idx].is_none(), "run {idx} pushed twice");
+        self.leaves[idx] = Some((arrival_cycles, run.len()));
+        self.received += 1;
+        self.place(0, idx, run);
+    }
+
+    fn place(&mut self, level: usize, slot: usize, run: Vec<T>) {
+        self.levels[level][slot] = Some(run);
+        if level + 1 == self.levels.len() {
+            return; // the root
+        }
+        let group = slot / self.fanout;
+        let lo = group * self.fanout;
+        let hi = (lo + self.fanout).min(self.levels[level].len());
+        if self.levels[level][lo..hi].iter().any(Option::is_none) {
+            return;
+        }
+        let members: Vec<Vec<T>> = self.levels[level][lo..hi]
+            .iter_mut()
+            .map(|s| s.take().expect("group checked complete"))
+            .collect();
+        let merged = if members.len() == 1 {
+            members.into_iter().next().expect("one run")
+        } else {
+            let mut lt = LoserTree::new(&members);
+            let mut out = Vec::with_capacity(members.iter().map(Vec::len).sum());
+            while let Some(x) = lt.pop() {
+                out.push(x);
+            }
+            self.comparisons += lt.comparisons();
+            out
+        };
+        self.place(level + 1, group, merged);
+    }
+
+    /// Close the frontier after every expected run was pushed; returns
+    /// the merged stream plus barrier- and overlap-model accounting.
+    pub fn finish(mut self) -> StreamedMerge<T> {
+        assert_eq!(
+            self.received,
+            self.leaves.len(),
+            "finish() before every expected run was pushed"
+        );
+        let merged = match self.levels.last_mut() {
+            Some(root) if !root.is_empty() => {
+                root[0].take().expect("root is produced once all runs arrived")
+            }
+            _ => Vec::new(),
+        };
+        let leaves: Vec<(u64, usize)> = self.leaves.iter().map(|l| l.expect("leaf")).collect();
+        let total: usize = leaves.iter().map(|&(_, l)| l).sum();
+        StreamedMerge {
+            merged,
+            comparisons: self.comparisons,
+            passes: (self.levels.len() - 1) as u32,
+            cycles: model_merge_cycles(total, leaves.len(), self.fanout),
+            completion_cycles: model_streamed_completion(&leaves, self.fanout),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -433,6 +702,146 @@ mod tests {
             let flat: Vec<u32> = chunks.iter().flatten().copied().collect();
             for (&val, &idx) in out.values().iter().zip(out.order().iter()) {
                 assert_eq!(flat[idx], val);
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_merge_matches_barrier_merge() {
+        let chunks: Vec<Vec<u32>> = (0..13u32)
+            .map(|c| {
+                (0..17u32)
+                    .map(|i| i.wrapping_mul(2654435761).wrapping_add(c * 40503) >> 7)
+                    .collect()
+            })
+            .collect();
+        let refs: Vec<&[u32]> = chunks.iter().map(|c| c.as_slice()).collect();
+        for fanout in [2usize, 3, 4, 8, 16] {
+            let runs = indexed_runs(&refs);
+            let barrier = merge_runs(runs.clone(), fanout);
+            let mut sm = StreamingMerge::new(runs.len(), fanout);
+            // Push in a scrambled arrival order: the tree is fixed by
+            // chunk index, so the result must not depend on it.
+            let mut order: Vec<usize> = (0..runs.len()).collect();
+            order.reverse();
+            order.swap(0, 5);
+            for &i in &order {
+                sm.push(i, runs[i].clone(), (i as u64 + 1) * 100);
+            }
+            let s = sm.finish();
+            assert_eq!(s.merged, barrier.merged, "fanout={fanout}");
+            assert_eq!(s.comparisons, barrier.comparisons, "fanout={fanout}");
+            assert_eq!(s.passes, barrier.passes, "fanout={fanout}");
+            assert_eq!(s.cycles, barrier.cycles, "fanout={fanout}");
+            // Streamed completion never exceeds the barrier model.
+            let max_arrival = runs.len() as u64 * 100;
+            assert!(s.completion_cycles <= max_arrival + barrier.cycles, "fanout={fanout}");
+            assert!(s.completion_cycles >= max_arrival, "fanout={fanout}");
+        }
+    }
+
+    #[test]
+    fn streaming_merge_degenerate_shapes() {
+        // Zero expected runs.
+        let sm: StreamingMerge<(u32, usize)> = StreamingMerge::new(0, 4);
+        let s = sm.finish();
+        assert!(s.merged.is_empty());
+        assert_eq!(s.passes, 0);
+        assert_eq!(s.cycles, 0);
+        assert_eq!(s.completion_cycles, 0);
+        // A single run passes through untouched with zero merge work.
+        let mut sm = StreamingMerge::new(1, 4);
+        sm.push(0, vec![(1u32, 0usize), (2, 1), (9, 2)], 77);
+        let s = sm.finish();
+        assert_eq!(s.values(), vec![1, 2, 9]);
+        assert_eq!(s.order(), vec![0, 1, 2]);
+        assert_eq!(s.comparisons, 0);
+        assert_eq!(s.passes, 0);
+        assert_eq!(s.completion_cycles, 77, "one run: latency is its own arrival");
+        // Empty runs mixed in still merge correctly.
+        let mut sm = StreamingMerge::new(3, 2);
+        sm.push(1, vec![], 5);
+        sm.push(0, vec![(4u32, 0usize), (7, 1)], 9);
+        sm.push(2, vec![(5, 2)], 1);
+        let s = sm.finish();
+        assert_eq!(s.values(), vec![4, 5, 7]);
+    }
+
+    #[test]
+    fn streaming_merge_counts_empty_runs_in_its_tree() {
+        // Accounting divergence on empty runs, pinned: the fixed index
+        // tree cannot prune an empty leaf, so it counts a pass the
+        // barrier path (which retains non-empty runs first) does not.
+        // Values remain identical; the hierarchical pipeline never
+        // produces empty runs, so this is API-edge behavior only.
+        let runs = vec![vec![], vec![(4u32, 0usize)], vec![(2, 1)]];
+        let barrier = merge_runs(runs.clone(), 2);
+        let mut sm = StreamingMerge::new(3, 2);
+        for (i, r) in runs.into_iter().enumerate() {
+            sm.push(i, r, 0);
+        }
+        let s = sm.finish();
+        assert_eq!(s.values(), barrier.values());
+        assert_eq!(barrier.passes, 1, "barrier prunes the empty run");
+        assert_eq!(s.passes, 2, "the fixed tree counts it");
+    }
+
+    #[test]
+    #[should_panic(expected = "pushed twice")]
+    fn streaming_merge_rejects_duplicate_runs() {
+        let mut sm = StreamingMerge::new(2, 2);
+        sm.push(0, vec![(1u32, 0usize)], 1);
+        sm.push(0, vec![(2, 1)], 2);
+    }
+
+    #[test]
+    fn streamed_completion_overlaps_early_arrivals() {
+        // 4 runs of 10, fanout 2: tree is (0,1) -> a, (2,3) -> b, (a,b)
+        // -> root. Runs 0..3 arrive at 10/20/100/100: the (0,1) merge
+        // (20 cycles) hides entirely behind the slow chunks, so
+        // completion is 100 + 20 + 40 = 160 < barrier 100 + 80.
+        let leaves = [(10u64, 10usize), (20, 10), (100, 10), (100, 10)];
+        let c = model_streamed_completion(&leaves, 2);
+        assert_eq!(c, 160);
+        let barrier = 100 + model_merge_cycles(40, 4, 2);
+        assert!(c < barrier, "{c} vs {barrier}");
+        // Equal arrivals: no overlap to exploit, engine runs the whole
+        // tree after the barrier — completion = A + total tree work.
+        let eq = [(50u64, 10usize); 4];
+        assert_eq!(model_streamed_completion(&eq, 2), 50 + 80);
+        // Degenerates.
+        assert_eq!(model_streamed_completion(&[], 4), 0);
+        assert_eq!(model_streamed_completion(&[(33, 5)], 4), 33);
+    }
+
+    #[test]
+    fn uniform_closed_form_matches_event_scheduler() {
+        for chunks in [0usize, 1, 2, 3, 12, 47, 188, 977] {
+            for fanout in [2usize, 4, 16] {
+                for arrival in [0u64, 125, 8028] {
+                    let closed = model_streamed_completion_uniform(chunks, 64, arrival, fanout);
+                    let leaves = vec![(arrival, 64usize); chunks];
+                    let sim = model_streamed_completion(&leaves, fanout);
+                    assert_eq!(closed, sim, "chunks={chunks} fanout={fanout} a={arrival}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn streamed_completion_never_exceeds_barrier() {
+        // Randomized-ish arrivals across shapes and fanouts.
+        for runs in [1usize, 2, 3, 7, 16, 61] {
+            for fanout in [2usize, 4, 16] {
+                let leaves: Vec<(u64, usize)> = (0..runs)
+                    .map(|i| ((i as u64).wrapping_mul(2654435761) % 5000, 64 + (i % 7)))
+                    .collect();
+                let n: usize = leaves.iter().map(|&(_, l)| l).sum();
+                let max_a = leaves.iter().map(|&(a, _)| a).max().unwrap_or(0);
+                let c = model_streamed_completion(&leaves, fanout);
+                let barrier = max_a + model_merge_cycles(n, runs, fanout);
+                assert!(c <= barrier, "runs={runs} fanout={fanout}: {c} > {barrier}");
+                assert!(c >= max_a, "runs={runs} fanout={fanout}: {c} < {max_a}");
             }
         }
     }

@@ -191,7 +191,7 @@ fn fig8a_full_scale_headline() {
 #[test]
 fn hierarchical_aggregates_chunk_stats() {
     let svc = SortService::start(ServiceConfig { workers: 4, ..Default::default() }).unwrap();
-    let cfg = HierarchicalConfig { capacity: 512, fanout: 4 };
+    let cfg = HierarchicalConfig::fixed(512, 4);
     let d = Dataset::generate32(DatasetKind::MapReduce, 5000, 42);
     let out = svc.sort_hierarchical(&d.values, &cfg).unwrap();
 
@@ -209,7 +209,15 @@ fn hierarchical_aggregates_chunk_stats() {
     assert_eq!(out.output.stats.crs, summed.crs, "CRs must sum across chunks");
     assert_eq!(out.output.stats.sls, summed.sls, "SLs must sum across chunks");
     assert_eq!(out.output.stats, summed);
-    assert_eq!(out.latency_cycles, max_cycles + out.merge.cycles);
+    assert_eq!(out.max_chunk_cycles, max_cycles);
+    assert_eq!(out.barrier_latency_cycles, max_cycles + out.merge.cycles);
+    // The default pipeline streams: its critical path is the overlap
+    // model, bounded by the barrier on one side and by the slowest
+    // chunk on the other.
+    assert!(out.streaming);
+    assert_eq!(out.latency_cycles, out.streamed_latency_cycles);
+    assert!(out.latency_cycles <= out.barrier_latency_cycles);
+    assert!(out.latency_cycles >= max_cycles);
 
     // Chunk sorts also flowed through the service metrics.
     let m = svc.metrics();
@@ -226,7 +234,7 @@ fn hierarchical_aggregates_chunk_stats() {
 #[test]
 fn hierarchical_sorts_100k() {
     let svc = SortService::start(ServiceConfig { workers: 4, ..Default::default() }).unwrap();
-    let cfg = HierarchicalConfig { capacity: 1024, fanout: 4 };
+    let cfg = HierarchicalConfig::fixed(1024, 4);
     let d = Dataset::generate32(DatasetKind::MapReduce, 100_000, 42);
     let out = svc.sort_hierarchical(&d.values, &cfg).unwrap();
     let mut expect = d.values.clone();
@@ -250,7 +258,7 @@ fn hierarchical_sorts_100k() {
 #[ignore = "1M-element release-scale run; see EXPERIMENTS.md"]
 fn hierarchical_sorts_1m() {
     let svc = SortService::start(ServiceConfig { workers: 8, ..Default::default() }).unwrap();
-    let cfg = HierarchicalConfig { capacity: 1024, fanout: 4 };
+    let cfg = HierarchicalConfig::fixed(1024, 4);
     let d = Dataset::generate32(DatasetKind::MapReduce, 1_000_000, 42);
     let out = svc.sort_hierarchical(&d.values, &cfg).unwrap();
     let mut expect = d.values.clone();
@@ -266,7 +274,7 @@ fn hierarchical_sorts_1m() {
 #[test]
 fn hierarchical_with_multibank_chunks_matches_single_bank() {
     let d = Dataset::generate32(DatasetKind::Clustered, 4000, 11);
-    let cfg = HierarchicalConfig { capacity: 500, fanout: 4 };
+    let cfg = HierarchicalConfig::fixed(500, 4);
 
     let single = SortService::start(ServiceConfig { workers: 2, ..Default::default() }).unwrap();
     let a = single.sort_hierarchical(&d.values, &cfg).unwrap();

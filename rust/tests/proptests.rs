@@ -186,7 +186,7 @@ fn prop_hierarchical_equals_std_sort() {
         |case| {
             let expect = sorted_ref(&case.values);
             for (capacity, fanout) in [(7usize, 2usize), (16, 3), (64, 4)] {
-                let cfg = HierarchicalConfig { capacity, fanout };
+                let cfg = HierarchicalConfig::fixed(capacity, fanout);
                 let out =
                     svc.sort_hierarchical(&case.values, &cfg).map_err(|e| e.to_string())?;
                 if out.output.sorted != expect {
@@ -213,6 +213,56 @@ fn prop_hierarchical_equals_std_sort() {
                 }
                 if out.output.stats != summed {
                     return Err(format!("capacity={capacity}: stats are not the chunk sum"));
+                }
+            }
+            Ok(())
+        },
+    );
+    svc.shutdown();
+}
+
+#[test]
+fn prop_streamed_pipeline_identical_to_barrier() {
+    // The streaming merge frontier must be a pure scheduling change:
+    // values, argsort and every aggregated stat identical to the
+    // barrier path, with the streamed critical path never above the
+    // barrier model — including the empty-input and single-chunk
+    // degenerate shapes (max_len 300 with capacity 512 exercises the
+    // one-chunk case; the generator emits empty vectors too).
+    let svc = SortService::start(ServiceConfig { workers: 2, ..Default::default() }).unwrap();
+    check(
+        "streamed-equals-barrier",
+        PropConfig { seed: 9, cases: 64, max_len: 300, ..Default::default() },
+        |case| {
+            for (capacity, fanout) in [(7usize, 2usize), (32, 3), (512, 4)] {
+                let scfg = HierarchicalConfig::fixed(capacity, fanout);
+                let bcfg = HierarchicalConfig::barrier(capacity, fanout);
+                let s = svc.sort_hierarchical(&case.values, &scfg).map_err(|e| e.to_string())?;
+                let b = svc.sort_hierarchical(&case.values, &bcfg).map_err(|e| e.to_string())?;
+                if s.output.sorted != b.output.sorted {
+                    return Err(format!("capacity={capacity}: values diverge"));
+                }
+                if s.output.order != b.output.order {
+                    return Err(format!("capacity={capacity}: argsort diverges"));
+                }
+                if s.output.stats != b.output.stats || s.chunk_stats != b.chunk_stats {
+                    return Err(format!("capacity={capacity}: stats diverge"));
+                }
+                if (s.merge.comparisons, s.merge.passes, s.merge.cycles)
+                    != (b.merge.comparisons, b.merge.passes, b.merge.cycles)
+                {
+                    return Err(format!("capacity={capacity}: merge accounting diverges"));
+                }
+                if s.streamed_latency_cycles > b.barrier_latency_cycles {
+                    return Err(format!(
+                        "capacity={capacity}: streamed {} beats barrier {} the wrong way",
+                        s.streamed_latency_cycles, b.barrier_latency_cycles
+                    ));
+                }
+                if s.streamed_latency_cycles < s.max_chunk_cycles {
+                    return Err(format!(
+                        "capacity={capacity}: latency below the slowest chunk"
+                    ));
                 }
             }
             Ok(())
