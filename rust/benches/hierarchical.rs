@@ -7,6 +7,7 @@
 
 use memsort::bench::run;
 use memsort::coordinator::hierarchical::HierarchicalConfig;
+use memsort::coordinator::shard::{RoutePolicy, ShardedConfig, ShardedSortService};
 use memsort::coordinator::{ServiceConfig, SortService};
 use memsort::datasets::{Dataset, DatasetKind};
 use memsort::sorter::merge::merge_runs;
@@ -98,4 +99,37 @@ fn main() {
         );
     }
     svc.shutdown();
+
+    println!("--- shard scaling: 1M across a fleet (cap 1024, fanout 4, round-robin) ---");
+    // EXPERIMENTS.md §Shard scaling: the fleet latency model (per-shard
+    // merge engines draining in parallel + one cross-shard merge) must
+    // strictly improve from 1 to 4 shards and regress at 8 (the
+    // cross-shard tree gains a pass once shards > fanout).
+    let mut one_shard_cycles = None;
+    for shards in [1usize, 2, 4, 8] {
+        let fleet = ShardedSortService::start(ShardedConfig {
+            shards,
+            route: RoutePolicy::RoundRobin,
+            service: ServiceConfig { workers: workers.div_ceil(shards), ..Default::default() },
+        })
+        .unwrap();
+        let label = format!("hier_sort/shards{shards}/n1M/cap1024");
+        let cfg = HierarchicalConfig::fixed(1024, 4);
+        let r = run(&label, 2000, || {
+            fleet.sort_hierarchical(&d.values, &cfg).unwrap().hier.output.sorted.len()
+        });
+        let out = fleet.sort_hierarchical(&d.values, &cfg).unwrap();
+        let m = fleet.fleet_metrics();
+        let base = *one_shard_cycles.get_or_insert(out.sharded_latency_cycles);
+        println!(
+            "    -> {:.2} Melem/s host | fleet model: {} cycles ({:.3} cyc/num, \
+             {:.2}x vs 1 shard), imbalance {:.2}",
+            r.throughput(n) / 1e6,
+            out.sharded_latency_cycles,
+            out.sharded_latency_cycles as f64 / n as f64,
+            base as f64 / out.sharded_latency_cycles as f64,
+            m.imbalance
+        );
+        fleet.shutdown();
+    }
 }

@@ -47,10 +47,12 @@
 //! [`crate::cost::SorterArch::Hierarchical`] arch, using the service's
 //! engine configuration (width, k, sub-banks).
 
+use std::ops::Range;
+
 use anyhow::{anyhow, Result};
 
 use super::planner::{auto_tune, partition};
-use super::{SortResponse, SortService};
+use super::{ServiceConfig, SortResponse, SortService};
 use crate::cost::{Activity, CostModel, SorterArch};
 use crate::sorter::merge::{merge_runs, model_streamed_completion, StreamingMerge};
 use crate::sorter::{SortOutput, SortStats};
@@ -202,6 +204,163 @@ impl HierarchicalOutput {
     }
 }
 
+/// The shared assembly half of the hierarchical pipeline: per-chunk
+/// responses go in (chunk-index order), the [`HierarchicalOutput`]
+/// comes out. [`SortService::sort_hierarchical`] drives it over one
+/// worker pool; [`super::shard::ShardedSortService::sort_hierarchical`]
+/// drives the *same* assembler over chunks routed across shards —
+/// which is why the two paths are byte-identical by construction (the
+/// frontier consumes run arrivals in chunk order regardless of which
+/// host sorted each chunk).
+pub(crate) struct ChunkAssembly {
+    spans: Vec<Range<usize>>,
+    streaming: bool,
+    fanout: usize,
+    frontier: StreamingMerge<(u32, usize)>,
+    parked: Vec<Vec<(u32, usize)>>,
+    chunk_stats: Vec<SortStats>,
+    total: SortStats,
+    max_chunk_cycles: u64,
+    have_order: bool,
+    arrivals: Vec<(u64, usize)>,
+}
+
+impl ChunkAssembly {
+    pub(crate) fn new(spans: Vec<Range<usize>>, fanout: usize, streaming: bool) -> Self {
+        let chunks = spans.len();
+        ChunkAssembly {
+            spans,
+            streaming,
+            fanout,
+            // Streaming mode feeds the merge frontier as responses are
+            // collected (in chunk-index order — std mpsc has no
+            // select, so a slow early chunk delays later,
+            // already-finished ones), so host merge work overlaps the
+            // chunk sorts still queued behind it; barrier mode (PR 1)
+            // parks every run and merges after all of them. The
+            // *modelled* latency is unaffected either way: it is
+            // computed from the recorded per-chunk arrival cycles, not
+            // from host timing.
+            frontier: StreamingMerge::new(if streaming { chunks } else { 0 }, fanout),
+            parked: Vec::new(),
+            chunk_stats: Vec::with_capacity(chunks),
+            total: SortStats::default(),
+            max_chunk_cycles: 0,
+            have_order: true,
+            arrivals: Vec::with_capacity(chunks),
+        }
+    }
+
+    pub(crate) fn spans(&self) -> &[Range<usize>] {
+        &self.spans
+    }
+
+    /// Absorb chunk `i`'s response: validate the span, aggregate the
+    /// stats, rebase the argsort and feed the merge (frontier or park).
+    pub(crate) fn absorb(&mut self, i: usize, resp: &SortResponse) -> Result<()> {
+        let span = self.spans[i].clone();
+        if resp.sorted.len() != span.len() {
+            return Err(anyhow!(
+                "chunk [{}, {}) returned {} elements",
+                span.start,
+                span.end,
+                resp.sorted.len()
+            ));
+        }
+        self.max_chunk_cycles = self.max_chunk_cycles.max(resp.stats.cycles());
+        self.arrivals.push((resp.stats.cycles(), span.len()));
+        self.total.merge_from(&resp.stats);
+        self.chunk_stats.push(resp.stats.clone());
+        // Rebase chunk-local argsort rows to global indices. A backend
+        // without row provenance (pure PJRT) degrades the global order
+        // to empty rather than inventing one.
+        let run: Vec<(u32, usize)> = if resp.order.len() == resp.sorted.len() {
+            resp.sorted
+                .iter()
+                .zip(&resp.order)
+                .map(|(&v, &r)| (v, span.start + r))
+                .collect()
+        } else {
+            self.have_order = false;
+            resp.sorted.iter().map(|&v| (v, 0)).collect()
+        };
+        if self.streaming {
+            self.frontier.push(i, run, resp.stats.cycles());
+        } else {
+            self.parked.push(run);
+        }
+        Ok(())
+    }
+
+    /// Close the pipeline: run (or finish) the merge stage and assemble
+    /// the output, costing the ensemble with `svc`'s engine geometry.
+    pub(crate) fn finish(self, svc: &ServiceConfig, capacity: usize) -> HierarchicalOutput {
+        let n = self.spans.last().map_or(0, |s| s.end);
+        let chunks = self.spans.len();
+        debug_assert_eq!(self.chunk_stats.len(), chunks, "every chunk must be absorbed");
+        // Merge-stage result: identical output either way (same tree,
+        // same tie-breaking); only the schedule differs.
+        let (merged, comparisons, passes, merge_cycles, streamed_latency_cycles) =
+            if self.streaming {
+                let s = self.frontier.finish();
+                (s.merged, s.comparisons, s.passes, s.cycles, s.completion_cycles)
+            } else {
+                let m = merge_runs(self.parked, self.fanout);
+                let streamed = model_streamed_completion(&self.arrivals, self.fanout);
+                (m.merged, m.comparisons, m.passes, m.cycles, streamed)
+            };
+        debug_assert_eq!(merged.len(), n);
+        let sorted: Vec<u32> = merged.iter().map(|&(v, _)| v).collect();
+        let order: Vec<usize> =
+            if self.have_order { merged.iter().map(|&(_, r)| r).collect() } else { Vec::new() };
+
+        let barrier_latency_cycles = self.max_chunk_cycles + merge_cycles;
+        debug_assert!(streamed_latency_cycles <= barrier_latency_cycles);
+        debug_assert!(streamed_latency_cycles >= self.max_chunk_cycles);
+        let latency_cycles =
+            if self.streaming { streamed_latency_cycles } else { barrier_latency_cycles };
+        let metrics =
+            MergeMetrics { comparisons, passes, cycles: merge_cycles, fanout: self.fanout };
+
+        // Cost totals for the modelled hardware ensemble, under the
+        // activity the chunks actually exhibited.
+        let arch = SorterArch::Hierarchical {
+            bank_n: capacity,
+            w: svc.colskip.width,
+            k: svc.colskip.k,
+            chunks: chunks.max(1),
+            banks_per_chunk: svc.banks,
+            fanout: self.fanout,
+        };
+        let model = CostModel::calibrated();
+        let act = if self.total.cycles() > 0 {
+            Activity::from_stats(&self.total)
+        } else {
+            Activity::nominal_colskip()
+        };
+
+        HierarchicalOutput {
+            output: SortOutput { sorted, order, stats: self.total },
+            chunk_stats: self.chunk_stats,
+            capacity,
+            merge: metrics,
+            streaming: self.streaming,
+            latency_cycles,
+            barrier_latency_cycles,
+            streamed_latency_cycles,
+            max_chunk_cycles: self.max_chunk_cycles,
+            area_kum2: model.area_kum2(arch),
+            power_mw: model.power_mw(arch, act),
+        }
+    }
+
+    /// The recorded `(arrival_cycles, len)` leaves, in chunk order —
+    /// the sharded pipeline re-scores them per shard.
+    pub(crate) fn arrivals(&self) -> &[(u64, usize)] {
+        &self.arrivals
+    }
+}
+
 impl SortService {
     /// Sort a dataset of arbitrary length through the hierarchical
     /// pipeline: partition into `cfg.capacity`-row chunks, sort every
@@ -216,120 +375,25 @@ impl SortService {
         let n = data.len();
         let (capacity, fanout) = self.resolve_chunking(n, cfg);
         assert!(capacity >= 1, "bank capacity must be positive");
-        let spans = partition(n, capacity);
-        let chunks = spans.len();
+        let mut asm = ChunkAssembly::new(partition(n, capacity), fanout, cfg.streaming);
+        let chunks = asm.spans().len();
 
         // Fan the chunks out to the worker pool (parallel banks).
-        let rxs: Vec<_> = spans
+        let rxs: Vec<_> = asm
+            .spans()
             .iter()
             .map(|s| self.submit(data[s.clone()].to_vec()))
             .collect::<Result<_>>()?;
 
-        let mut chunk_stats = Vec::with_capacity(chunks);
-        let mut total = SortStats::default();
-        let mut max_chunk_cycles = 0u64;
-        let mut have_order = true;
-        let mut arrivals: Vec<(u64, usize)> = Vec::with_capacity(chunks);
-        // Streaming mode feeds the merge frontier as responses are
-        // collected (in chunk-index order — std mpsc has no select, so
-        // a slow early chunk delays later, already-finished ones), so
-        // host merge work overlaps the chunk sorts still queued behind
-        // it; barrier mode (PR 1) parks every run and merges after all
-        // of them. The *modelled* latency is unaffected either way: it
-        // is computed from the recorded per-chunk arrival cycles, not
-        // from host timing.
-        let mut frontier = StreamingMerge::new(if cfg.streaming { chunks } else { 0 }, fanout);
-        let mut parked: Vec<Vec<(u32, usize)>> = Vec::new();
-        for (i, (span, rx)) in spans.iter().zip(rxs).enumerate() {
+        for (i, rx) in rxs.into_iter().enumerate() {
             let resp: SortResponse =
                 rx.recv().map_err(|_| anyhow!("worker dropped a chunk response"))??;
-            if resp.sorted.len() != span.len() {
-                return Err(anyhow!(
-                    "chunk [{}, {}) returned {} elements",
-                    span.start,
-                    span.end,
-                    resp.sorted.len()
-                ));
-            }
-            max_chunk_cycles = max_chunk_cycles.max(resp.stats.cycles());
-            arrivals.push((resp.stats.cycles(), span.len()));
-            total.merge_from(&resp.stats);
-            chunk_stats.push(resp.stats.clone());
-            // Rebase chunk-local argsort rows to global indices. A
-            // backend without row provenance (pure PJRT) degrades the
-            // global order to empty rather than inventing one.
-            let run: Vec<(u32, usize)> = if resp.order.len() == resp.sorted.len() {
-                resp.sorted
-                    .iter()
-                    .zip(&resp.order)
-                    .map(|(&v, &r)| (v, span.start + r))
-                    .collect()
-            } else {
-                have_order = false;
-                resp.sorted.iter().map(|&v| (v, 0)).collect()
-            };
-            if cfg.streaming {
-                frontier.push(i, run, resp.stats.cycles());
-            } else {
-                parked.push(run);
-            }
+            asm.absorb(i, &resp)?;
         }
 
-        // Merge-stage result: identical output either way (same tree,
-        // same tie-breaking); only the schedule differs.
-        let (merged, comparisons, passes, merge_cycles, streamed_latency_cycles) =
-            if cfg.streaming {
-                let s = frontier.finish();
-                (s.merged, s.comparisons, s.passes, s.cycles, s.completion_cycles)
-            } else {
-                let m = merge_runs(parked, fanout);
-                let streamed = model_streamed_completion(&arrivals, fanout);
-                (m.merged, m.comparisons, m.passes, m.cycles, streamed)
-            };
-        debug_assert_eq!(merged.len(), n);
-        let sorted: Vec<u32> = merged.iter().map(|&(v, _)| v).collect();
-        let order: Vec<usize> =
-            if have_order { merged.iter().map(|&(_, r)| r).collect() } else { Vec::new() };
-
-        let barrier_latency_cycles = max_chunk_cycles + merge_cycles;
-        debug_assert!(streamed_latency_cycles <= barrier_latency_cycles);
-        debug_assert!(streamed_latency_cycles >= max_chunk_cycles);
-        let latency_cycles =
-            if cfg.streaming { streamed_latency_cycles } else { barrier_latency_cycles };
-        let metrics = MergeMetrics { comparisons, passes, cycles: merge_cycles, fanout };
-        self.metrics.record_hierarchical(n, chunks, metrics.cycles, metrics.comparisons);
-
-        // Cost totals for the modelled hardware ensemble, under the
-        // activity the chunks actually exhibited.
-        let svc = self.config();
-        let arch = SorterArch::Hierarchical {
-            bank_n: capacity,
-            w: svc.colskip.width,
-            k: svc.colskip.k,
-            chunks: chunks.max(1),
-            banks_per_chunk: svc.banks,
-            fanout,
-        };
-        let model = CostModel::calibrated();
-        let act = if total.cycles() > 0 {
-            Activity::from_stats(&total)
-        } else {
-            Activity::nominal_colskip()
-        };
-
-        Ok(HierarchicalOutput {
-            output: SortOutput { sorted, order, stats: total },
-            chunk_stats,
-            capacity,
-            merge: metrics,
-            streaming: cfg.streaming,
-            latency_cycles,
-            barrier_latency_cycles,
-            streamed_latency_cycles,
-            max_chunk_cycles,
-            area_kum2: model.area_kum2(arch),
-            power_mw: model.power_mw(arch, act),
-        })
+        let out = asm.finish(self.config(), capacity);
+        self.metrics.record_hierarchical(n, chunks, out.merge.cycles, out.merge.comparisons);
+        Ok(out)
     }
 
     /// Resolve the `(bank capacity, merge fanout)` a hierarchical sort

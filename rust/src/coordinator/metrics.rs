@@ -15,9 +15,22 @@ const RESERVOIR_CAP: usize = 4096;
 /// their bank, which is what the chunk-size auto-tuner reads.
 const SIZE_CLASSES: usize = 64;
 
-/// The size class a request of `n` elements belongs to.
-fn size_class(n: usize) -> usize {
+/// The size class a request of `n` elements belongs to. Shared with the
+/// shard router's size-class-affinity policy
+/// ([`super::shard::RoutePolicy::SizeClass`]).
+pub(crate) fn size_class(n: usize) -> usize {
     (n.max(1).ilog2() as usize).min(SIZE_CLASSES - 1)
+}
+
+/// The latency reservoir: a ring over the last [`RESERVOIR_CAP`]
+/// samples, advanced by a monotone insertion counter so every record
+/// lands in a fresh slot regardless of its value. (The previous scheme
+/// hashed `latency_us` into the slot index, so constant-latency
+/// traffic rewrote a single slot forever — neither uniform nor fresh.)
+struct Reservoir {
+    samples: Vec<u64>,
+    /// Total records ever seen (not capped).
+    seen: u64,
 }
 
 /// Aggregated service metrics.
@@ -35,7 +48,7 @@ pub struct ServiceMetrics {
     /// Per-size-class simulated cycles / elements (see [`size_class`]).
     class_cycles: Vec<AtomicU64>,
     class_elements: Vec<AtomicU64>,
-    latencies_us: Mutex<Vec<u64>>,
+    latencies_us: Mutex<Reservoir>,
 }
 
 /// Point-in-time view.
@@ -68,6 +81,10 @@ pub struct Snapshot {
     /// class (0.0 for classes with no traffic). Indexed by
     /// `floor(log2(n))`; feeds the chunk-size auto-tuner.
     pub class_cyc_per_num: Vec<f64>,
+    /// Elements served per size class (same indexing). Lets the fleet
+    /// aggregator ([`super::shard::FleetSnapshot`]) weight per-shard
+    /// class costs correctly instead of averaging ratios.
+    pub class_elements: Vec<u64>,
 }
 
 impl Snapshot {
@@ -103,7 +120,10 @@ impl ServiceMetrics {
             merge_comparisons: AtomicU64::new(0),
             class_cycles: (0..SIZE_CLASSES).map(|_| AtomicU64::new(0)).collect(),
             class_elements: (0..SIZE_CLASSES).map(|_| AtomicU64::new(0)).collect(),
-            latencies_us: Mutex::new(Vec::with_capacity(RESERVOIR_CAP)),
+            latencies_us: Mutex::new(Reservoir {
+                samples: Vec::with_capacity(RESERVOIR_CAP),
+                seen: 0,
+            }),
         }
     }
 
@@ -117,13 +137,16 @@ impl ServiceMetrics {
         self.class_cycles[class].fetch_add(stats.cycles(), Ordering::Relaxed);
         self.class_elements[class].fetch_add(n as u64, Ordering::Relaxed);
         let mut lat = self.latencies_us.lock().expect("metrics poisoned");
-        if lat.len() < RESERVOIR_CAP {
-            lat.push(latency_us);
+        if lat.samples.len() < RESERVOIR_CAP {
+            lat.samples.push(latency_us);
         } else {
-            // Simple overwrite sampling keeps the reservoir fresh.
-            let idx = (latency_us as usize ^ lat.len()) % RESERVOIR_CAP;
-            lat[idx] = latency_us;
+            // Ring overwrite on the monotone insertion counter: the
+            // reservoir always holds the freshest RESERVOIR_CAP
+            // samples, and the slot never depends on the value.
+            let idx = (lat.seen % RESERVOIR_CAP as u64) as usize;
+            lat.samples[idx] = latency_us;
         }
+        lat.seen += 1;
     }
 
     pub fn record_error(&self) {
@@ -148,7 +171,7 @@ impl ServiceMetrics {
     }
 
     pub fn snapshot(&self) -> Snapshot {
-        let mut lat = self.latencies_us.lock().expect("metrics poisoned").clone();
+        let mut lat = self.latencies_us.lock().expect("metrics poisoned").samples.clone();
         lat.sort_unstable();
         let pct = |p: f64| -> u64 {
             if lat.is_empty() {
@@ -186,6 +209,11 @@ impl ServiceMetrics {
                     let e = e.load(Ordering::Relaxed);
                     if e == 0 { 0.0 } else { c.load(Ordering::Relaxed) as f64 / e as f64 }
                 })
+                .collect(),
+            class_elements: self
+                .class_elements
+                .iter()
+                .map(|e| e.load(Ordering::Relaxed))
                 .collect(),
         }
     }
@@ -280,6 +308,42 @@ mod tests {
             m.record(i, &stats(1), 1);
         }
         assert_eq!(m.snapshot().completed, RESERVOIR_CAP as u64 + 1000);
-        assert!(m.latencies_us.lock().unwrap().len() <= RESERVOIR_CAP);
+        assert!(m.latencies_us.lock().unwrap().samples.len() <= RESERVOIR_CAP);
+    }
+
+    #[test]
+    fn full_reservoir_spreads_overwrites_across_slots() {
+        // Regression for the biased overwrite: once the reservoir was
+        // full, the slot index was derived from `latency_us` itself, so
+        // constant-latency traffic rewrote one slot forever and the
+        // percentiles stayed frozen on the old samples. The ring must
+        // instead retire every stale sample after CAP further records.
+        let m = ServiceMetrics::new();
+        for _ in 0..RESERVOIR_CAP {
+            m.record(1_000_000, &stats(1), 1); // fill with an old regime
+        }
+        for _ in 0..RESERVOIR_CAP {
+            m.record(5, &stats(1), 1); // constant-latency fresh traffic
+        }
+        let lat = m.latencies_us.lock().unwrap();
+        assert_eq!(lat.samples.len(), RESERVOIR_CAP);
+        assert!(
+            lat.samples.iter().all(|&v| v == 5),
+            "every slot must be overwritten by the fresh regime"
+        );
+        drop(lat);
+        let s = m.snapshot();
+        assert_eq!((s.p50_us, s.p99_us, s.max_us), (5, 5, 5));
+        // Distinct latencies land in distinct slots (insertion order).
+        let m = ServiceMetrics::new();
+        for _ in 0..RESERVOIR_CAP {
+            m.record(0, &stats(1), 1);
+        }
+        for i in 0..16u64 {
+            m.record(100 + i, &stats(1), 1);
+        }
+        let lat = m.latencies_us.lock().unwrap();
+        assert_eq!(&lat.samples[..16], &(100..116).collect::<Vec<u64>>()[..]);
+        assert_eq!(lat.seen, RESERVOIR_CAP as u64 + 16);
     }
 }

@@ -22,6 +22,7 @@
 pub mod hierarchical;
 pub mod metrics;
 pub mod planner;
+pub mod shard;
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -205,6 +206,20 @@ impl SortService {
             let _ = w.join();
         }
     }
+
+    /// Initiate shutdown without consuming the handle or joining the
+    /// workers: queued jobs still drain, every worker exits after its
+    /// shutdown marker, and once the last one is gone the request
+    /// channel closes — `submit` fails and in-flight receivers observe
+    /// a dropped reply. This is the fleet layer's failure-injection /
+    /// shard-retirement hook ([`shard::ShardedSortService::fail_shard`]):
+    /// the shard dies the way a crashed host would, asynchronously,
+    /// while the coordinator keeps the handle for accounting.
+    pub fn halt(&self) {
+        for _ in 0..self.workers.len() {
+            let _ = self.tx.send(Job::Shutdown);
+        }
+    }
 }
 
 /// Build the native simulation engine a worker owns: a single-bank
@@ -314,10 +329,15 @@ pub fn estimate_stats_from_traces(top_cols: &[i32], infos: &[i32]) -> SortStats 
     let mut stats = SortStats::default();
     for (&top, &info) in top_cols.iter().zip(infos) {
         stats.iterations += 1;
-        if info == 0 {
+        // A malformed trace can carry a negative entry (the AOT scan
+        // encodes "no informative column" as -1 in `top_cols`, and a
+        // corrupted artifact could put it in `infos` too). Clamp before
+        // the u64 casts: `(top + 1) as u64` on `top < -1` would wrap to
+        // ~2^64 column reads and poison every aggregate downstream.
+        if info <= 0 {
             stats.drains += 1;
         } else {
-            stats.crs += (top + 1) as u64;
+            stats.crs += (top.max(-1) as i64 + 1) as u64;
             stats.res += info as u64;
             stats.sls += 1;
         }
@@ -425,10 +445,41 @@ mod tests {
 
     #[test]
     fn shutdown_rejects_new_work() {
-        let svc = SortService::start(ServiceConfig::default()).unwrap();
+        let svc = SortService::start(ServiceConfig { workers: 2, ..Default::default() }).unwrap();
+        // Work in flight *before* shutdown is still served: shutdown
+        // drains the queue (the shutdown markers sit behind it).
+        let rx = svc.submit(vec![3u32, 1, 2]).unwrap();
         let tx = svc.tx.clone();
         svc.shutdown();
-        drop(tx); // the handle's channel is gone after shutdown
+        let resp = rx
+            .recv()
+            .expect("in-flight job must be served before the workers exit")
+            .expect("sort succeeds");
+        assert_eq!(resp.sorted, vec![1, 2, 3]);
+        // After shutdown every worker has joined and the receiver side
+        // of the job channel is gone, so new work is observably
+        // rejected — exactly what `submit` maps to its error.
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let rejected = tx.send(Job::Sort(SortRequest { id: 99, data: vec![7] }, reply_tx));
+        assert!(rejected.is_err(), "submitting after shutdown must fail");
+        assert!(reply_rx.recv().is_err(), "no worker may answer after shutdown");
+    }
+
+    #[test]
+    fn halt_closes_the_service_asynchronously() {
+        let svc = SortService::start(ServiceConfig { workers: 2, ..Default::default() }).unwrap();
+        svc.halt();
+        // The workers exit on their own; once the last one is gone the
+        // channel closes and submission fails. Poll unbounded rather
+        // than sleep or count iterations — the exit is guaranteed (the
+        // shutdown markers are already queued), only its timing is not,
+        // and an iteration cap would just turn scheduler jitter into a
+        // flake. At worst the queue fills and `submit` blocks until the
+        // disconnect, which still ends the loop.
+        while svc.submit(vec![1u32]).is_ok() {
+            std::thread::yield_now();
+        }
+        svc.shutdown(); // idempotent: joins the already-exited workers
     }
 
     #[test]
@@ -446,5 +497,25 @@ mod tests {
         assert_eq!(a.crs, 6 + 4);
         assert_eq!(a.drains, 1);
         assert!(a.cycles() >= nat.cycles().min(1)); // trivial lower bound
+    }
+
+    #[test]
+    fn estimate_from_traces_clamps_malformed_negatives() {
+        // Regression: a trace with `top < -1` but `info != 0` used to
+        // wrap `(top + 1) as u64` to ~2^64 column reads. Negative
+        // entries must clamp, and negative `infos` (never emitted by a
+        // healthy artifact) count as drains rather than wrapping `res`.
+        let s = estimate_stats_from_traces(&[-5, -1, 3, i32::MIN], &[2, 4, -7, 1]);
+        assert_eq!(s.iterations, 4);
+        // (-5, 2): top clamps to -1 -> 0 CRs, but the informative count
+        // is honoured; (-1, 4): 0 CRs + 4 REs; (3, -7): drain;
+        // (i32::MIN, 1): clamps to 0 CRs without overflow.
+        assert_eq!(s.crs, 0);
+        assert_eq!(s.res, 2 + 4 + 1);
+        assert_eq!(s.sls, 3);
+        assert_eq!(s.drains, 1);
+        // Every count stays finite/sane: total cycles is bounded by the
+        // trace length times the clamped per-iteration maximum.
+        assert!(s.cycles() < 1_000);
     }
 }

@@ -23,7 +23,8 @@
 use std::ops::Range;
 
 use crate::sorter::merge::{
-    merge_sorted_runs, model_merge_cycles, model_streamed_completion_uniform,
+    merge_sorted_runs, model_merge_cycles, model_sharded_completion,
+    model_streamed_completion_uniform,
 };
 use crate::sorter::{InMemorySorter, SortStats};
 
@@ -97,6 +98,43 @@ impl Plan {
             }
         }
     }
+
+    /// Estimated latency on an `shards`-host fleet under the streaming
+    /// pipeline: chunks are dealt round-robin, every shard drains its
+    /// share through its *own* merge engine in parallel, and one
+    /// top-level merge combines the shard streams
+    /// ([`model_sharded_completion`]). Equals
+    /// [`Plan::estimated_cycles_overlap`] exactly at `shards = 1`; a
+    /// pad fits one bank on one shard, so sharding never changes it.
+    pub fn estimated_cycles_sharded(&self, cyc_per_num: f64, shards: usize) -> f64 {
+        match *self {
+            Plan::Pad { bank, .. } => bank as f64 * cyc_per_num,
+            Plan::ChunkMerge { bank, chunks, fanout, .. } => {
+                let arrival = (bank as f64 * cyc_per_num).round() as u64;
+                model_sharded_completion(chunks, bank, arrival, shards, fanout) as f64
+            }
+        }
+    }
+
+    /// Estimated latency on an `shards`-host fleet under the *barrier*
+    /// schedule: one bank sort (parallel banks), the heaviest shard's
+    /// local merge passes, then the cross-shard merge passes over the
+    /// whole stream. Equals [`Plan::estimated_cycles`] exactly at
+    /// `shards = 1` (the cross-shard stage has a single run: zero
+    /// passes).
+    pub fn estimated_cycles_sharded_barrier(&self, cyc_per_num: f64, shards: usize) -> f64 {
+        assert!(shards >= 1, "a fleet has at least one shard");
+        match *self {
+            Plan::Pad { bank, .. } => bank as f64 * cyc_per_num,
+            Plan::ChunkMerge { bank, chunks, fanout, .. } => {
+                let shards = shards.min(chunks);
+                let heaviest = chunks.div_ceil(shards);
+                bank as f64 * cyc_per_num
+                    + model_merge_cycles(bank * heaviest, heaviest, fanout) as f64
+                    + model_merge_cycles(bank * chunks, shards, fanout) as f64
+            }
+        }
+    }
 }
 
 /// Merge fanouts the auto-tuner enumerates (a hardware fanout-f merge
@@ -114,8 +152,28 @@ pub fn auto_tune(
     n: usize,
     geo: &Geometry,
     streaming: bool,
+    cyc_for: impl FnMut(usize) -> f64,
+) -> (usize, usize) {
+    auto_tune_sharded(n, geo, 1, streaming, cyc_for)
+}
+
+/// [`auto_tune`] with a shard dimension: score every `(bank, fanout)`
+/// candidate for an `shards`-host fleet
+/// ([`Plan::estimated_cycles_sharded`] /
+/// [`Plan::estimated_cycles_sharded_barrier`]) and return the cheapest
+/// pair. At `shards = 1` the scoring models reduce exactly to the
+/// unsharded ones, so this *is* [`auto_tune`] then — the shard count
+/// only reshapes the merge side of the objective (per-shard engines
+/// drain in parallel; the cross-shard tree adds passes past
+/// `shards > fanout`).
+pub fn auto_tune_sharded(
+    n: usize,
+    geo: &Geometry,
+    shards: usize,
+    streaming: bool,
     mut cyc_for: impl FnMut(usize) -> f64,
 ) -> (usize, usize) {
+    assert!(shards >= 1, "a fleet has at least one shard");
     let fallback_fanout = geo.merge_fanout.max(2);
     let largest = *geo.bank_sizes.last().expect("geometry has banks");
     if n == 0 {
@@ -135,9 +193,9 @@ pub fn auto_tune(
         for &fanout in &fanouts {
             let cand = candidate(n, bank, fanout);
             let cost = if streaming {
-                cand.estimated_cycles_overlap(cyc)
+                cand.estimated_cycles_sharded(cyc, shards)
             } else {
-                cand.estimated_cycles(cyc)
+                cand.estimated_cycles_sharded_barrier(cyc, shards)
             };
             if best.is_none_or(|(.., c)| cost < c) {
                 best = Some((bank, fanout, cost));
@@ -462,6 +520,82 @@ mod tests {
         // expensive on this traffic class, the largest bank wins.
         let (bank, _) = auto_tune(3000, &geo, false, |b| if b <= 256 { 1000.0 } else { 0.1 });
         assert_eq!(bank, 1024);
+    }
+
+    #[test]
+    fn sharded_scoring_reduces_to_unsharded_at_one_shard() {
+        for n in [10usize, 17, 1025, 3000, 50_000] {
+            for bank in [16usize, 256, 1024] {
+                for fanout in [2usize, 4, 16] {
+                    let c = candidate(n.max(1), bank, fanout);
+                    for cyc in [0.5, 7.84, 32.0] {
+                        assert_eq!(
+                            c.estimated_cycles_sharded(cyc, 1),
+                            c.estimated_cycles_overlap(cyc),
+                            "n={n} bank={bank} fanout={fanout} cyc={cyc}"
+                        );
+                        assert_eq!(
+                            c.estimated_cycles_sharded_barrier(cyc, 1),
+                            c.estimated_cycles(cyc),
+                            "n={n} bank={bank} fanout={fanout} cyc={cyc}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sharded_overlap_latency_strictly_decreases_at_1m() {
+        // The acceptance criterion: at n = 1M the planner's overlap
+        // scoring must strictly improve from 1 to 4 shards (bank 1024,
+        // fanout 4, nominal 7.84 cyc/num).
+        let c = candidate(1_000_000, 1024, 4);
+        let lat: Vec<f64> = (1..=4).map(|s| c.estimated_cycles_sharded(7.84, s)).collect();
+        assert!(
+            lat.windows(2).all(|w| w[1] < w[0]),
+            "sharded latency must strictly decrease 1 -> 4 shards: {lat:?}"
+        );
+        // Pads are one-bank plans: sharding cannot change their score.
+        let pad = candidate(10, 16, 4);
+        assert_eq!(pad.estimated_cycles_sharded(7.84, 4), pad.estimated_cycles_overlap(7.84));
+        assert_eq!(
+            pad.estimated_cycles_sharded_barrier(7.84, 4),
+            pad.estimated_cycles(7.84)
+        );
+    }
+
+    #[test]
+    fn auto_tune_sharded_matches_brute_force() {
+        let geo = Geometry::default();
+        for shards in [1usize, 2, 4, 8] {
+            for streaming in [true, false] {
+                let (bank, fanout) = auto_tune_sharded(50_000, &geo, shards, streaming, |_| 7.84);
+                let score = |b: usize, f: usize| {
+                    let c = candidate(50_000, b, f);
+                    if streaming {
+                        c.estimated_cycles_sharded(7.84, shards)
+                    } else {
+                        c.estimated_cycles_sharded_barrier(7.84, shards)
+                    }
+                };
+                let picked = score(bank, fanout);
+                for &b in &geo.bank_sizes {
+                    for f in FANOUT_CANDIDATES {
+                        assert!(
+                            picked <= score(b, f),
+                            "shards={shards} streaming={streaming}: \
+                             ({bank},{fanout}) lost to ({b},{f})"
+                        );
+                    }
+                }
+            }
+        }
+        // shards = 1 is auto_tune itself.
+        assert_eq!(
+            auto_tune_sharded(3000, &geo, 1, true, |_| 7.84),
+            auto_tune(3000, &geo, true, |_| 7.84)
+        );
     }
 
     #[test]

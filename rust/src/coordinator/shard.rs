@@ -1,0 +1,847 @@
+//! Fleet layer: one coordinator over N independent [`SortService`]
+//! shards — the "multiple services/hosts" step of the roadmap.
+//!
+//! The paper's §IV multi-bank management scales column-skipping *within*
+//! one simulated host; a [`ShardedSortService`] scales it *across*
+//! hosts. Every shard owns its own worker pool, engine geometry and
+//! metrics (a [`SortService`] is exactly one simulated host), and the
+//! fleet routes work over them:
+//!
+//! * **Routing** — [`RoutePolicy`]: round-robin, least-outstanding
+//!   (live per-shard in-flight accounting), or size-class affinity
+//!   (requests of one log2 size class stick to one shard, which keeps
+//!   that shard's per-class cost observations dense — the auto-tuner's
+//!   food).
+//! * **Error isolation** — a shard whose service has died (its channel
+//!   closed, its workers gone) is marked unhealthy and its work is
+//!   re-routed to the surviving shards instead of failing the request.
+//!   [`ShardedSortService::fail_shard`] retires a shard the way a
+//!   crashed host would ([`SortService::halt`]).
+//! * **Hierarchical sorting** — [`ShardedSortService::sort_hierarchical`]
+//!   routes bank-sized chunks across the fleet and drives the *same*
+//!   [`ChunkAssembly`] as the single-service path, so the output is
+//!   byte-identical by construction (the streaming merge frontier
+//!   consumes run arrivals in chunk order, indifferent to which host
+//!   sorted each chunk). On top it reports the fleet latency model:
+//!   every shard drains its chunks through its own merge engine in
+//!   parallel and a top-level merge combines the shard streams
+//!   ([`crate::sorter::merge::model_sharded_completion`] is the
+//!   planner-side closed form of the same topology).
+//! * **Fleet metrics** — [`FleetSnapshot`] aggregates the per-shard
+//!   [`Snapshot`]s: totals, per-shard latency percentiles, and the
+//!   shard imbalance ratio (max/mean elements served).
+//!
+//! No RPC yet — shards are in-process hosts, which is what makes the
+//! byte-identity property testable today; the boundary is deliberately
+//! shaped so a later PR can put a wire where the `Vec<Shard>` is.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc;
+
+use anyhow::{anyhow, Result};
+
+use super::hierarchical::{Capacity, ChunkAssembly, HierarchicalConfig, HierarchicalOutput};
+use super::metrics::{size_class, ServiceMetrics, Snapshot};
+use super::planner::{auto_tune_sharded, partition};
+use super::{ServiceConfig, SortResponse, SortService};
+use crate::sorter::merge::{model_merge_cycles, model_streamed_completion};
+
+/// How the fleet routes a request (or a hierarchical chunk) to a shard.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Cycle through the healthy shards in order.
+    RoundRobin,
+    /// Pick the healthy shard with the fewest in-flight jobs (ties:
+    /// lowest shard id) — the classic join-shortest-queue heuristic.
+    LeastOutstanding,
+    /// Pin each log2 size class to a home shard, so a shard keeps
+    /// seeing the classes it has already calibrated per-class costs
+    /// for. Applies per *request*; a hierarchical sort's chunk fan-out
+    /// additionally offsets by chunk index (all chunks of one sort
+    /// share a size class, and affinity must not serialize the fleet's
+    /// parallel drains onto one host).
+    SizeClass,
+}
+
+impl RoutePolicy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "round" | "round-robin" | "rr" => Some(RoutePolicy::RoundRobin),
+            "least" | "least-outstanding" => Some(RoutePolicy::LeastOutstanding),
+            "class" | "size-class" => Some(RoutePolicy::SizeClass),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RoutePolicy::RoundRobin => "round-robin",
+            RoutePolicy::LeastOutstanding => "least-outstanding",
+            RoutePolicy::SizeClass => "size-class",
+        }
+    }
+
+    /// Every policy, for sweeps and property tests.
+    pub const ALL: [RoutePolicy; 3] =
+        [RoutePolicy::RoundRobin, RoutePolicy::LeastOutstanding, RoutePolicy::SizeClass];
+}
+
+/// Fleet configuration: `shards` identical hosts started from the
+/// `service` template, routed by `route`.
+#[derive(Clone, Debug)]
+pub struct ShardedConfig {
+    /// Number of shards (independent hosts).
+    pub shards: usize,
+    /// Routing policy.
+    pub route: RoutePolicy,
+    /// Per-shard service template (worker pool, engine, geometry, …).
+    pub service: ServiceConfig,
+}
+
+impl Default for ShardedConfig {
+    fn default() -> Self {
+        ShardedConfig {
+            shards: 2,
+            route: RoutePolicy::RoundRobin,
+            service: ServiceConfig::default(),
+        }
+    }
+}
+
+/// One shard: a service plus the fleet-side accounting around it.
+struct Shard {
+    service: SortService,
+    /// Jobs submitted to this shard and not yet answered.
+    outstanding: AtomicU64,
+    /// Cleared when the shard's service is observed dead (submit or
+    /// reply channel closed); routing skips unhealthy shards.
+    healthy: AtomicBool,
+    /// Requests/chunks this fleet re-routed *away* from this shard.
+    rerouted_from: AtomicU64,
+}
+
+/// Aggregated view over the fleet: totals across shards, the per-shard
+/// snapshots (each carrying its own p50/p99), and the imbalance ratio.
+#[derive(Clone, Debug)]
+pub struct FleetSnapshot {
+    /// Per-shard metric snapshots, indexed by shard id.
+    pub shards: Vec<Snapshot>,
+    /// Per-shard health at snapshot time.
+    pub healthy: Vec<bool>,
+    /// Completed requests across the fleet.
+    pub completed: u64,
+    /// Errors across the fleet.
+    pub errors: u64,
+    /// Elements sorted across the fleet.
+    pub elements: u64,
+    /// Simulated near-memory cycles across the fleet.
+    pub sim_cycles: u64,
+    /// Hierarchical sorts completed at the fleet level.
+    pub hier_completed: u64,
+    /// Elements through the fleet's hierarchical pipeline.
+    pub hier_elements: u64,
+    /// Chunks the fleet's hierarchical sorts fanned out.
+    pub hier_chunks: u64,
+    /// Modelled merge-network cycles of fleet hierarchical sorts.
+    pub merge_cycles: u64,
+    /// Comparator ops of fleet hierarchical sorts.
+    pub merge_comparisons: u64,
+    /// Times the router observed a dead shard and moved work off it
+    /// since the fleet started.
+    pub rerouted: u64,
+    /// Worst per-shard p50 (µs) — the fleet's slow-median shard.
+    pub p50_us: u64,
+    /// Worst per-shard p99 (µs).
+    pub p99_us: u64,
+    /// Shard imbalance: max elements served by one shard over the
+    /// per-shard mean. 1.0 = perfectly balanced; grows as routing
+    /// skews. 1.0 when the fleet has served nothing.
+    pub imbalance: f64,
+    /// Mean simulated cycles per element across the fleet.
+    pub cycles_per_number: f64,
+}
+
+impl FleetSnapshot {
+    /// Observed cycles/number for `n`'s size class, element-weighted
+    /// across every shard's per-class observations, falling back to the
+    /// fleet-wide average and then to `fallback` — the fleet analogue
+    /// of [`Snapshot::cyc_per_num_for`], feeding the sharded
+    /// auto-tuner.
+    pub fn cyc_per_num_for(&self, n: usize, fallback: f64) -> f64 {
+        let class = size_class(n);
+        let (mut cycles, mut elems) = (0.0f64, 0u64);
+        for s in &self.shards {
+            let e = s.class_elements[class];
+            cycles += s.class_cyc_per_num[class] * e as f64;
+            elems += e;
+        }
+        if elems > 0 {
+            cycles / elems as f64
+        } else if self.elements > 0 {
+            self.sim_cycles as f64 / self.elements as f64
+        } else {
+            fallback
+        }
+    }
+}
+
+/// Result of one fleet hierarchical sort: the single-service-identical
+/// pipeline output plus the shard-level view.
+#[derive(Clone, Debug)]
+pub struct ShardedOutput {
+    /// The assembled pipeline result — byte-identical (values, argsort,
+    /// per-chunk stats, merge accounting) to
+    /// [`SortService::sort_hierarchical`] on one host.
+    pub hier: HierarchicalOutput,
+    /// Which shard served each chunk (after any re-routing).
+    pub assignments: Vec<usize>,
+    /// Chunks served per shard.
+    pub shard_chunks: Vec<usize>,
+    /// Chunks re-routed off a failed shard during this sort.
+    pub rerouted: u64,
+    /// Fleet latency model over the *actual* per-chunk cycles, under
+    /// the schedule that ran: each shard drains its chunks through its
+    /// own merge engine (streaming: [`model_streamed_completion`] per
+    /// shard; barrier: slowest arrival + that shard's merge passes),
+    /// and a top-level merge combines the shard streams the same way.
+    /// With one shard this equals `hier.latency_cycles` exactly.
+    pub sharded_latency_cycles: u64,
+}
+
+impl ShardedOutput {
+    /// Cycles the fleet topology saves over the single-engine schedule
+    /// of the mode that ran, as a fraction of the latter (0 with one
+    /// shard; can be negative when the cross-shard merge pass costs
+    /// more than the parallel drains save, e.g. many shards at a small
+    /// fanout).
+    pub fn fleet_saving(&self) -> f64 {
+        if self.hier.latency_cycles == 0 {
+            0.0
+        } else {
+            1.0 - self.sharded_latency_cycles as f64 / self.hier.latency_cycles as f64
+        }
+    }
+}
+
+/// Handle to a running fleet.
+pub struct ShardedSortService {
+    shards: Vec<Shard>,
+    route: RoutePolicy,
+    rr: AtomicU64,
+    /// Fleet-level pipeline counters (per-shard chunk work lives in the
+    /// shards' own metrics).
+    fleet: ServiceMetrics,
+    config: ShardedConfig,
+}
+
+impl ShardedSortService {
+    /// Start `config.shards` independent services.
+    pub fn start(config: ShardedConfig) -> Result<Self> {
+        assert!(config.shards >= 1, "a fleet has at least one shard");
+        let shards = (0..config.shards)
+            .map(|_| {
+                Ok(Shard {
+                    service: SortService::start(config.service.clone())?,
+                    outstanding: AtomicU64::new(0),
+                    healthy: AtomicBool::new(true),
+                    rerouted_from: AtomicU64::new(0),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ShardedSortService {
+            shards,
+            route: config.route,
+            rr: AtomicU64::new(0),
+            fleet: ServiceMetrics::new(),
+            config,
+        })
+    }
+
+    /// The fleet configuration.
+    pub fn config(&self) -> &ShardedConfig {
+        &self.config
+    }
+
+    /// Number of shards (healthy or not).
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Shards currently accepting work.
+    pub fn healthy_count(&self) -> usize {
+        self.shards.iter().filter(|s| s.healthy.load(Ordering::Relaxed)).count()
+    }
+
+    /// Retire shard `i` the way a crashed host would: its workers are
+    /// told to exit ([`SortService::halt`]) and routing stops offering
+    /// it work immediately. In-flight jobs on it either drain (they
+    /// were queued ahead of the halt) or surface as dropped replies,
+    /// which the fleet re-routes.
+    pub fn fail_shard(&self, i: usize) {
+        assert!(i < self.shards.len(), "shard {i} out of range");
+        self.shards[i].healthy.store(false, Ordering::Relaxed);
+        self.shards[i].service.halt();
+    }
+
+    /// Pick a shard for a request of `len` elements under the policy,
+    /// skipping unhealthy shards. `offset` distinguishes the chunks of
+    /// one hierarchical fan-out (0 for plain requests): round-robin and
+    /// least-outstanding ignore it, size-class affinity adds it to the
+    /// class's home shard so one sort's same-class chunks still spread.
+    /// `None` when the whole fleet is down.
+    fn route_for(&self, len: usize, offset: usize) -> Option<usize> {
+        let healthy: Vec<usize> = (0..self.shards.len())
+            .filter(|&i| self.shards[i].healthy.load(Ordering::Relaxed))
+            .collect();
+        if healthy.is_empty() {
+            return None;
+        }
+        let pick = match self.route {
+            RoutePolicy::RoundRobin => {
+                healthy[(self.rr.fetch_add(1, Ordering::Relaxed) % healthy.len() as u64) as usize]
+            }
+            RoutePolicy::LeastOutstanding => *healthy
+                .iter()
+                .min_by_key(|&&i| (self.shards[i].outstanding.load(Ordering::Relaxed), i))
+                .expect("non-empty"),
+            RoutePolicy::SizeClass => healthy[(size_class(len) + offset) % healthy.len()],
+        };
+        Some(pick)
+    }
+
+    /// Route and submit one job, failing over to surviving shards when
+    /// a submit hits a dead service (each failover bumps `rerouted`).
+    /// Returns the serving shard id and the response receiver; the
+    /// caller owns the outstanding decrement (via [`Self::settle`]).
+    fn submit_routed(
+        &self,
+        data: &[u32],
+        offset: usize,
+        rerouted: &mut u64,
+    ) -> Result<(usize, mpsc::Receiver<Result<SortResponse>>)> {
+        let mut tries = 0u64;
+        loop {
+            let Some(sid) = self.route_for(data.len(), offset) else {
+                return Err(anyhow!("every shard is down"));
+            };
+            match self.shards[sid].service.submit(data.to_vec()) {
+                Ok(rx) => {
+                    self.shards[sid].outstanding.fetch_add(1, Ordering::Relaxed);
+                    *rerouted += tries;
+                    return Ok((sid, rx));
+                }
+                Err(_) => {
+                    // The shard's channel is closed: a dead host.
+                    // Isolate it and try the next healthy shard.
+                    self.mark_dead(sid);
+                    tries += 1;
+                }
+            }
+        }
+    }
+
+    fn mark_dead(&self, sid: usize) {
+        self.shards[sid].healthy.store(false, Ordering::Relaxed);
+        self.shards[sid].rerouted_from.fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn settle(&self, sid: usize) {
+        self.shards[sid].outstanding.fetch_sub(1, Ordering::Relaxed);
+    }
+
+    /// Wait for one routed job, re-routing off every shard that dies
+    /// with the job in flight (`rerouted` counts the hops). Settles the
+    /// outstanding count of each shard tried, on every exit path.
+    fn recv_rerouted(
+        &self,
+        mut sid: usize,
+        mut rx: mpsc::Receiver<Result<SortResponse>>,
+        data: &[u32],
+        offset: usize,
+        rerouted: &mut u64,
+    ) -> Result<(usize, SortResponse)> {
+        loop {
+            match rx.recv() {
+                Ok(resp) => {
+                    self.settle(sid);
+                    return resp.map(|r| (sid, r));
+                }
+                Err(_) => {
+                    // The worker vanished under the job: dead host.
+                    self.settle(sid);
+                    self.mark_dead(sid);
+                    *rerouted += 1;
+                    (sid, rx) = self.submit_routed(data, offset, rerouted)?;
+                }
+            }
+        }
+    }
+
+    /// Submit one request and wait, re-routing off a shard that dies
+    /// with the job in flight.
+    pub fn submit_wait(&self, data: Vec<u32>) -> Result<SortResponse> {
+        let mut rerouted = 0;
+        let (sid, rx) = self.submit_routed(&data, 0, &mut rerouted)?;
+        self.recv_rerouted(sid, rx, &data, 0, &mut rerouted).map(|(_, resp)| resp)
+    }
+
+    /// Sort through the hierarchical pipeline across the fleet: route
+    /// bank-sized chunks over the shards, absorb the responses into the
+    /// shared [`ChunkAssembly`] (byte-identical to the single-service
+    /// path), re-routing chunks off any shard that dies mid-flight.
+    pub fn sort_hierarchical(
+        &self,
+        data: &[u32],
+        cfg: &HierarchicalConfig,
+    ) -> Result<ShardedOutput> {
+        assert!(cfg.fanout >= 2, "merge fanout must be at least 2");
+        let n = data.len();
+        let (capacity, fanout) = self.resolve_chunking(n, cfg);
+        assert!(capacity >= 1, "bank capacity must be positive");
+        let mut asm = ChunkAssembly::new(partition(n, capacity), fanout, cfg.streaming);
+        let chunks = asm.spans().len();
+
+        // Fan every chunk out across the fleet up front (parallel
+        // hosts), recording the routed shard per chunk. On any error —
+        // here or while collecting — the outstanding count of every
+        // still-pending chunk is settled before returning, so a failed
+        // sort can never skew LeastOutstanding routing for later work.
+        let spans: Vec<std::ops::Range<usize>> = asm.spans().to_vec();
+        let mut pending = Vec::with_capacity(chunks);
+        let mut assignments = Vec::with_capacity(chunks);
+        let mut rerouted = 0u64;
+        let fanned: Result<()> = spans.iter().enumerate().try_for_each(|(i, span)| {
+            pending.push(Some(self.submit_routed(&data[span.clone()], i, &mut rerouted)?));
+            Ok(())
+        });
+        // Collect in chunk order; a dropped reply means the serving
+        // shard died — `recv_rerouted` moves that chunk to a survivor
+        // instead of failing the sort.
+        let collected: Result<()> = fanned.and_then(|()| {
+            for (i, slot) in pending.iter_mut().enumerate() {
+                let (sid, rx) = slot.take().expect("fan-out filled every slot");
+                let (served, resp) =
+                    self.recv_rerouted(sid, rx, &data[spans[i].clone()], i, &mut rerouted)?;
+                assignments.push(served);
+                asm.absorb(i, &resp)?;
+            }
+            Ok(())
+        });
+        if let Err(e) = collected {
+            for (sid, _rx) in pending.into_iter().flatten() {
+                self.settle(sid);
+            }
+            return Err(e);
+        }
+
+        // Fleet latency model over the actual per-chunk cycles, under
+        // the schedule that ran: each shard's own merge engine drains
+        // its chunks (in assignment order), then the top-level merge
+        // combines the shard streams the same way.
+        let mut per_shard: Vec<Vec<(u64, usize)>> = vec![Vec::new(); self.shards.len()];
+        for (leaf, &sid) in asm.arrivals().iter().zip(&assignments) {
+            per_shard[sid].push(*leaf);
+        }
+        let shard_chunks: Vec<usize> = per_shard.iter().map(Vec::len).collect();
+        let active: Vec<&Vec<(u64, usize)>> =
+            per_shard.iter().filter(|leaves| !leaves.is_empty()).collect();
+        let sharded_latency_cycles = if cfg.streaming {
+            let shard_streams: Vec<(u64, usize)> = active
+                .iter()
+                .map(|leaves| {
+                    (
+                        model_streamed_completion(leaves, fanout),
+                        leaves.iter().map(|&(_, l)| l).sum(),
+                    )
+                })
+                .collect();
+            model_streamed_completion(&shard_streams, fanout)
+        } else {
+            // Barrier fleet: every shard barriers on its own chunks,
+            // then the cross-shard merge barriers on the shard streams.
+            // Reduces to `hier.barrier_latency_cycles` at one shard
+            // (the cross-shard stage has a single run: zero passes).
+            let worst = active
+                .iter()
+                .map(|leaves| {
+                    let arrival = leaves.iter().map(|&(a, _)| a).max().unwrap_or(0);
+                    let len: usize = leaves.iter().map(|&(_, l)| l).sum();
+                    arrival + model_merge_cycles(len, leaves.len(), fanout)
+                })
+                .max()
+                .unwrap_or(0);
+            worst + model_merge_cycles(n, active.len(), fanout)
+        };
+
+        let out = asm.finish(&self.config.service, capacity);
+        self.fleet.record_hierarchical(n, chunks, out.merge.cycles, out.merge.comparisons);
+
+        Ok(ShardedOutput {
+            hier: out,
+            assignments,
+            shard_chunks,
+            rerouted,
+            sharded_latency_cycles,
+        })
+    }
+
+    /// Resolve the `(bank capacity, merge fanout)` a fleet hierarchical
+    /// sort will use: fixed from the config, or auto-tuned with the
+    /// shard dimension ([`auto_tune_sharded`]) at the element-weighted
+    /// per-class costs the fleet has observed. The tuner scores the
+    /// *healthy* shard count — a degraded fleet must not pick a plan
+    /// whose parallelism retired with its dead shards.
+    pub fn resolve_chunking(&self, n: usize, cfg: &HierarchicalConfig) -> (usize, usize) {
+        match cfg.capacity {
+            Capacity::Fixed(c) => (c, cfg.fanout),
+            Capacity::Auto => {
+                let snap = self.fleet_metrics();
+                auto_tune_sharded(
+                    n,
+                    &self.config.service.geometry,
+                    self.healthy_count().max(1),
+                    cfg.streaming,
+                    |bank| snap.cyc_per_num_for(bank, crate::params::NOMINAL_COLSKIP_CYC_PER_NUM),
+                )
+            }
+        }
+    }
+
+    /// Aggregate fleet metrics: totals, per-shard snapshots, imbalance.
+    pub fn fleet_metrics(&self) -> FleetSnapshot {
+        let snaps: Vec<Snapshot> = self.shards.iter().map(|s| s.service.metrics()).collect();
+        let healthy: Vec<bool> =
+            self.shards.iter().map(|s| s.healthy.load(Ordering::Relaxed)).collect();
+        let fleet = self.fleet.snapshot();
+        let completed = snaps.iter().map(|s| s.completed).sum();
+        let errors = snaps.iter().map(|s| s.errors).sum();
+        let elements: u64 = snaps.iter().map(|s| s.elements).sum();
+        let sim_cycles: u64 = snaps.iter().map(|s| s.sim_cycles).sum();
+        let max_elements = snaps.iter().map(|s| s.elements).max().unwrap_or(0);
+        let mean_elements = elements as f64 / self.shards.len() as f64;
+        FleetSnapshot {
+            healthy,
+            completed,
+            errors,
+            elements,
+            sim_cycles,
+            hier_completed: fleet.hier_completed,
+            hier_elements: fleet.hier_elements,
+            hier_chunks: fleet.hier_chunks,
+            merge_cycles: fleet.merge_cycles,
+            merge_comparisons: fleet.merge_comparisons,
+            rerouted: self
+                .shards
+                .iter()
+                .map(|s| s.rerouted_from.load(Ordering::Relaxed))
+                .sum(),
+            p50_us: snaps.iter().map(|s| s.p50_us).max().unwrap_or(0),
+            p99_us: snaps.iter().map(|s| s.p99_us).max().unwrap_or(0),
+            imbalance: if elements == 0 { 1.0 } else { max_elements as f64 / mean_elements },
+            cycles_per_number: if elements == 0 {
+                0.0
+            } else {
+                sim_cycles as f64 / elements as f64
+            },
+            shards: snaps,
+        }
+    }
+
+    /// Graceful shutdown of every shard.
+    pub fn shutdown(self) {
+        for shard in self.shards {
+            shard.service.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{Dataset, DatasetKind};
+
+    fn fleet(shards: usize, route: RoutePolicy) -> ShardedSortService {
+        ShardedSortService::start(ShardedConfig {
+            shards,
+            route,
+            service: ServiceConfig { workers: 2, ..Default::default() },
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn routes_and_sorts_across_shards() {
+        for route in RoutePolicy::ALL {
+            let f = fleet(3, route);
+            for seed in 0..6u64 {
+                let d = Dataset::generate32(DatasetKind::Uniform, 64, seed);
+                let resp = f.submit_wait(d.values.clone()).unwrap();
+                let mut expect = d.values;
+                expect.sort_unstable();
+                assert_eq!(resp.sorted, expect, "{route:?}");
+            }
+            let m = f.fleet_metrics();
+            assert_eq!(m.completed, 6, "{route:?}");
+            assert_eq!(m.errors, 0);
+            if route == RoutePolicy::RoundRobin {
+                // 6 equal requests over 3 shards: perfectly balanced.
+                assert!(m.shards.iter().all(|s| s.completed == 2), "{route:?}");
+                assert!((m.imbalance - 1.0).abs() < 1e-12, "{}", m.imbalance);
+            }
+            if route == RoutePolicy::SizeClass {
+                // One size class: everything pins to one shard.
+                assert_eq!(m.shards.iter().filter(|s| s.completed > 0).count(), 1);
+                assert!((m.imbalance - 3.0).abs() < 1e-12, "{}", m.imbalance);
+            }
+            f.shutdown();
+        }
+    }
+
+    #[test]
+    fn sharded_hierarchical_matches_single_service() {
+        let single =
+            SortService::start(ServiceConfig { workers: 2, ..Default::default() }).unwrap();
+        let d = Dataset::generate32(DatasetKind::MapReduce, 3000, 17);
+        let cfg = HierarchicalConfig::fixed(256, 4);
+        let reference = single.sort_hierarchical(&d.values, &cfg).unwrap();
+        for shards in [1usize, 2, 4] {
+            for route in RoutePolicy::ALL {
+                let f = fleet(shards, route);
+                let out = f.sort_hierarchical(&d.values, &cfg).unwrap();
+                assert_eq!(out.hier.output.sorted, reference.output.sorted);
+                assert_eq!(out.hier.output.order, reference.output.order);
+                assert_eq!(out.hier.output.stats, reference.output.stats);
+                assert_eq!(out.hier.chunk_stats, reference.chunk_stats);
+                assert_eq!(out.hier.merge.comparisons, reference.merge.comparisons);
+                assert_eq!(out.hier.merge.passes, reference.merge.passes);
+                assert_eq!(out.hier.streamed_latency_cycles, reference.streamed_latency_cycles);
+                assert_eq!(out.hier.barrier_latency_cycles, reference.barrier_latency_cycles);
+                assert_eq!(out.assignments.len(), reference.chunks());
+                assert_eq!(out.shard_chunks.iter().sum::<usize>(), reference.chunks());
+                assert_eq!(out.rerouted, 0);
+                if shards == 1 {
+                    // One shard is one host: the fleet model degenerates
+                    // to the single-engine streamed schedule exactly.
+                    assert_eq!(out.sharded_latency_cycles, reference.streamed_latency_cycles);
+                    assert_eq!(out.fleet_saving(), 0.0);
+                }
+                f.shutdown();
+            }
+        }
+        single.shutdown();
+    }
+
+    #[test]
+    fn failed_shard_reroutes_chunks() {
+        let f = fleet(2, RoutePolicy::RoundRobin);
+        // Kill shard 1 and wait until its service observably rejects
+        // work (the halt drains asynchronously).
+        f.fail_shard(1);
+        while f.shards[1].service.submit(vec![1u32]).is_ok() {
+            std::thread::yield_now();
+        }
+        assert_eq!(f.healthy_count(), 1);
+        let d = Dataset::generate32(DatasetKind::Clustered, 1500, 5);
+        let out = f.sort_hierarchical(&d.values, &HierarchicalConfig::fixed(128, 4)).unwrap();
+        let mut expect = d.values.clone();
+        expect.sort_unstable();
+        assert_eq!(out.hier.output.sorted, expect);
+        // Every chunk landed on the survivor.
+        assert!(out.assignments.iter().all(|&s| s == 0), "{:?}", out.assignments);
+        assert_eq!(out.shard_chunks, vec![12, 0]);
+        // Plain requests keep working too.
+        let resp = f.submit_wait(d.values.clone()).unwrap();
+        assert_eq!(resp.sorted, expect);
+        f.shutdown();
+    }
+
+    #[test]
+    fn inflight_shard_death_is_rerouted_not_fatal() {
+        // Submit directly to a shard that is about to die, then let the
+        // fleet's recv path observe the dropped reply and re-route.
+        let f = fleet(2, RoutePolicy::LeastOutstanding);
+        f.fail_shard(0);
+        while f.shards[0].service.submit(vec![1u32]).is_ok() {
+            std::thread::yield_now();
+        }
+        // Undo the health mark so the router *tries* the dead shard:
+        // this simulates a host that died without telling anyone.
+        f.shards[0].healthy.store(true, Ordering::Relaxed);
+        let d = Dataset::generate32(DatasetKind::Kruskal, 600, 9);
+        let out = f.sort_hierarchical(&d.values, &HierarchicalConfig::fixed(64, 2)).unwrap();
+        let mut expect = d.values.clone();
+        expect.sort_unstable();
+        assert_eq!(out.hier.output.sorted, expect);
+        // The dead shard was tried (submit fails fast now, so chunks
+        // fail over at submit time) and everything ran on shard 1.
+        assert!(out.assignments.iter().all(|&s| s == 1), "{:?}", out.assignments);
+        assert_eq!(f.healthy_count(), 1, "the dead shard must be re-isolated");
+        assert!(out.rerouted >= 1, "submit-time failovers count in the per-sort view");
+        let m = f.fleet_metrics();
+        assert!(m.rerouted >= 1, "the failover must be accounted fleet-wide");
+        f.shutdown();
+    }
+
+    #[test]
+    fn whole_fleet_down_is_an_error() {
+        let f = fleet(2, RoutePolicy::RoundRobin);
+        f.fail_shard(0);
+        f.fail_shard(1);
+        assert_eq!(f.healthy_count(), 0);
+        assert!(f.submit_wait(vec![1, 2, 3]).is_err());
+        assert!(f
+            .sort_hierarchical(&[5, 4, 3, 2, 1], &HierarchicalConfig::fixed(2, 2))
+            .is_err());
+        f.shutdown();
+    }
+
+    #[test]
+    fn fleet_metrics_aggregate_across_shards() {
+        let f = fleet(2, RoutePolicy::RoundRobin);
+        // Four plain requests round-robin across both shards.
+        for seed in 0..4u64 {
+            let d = Dataset::generate32(DatasetKind::MapReduce, 256, seed);
+            f.submit_wait(d.values).unwrap();
+        }
+        // One hierarchical sort on top.
+        let d = Dataset::generate32(DatasetKind::MapReduce, 1000, 7);
+        f.sort_hierarchical(&d.values, &HierarchicalConfig::fixed(128, 4)).unwrap();
+        let m = f.fleet_metrics();
+        // Totals are the per-shard sums.
+        assert_eq!(m.completed, m.shards.iter().map(|s| s.completed).sum::<u64>());
+        assert_eq!(m.elements, m.shards.iter().map(|s| s.elements).sum::<u64>());
+        assert_eq!(m.sim_cycles, m.shards.iter().map(|s| s.sim_cycles).sum::<u64>());
+        assert_eq!(m.completed, 4 + 8, "4 requests + 8 chunks");
+        assert_eq!(m.elements, 4 * 256 + 1000);
+        // Fleet-level pipeline counters.
+        assert_eq!(m.hier_completed, 1);
+        assert_eq!(m.hier_elements, 1000);
+        assert_eq!(m.hier_chunks, 8);
+        assert!(m.merge_cycles > 0 && m.merge_comparisons > 0);
+        // Percentiles are the worst shard's.
+        assert_eq!(m.p99_us, m.shards.iter().map(|s| s.p99_us).max().unwrap());
+        // Both shards served work and the ratio is sane.
+        assert!(m.shards.iter().all(|s| s.completed > 0));
+        assert!(m.imbalance >= 1.0 && m.imbalance <= 2.0, "{}", m.imbalance);
+        // The weighted per-class cost equals what one service observing
+        // the same traffic would compute: both shards saw 256-element
+        // requests, so the class estimate is their element-weighted mean.
+        let fleet_cyc = m.cyc_per_num_for(256, 7.84);
+        let (mut c, mut e) = (0.0, 0u64);
+        for s in &m.shards {
+            let cls = crate::coordinator::metrics::size_class(256);
+            c += s.class_cyc_per_num[cls] * s.class_elements[cls] as f64;
+            e += s.class_elements[cls];
+        }
+        assert!((fleet_cyc - c / e as f64).abs() < 1e-12);
+        assert!(fleet_cyc > 0.0);
+        f.shutdown();
+    }
+
+    #[test]
+    fn least_outstanding_balances_like_round_robin_on_uniform_load() {
+        // With synchronous submit_wait the outstanding counts are zero
+        // at every routing decision, so the tie-break applies: ties go
+        // to the lowest shard id and a sequential stream pins to shard
+        // 0.
+        let f = fleet(3, RoutePolicy::LeastOutstanding);
+        for seed in 0..3u64 {
+            let d = Dataset::generate32(DatasetKind::Uniform, 32, seed);
+            f.submit_wait(d.values).unwrap();
+        }
+        let m = f.fleet_metrics();
+        assert_eq!(m.shards[0].completed, 3, "sequential ties pin to shard 0");
+        // A hierarchical sort fans out *before* collecting, so the
+        // outstanding counts differentiate and spread the chunks.
+        let d = Dataset::generate32(DatasetKind::MapReduce, 900, 3);
+        let out = f.sort_hierarchical(&d.values, &HierarchicalConfig::fixed(100, 4)).unwrap();
+        let served: Vec<usize> =
+            out.shard_chunks.iter().filter(|&&c| c > 0).copied().collect();
+        assert_eq!(served.iter().sum::<usize>(), 9);
+        assert_eq!(out.shard_chunks, vec![3, 3, 3], "9 chunks spread 3/3/3");
+        f.shutdown();
+    }
+
+    #[test]
+    fn barrier_mode_fleet_model_follows_the_barrier_schedule() {
+        // `sharded_latency_cycles` must model the schedule that ran:
+        // under barrier configs, per-shard barrier + cross-shard
+        // barrier — not the streaming overlap.
+        let d = Dataset::generate32(DatasetKind::Uniform, 1000, 11);
+        let cfg = HierarchicalConfig::barrier(128, 4);
+        // One shard degenerates to the flat barrier latency exactly.
+        let f1 = fleet(1, RoutePolicy::RoundRobin);
+        let o1 = f1.sort_hierarchical(&d.values, &cfg).unwrap();
+        assert!(!o1.hier.streaming);
+        assert_eq!(o1.sharded_latency_cycles, o1.hier.barrier_latency_cycles);
+        assert_eq!(o1.fleet_saving(), 0.0);
+        f1.shutdown();
+        // Two shards: recompute the two-tier barrier model by hand
+        // from the per-chunk stats and assignments.
+        let f = fleet(2, RoutePolicy::RoundRobin);
+        let out = f.sort_hierarchical(&d.values, &cfg).unwrap();
+        let lens: Vec<usize> = (0..out.hier.chunks()).map(|i| (1000 - i * 128).min(128)).collect();
+        let mut leaves = vec![Vec::new(); 2];
+        for (i, (s, &sid)) in out.hier.chunk_stats.iter().zip(&out.assignments).enumerate() {
+            leaves[sid].push((s.cycles(), lens[i]));
+        }
+        let worst = leaves
+            .iter()
+            .filter(|l| !l.is_empty())
+            .map(|l| {
+                let arrival = l.iter().map(|&(a, _)| a).max().unwrap();
+                let len: usize = l.iter().map(|&(_, x)| x).sum();
+                arrival + crate::sorter::merge::model_merge_cycles(len, l.len(), 4)
+            })
+            .max()
+            .unwrap();
+        let expect = worst + crate::sorter::merge::model_merge_cycles(1000, 2, 4);
+        assert_eq!(out.sharded_latency_cycles, expect);
+        f.shutdown();
+    }
+
+    #[test]
+    fn size_class_affinity_still_spreads_chunk_fanout() {
+        // All chunks of one hierarchical sort share a size class; the
+        // chunk-index offset must keep the fan-out parallel instead of
+        // serializing the whole sort onto the class's home shard.
+        let f = fleet(4, RoutePolicy::SizeClass);
+        let d = Dataset::generate32(DatasetKind::MapReduce, 1024 * 8, 3);
+        let out = f.sort_hierarchical(&d.values, &HierarchicalConfig::fixed(1024, 4)).unwrap();
+        assert_eq!(out.shard_chunks, vec![2, 2, 2, 2], "8 equal chunks spread 2/2/2/2");
+        // Plain requests keep pure affinity: one class, one shard.
+        for seed in 0..3u64 {
+            f.submit_wait(Dataset::generate32(DatasetKind::Uniform, 64, seed).values).unwrap();
+        }
+        let m = f.fleet_metrics();
+        let plain: Vec<u64> = m.shards.iter().map(|s| s.completed).collect();
+        // 8 chunk jobs spread evenly + 3 same-class requests pinned to
+        // one shard.
+        assert_eq!(plain.iter().sum::<u64>(), 8 + 3);
+        assert_eq!(plain.iter().filter(|&&c| c >= 5).count(), 1, "{plain:?}");
+        f.shutdown();
+    }
+
+    #[test]
+    fn auto_capacity_uses_the_shard_dimension() {
+        use crate::coordinator::planner::auto_tune_sharded;
+        use crate::params::NOMINAL_COLSKIP_CYC_PER_NUM;
+        let f = fleet(4, RoutePolicy::RoundRobin);
+        let cfg = HierarchicalConfig::auto();
+        let n = 50_000usize;
+        let (bank, fanout) = f.resolve_chunking(n, &cfg);
+        let expect = auto_tune_sharded(
+            n,
+            &f.config().service.geometry,
+            4,
+            true,
+            |_| NOMINAL_COLSKIP_CYC_PER_NUM,
+        );
+        assert_eq!((bank, fanout), expect);
+        let d = Dataset::generate32(DatasetKind::MapReduce, n, 3);
+        let out = f.sort_hierarchical(&d.values, &cfg).unwrap();
+        assert_eq!(out.hier.capacity, bank);
+        assert_eq!(out.hier.merge.fanout, fanout);
+        f.shutdown();
+    }
+}

@@ -9,9 +9,11 @@
 //!   the column-skipping sort algorithm, multi-bank management, the
 //!   HPCA'21 bit-traversal baseline, a digital merge-sorter comparison
 //!   point, dataset generators, a calibrated 40nm area/power/energy cost
-//!   model, a multi-threaded sort service, and a hierarchical out-of-bank
+//!   model, a multi-threaded sort service, a hierarchical out-of-bank
 //!   pipeline (chunk → column-skip → k-way loser-tree merge) that sorts
-//!   datasets far beyond one array's capacity.
+//!   datasets far beyond one array's capacity, and a shard layer
+//!   ([`coordinator::shard`]) that routes that pipeline across a fleet
+//!   of independent service hosts.
 //! * **L2/L1 (python/, build-time only)** — the in-memory *array compute*
 //!   (iterative min search over bit columns) expressed as a JAX scan over
 //!   a Pallas kernel, AOT-lowered to HLO text.
@@ -52,6 +54,9 @@ pub mod testing;
 pub mod prelude {
     pub use crate::bits::{BitPlanes, RowMask};
     pub use crate::coordinator::hierarchical::{Capacity, HierarchicalConfig, HierarchicalOutput};
+    pub use crate::coordinator::shard::{
+        FleetSnapshot, RoutePolicy, ShardedConfig, ShardedOutput, ShardedSortService,
+    };
     pub use crate::coordinator::{ServiceConfig, SortService};
     pub use crate::cost::{CostModel, SorterArch};
     pub use crate::datasets::{Dataset, DatasetKind};

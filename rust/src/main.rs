@@ -15,6 +15,7 @@ use anyhow::{anyhow, bail, Result};
 
 use memsort::cli::Args;
 use memsort::coordinator::hierarchical::{Capacity, HierarchicalConfig};
+use memsort::coordinator::shard::{RoutePolicy, ShardedConfig, ShardedSortService};
 use memsort::coordinator::{EngineKind, ServiceConfig, SortService};
 use memsort::cost::{Activity, CostModel, SorterArch};
 use memsort::datasets::{stats::analyze, Dataset, DatasetKind};
@@ -74,13 +75,17 @@ fn usage() {
                     hierarchical pipeline: --n 1m --capacity 1024\n\
                     --fanout 4 --workers 4; sizes accept k/m/g;\n\
                     --capacity auto picks the cheapest bank/fanout,\n\
-                    --barrier disables the streaming merge overlap)\n\
+                    --barrier disables the streaming merge overlap,\n\
+                    --shards N --route <round|least|class> runs the\n\
+                    pipeline across a fleet of N service hosts)\n\
            gen     --dataset <kind> --n 1024 --seed 42\n\
            stats   --dataset <kind> --n 1024 --seed 42\n\
            fig     --id <6|7|8a|8b> [--trials 5] [--n 1024] [--json]\n\
            scale   --max 1m --capacity 1024 --fanout 4 [--json]\n\
-                   [--streaming] (hierarchical sweep: chunks, latency,\n\
-                   merge share, streamed-vs-barrier overlap saving)\n\
+                   [--streaming] [--shards N --route <round|least|class>]\n\
+                   (hierarchical sweep: chunks, latency, merge share,\n\
+                   streamed-vs-barrier overlap saving; with --shards\n\
+                   also the fleet latency model + fleet metrics)\n\
            report  [--trials 5] [--seed 42]\n\
            serve   --engine <native|pjrt|hybrid> --workers 4\n\
                    --requests 64 --n 1024 [--artifacts artifacts]\n\
@@ -190,6 +195,9 @@ fn cmd_sort_hierarchical(
 ) -> Result<()> {
     let fanout = args.parse_num("fanout", 4usize)?;
     let workers = args.parse_num("workers", 4usize)?;
+    let shards = args.parse_num("shards", 1usize)?;
+    let route = RoutePolicy::parse(args.get_or("route", "round"))
+        .ok_or_else(|| anyhow!("--route must be round|least|class"))?;
     let streaming = !args.flag("barrier");
     if capacity == Capacity::Fixed(0) {
         bail!("--capacity must be at least 1 (or `auto`)");
@@ -200,27 +208,57 @@ fn cmd_sort_hierarchical(
     if workers == 0 {
         bail!("--workers must be at least 1");
     }
+    if shards == 0 {
+        bail!("--shards must be at least 1");
+    }
     let sub_banks = if args.get_or("sorter", "colskip") == "multibank" { banks } else { 1 };
-    let svc = SortService::start(ServiceConfig {
+    let service_cfg = ServiceConfig {
         workers,
         banks: sub_banks,
         colskip: ColSkipConfig { width, k, ..Default::default() },
         ..Default::default()
-    })?;
+    };
     let auto = capacity == Capacity::Auto;
     let cfg = HierarchicalConfig { capacity, fanout, streaming };
-    let t0 = std::time::Instant::now();
-    let out = svc.sort_hierarchical(&d.values, &cfg)?;
-    let wall = t0.elapsed();
+    // One host below, a routed fleet of hosts above one shard; the
+    // pipeline output is byte-identical either way (pinned by tests) —
+    // the fleet adds routing, failure isolation and the fleet latency
+    // model on top.
+    let (out, fleet_view, wall) = if shards > 1 {
+        let fleet = ShardedSortService::start(ShardedConfig {
+            shards,
+            route,
+            service: service_cfg,
+        })?;
+        let t0 = std::time::Instant::now();
+        let sharded = fleet.sort_hierarchical(&d.values, &cfg)?;
+        let wall = t0.elapsed();
+        let snap = fleet.fleet_metrics();
+        fleet.shutdown();
+        let extras = (sharded.sharded_latency_cycles, sharded.shard_chunks.clone(), snap);
+        (sharded.hier, Some(extras), wall)
+    } else {
+        let svc = SortService::start(service_cfg)?;
+        let t0 = std::time::Instant::now();
+        let out = svc.sort_hierarchical(&d.values, &cfg)?;
+        let wall = t0.elapsed();
+        svc.shutdown();
+        (out, None, wall)
+    };
     let n = d.values.len();
     let mut check = d.values.clone();
     check.sort_unstable();
     println!(
-        "pipeline      : chunk({}{}) -> column-skip -> {}-way {} merge",
+        "pipeline      : chunk({}{}) -> column-skip -> {}-way {} merge{}",
         out.capacity,
         if auto { ", auto" } else { "" },
         out.merge.fanout,
-        if streaming { "streaming" } else { "barrier" }
+        if streaming { "streaming" } else { "barrier" },
+        if shards > 1 {
+            format!(" across {shards} shards ({})", route.name())
+        } else {
+            String::new()
+        }
     );
     println!("dataset       : {} (n={n}, w={width}, seed={})", d.kind.name(), d.seed);
     println!("correct       : {}", out.output.sorted == check);
@@ -245,12 +283,25 @@ fn cmd_sort_hierarchical(
         out.barrier_latency_cycles,
         out.overlap_saving() * 100.0
     );
+    if let Some((sharded_cycles, shard_chunks, snap)) = &fleet_view {
+        println!(
+            "fleet         : {} cycles with per-shard merge engines \
+             ({:.2}x vs one engine), chunks/shard {:?}",
+            sharded_cycles,
+            out.latency_cycles as f64 / (*sharded_cycles).max(1) as f64,
+            shard_chunks
+        );
+        println!(
+            "fleet metrics : {} jobs, {} errors, imbalance {:.2}, \
+             worst p50/p99 {}/{} µs, {} rerouted",
+            snap.completed, snap.errors, snap.imbalance, snap.p50_us, snap.p99_us, snap.rerouted
+        );
+    }
     println!("cycles/number : {:.3}", out.latency_cycles as f64 / n as f64);
     println!("throughput    : {:.2} Mnum/s @500MHz", out.throughput() / 1e6);
     println!("area (model)  : {:.1} Kµm²", out.area_kum2);
     println!("power (model) : {:.1} mW", out.power_mw);
     println!("host wall     : {:.1} ms", wall.as_secs_f64() * 1e3);
-    svc.shutdown();
     Ok(())
 }
 
@@ -272,6 +323,12 @@ fn cmd_scale(args: &Args) -> Result<()> {
         bail!("--max ({max}) must exceed --capacity ({capacity})");
     }
     let streaming = args.flag("streaming");
+    let shards = args.parse_num("shards", 1usize)?;
+    let route = RoutePolicy::parse(args.get_or("route", "round"))
+        .ok_or_else(|| anyhow!("--route must be round|least|class"))?;
+    if shards == 0 {
+        bail!("--shards must be at least 1");
+    }
     let mut ns = Vec::new();
     let mut n = capacity.saturating_mul(4);
     while n < max {
@@ -279,28 +336,66 @@ fn cmd_scale(args: &Args) -> Result<()> {
         n = n.saturating_mul(4);
     }
     ns.push(max);
-    let pts = report::scaling(&ns, capacity, fanout, width, k, seed, streaming);
-    if args.flag("json") {
-        println!(
-            "{}",
-            Json::arr(pts.iter().map(|p| Json::obj([
-                ("n", p.n.into()),
-                ("capacity", p.capacity.into()),
-                ("chunks", p.chunks.into()),
-                ("fanout", p.fanout.into()),
-                ("streaming", Json::Bool(p.streaming)),
-                ("latency_cycles", p.latency_cycles.into()),
-                ("barrier_cycles", p.barrier_cycles.into()),
-                ("streamed_cycles", p.streamed_cycles.into()),
-                ("overlap_saving", p.overlap_saving.into()),
-                ("cycles_per_number", p.cycles_per_number.into()),
-                ("merge_fraction", p.merge_fraction.into()),
-                ("throughput_mnum_s", p.throughput_mnum_s.into()),
-                ("area_kum2", p.area_kum2.into()),
-                ("power_mw", p.power_mw.into()),
-            ])))
-            .render()
+    let (pts, fleet) = if shards > 1 {
+        let (pts, snap) = report::scaling_sharded(
+            &ns, capacity, fanout, width, k, seed, streaming, shards, route,
         );
+        (pts, Some(snap))
+    } else {
+        (report::scaling(&ns, capacity, fanout, width, k, seed, streaming), None)
+    };
+    if args.flag("json") {
+        let points = Json::arr(pts.iter().map(|p| Json::obj([
+            ("n", p.n.into()),
+            ("capacity", p.capacity.into()),
+            ("chunks", p.chunks.into()),
+            ("fanout", p.fanout.into()),
+            ("streaming", Json::Bool(p.streaming)),
+            ("shards", p.shards.into()),
+            ("latency_cycles", p.latency_cycles.into()),
+            ("barrier_cycles", p.barrier_cycles.into()),
+            ("streamed_cycles", p.streamed_cycles.into()),
+            ("sharded_cycles", p.sharded_cycles.into()),
+            ("overlap_saving", p.overlap_saving.into()),
+            ("cycles_per_number", p.cycles_per_number.into()),
+            ("merge_fraction", p.merge_fraction.into()),
+            ("throughput_mnum_s", p.throughput_mnum_s.into()),
+            ("area_kum2", p.area_kum2.into()),
+            ("power_mw", p.power_mw.into()),
+        ])));
+        match &fleet {
+            None => println!("{}", points.render()),
+            Some(snap) => {
+                // Points plus the fleet snapshot: totals, per-shard
+                // latency percentiles, imbalance.
+                let fleet_json = Json::obj([
+                    ("route", route.name().into()),
+                    ("completed", snap.completed.into()),
+                    ("errors", snap.errors.into()),
+                    ("elements", snap.elements.into()),
+                    ("rerouted", snap.rerouted.into()),
+                    ("imbalance", snap.imbalance.into()),
+                    ("p50_us", snap.p50_us.into()),
+                    ("p99_us", snap.p99_us.into()),
+                    (
+                        "shards",
+                        Json::arr(snap.shards.iter().zip(&snap.healthy).map(|(s, &h)| {
+                            Json::obj([
+                                ("completed", s.completed.into()),
+                                ("elements", s.elements.into()),
+                                ("p50_us", s.p50_us.into()),
+                                ("p99_us", s.p99_us.into()),
+                                ("healthy", Json::Bool(h)),
+                            ])
+                        })),
+                    ),
+                ]);
+                println!(
+                    "{}",
+                    Json::obj([("points", points), ("fleet", fleet_json)]).render()
+                );
+            }
+        }
     } else {
         let rows: Vec<Vec<String>> = pts
             .iter()
@@ -309,6 +404,7 @@ fn cmd_scale(args: &Args) -> Result<()> {
                     p.n.to_string(),
                     p.chunks.to_string(),
                     p.latency_cycles.to_string(),
+                    p.sharded_cycles.to_string(),
                     format!("{:.2}", p.cycles_per_number),
                     format!("{:.1}%", p.merge_fraction * 100.0),
                     format!("{:.1}%", p.overlap_saving * 100.0),
@@ -320,16 +416,41 @@ fn cmd_scale(args: &Args) -> Result<()> {
             .collect();
         println!(
             "out-of-bank scaling (capacity={capacity}, fanout={fanout}, w={width}, k={k}, \
-             MapReduce, {} merge)",
-            if streaming { "streaming" } else { "barrier" }
+             MapReduce, {} merge, {} shard{})",
+            if streaming { "streaming" } else { "barrier" },
+            shards,
+            if shards == 1 { "" } else { "s" }
         );
         print!(
             "{}",
             report::render_table(
-                &["n", "chunks", "latency", "cyc/num", "merge", "hidden", "Mnum/s", "Kµm²", "mW"],
+                &[
+                    "n", "chunks", "latency", "fleet", "cyc/num", "merge", "hidden", "Mnum/s",
+                    "Kµm²", "mW"
+                ],
                 &rows
             )
         );
+        if let Some(snap) = &fleet {
+            println!(
+                "fleet ({}): {} jobs, {} errors, imbalance {:.2}, rerouted {}",
+                route.name(),
+                snap.completed,
+                snap.errors,
+                snap.imbalance,
+                snap.rerouted
+            );
+            for (i, (s, h)) in snap.shards.iter().zip(&snap.healthy).enumerate() {
+                println!(
+                    "  shard {i}: {} jobs, {} elements, p50/p99 {}/{} µs{}",
+                    s.completed,
+                    s.elements,
+                    s.p50_us,
+                    s.p99_us,
+                    if *h { "" } else { " [DOWN]" }
+                );
+            }
+        }
     }
     Ok(())
 }

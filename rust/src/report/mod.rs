@@ -237,6 +237,12 @@ pub struct ScalePoint {
     pub barrier_cycles: u64,
     /// Overlap-model latency (streamed completion), cycles.
     pub streamed_cycles: u64,
+    /// Shards the point ran on (1 = the single-service pipeline).
+    pub shards: usize,
+    /// Fleet-model latency (per-shard merge engines draining in
+    /// parallel + cross-shard merge); equals `streamed_cycles` at one
+    /// shard.
+    pub sharded_cycles: u64,
     /// Fraction of the barrier latency the streaming overlap hides.
     pub overlap_saving: f64,
     /// Latency per element — the hierarchical analogue of Fig. 6's
@@ -255,7 +261,9 @@ pub struct ScalePoint {
 /// Sweep the hierarchical pipeline over dataset sizes `ns` (MapReduce
 /// traffic) at a fixed bank `capacity` and merge `fanout`. One service
 /// instance serves the whole sweep, so per-point cost is chunk sorting
-/// plus the merge, not thread spin-up.
+/// plus the merge, not thread spin-up. A thin wrapper over the 1-shard
+/// fleet sweep: the pipelines are byte-identical (pinned), and at one
+/// shard every latency view comes from the single-engine models.
 pub fn scaling(
     ns: &[usize],
     capacity: usize,
@@ -265,42 +273,98 @@ pub fn scaling(
     seed: u64,
     streaming: bool,
 ) -> Vec<ScalePoint> {
-    use crate::coordinator::hierarchical::{Capacity, HierarchicalConfig};
-    use crate::coordinator::{ServiceConfig, SortService};
+    scaling_sharded(
+        ns,
+        capacity,
+        fanout,
+        width,
+        k,
+        seed,
+        streaming,
+        1,
+        crate::coordinator::shard::RoutePolicy::RoundRobin,
+    )
+    .0
+}
 
-    let svc = SortService::start(ServiceConfig {
-        workers: std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4).min(8),
-        colskip: crate::sorter::colskip::ColSkipConfig { width, k, ..Default::default() },
-        ..Default::default()
+/// [`scaling`] across a fleet: the sweep runs on a
+/// [`crate::coordinator::shard::ShardedSortService`] of `shards` hosts
+/// under `route`, and the fleet's metric snapshot is returned alongside
+/// the points (totals, per-shard percentiles, imbalance) so the CLI can
+/// surface it. With one shard the per-element rates derive from the
+/// mode-run latency (exactly [`scaling`]'s historical numbers); above
+/// one they derive from the fleet model, so each row stays internally
+/// consistent (`Mnum/s == 500 / cyc_per_num`).
+#[allow(clippy::too_many_arguments)]
+pub fn scaling_sharded(
+    ns: &[usize],
+    capacity: usize,
+    fanout: usize,
+    width: u32,
+    k: usize,
+    seed: u64,
+    streaming: bool,
+    shards: usize,
+    route: crate::coordinator::shard::RoutePolicy,
+) -> (Vec<ScalePoint>, crate::coordinator::shard::FleetSnapshot) {
+    use crate::coordinator::hierarchical::{Capacity, HierarchicalConfig};
+    use crate::coordinator::shard::{ShardedConfig, ShardedSortService};
+    use crate::coordinator::ServiceConfig;
+
+    let fleet = ShardedSortService::start(ShardedConfig {
+        shards,
+        route,
+        service: ServiceConfig {
+            workers: std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(4)
+                .div_ceil(shards)
+                .min(8),
+            colskip: crate::sorter::colskip::ColSkipConfig { width, k, ..Default::default() },
+            ..Default::default()
+        },
     })
-    .expect("service start");
+    .expect("fleet start");
     let cfg = HierarchicalConfig { capacity: Capacity::Fixed(capacity), fanout, streaming };
     let pts = ns
         .iter()
         .map(|&n| {
             let d = Dataset::generate(DatasetKind::MapReduce, n, width, seed);
-            let out = svc.sort_hierarchical(&d.values, &cfg).expect("hierarchical sort");
-            debug_assert!(out.output.sorted.windows(2).all(|w| w[0] <= w[1]));
+            let out = fleet.sort_hierarchical(&d.values, &cfg).expect("sharded sort");
+            debug_assert!(out.hier.output.sorted.windows(2).all(|w| w[0] <= w[1]));
+            // Fleet-model basis for the per-element rates; at one shard
+            // this IS the mode-run latency (`scaling`'s historical
+            // numbers), at more it is the same schedule run by the
+            // fleet, so each row stays internally consistent.
+            let rate_cycles = out.sharded_latency_cycles;
+            let throughput = if rate_cycles == 0 {
+                0.0
+            } else {
+                n as f64 * crate::params::CLOCK_HZ / rate_cycles as f64
+            };
             ScalePoint {
                 n,
                 capacity,
-                chunks: out.chunks(),
+                chunks: out.hier.chunks(),
                 fanout,
                 streaming,
-                latency_cycles: out.latency_cycles,
-                barrier_cycles: out.barrier_latency_cycles,
-                streamed_cycles: out.streamed_latency_cycles,
-                overlap_saving: out.overlap_saving(),
-                cycles_per_number: out.latency_cycles as f64 / n.max(1) as f64,
-                merge_fraction: out.merge_fraction(),
-                throughput_mnum_s: out.throughput() / 1e6,
-                area_kum2: out.area_kum2,
-                power_mw: out.power_mw,
+                latency_cycles: out.hier.latency_cycles,
+                barrier_cycles: out.hier.barrier_latency_cycles,
+                streamed_cycles: out.hier.streamed_latency_cycles,
+                shards,
+                sharded_cycles: out.sharded_latency_cycles,
+                overlap_saving: out.hier.overlap_saving(),
+                cycles_per_number: rate_cycles as f64 / n.max(1) as f64,
+                merge_fraction: out.hier.merge_fraction(),
+                throughput_mnum_s: throughput / 1e6,
+                area_kum2: out.hier.area_kum2,
+                power_mw: out.hier.power_mw,
             }
         })
         .collect();
-    svc.shutdown();
-    pts
+    let snap = fleet.fleet_metrics();
+    fleet.shutdown();
+    (pts, snap)
 }
 
 /// Render a text table with aligned columns.
@@ -424,6 +488,33 @@ mod tests {
             assert_eq!(s.barrier_cycles, b.barrier_cycles, "same model numbers");
             assert!(s.latency_cycles <= b.latency_cycles, "n={}", s.n);
         }
+    }
+
+    #[test]
+    fn sharded_scaling_matches_single_service_points() {
+        use crate::coordinator::shard::RoutePolicy;
+        let single = scaling(&[2048, 8192], 256, 4, 32, 2, 7, true);
+        let (one, snap1) =
+            scaling_sharded(&[2048, 8192], 256, 4, 32, 2, 7, true, 1, RoutePolicy::RoundRobin);
+        for (a, b) in one.iter().zip(&single) {
+            assert_eq!(a.latency_cycles, b.latency_cycles);
+            assert_eq!(a.sharded_cycles, b.streamed_cycles, "1 shard = single engine");
+            assert_eq!(a.chunks, b.chunks);
+        }
+        assert_eq!(snap1.hier_completed, 2);
+        let (four, snap4) =
+            scaling_sharded(&[2048, 8192], 256, 4, 32, 2, 7, true, 4, RoutePolicy::RoundRobin);
+        for (a, b) in four.iter().zip(&single) {
+            assert_eq!(a.shards, 4);
+            // Byte-identical pipeline: same chunks, same flat models.
+            assert_eq!(a.chunks, b.chunks);
+            assert_eq!(a.streamed_cycles, b.streamed_cycles);
+            assert_eq!(a.barrier_cycles, b.barrier_cycles);
+            assert!(a.sharded_cycles > 0);
+        }
+        assert_eq!(snap4.shards.len(), 4);
+        assert!(snap4.shards.iter().all(|s| s.completed > 0), "round-robin spreads chunks");
+        assert_eq!(snap4.hier_chunks, 8 + 32);
     }
 
     #[test]

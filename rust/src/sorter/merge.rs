@@ -409,6 +409,49 @@ pub fn model_streamed_completion_uniform(
     arrival + work
 }
 
+/// Streamed completion of an `shards`-host fleet draining `chunks`
+/// uniform runs of `len` rows that each become available `arrival`
+/// cycles after the parallel bank sorts start — the planner's sharded
+/// scoring model.
+///
+/// Topology: chunks are dealt round-robin, so shard `s` owns
+/// `chunks/shards` (+1 for the first `chunks % shards` shards) of them.
+/// Every shard is an independent host with its *own* merge engine, so
+/// each drains its share under the uniform closed form
+/// ([`model_streamed_completion_uniform`]) in parallel, and one
+/// top-level fanout-`fanout` merge combines the shard streams
+/// ([`model_streamed_completion`] over ≤ `shards` leaves, so scoring
+/// stays O(chunks) even at millions of elements).
+///
+/// Reduces *exactly* to [`model_streamed_completion_uniform`] at
+/// `shards = 1` (a single leaf passes through the top merge for free),
+/// which is what keeps the unsharded planner scoring unchanged. More
+/// shards shrink the per-shard merge work that a single engine would
+/// serialize; the gain is not monotone past `shards > fanout`, where
+/// the cross-shard tree grows an extra pass over the full stream.
+pub fn model_sharded_completion(
+    chunks: usize,
+    len: usize,
+    arrival: u64,
+    shards: usize,
+    fanout: usize,
+) -> u64 {
+    assert!(shards >= 1, "a fleet has at least one shard");
+    assert!(fanout >= 2, "merge fanout must be at least 2");
+    if chunks == 0 {
+        return 0;
+    }
+    let shards = shards.min(chunks);
+    let (base, extra) = (chunks / shards, chunks % shards);
+    let leaves: Vec<(u64, usize)> = (0..shards)
+        .map(|s| {
+            let c = base + usize::from(s < extra);
+            (model_streamed_completion_uniform(c, len, arrival, fanout), c * len)
+        })
+        .collect();
+    model_streamed_completion(&leaves, fanout)
+}
+
 /// Result of a completed [`StreamingMerge`].
 #[derive(Clone, Debug)]
 pub struct StreamedMerge<T> {
@@ -843,6 +886,52 @@ mod tests {
                 assert!(c <= barrier, "runs={runs} fanout={fanout}: {c} > {barrier}");
                 assert!(c >= max_a, "runs={runs} fanout={fanout}: {c} < {max_a}");
             }
+        }
+    }
+
+    #[test]
+    fn sharded_completion_reduces_to_uniform_at_one_shard() {
+        for chunks in [1usize, 2, 5, 61, 977] {
+            for fanout in [2usize, 4, 16] {
+                assert_eq!(
+                    model_sharded_completion(chunks, 1024, 8028, 1, fanout),
+                    model_streamed_completion_uniform(chunks, 1024, 8028, fanout),
+                    "chunks={chunks} fanout={fanout}"
+                );
+            }
+        }
+        // Degenerates: no chunks, and more shards than chunks (each
+        // shard holds at most one run, so only the cross-shard merge
+        // remains — the fully parallel limit).
+        assert_eq!(model_sharded_completion(0, 64, 5, 4, 4), 0);
+        assert_eq!(
+            model_sharded_completion(3, 64, 5, 16, 4),
+            model_streamed_completion(&[(5, 64); 3], 4),
+            "shards >= chunks collapses to one run per shard"
+        );
+    }
+
+    #[test]
+    fn sharded_completion_strictly_decreases_to_fanout_shards() {
+        // The acceptance shape: n = 1M over 977 banks of 1024 at the
+        // paper's nominal 7.84 cyc/num, fanout 4. Values cross-checked
+        // against an independent model implementation.
+        let chunks = 1_000_000usize.div_ceil(1024);
+        let arrival = (1024.0f64 * 7.84).round() as u64;
+        let lat: Vec<u64> = (1..=4)
+            .map(|s| model_sharded_completion(chunks, 1024, arrival, s, 4))
+            .collect();
+        assert_eq!(lat, vec![5_008_220, 3_511_132, 2_671_452, 2_010_972]);
+        assert!(lat.windows(2).all(|w| w[1] < w[0]), "{lat:?}");
+        // Past shards = fanout the cross-shard tree gains a pass over
+        // the full stream: 8 shards regress against 4 (documented in
+        // EXPERIMENTS.md §Shard scaling).
+        let eight = model_sharded_completion(chunks, 1024, arrival, 8, 4);
+        assert!(eight > lat[3], "{eight} vs {}", lat[3]);
+        // Every fleet still beats the single-engine flat schedule.
+        let flat = model_streamed_completion_uniform(chunks, 1024, arrival, 4);
+        for (s, &l) in lat.iter().enumerate().skip(1) {
+            assert!(l < flat, "shards={} {l} vs flat {flat}", s + 1);
         }
     }
 

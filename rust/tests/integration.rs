@@ -3,6 +3,7 @@
 //! paper's figure harnesses at full scale.
 
 use memsort::coordinator::hierarchical::HierarchicalConfig;
+use memsort::coordinator::shard::{RoutePolicy, ShardedConfig, ShardedSortService};
 use memsort::coordinator::{EngineKind, ServiceConfig, SortService};
 use memsort::datasets::{Dataset, DatasetKind};
 use memsort::multibank::{MultiBankConfig, MultiBankSorter};
@@ -266,6 +267,47 @@ fn hierarchical_sorts_1m() {
     assert_eq!(out.output.sorted, expect);
     assert_eq!(out.chunks(), 977);
     svc.shutdown();
+}
+
+/// The fleet identity at full dataset coverage: for every dataset
+/// family, shard count and routing policy, the sharded hierarchical
+/// sort is byte-identical to the single-service path — values, argsort,
+/// summed stats, per-chunk stats and merge accounting. (The random-
+/// shape version of this is `prop_sharded_pipeline_identical_to_single_
+/// service`; this pins the named dataset families the paper evaluates.)
+#[test]
+fn sharded_pipeline_is_byte_identical_across_datasets() {
+    let single = SortService::start(ServiceConfig { workers: 2, ..Default::default() }).unwrap();
+    let cfg = HierarchicalConfig::fixed(256, 4);
+    for kind in DatasetKind::ALL {
+        let d = Dataset::generate32(kind, 2500, 23);
+        let reference = single.sort_hierarchical(&d.values, &cfg).unwrap();
+        for shards in [1usize, 2, 4] {
+            for route in RoutePolicy::ALL {
+                let fleet = ShardedSortService::start(ShardedConfig {
+                    shards,
+                    route,
+                    service: ServiceConfig { workers: 2, ..Default::default() },
+                })
+                .unwrap();
+                let out = fleet.sort_hierarchical(&d.values, &cfg).unwrap();
+                let tag = format!("{kind:?} shards={shards} route={route:?}");
+                assert_eq!(out.hier.output.sorted, reference.output.sorted, "{tag}");
+                assert_eq!(out.hier.output.order, reference.output.order, "{tag}");
+                assert_eq!(out.hier.output.stats, reference.output.stats, "{tag}");
+                assert_eq!(out.hier.chunk_stats, reference.chunk_stats, "{tag}");
+                assert_eq!(out.hier.merge.comparisons, reference.merge.comparisons, "{tag}");
+                assert_eq!(out.hier.merge.cycles, reference.merge.cycles, "{tag}");
+                assert_eq!(
+                    out.hier.streamed_latency_cycles, reference.streamed_latency_cycles,
+                    "{tag}"
+                );
+                assert_eq!(out.rerouted, 0, "{tag}");
+                fleet.shutdown();
+            }
+        }
+    }
+    single.shutdown();
 }
 
 /// Hierarchical pipeline over multibank chunk engines (§IV per chunk):

@@ -17,6 +17,7 @@
 //!    per-chunk stats.
 
 use memsort::coordinator::hierarchical::HierarchicalConfig;
+use memsort::coordinator::shard::{RoutePolicy, ShardedConfig, ShardedSortService};
 use memsort::coordinator::{ServiceConfig, SortService};
 use memsort::multibank::{MultiBankConfig, MultiBankSorter};
 use memsort::sorter::baseline::BaselineSorter;
@@ -269,6 +270,92 @@ fn prop_streamed_pipeline_identical_to_barrier() {
         },
     );
     svc.shutdown();
+}
+
+#[test]
+fn prop_sharded_pipeline_identical_to_single_service() {
+    // Sharding is a routing change, never a result change: for every
+    // random input, every shard count (incl. the 1-shard fleet, which
+    // must equal today's single-service path bit for bit) and every
+    // routing policy, the fleet's hierarchical sort returns exactly the
+    // single-service pipeline's values, argsort, summed stats, chunk
+    // stats and merge accounting. The fleets are started once — the
+    // property exercises routing/merging, not thread spin-up.
+    let single = SortService::start(ServiceConfig { workers: 2, ..Default::default() }).unwrap();
+    let fleets: Vec<ShardedSortService> = [1usize, 2, 3]
+        .iter()
+        .flat_map(|&shards| {
+            RoutePolicy::ALL.iter().map(move |&route| {
+                ShardedSortService::start(ShardedConfig {
+                    shards,
+                    route,
+                    service: ServiceConfig { workers: 2, ..Default::default() },
+                })
+                .unwrap()
+            })
+        })
+        .collect();
+    check(
+        "sharded-equals-single",
+        PropConfig { seed: 10, cases: 48, max_len: 300, ..Default::default() },
+        |case| {
+            for (capacity, fanout) in [(16usize, 2usize), (64, 4)] {
+                let cfg = HierarchicalConfig::fixed(capacity, fanout);
+                let reference =
+                    single.sort_hierarchical(&case.values, &cfg).map_err(|e| e.to_string())?;
+                for fleet in &fleets {
+                    let shards = fleet.config().shards;
+                    let route = fleet.config().route;
+                    let out = fleet
+                        .sort_hierarchical(&case.values, &cfg)
+                        .map_err(|e| e.to_string())?;
+                    let tag = format!("shards={shards} route={route:?} capacity={capacity}");
+                    if out.hier.output.sorted != reference.output.sorted {
+                        return Err(format!("{tag}: values diverge"));
+                    }
+                    if out.hier.output.order != reference.output.order {
+                        return Err(format!("{tag}: argsort diverges"));
+                    }
+                    if out.hier.output.stats != reference.output.stats
+                        || out.hier.chunk_stats != reference.chunk_stats
+                    {
+                        return Err(format!("{tag}: stats diverge"));
+                    }
+                    if (out.hier.merge.comparisons, out.hier.merge.passes, out.hier.merge.cycles)
+                        != (
+                            reference.merge.comparisons,
+                            reference.merge.passes,
+                            reference.merge.cycles,
+                        )
+                    {
+                        return Err(format!("{tag}: merge accounting diverges"));
+                    }
+                    if out.hier.streamed_latency_cycles != reference.streamed_latency_cycles {
+                        return Err(format!("{tag}: streamed latency model diverges"));
+                    }
+                    if out.rerouted != 0 {
+                        return Err(format!("{tag}: healthy fleet re-routed"));
+                    }
+                    if out.assignments.len() != reference.chunks() {
+                        return Err(format!("{tag}: wrong assignment count"));
+                    }
+                    if out.assignments.iter().any(|&s| s >= shards) {
+                        return Err(format!("{tag}: assignment out of range"));
+                    }
+                    if shards == 1
+                        && out.sharded_latency_cycles != reference.streamed_latency_cycles
+                    {
+                        return Err(format!("{tag}: 1-shard fleet model must equal streamed"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+    for fleet in fleets {
+        fleet.shutdown();
+    }
+    single.shutdown();
 }
 
 #[test]
