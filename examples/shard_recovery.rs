@@ -1,0 +1,67 @@
+//! Shard recovery demo: a heterogeneous fleet loses a host mid-traffic,
+//! the cost-aware router isolates it and fails its work over to the
+//! survivors, then `recover_shard` restarts the host through its
+//! transport and the router warms it back into the rotation.
+//!
+//! Run: `cargo run --release --example shard_recovery`
+
+use anyhow::Result;
+use memsort::prelude::*;
+
+fn fleet_line(fleet: &ShardedSortService, label: &str) {
+    let m = fleet.fleet_metrics();
+    let served: Vec<u64> = m.shards.iter().map(|s| s.completed).collect();
+    println!(
+        "  {label:<18}: healthy {}/{}, jobs/shard {:?}, rerouted {}, recovered {}",
+        m.healthy.iter().filter(|&&h| h).count(),
+        fleet.shard_count(),
+        served,
+        m.rerouted,
+        m.recovered
+    );
+}
+
+fn main() -> Result<()> {
+    let n = 100_000usize;
+    let d = Dataset::generate32(DatasetKind::MapReduce, n, 42);
+    let mut expect = d.values.clone();
+    expect.sort_unstable();
+
+    // A heterogeneous fleet: two full-height hosts and one whose
+    // tallest bank is 512 rows — the cost router knows 1024-row chunks
+    // are more expensive there (oversize assembly) and deals it fewer.
+    let host = |spec: &str| -> anyhow::Result<ServiceConfig> {
+        Ok(ServiceConfig { workers: 2, geometry: Geometry::from_spec(spec)?, ..Default::default() })
+    };
+    let services = vec![host("1024x32")?, host("1024x32")?, host("512x32")?];
+    let fleet = ShardedSortService::start(ShardedConfig { route: RoutePolicy::Cost, services })?;
+    let cfg = HierarchicalConfig::fixed(1024, 4);
+
+    println!("heterogeneous fleet (2x 1024-bank + 1x 512-bank, cost routing):");
+    let out = fleet.sort_hierarchical(&d.values, &cfg)?;
+    assert_eq!(out.hier.output.sorted, expect);
+    println!("  chunks/shard      : {:?} (the undersized host carries less)", out.shard_chunks);
+    fleet_line(&fleet, "after sort");
+
+    // Crash shard 1. The router isolates it; its share fails over.
+    fleet.fail_shard(1)?;
+    let out = fleet.sort_hierarchical(&d.values, &cfg)?;
+    assert_eq!(out.hier.output.sorted, expect, "degraded fleet still byte-identical");
+    println!("after failing shard 1:");
+    println!("  chunks/shard      : {:?} (survivors absorb the share)", out.shard_chunks);
+    fleet_line(&fleet, "degraded");
+
+    // Recover it: the transport restarts the host (it comes back with
+    // empty metrics, like a real restarted process) and the router
+    // immediately starts offering it work again.
+    fleet.recover_shard(1)?;
+    let out = fleet.sort_hierarchical(&d.values, &cfg)?;
+    assert_eq!(out.hier.output.sorted, expect, "recovered fleet still byte-identical");
+    assert!(out.shard_chunks[1] > 0, "the recovered shard must receive work");
+    println!("after recover_shard(1):");
+    println!("  chunks/shard      : {:?} (warmed back into rotation)", out.shard_chunks);
+    fleet_line(&fleet, "recovered");
+
+    fleet.shutdown();
+    Ok(())
+}

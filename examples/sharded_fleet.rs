@@ -11,11 +11,11 @@ fn main() -> Result<()> {
     let n = 200_000usize;
     let d = Dataset::generate32(DatasetKind::MapReduce, n, 42);
 
-    let fleet = ShardedSortService::start(ShardedConfig {
-        shards: 4,
-        route: RoutePolicy::RoundRobin,
-        service: ServiceConfig { workers: 2, ..Default::default() },
-    })?;
+    let fleet = ShardedSortService::start(ShardedConfig::uniform(
+        4,
+        RoutePolicy::RoundRobin,
+        ServiceConfig { workers: 2, ..Default::default() },
+    ))?;
     let cfg = HierarchicalConfig::fixed(1024, 4);
 
     let out = fleet.sort_hierarchical(&d.values, &cfg)?;
@@ -48,7 +48,7 @@ fn main() -> Result<()> {
 
     // Retire a shard the way a crashed host would and sort again: the
     // router isolates it and the survivors absorb its share.
-    fleet.fail_shard(2);
+    fleet.fail_shard(2)?;
     let out = fleet.sort_hierarchical(&d.values, &cfg)?;
     assert_eq!(out.hier.output.sorted, expect, "degraded fleet still sorts");
     println!("after failing shard 2:");

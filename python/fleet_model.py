@@ -1,0 +1,216 @@
+#!/usr/bin/env python3
+"""Independent mirror of the Rust fleet latency models, for cross-checking.
+
+Re-implements, from the written model definitions only (not the Rust
+source), the closed forms and the event scheduler behind:
+
+* ``sorter::merge::model_streamed_completion`` (greedy earliest-ready
+  single-engine schedule over the fixed fanout-f merge tree),
+* ``model_streamed_completion_uniform`` (closed form, equal arrivals),
+* ``model_sharded_completion`` / ``model_sharded_completion_hetero``
+  (per-shard engines draining in parallel + one cross-shard merge),
+* ``apportion_chunks`` (largest-remainder deal),
+* ``planner::shard_model`` + ``Plan::estimated_cycles_hetero``
+  (streaming side).
+
+Running this file prints the pinned numbers used by the Rust tests and
+the EXPERIMENTS.md §Heterogeneous shard scaling table, so a reviewer
+without a Rust toolchain can still validate the models:
+
+    python3 python/fleet_model.py
+"""
+
+from fractions import Fraction
+from math import floor
+
+
+def model_merge_passes(runs: int, fanout: int) -> int:
+    assert fanout >= 2
+    passes = 0
+    while runs > 1:
+        runs = -(-runs // fanout)  # ceil div
+        passes += 1
+    return passes
+
+
+def model_merge_cycles(n: int, runs: int, fanout: int) -> int:
+    return n * model_merge_passes(runs, fanout)
+
+
+def model_streamed_completion(leaves, fanout: int) -> int:
+    """Greedy earliest-ready schedule of one merge engine over the fixed
+    fanout-`fanout` tree; `leaves` are (arrival, len) in chunk order."""
+    assert fanout >= 2
+    if not leaves:
+        return 0
+    lens = [[l for (_, l) in leaves]]
+    ready = [[a for (a, _) in leaves]]
+    while len(lens[-1]) > 1:
+        prev = lens[-1]
+        lens.append([sum(prev[i:i + fanout]) for i in range(0, len(prev), fanout)])
+        ready.append([None] * len(lens[-1]))
+    depth = len(lens)
+    engine_free = 0
+    while True:
+        changed = True
+        while changed:  # single-run groups pass through for free
+            changed = False
+            for lev in range(1, depth):
+                for g in range(len(lens[lev])):
+                    lo, hi = g * fanout, min(g * fanout + fanout, len(lens[lev - 1]))
+                    if ready[lev][g] is None and hi - lo == 1:
+                        if ready[lev - 1][lo] is not None:
+                            ready[lev][g] = ready[lev - 1][lo]
+                            changed = True
+        if ready[depth - 1][0] is not None:
+            return ready[depth - 1][0]
+        pick = None
+        for lev in range(1, depth):
+            for g in range(len(lens[lev])):
+                if ready[lev][g] is not None:
+                    continue
+                lo, hi = g * fanout, min(g * fanout + fanout, len(lens[lev - 1]))
+                ins = ready[lev - 1][lo:hi]
+                if any(r is None for r in ins):
+                    continue
+                key = (max(ins, default=0), lev, g)
+                if pick is None or key < pick:
+                    pick = key
+        inputs_ready, lev, g = pick
+        done = max(engine_free, inputs_ready) + lens[lev][g]
+        ready[lev][g] = done
+        engine_free = done
+
+
+def model_streamed_completion_uniform(chunks: int, length: int, arrival: int,
+                                      fanout: int) -> int:
+    assert fanout >= 2
+    if chunks == 0:
+        return 0
+    counts = [1] * chunks
+    work = 0
+    while len(counts) > 1:
+        nxt = []
+        for i in range(0, len(counts), fanout):
+            g = counts[i:i + fanout]
+            c = sum(g)
+            if len(g) > 1:
+                work += c * length
+            nxt.append(c)
+        counts = nxt
+    return arrival + work
+
+
+def model_sharded_completion_hetero(length: int, deal, fanout: int) -> int:
+    leaves = [(model_streamed_completion_uniform(c, length, a, fanout), c * length)
+              for (c, a) in deal if c > 0]
+    return model_streamed_completion(leaves, fanout)
+
+
+def model_sharded_completion(chunks: int, length: int, arrival: int, shards: int,
+                             fanout: int) -> int:
+    assert shards >= 1
+    if chunks == 0:
+        return 0
+    shards = min(shards, chunks)
+    base, extra = divmod(chunks, shards)
+    deal = [(base + (1 if s < extra else 0), arrival) for s in range(shards)]
+    return model_sharded_completion_hetero(length, deal, fanout)
+
+
+def apportion_chunks(chunks: int, weights) -> list:
+    """Largest-remainder deal; ties go to the lower shard id. Uses exact
+    rational quotas so the mirror has no float-tie ambiguity."""
+    sane = [Fraction(w).limit_denominator(10**12) if (w == w and w > 0) else Fraction(0)
+            for w in weights]
+    if sum(sane) == 0:
+        sane = [Fraction(1)] * len(weights)
+    total = sum(sane)
+    quotas = [Fraction(chunks) * w / total for w in sane]
+    deal = [floor(q) for q in quotas]
+    rem = chunks - sum(deal)
+    order = sorted(range(len(sane)), key=lambda s: (-(quotas[s] - floor(quotas[s])), s))
+    for s in order[:rem]:
+        deal[s] += 1
+    return deal
+
+
+def round_half_away(x: float) -> int:
+    """Rust's f64::round (half away from zero, for non-negative x here);
+    Python's built-in round() is banker's rounding and would diverge
+    from the Rust model on exact .5 products."""
+    return floor(x + 0.5)
+
+
+def shard_model(bank: int, fanout: int, largest_bank: int, cyc: float):
+    """(arrival, weight, oversize) for one shard at a (bank, fanout)
+    candidate. `arrival` is when the shard's FIRST chunk run exists
+    (one sort plus one assembly pass on an undersized host); the
+    scoring charges one further `oversize` per additional dealt chunk,
+    since the assembly shares the shard's serialized merge engine."""
+    oversize = (model_merge_cycles(bank, -(-bank // largest_bank), fanout)
+                if bank > largest_bank else 0)
+    arrival = round_half_away(bank * cyc) + oversize
+    return arrival, 1.0 / max(arrival, 1), oversize
+
+
+def hetero_streamed(n: int, bank: int, fanout: int, shards, cyc=7.84) -> int:
+    """Streaming Plan::estimated_cycles_hetero for a ChunkMerge plan:
+    `shards` is a list of (largest_bank, cyc_per_num)."""
+    chunks = -(-n // bank)
+    models = [shard_model(bank, fanout, lb, c) for (lb, c) in shards]
+    deal = apportion_chunks(chunks, [w for (_, w, _) in models])
+    # Effective readiness: arrival covers the first chunk's assembly;
+    # each further dealt chunk adds one oversize pass on the engine.
+    return model_sharded_completion_hetero(
+        bank,
+        [(c, a + (c - 1) * o) if c > 0 else (c, a)
+         for c, (a, _, o) in zip(deal, models)],
+        fanout)
+
+
+def main():
+    print("== cross-checks for the Rust unit tests ==")
+    print("merge::hetero_model_penalizes_slow_shards (len=1024, fanout=4):")
+    print("  uniform 8x2@8028 :", model_sharded_completion(8, 1024, 8028, 2, 4))
+    print("  even (4,8028)(4,16056):",
+          model_sharded_completion_hetero(1024, [(4, 8028), (4, 16056)], 4))
+    print("  skew (5,8028)(3,16056):",
+          model_sharded_completion_hetero(1024, [(5, 8028), (3, 16056)], 4))
+
+    print("planner::hetero_fleet_scores_worse_with_a_slow_shard "
+          "(n=50k, bank=1024, fanout=4):")
+    print("  uniform  :", hetero_streamed(50_000, 1024, 4, [(1024, 7.84)] * 2))
+    print("  mixed    :", hetero_streamed(50_000, 1024, 4,
+                                          [(1024, 7.84), (1024, 15.68)]))
+    print("  all-slow :", hetero_streamed(50_000, 1024, 4, [(1024, 15.68)] * 2))
+
+    print("uniform reduction spot-check (n=1M, bank=1024, fanout=4, cyc=7.84):")
+    chunks = -(-1_000_000 // 1024)
+    arrival = round_half_away(1024 * 7.84)
+    for s in [1, 2, 3, 4, 8, 16]:
+        uni = model_sharded_completion(chunks, 1024, arrival, s, 4)
+        het = hetero_streamed(1_000_000, 1024, 4, [(1024, 7.84)] * s)
+        assert uni == het, (s, uni, het)
+        print(f"  shards={s:2d}: {uni}")
+
+    print()
+    print("== EXPERIMENTS.md §Heterogeneous shard scaling "
+          "(n=1M, bank=1024, fanout=4) ==")
+    fleets = {
+        "4x nominal (7.84)": [(1024, 7.84)] * 4,
+        "2x nominal + 2x half-speed (15.68)": [(1024, 7.84)] * 2 + [(1024, 15.68)] * 2,
+        "4x half-speed (15.68)": [(1024, 15.68)] * 4,
+        "2x 1024-bank + 2x 512-bank (7.84)": [(1024, 7.84)] * 2 + [(512, 7.84)] * 2,
+        "1x nominal + 3x half-speed": [(1024, 7.84)] + [(1024, 15.68)] * 3,
+    }
+    for name, shards in fleets.items():
+        cycles = hetero_streamed(1_000_000, 1024, 4, shards)
+        models = [shard_model(1024, 4, lb, c) for (lb, c) in shards]
+        deal = apportion_chunks(chunks, [w for (_, w, _) in models])
+        print(f"  {name:38s}: {cycles:>9d} cycles "
+              f"({cycles / 1_000_000:.3f} cyc/num, deal {deal})")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,6 +7,7 @@
 
 use memsort::bench::run;
 use memsort::coordinator::hierarchical::HierarchicalConfig;
+use memsort::coordinator::planner::Geometry;
 use memsort::coordinator::shard::{RoutePolicy, ShardedConfig, ShardedSortService};
 use memsort::coordinator::{ServiceConfig, SortService};
 use memsort::datasets::{Dataset, DatasetKind};
@@ -107,11 +108,11 @@ fn main() {
     // cross-shard tree gains a pass once shards > fanout).
     let mut one_shard_cycles = None;
     for shards in [1usize, 2, 4, 8] {
-        let fleet = ShardedSortService::start(ShardedConfig {
+        let fleet = ShardedSortService::start(ShardedConfig::uniform(
             shards,
-            route: RoutePolicy::RoundRobin,
-            service: ServiceConfig { workers: workers.div_ceil(shards), ..Default::default() },
-        })
+            RoutePolicy::RoundRobin,
+            ServiceConfig { workers: workers.div_ceil(shards), ..Default::default() },
+        ))
         .unwrap();
         let label = format!("hier_sort/shards{shards}/n1M/cap1024");
         let cfg = HierarchicalConfig::fixed(1024, 4);
@@ -129,6 +130,41 @@ fn main() {
             out.sharded_latency_cycles as f64 / n as f64,
             base as f64 / out.sharded_latency_cycles as f64,
             m.imbalance
+        );
+        fleet.shutdown();
+    }
+
+    println!("--- heterogeneous fleet: 1M, cost routing vs round-robin (cap 1024, fanout 4) ---");
+    // EXPERIMENTS.md §Heterogeneous shard scaling: two full-height hosts
+    // plus two 512-max hosts. The cost router deals the undersized
+    // hosts fewer chunks than round-robin does, and the fleet latency
+    // (computed from the *actual* per-chunk arrivals grouped per shard)
+    // reflects the skew.
+    let hetero_services: Vec<ServiceConfig> = ["1024x32", "1024x32", "512x32", "512x32"]
+        .iter()
+        .map(|spec| ServiceConfig {
+            workers: workers.div_ceil(4),
+            geometry: Geometry::from_spec(spec).unwrap(),
+            ..Default::default()
+        })
+        .collect();
+    for route in [RoutePolicy::RoundRobin, RoutePolicy::Cost] {
+        let fleet = ShardedSortService::start(ShardedConfig {
+            route,
+            services: hetero_services.clone(),
+        })
+        .unwrap();
+        let cfg = HierarchicalConfig::fixed(1024, 4);
+        let label = format!("hier_sort/hetero-{}/n1M/cap1024", route.name());
+        let r = run(&label, 2000, || {
+            fleet.sort_hierarchical(&d.values, &cfg).unwrap().hier.output.sorted.len()
+        });
+        let out = fleet.sort_hierarchical(&d.values, &cfg).unwrap();
+        println!(
+            "    -> {:.2} Melem/s host | {} cycles fleet model, chunks/shard {:?}",
+            r.throughput(n) / 1e6,
+            out.sharded_latency_cycles,
+            out.shard_chunks
         );
         fleet.shutdown();
     }

@@ -208,10 +208,12 @@ impl HierarchicalOutput {
 /// responses go in (chunk-index order), the [`HierarchicalOutput`]
 /// comes out. [`SortService::sort_hierarchical`] drives it over one
 /// worker pool; [`super::shard::ShardedSortService::sort_hierarchical`]
-/// drives the *same* assembler over chunks routed across shards —
-/// which is why the two paths are byte-identical by construction (the
-/// frontier consumes run arrivals in chunk order regardless of which
-/// host sorted each chunk).
+/// drives the *same* assembler over chunks routed across shard
+/// transports ([`super::transport::ShardTransport`]) — which is why
+/// the two paths are byte-identical by construction (the frontier
+/// consumes run arrivals in chunk order regardless of which host — or
+/// host geometry — sorted each chunk, and a [`SortResponse`] looks the
+/// same whether it crossed a thread boundary or, one day, a wire).
 pub(crate) struct ChunkAssembly {
     spans: Vec<Range<usize>>,
     streaming: bool,
@@ -371,10 +373,17 @@ impl SortService {
         data: &[u32],
         cfg: &HierarchicalConfig,
     ) -> Result<HierarchicalOutput> {
-        assert!(cfg.fanout >= 2, "merge fanout must be at least 2");
+        // Misconfiguration is an error, not a panic — same contract as
+        // the fleet path (`ShardedSortService::sort_hierarchical`);
+        // these values come straight from CLI flags.
+        if cfg.fanout < 2 {
+            return Err(anyhow!("merge fanout must be at least 2, got {}", cfg.fanout));
+        }
         let n = data.len();
         let (capacity, fanout) = self.resolve_chunking(n, cfg);
-        assert!(capacity >= 1, "bank capacity must be positive");
+        if capacity < 1 {
+            return Err(anyhow!("bank capacity must be positive"));
+        }
         let mut asm = ChunkAssembly::new(partition(n, capacity), fanout, cfg.streaming);
         let chunks = asm.spans().len();
 
@@ -522,6 +531,16 @@ mod tests {
         );
         assert!(out.overlap_saving() > 0.0);
         assert!(out.merge_fraction() < 1.0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn bad_hierarchical_config_is_an_error_not_a_panic() {
+        // Same contract as the fleet path: a bad CLI flag surfaces as
+        // an Err from either entry point, never a process abort.
+        let svc = service(1);
+        assert!(svc.sort_hierarchical(&[3, 1, 2], &HierarchicalConfig::fixed(2, 1)).is_err());
+        assert!(svc.sort_hierarchical(&[3, 1, 2], &HierarchicalConfig::fixed(0, 4)).is_err());
         svc.shutdown();
     }
 

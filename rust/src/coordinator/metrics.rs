@@ -153,6 +153,38 @@ impl ServiceMetrics {
         self.errors.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Observed cycles/number for `n`'s size class without building a
+    /// full [`Snapshot`] — plain atomic reads, no latency-reservoir
+    /// lock. The cost-aware shard router calls this once per candidate
+    /// shard per routing decision (hundreds of decisions per
+    /// hierarchical fan-out), where cloning and sorting the reservoir
+    /// would dominate the decision.
+    /// Same fallback ladder as [`Snapshot::cyc_per_num_for`]: class
+    /// observation, then the global average, then `fallback`.
+    pub fn cyc_per_num_for(&self, n: usize, fallback: f64) -> f64 {
+        // Gate every rung on a *positive ratio*, exactly like the
+        // snapshot reader: a class (or service) whose recorded cycles
+        // are zero — e.g. clamped malformed PJRT traces — must fall
+        // through rather than report a free shard to the cost router.
+        let class = size_class(n);
+        let class_elems = self.class_elements[class].load(Ordering::Relaxed);
+        if class_elems > 0 {
+            let ratio =
+                self.class_cycles[class].load(Ordering::Relaxed) as f64 / class_elems as f64;
+            if ratio > 0.0 {
+                return ratio;
+            }
+        }
+        let elements = self.elements.load(Ordering::Relaxed);
+        if elements > 0 {
+            let global = self.sim_cycles.load(Ordering::Relaxed) as f64 / elements as f64;
+            if global > 0.0 {
+                return global;
+            }
+        }
+        fallback
+    }
+
     /// Record a completed hierarchical (chunk → sort → merge) request.
     /// The per-chunk simulator work was already recorded by the workers;
     /// this adds the pipeline-level view.
@@ -299,6 +331,34 @@ mod tests {
         assert_eq!(size_class(0), 0);
         assert_eq!(size_class(1), 0);
         assert_eq!(size_class(usize::MAX), SIZE_CLASSES - 1);
+    }
+
+    #[test]
+    fn lock_free_cyc_per_num_matches_snapshot() {
+        // The router-side reader must agree with the snapshot-side one
+        // on every rung of the fallback ladder.
+        let m = ServiceMetrics::new();
+        assert_eq!(m.cyc_per_num_for(256, 7.84), 7.84, "empty: nominal fallback");
+        m.record(1, &stats(2048), 256);
+        m.record(1, &stats(30_720), 1024);
+        // A zero-cycle class (clamped malformed traces): elements are
+        // recorded but the ratio is 0, and both readers must fall
+        // through to the global average instead of reporting a free
+        // shard.
+        m.record(1, &stats(0), 64);
+        let s = m.snapshot();
+        for n in [16usize, 64, 256, 300, 1024, 50_000] {
+            assert!(
+                (m.cyc_per_num_for(n, 7.84) - s.cyc_per_num_for(n, 7.84)).abs() < 1e-12,
+                "n={n}"
+            );
+        }
+        assert!(m.cyc_per_num_for(64, 7.84) > 0.0, "zero-cycle class falls back");
+        // All-zero-cycle service: both rungs exhausted -> nominal.
+        let z = ServiceMetrics::new();
+        z.record(1, &stats(0), 64);
+        assert_eq!(z.cyc_per_num_for(64, 7.84), 7.84);
+        assert_eq!(z.cyc_per_num_for(64, 7.84), z.snapshot().cyc_per_num_for(64, 7.84));
     }
 
     #[test]

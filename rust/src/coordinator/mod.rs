@@ -23,6 +23,7 @@ pub mod hierarchical;
 pub mod metrics;
 pub mod planner;
 pub mod shard;
+pub mod transport;
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -66,6 +67,19 @@ impl EngineKind {
             EngineKind::Pjrt => "pjrt",
             EngineKind::Hybrid => "hybrid",
         }
+    }
+
+    /// Every engine kind, for sweeps and the parse round-trip test.
+    pub const ALL: [EngineKind; 3] = [EngineKind::Native, EngineKind::Pjrt, EngineKind::Hybrid];
+}
+
+impl std::str::FromStr for EngineKind {
+    type Err = String;
+
+    /// [`EngineKind::parse`] as the standard trait, so CLI flags go
+    /// through the same typed accessors as every numeric option.
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        EngineKind::parse(s).ok_or_else(|| format!("unknown engine `{s}` (native|pjrt|hybrid)"))
     }
 }
 
@@ -144,10 +158,16 @@ pub struct SortService {
 }
 
 impl SortService {
-    /// Start the worker pool.
+    /// Start the worker pool. Misconfiguration is an error, not a
+    /// panic: these values come straight from CLI flags and fleet
+    /// configs, and a bad flag must not take the process down.
     pub fn start(config: ServiceConfig) -> Result<Self> {
-        assert!(config.workers >= 1);
-        assert!(config.banks >= 1);
+        if config.workers < 1 {
+            return Err(anyhow!("a service needs at least one worker"));
+        }
+        if config.banks < 1 {
+            return Err(anyhow!("a service engine needs at least one bank"));
+        }
         let (tx, rx) = mpsc::sync_channel::<Job>(config.queue_depth);
         let rx = Arc::new(Mutex::new(rx));
         let metrics = Arc::new(ServiceMetrics::new());
@@ -195,6 +215,13 @@ impl SortService {
     /// Live metrics snapshot.
     pub fn metrics(&self) -> metrics::Snapshot {
         self.metrics.snapshot()
+    }
+
+    /// Observed cycles/number for `n`'s size class without snapshot
+    /// overhead (no reservoir lock) — the cost-aware shard router's
+    /// per-decision read. Falls back like [`metrics::Snapshot::cyc_per_num_for`].
+    pub fn cyc_per_num_for(&self, n: usize, fallback: f64) -> f64 {
+        self.metrics.cyc_per_num_for(n, fallback)
     }
 
     /// Graceful shutdown: drain queued jobs, then join workers.
@@ -480,6 +507,24 @@ mod tests {
             std::thread::yield_now();
         }
         svc.shutdown(); // idempotent: joins the already-exited workers
+    }
+
+    #[test]
+    fn bad_service_config_is_an_error_not_a_panic() {
+        assert!(SortService::start(ServiceConfig { workers: 0, ..Default::default() }).is_err());
+        assert!(SortService::start(ServiceConfig { banks: 0, ..Default::default() }).is_err());
+    }
+
+    #[test]
+    fn engine_kind_parse_round_trips() {
+        // `ALL`, `name` and `FromStr` must stay in sync: every kind
+        // round-trips through its canonical name, and `from_str`
+        // delegates to `parse`.
+        for kind in EngineKind::ALL {
+            assert_eq!(kind.name().parse::<EngineKind>(), Ok(kind));
+            assert_eq!(EngineKind::parse(kind.name()), Some(kind));
+        }
+        assert!("xla".parse::<EngineKind>().is_err());
     }
 
     #[test]

@@ -22,9 +22,11 @@
 
 use std::ops::Range;
 
+use anyhow::{anyhow, Result};
+
 use crate::sorter::merge::{
-    merge_sorted_runs, model_merge_cycles, model_sharded_completion,
-    model_streamed_completion_uniform,
+    apportion_chunks, merge_sorted_runs, model_merge_cycles, model_sharded_completion,
+    model_sharded_completion_hetero, model_streamed_completion_uniform,
 };
 use crate::sorter::{InMemorySorter, SortStats};
 
@@ -43,6 +45,42 @@ pub struct Geometry {
 impl Default for Geometry {
     fn default() -> Self {
         Geometry { bank_sizes: vec![16, 64, 256, 1024], width: 32, merge_fanout: 4 }
+    }
+}
+
+impl Geometry {
+    /// The tallest bank this geometry offers.
+    pub fn largest_bank(&self) -> usize {
+        self.bank_sizes.last().copied().unwrap_or(1).max(1)
+    }
+
+    /// Parse a `HEIGHTxWIDTH` shard-geometry spec (the CLI's
+    /// `--shard-geometry 1024x32,512x32` entries): `HEIGHT` is the
+    /// shard's tallest physical bank, `WIDTH` its cell bit width. The
+    /// planner ladder keeps every default sub-bank size up to the
+    /// height (plus the height itself), so auto-tuning can still pick
+    /// finer chunking on that host.
+    pub fn from_spec(spec: &str) -> Result<Geometry> {
+        let (h, w) = spec
+            .split_once(['x', 'X'])
+            .ok_or_else(|| anyhow!("shard geometry `{spec}`: expected HEIGHTxWIDTH"))?;
+        let height: usize =
+            h.parse().map_err(|e| anyhow!("shard geometry `{spec}`: height: {e}"))?;
+        let width: u32 =
+            w.parse().map_err(|e| anyhow!("shard geometry `{spec}`: width: {e}"))?;
+        if height == 0 {
+            return Err(anyhow!("shard geometry `{spec}`: height must be at least 1"));
+        }
+        if width == 0 || width > 32 {
+            return Err(anyhow!("shard geometry `{spec}`: width must be in 1..=32"));
+        }
+        let mut bank_sizes: Vec<usize> = Geometry::default()
+            .bank_sizes
+            .into_iter()
+            .filter(|&b| b < height)
+            .collect();
+        bank_sizes.push(height);
+        Ok(Geometry { bank_sizes, width, merge_fanout: Geometry::default().merge_fanout })
     }
 }
 
@@ -135,6 +173,106 @@ impl Plan {
             }
         }
     }
+
+    /// Estimated latency on a *heterogeneous* fleet, one [`ShardModel`]
+    /// per healthy shard: chunks are dealt in proportion to the shard
+    /// weights ([`apportion_chunks`]), every shard drains its share
+    /// through its own merge engine from its own arrival cycle, and a
+    /// cross-shard merge combines the streams. A pad is one bank on one
+    /// host, so the cheapest shard serves it. With identical shard
+    /// models this reduces exactly to
+    /// [`Plan::estimated_cycles_sharded`] (`streaming = true`) /
+    /// [`Plan::estimated_cycles_sharded_barrier`] (`false`) — pinned by
+    /// `prop_hetero_scoring_reduces_to_uniform` and
+    /// `hetero_scoring_reduces_to_uniform_models`.
+    pub fn estimated_cycles_hetero(&self, shards: &[ShardModel], streaming: bool) -> f64 {
+        assert!(!shards.is_empty(), "a fleet has at least one shard");
+        match *self {
+            Plan::Pad { bank, .. } => shards
+                .iter()
+                .map(|s| bank as f64 * s.cyc_per_num + s.oversize as f64)
+                .fold(f64::INFINITY, f64::min),
+            Plan::ChunkMerge { bank, chunks, fanout, .. } => {
+                let weights: Vec<f64> = shards.iter().map(|s| s.weight).collect();
+                let counts = apportion_chunks(chunks, &weights);
+                if streaming {
+                    // The assembly pass of an oversized chunk runs on
+                    // the shard's serialized merge engine, so it is
+                    // charged once per dealt chunk: `arrival` covers
+                    // the first chunk, each further chunk adds one
+                    // `oversize`.
+                    let deal: Vec<(usize, u64)> = counts
+                        .iter()
+                        .zip(shards)
+                        .map(|(&c, s)| {
+                            (c, s.arrival + (c as u64).saturating_sub(1) * s.oversize)
+                        })
+                        .collect();
+                    model_sharded_completion_hetero(bank, &deal, fanout) as f64
+                } else {
+                    // Barrier fleet: every active shard barriers on its
+                    // own chunks (sort + per-chunk assembly + local
+                    // merge passes), then the cross-shard merge
+                    // barriers on the shard streams.
+                    let active = counts.iter().filter(|&&c| c > 0).count();
+                    let worst = counts
+                        .iter()
+                        .zip(shards)
+                        .filter(|(&c, _)| c > 0)
+                        .map(|(&c, s)| {
+                            bank as f64 * s.cyc_per_num
+                                + (c as u64 * s.oversize
+                                    + model_merge_cycles(bank * c, c, fanout))
+                                    as f64
+                        })
+                        .fold(0.0f64, f64::max);
+                    worst + model_merge_cycles(bank * chunks, active, fanout) as f64
+                }
+            }
+        }
+    }
+}
+
+/// One shard's inputs to the heterogeneous fleet scoring, built per
+/// `(bank, fanout)` candidate by [`shard_model`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ShardModel {
+    /// Cycle at which one bank-sized chunk run exists on this shard.
+    pub arrival: u64,
+    /// Per-element sort cost this shard has observed for the bank's
+    /// size class (pads are costed from it directly, unrounded).
+    pub cyc_per_num: f64,
+    /// Extra merge cycles the host pays per chunk when the candidate
+    /// bank exceeds its tallest physical bank (it must assemble the
+    /// oversized chunk from its own banks). 0 when the chunk fits.
+    pub oversize: u64,
+    /// Apportionment weight: faster shards absorb more chunks.
+    pub weight: f64,
+}
+
+/// Build a shard's [`ShardModel`] for a candidate `(bank, fanout)`:
+/// the arrival is `bank · cyc` rounded, plus — when the bank exceeds
+/// the shard's tallest physical bank — the merge passes that host needs
+/// to assemble an oversized chunk out of its own banks. `arrival`
+/// covers the *first* chunk; [`Plan::estimated_cycles_hetero`] charges
+/// one further `oversize` per additional dealt chunk, because the
+/// assembly shares the shard's serialized merge engine. The weight is
+/// the reciprocal arrival, so [`apportion_chunks`] deals chunks in
+/// proportion to how fast each shard produces them. With one shared
+/// geometry and cost this is the uniform model's arrival exactly.
+pub fn shard_model(bank: usize, fanout: usize, geo: &Geometry, cyc: f64) -> ShardModel {
+    assert!(
+        cyc.is_finite() && cyc >= 0.0,
+        "shard cyc/num must be finite and non-negative, got {cyc}"
+    );
+    let largest = geo.largest_bank();
+    let oversize = if bank > largest {
+        model_merge_cycles(bank, bank.div_ceil(largest), fanout)
+    } else {
+        0
+    };
+    let arrival = (bank as f64 * cyc).round() as u64 + oversize;
+    ShardModel { arrival, cyc_per_num: cyc, oversize, weight: 1.0 / arrival.max(1) as f64 }
 }
 
 /// Merge fanouts the auto-tuner enumerates (a hardware fanout-f merge
@@ -197,6 +335,57 @@ pub fn auto_tune_sharded(
             } else {
                 cand.estimated_cycles_sharded_barrier(cyc, shards)
             };
+            if best.is_none_or(|(.., c)| cost < c) {
+                best = Some((bank, fanout, cost));
+            }
+            if bank >= n {
+                break; // a pad has no merge stage: fanout is irrelevant
+            }
+        }
+    }
+    let (bank, fanout, _) = best.expect("geometry has banks");
+    (bank, fanout)
+}
+
+/// [`auto_tune_sharded`] for a *heterogeneous* fleet: one [`Geometry`]
+/// per healthy shard, and `cyc_for(shard, bank)` the per-shard observed
+/// cost for the bank's size class. Candidates are enumerated over the
+/// union of every shard's bank ladder and scored with
+/// [`Plan::estimated_cycles_hetero`] over the per-shard models
+/// ([`shard_model`]), so geometry diversity shapes both where chunks go
+/// (arrival-weighted deal) and what chunk size wins (oversize penalty
+/// on undersized hosts). When every shard shares one geometry and cost
+/// function, the candidate set, scores, iteration order and tie-breaks
+/// all coincide with the uniform tuner, so the pick is *identical* to
+/// `auto_tune_sharded(n, geo, geos.len(), …)` — pinned by
+/// `auto_tune_hetero_reduces_to_uniform`.
+pub fn auto_tune_hetero(
+    n: usize,
+    geos: &[Geometry],
+    streaming: bool,
+    mut cyc_for: impl FnMut(usize, usize) -> f64,
+) -> (usize, usize) {
+    assert!(!geos.is_empty(), "a fleet has at least one shard");
+    let fallback_fanout = geos.iter().map(|g| g.merge_fanout).max().unwrap_or(2).max(2);
+    // Candidate banks: the union of every shard's ladder.
+    let mut banks: Vec<usize> = geos.iter().flat_map(|g| g.bank_sizes.iter().copied()).collect();
+    banks.sort_unstable();
+    banks.dedup();
+    let largest = *banks.last().expect("geometry has banks");
+    if n == 0 {
+        return (largest, fallback_fanout);
+    }
+    let mut fanouts: Vec<usize> = FANOUT_CANDIDATES.to_vec();
+    if !fanouts.contains(&fallback_fanout) {
+        fanouts.push(fallback_fanout);
+    }
+    let mut best: Option<(usize, usize, f64)> = None;
+    for &bank in banks.iter().rev() {
+        let cycs: Vec<f64> = (0..geos.len()).map(|s| cyc_for(s, bank)).collect();
+        for &fanout in &fanouts {
+            let models: Vec<ShardModel> =
+                geos.iter().zip(&cycs).map(|(g, &c)| shard_model(bank, fanout, g, c)).collect();
+            let cost = candidate(n, bank, fanout).estimated_cycles_hetero(&models, streaming);
             if best.is_none_or(|(.., c)| cost < c) {
                 best = Some((bank, fanout, cost));
             }
@@ -596,6 +785,176 @@ mod tests {
             auto_tune_sharded(3000, &geo, 1, true, |_| 7.84),
             auto_tune(3000, &geo, true, |_| 7.84)
         );
+    }
+
+    #[test]
+    fn hetero_scoring_reduces_to_uniform_models() {
+        // Identical shard models = the uniform fleet scoring, exactly,
+        // for both schedules, across shapes (incl. shards > chunks).
+        for n in [10usize, 17, 1025, 3000, 50_000] {
+            for bank in [16usize, 256, 1024] {
+                for fanout in [2usize, 4, 16] {
+                    let c = candidate(n, bank, fanout);
+                    for cyc in [0.5, 7.84, 32.0] {
+                        for shards in [1usize, 2, 4, 8] {
+                            let models =
+                                vec![shard_model(bank, fanout, &Geometry::default(), cyc); shards];
+                            assert_eq!(
+                                c.estimated_cycles_hetero(&models, true),
+                                c.estimated_cycles_sharded(cyc, shards),
+                                "n={n} bank={bank} fanout={fanout} cyc={cyc} shards={shards}"
+                            );
+                            assert_eq!(
+                                c.estimated_cycles_hetero(&models, false),
+                                c.estimated_cycles_sharded_barrier(cyc, shards),
+                                "n={n} bank={bank} fanout={fanout} cyc={cyc} shards={shards}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shard_model_prices_oversized_chunks() {
+        // A shard whose tallest bank is 256 must pay the assembly merge
+        // for 1024-row chunks; a 1024-bank shard must not.
+        let small = Geometry::from_spec("256x32").unwrap();
+        let tall = Geometry::from_spec("1024x32").unwrap();
+        let m_small = shard_model(1024, 4, &small, 7.84);
+        let m_tall = shard_model(1024, 4, &tall, 7.84);
+        assert_eq!(m_tall.oversize, 0);
+        assert_eq!(m_tall.arrival, (1024.0f64 * 7.84).round() as u64);
+        // 1024 rows from 4 banks of 256: one fanout-4 pass over 1024.
+        assert_eq!(m_small.oversize, 1024);
+        assert_eq!(m_small.arrival, m_tall.arrival + 1024);
+        assert!(m_small.weight < m_tall.weight, "slower arrival, smaller share");
+        // The weighted deal follows: the tall shard absorbs more chunks.
+        let deal = crate::sorter::merge::apportion_chunks(
+            10,
+            &[m_small.weight, m_tall.weight],
+        );
+        assert!(deal[1] > deal[0], "{deal:?}");
+        assert_eq!(deal.iter().sum::<usize>(), 10);
+    }
+
+    #[test]
+    fn hetero_fleet_scores_worse_with_a_slow_shard() {
+        // Replacing one of two nominal shards with a half-speed host
+        // must never improve the streamed score. Hand-traced under the
+        // scheduler (and mirrored in python/fleet_model.py): uniform
+        // deals [25, 24]; mixed weights deal [33, 16] onto the fast
+        // host. Note mixed is allowed to score *worse* than all-slow:
+        // the reciprocal-arrival deal models chunk production rates,
+        // not the superlinear per-shard merge work, and overloading the
+        // fast host's serialized engine is exactly the behaviour the
+        // model must expose (cf. the 8-shard regression).
+        let c = candidate(50_000, 1024, 4);
+        let geo = Geometry::default();
+        let fast = shard_model(1024, 4, &geo, 7.84);
+        let slow = shard_model(1024, 4, &geo, 15.68);
+        let uniform = c.estimated_cycles_hetero(&[fast, fast], true);
+        let mixed = c.estimated_cycles_hetero(&[fast, slow], true);
+        let all_slow = c.estimated_cycles_hetero(&[slow, slow], true);
+        assert_eq!(uniform, 133_980.0);
+        assert_eq!(mixed, 157_532.0);
+        assert_eq!(all_slow, 142_008.0);
+        assert!(uniform < mixed && uniform < all_slow);
+    }
+
+    #[test]
+    fn hetero_fleet_table_is_pinned() {
+        // EXPERIMENTS.md §Heterogeneous shard scaling: n = 1M over 977
+        // banks of 1024 at fanout 4. Values cross-checked against the
+        // independent mirror in python/fleet_model.py.
+        let score = |shards: &[(&str, f64)]| -> f64 {
+            let models: Vec<ShardModel> = shards
+                .iter()
+                .map(|&(spec, cyc)| {
+                    shard_model(1024, 4, &Geometry::from_spec(spec).unwrap(), cyc)
+                })
+                .collect();
+            candidate(1_000_000, 1024, 4).estimated_cycles_hetero(&models, true)
+        };
+        let nominal = ("1024x32", 7.84);
+        let slow = ("1024x32", 15.68);
+        let short = ("512x32", 7.84);
+        assert_eq!(score(&[nominal; 4]), 2_010_972.0, "= the PR-3 uniform 4-shard row");
+        assert_eq!(score(&[nominal, nominal, slow, slow]), 2_671_452.0);
+        assert_eq!(score(&[slow; 4]), 2_019_000.0);
+        assert_eq!(score(&[nominal, nominal, short, short]), 2_325_340.0);
+        assert_eq!(score(&[nominal, slow, slow, slow]), 3_003_228.0);
+    }
+
+    #[test]
+    fn auto_tune_hetero_reduces_to_uniform() {
+        let geo = Geometry::default();
+        for n in [10usize, 3000, 50_000] {
+            for shards in [1usize, 2, 4, 8] {
+                for streaming in [true, false] {
+                    let geos = vec![geo.clone(); shards];
+                    assert_eq!(
+                        auto_tune_hetero(n, &geos, streaming, |_, _| 7.84),
+                        auto_tune_sharded(n, &geo, shards, streaming, |_| 7.84),
+                        "n={n} shards={shards} streaming={streaming}"
+                    );
+                }
+            }
+        }
+        // Degenerate n.
+        assert_eq!(auto_tune_hetero(0, &[geo], true, |_, _| 7.84), (1024, 4));
+    }
+
+    #[test]
+    fn auto_tune_hetero_sees_geometry_diversity() {
+        // Fleet of one 1024-bank host and one 256-max host: candidates
+        // include both ladders' banks, and the pick is the cheapest
+        // under the hetero scoring (cross-checked by brute force).
+        let geos = vec![
+            Geometry::from_spec("1024x32").unwrap(),
+            Geometry::from_spec("256x32").unwrap(),
+        ];
+        let n = 50_000usize;
+        for streaming in [true, false] {
+            let (bank, fanout) = auto_tune_hetero(n, &geos, streaming, |_, _| 7.84);
+            let score = |b: usize, f: usize| {
+                let models: Vec<ShardModel> =
+                    geos.iter().map(|g| shard_model(b, f, g, 7.84)).collect();
+                candidate(n, b, f).estimated_cycles_hetero(&models, streaming)
+            };
+            let picked = score(bank, fanout);
+            let mut banks: Vec<usize> =
+                geos.iter().flat_map(|g| g.bank_sizes.iter().copied()).collect();
+            banks.sort_unstable();
+            banks.dedup();
+            for &b in &banks {
+                for f in FANOUT_CANDIDATES {
+                    assert!(
+                        picked <= score(b, f),
+                        "streaming={streaming}: ({bank},{fanout}) lost to ({b},{f})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn geometry_spec_parses() {
+        let g = Geometry::from_spec("1024x32").unwrap();
+        assert_eq!(g.bank_sizes, vec![16, 64, 256, 1024]);
+        assert_eq!(g.width, 32);
+        assert_eq!(g.largest_bank(), 1024);
+        let g = Geometry::from_spec("512x32").unwrap();
+        assert_eq!(g.bank_sizes, vec![16, 64, 256, 512], "height joins the ladder");
+        let g = Geometry::from_spec("2048x16").unwrap();
+        assert_eq!(g.bank_sizes, vec![16, 64, 256, 1024, 2048]);
+        assert_eq!(g.width, 16);
+        // Height already on the ladder is not duplicated.
+        assert_eq!(Geometry::from_spec("256x32").unwrap().bank_sizes, vec![16, 64, 256]);
+        for bad in ["1024", "x32", "1024x", "0x32", "1024x0", "1024x33", "ax32", "1024xb"] {
+            assert!(Geometry::from_spec(bad).is_err(), "{bad}");
+        }
     }
 
     #[test]

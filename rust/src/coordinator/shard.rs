@@ -1,25 +1,26 @@
-//! Fleet layer: one coordinator over N independent [`SortService`]
-//! shards — the "multiple services/hosts" step of the roadmap.
+//! Fleet layer: one coordinator over N independent
+//! [`super::SortService`] shards — the "multiple services/hosts" step
+//! of the roadmap.
 //!
 //! The paper's §IV multi-bank management scales column-skipping *within*
 //! one simulated host; a [`ShardedSortService`] scales it *across*
 //! hosts. Every shard owns its own worker pool, engine geometry and
-//! metrics (a [`SortService`] is exactly one simulated host), and the
-//! fleet routes work over them:
+//! metrics (a [`super::SortService`] is exactly one simulated host),
+//! and the fleet routes work over them:
 //!
 //! * **Routing** — [`RoutePolicy`]: round-robin, least-outstanding
-//!   (live per-shard in-flight accounting), or size-class affinity
+//!   (live per-shard in-flight accounting), size-class affinity
 //!   (requests of one log2 size class stick to one shard, which keeps
 //!   that shard's per-class cost observations dense — the auto-tuner's
-//!   food).
+//!   food), or cost-aware (see **Heterogeneity**).
 //! * **Error isolation** — a shard whose service has died (its channel
 //!   closed, its workers gone) is marked unhealthy and its work is
 //!   re-routed to the surviving shards instead of failing the request.
 //!   [`ShardedSortService::fail_shard`] retires a shard the way a
-//!   crashed host would ([`SortService::halt`]).
+//!   crashed host would (through its transport's halt).
 //! * **Hierarchical sorting** — [`ShardedSortService::sort_hierarchical`]
 //!   routes bank-sized chunks across the fleet and drives the *same*
-//!   [`ChunkAssembly`] as the single-service path, so the output is
+//!   `ChunkAssembly` as the single-service path, so the output is
 //!   byte-identical by construction (the streaming merge frontier
 //!   consumes run arrivals in chunk order, indifferent to which host
 //!   sorted each chunk). On top it reports the fleet latency model:
@@ -30,10 +31,28 @@
 //! * **Fleet metrics** — [`FleetSnapshot`] aggregates the per-shard
 //!   [`Snapshot`]s: totals, per-shard latency percentiles, and the
 //!   shard imbalance ratio (max/mean elements served).
+//! * **Heterogeneity** — shards are no longer clones of one template:
+//!   [`ShardedConfig`] carries one [`ServiceConfig`] *per shard*
+//!   (different bank geometries, worker pools, engines per host), the
+//!   cost-aware [`RoutePolicy::Cost`] weighs each shard's observed
+//!   per-size-class cycles/number and its geometry (an undersized host
+//!   pays the oversize-assembly penalty of
+//!   [`super::planner::shard_model`]), and auto-tuning scores
+//!   candidates with the heterogeneous fleet model
+//!   ([`super::planner::auto_tune_hetero`]), which reduces exactly to
+//!   the uniform PR-3 model when every shard matches.
+//! * **Recovery** — [`ShardedSortService::recover_shard`] restarts a
+//!   retired host through its transport and re-admits it to routing
+//!   (it comes back empty, like a real restarted process; the router
+//!   warms it back in — zero outstanding work and cost fallbacks make
+//!   it immediately attractive to every policy).
 //!
-//! No RPC yet — shards are in-process hosts, which is what makes the
-//! byte-identity property testable today; the boundary is deliberately
-//! shaped so a later PR can put a wire where the `Vec<Shard>` is.
+//! No RPC yet — but the coordinator no longer knows that: each shard is
+//! a [`ShardTransport`] ([`super::transport`]), the in-process
+//! [`LocalTransport`] being one implementation (and the fault-injecting
+//! `FlakyTransport` another). A future RPC transport drops in at that
+//! seam without touching routing, recovery or the models; in-process
+//! hosts remain what makes the byte-identity property testable today.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc;
@@ -42,8 +61,9 @@ use anyhow::{anyhow, Result};
 
 use super::hierarchical::{Capacity, ChunkAssembly, HierarchicalConfig, HierarchicalOutput};
 use super::metrics::{size_class, ServiceMetrics, Snapshot};
-use super::planner::{auto_tune_sharded, partition};
-use super::{ServiceConfig, SortResponse, SortService};
+use super::planner::{auto_tune_hetero, partition, shard_model, Geometry};
+use super::transport::{LocalTransport, ShardTransport};
+use super::{ServiceConfig, SortResponse};
 use crate::sorter::merge::{model_merge_cycles, model_streamed_completion};
 
 /// How the fleet routes a request (or a hierarchical chunk) to a shard.
@@ -61,6 +81,18 @@ pub enum RoutePolicy {
     /// share a size class, and affinity must not serialize the fleet's
     /// parallel drains onto one host).
     SizeClass,
+    /// Cost-aware: pick the shard with the cheapest modelled completion
+    /// for this request — the shard's observed per-size-class
+    /// cycles/number (nominal before traffic) times its geometry-aware
+    /// arrival ([`super::planner::shard_model`]: an undersized host
+    /// pays the oversize-assembly merge), scaled by its live queue
+    /// depth. On a heterogeneous fleet this skews work towards fast,
+    /// adequately-sized hosts; on a uniform idle fleet every score
+    /// ties and the lowest shard id wins (like
+    /// [`RoutePolicy::LeastOutstanding`], a hierarchical fan-out still
+    /// spreads because each submission bumps the chosen shard's
+    /// queue-depth factor).
+    Cost,
 }
 
 impl RoutePolicy {
@@ -69,6 +101,7 @@ impl RoutePolicy {
             "round" | "round-robin" | "rr" => Some(RoutePolicy::RoundRobin),
             "least" | "least-outstanding" => Some(RoutePolicy::LeastOutstanding),
             "class" | "size-class" => Some(RoutePolicy::SizeClass),
+            "cost" | "cost-aware" => Some(RoutePolicy::Cost),
             _ => None,
         }
     }
@@ -78,39 +111,71 @@ impl RoutePolicy {
             RoutePolicy::RoundRobin => "round-robin",
             RoutePolicy::LeastOutstanding => "least-outstanding",
             RoutePolicy::SizeClass => "size-class",
+            RoutePolicy::Cost => "cost",
         }
     }
 
     /// Every policy, for sweeps and property tests.
-    pub const ALL: [RoutePolicy; 3] =
-        [RoutePolicy::RoundRobin, RoutePolicy::LeastOutstanding, RoutePolicy::SizeClass];
+    pub const ALL: [RoutePolicy; 4] = [
+        RoutePolicy::RoundRobin,
+        RoutePolicy::LeastOutstanding,
+        RoutePolicy::SizeClass,
+        RoutePolicy::Cost,
+    ];
 }
 
-/// Fleet configuration: `shards` identical hosts started from the
-/// `service` template, routed by `route`.
+impl std::str::FromStr for RoutePolicy {
+    type Err = String;
+
+    /// [`RoutePolicy::parse`] as the standard trait, so CLI flags go
+    /// through the same typed accessors as every numeric option.
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        RoutePolicy::parse(s)
+            .ok_or_else(|| format!("unknown route policy `{s}` (round|least|class|cost)"))
+    }
+}
+
+/// Fleet configuration: one independent host per entry of `services`
+/// (hosts may differ in geometry, workers, engine — a heterogeneous
+/// fleet), routed by `route`.
 #[derive(Clone, Debug)]
 pub struct ShardedConfig {
-    /// Number of shards (independent hosts).
-    pub shards: usize,
     /// Routing policy.
     pub route: RoutePolicy,
-    /// Per-shard service template (worker pool, engine, geometry, …).
-    pub service: ServiceConfig,
+    /// Per-shard service configurations; `services.len()` is the shard
+    /// count.
+    pub services: Vec<ServiceConfig>,
+}
+
+impl ShardedConfig {
+    /// The classic uniform fleet: `shards` identical hosts cloned from
+    /// one `service` template.
+    pub fn uniform(shards: usize, route: RoutePolicy, service: ServiceConfig) -> Self {
+        ShardedConfig { route, services: vec![service; shards] }
+    }
+
+    /// Number of shards.
+    pub fn shards(&self) -> usize {
+        self.services.len()
+    }
 }
 
 impl Default for ShardedConfig {
     fn default() -> Self {
-        ShardedConfig {
-            shards: 2,
-            route: RoutePolicy::RoundRobin,
-            service: ServiceConfig::default(),
-        }
+        ShardedConfig::uniform(2, RoutePolicy::RoundRobin, ServiceConfig::default())
     }
 }
 
-/// One shard: a service plus the fleet-side accounting around it.
+/// One shard: a transport to its host plus the fleet-side accounting
+/// around it.
 struct Shard {
-    service: SortService,
+    /// How the coordinator reaches the host — in-process today
+    /// ([`LocalTransport`]), a wire later.
+    transport: Box<dyn ShardTransport>,
+    /// The host's planner geometry, cached at fleet start so the
+    /// cost-aware router does not clone a [`ServiceConfig`] per
+    /// decision.
+    geometry: Geometry,
     /// Jobs submitted to this shard and not yet answered.
     outstanding: AtomicU64,
     /// Cleared when the shard's service is observed dead (submit or
@@ -149,6 +214,9 @@ pub struct FleetSnapshot {
     /// Times the router observed a dead shard and moved work off it
     /// since the fleet started.
     pub rerouted: u64,
+    /// Shards re-admitted to routing by
+    /// [`ShardedSortService::recover_shard`] since the fleet started.
+    pub recovered: u64,
     /// Worst per-shard p50 (µs) — the fleet's slow-median shard.
     pub p50_us: u64,
     /// Worst per-shard p99 (µs).
@@ -191,7 +259,7 @@ impl FleetSnapshot {
 pub struct ShardedOutput {
     /// The assembled pipeline result — byte-identical (values, argsort,
     /// per-chunk stats, merge accounting) to
-    /// [`SortService::sort_hierarchical`] on one host.
+    /// [`super::SortService::sort_hierarchical`] on one host.
     pub hier: HierarchicalOutput,
     /// Which shard served each chunk (after any re-routing).
     pub assignments: Vec<usize>,
@@ -231,29 +299,69 @@ pub struct ShardedSortService {
     /// Fleet-level pipeline counters (per-shard chunk work lives in the
     /// shards' own metrics).
     fleet: ServiceMetrics,
+    /// Shards re-admitted by [`Self::recover_shard`].
+    recovered: AtomicU64,
     config: ShardedConfig,
 }
 
 impl ShardedSortService {
-    /// Start `config.shards` independent services.
+    /// Start one independent in-process host per `config.services`
+    /// entry ([`LocalTransport`]). An empty fleet is an error, not a
+    /// panic — the shard count comes straight from a CLI flag.
     pub fn start(config: ShardedConfig) -> Result<Self> {
-        assert!(config.shards >= 1, "a fleet has at least one shard");
-        let shards = (0..config.shards)
-            .map(|_| {
-                Ok(Shard {
-                    service: SortService::start(config.service.clone())?,
+        if config.services.is_empty() {
+            return Err(anyhow!("a fleet has at least one shard (got --shards 0?)"));
+        }
+        let transports = config
+            .services
+            .iter()
+            .map(|svc| {
+                Ok(Box::new(LocalTransport::start(svc.clone())?) as Box<dyn ShardTransport>)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Self::with_transports(config.route, transports)
+    }
+
+    /// Assemble a fleet over caller-provided transports — the RPC /
+    /// fault-injection entry point. The per-shard [`ServiceConfig`]s
+    /// that feed the planner, the cost model and [`Self::config`] are
+    /// derived from the transports themselves
+    /// ([`ShardTransport::config`]), so a caller cannot hand the
+    /// coordinator a config list that disagrees with the hosts.
+    pub fn with_transports(
+        route: RoutePolicy,
+        transports: Vec<Box<dyn ShardTransport>>,
+    ) -> Result<Self> {
+        if transports.is_empty() {
+            return Err(anyhow!("a fleet has at least one shard (got --shards 0?)"));
+        }
+        // One `config()` call per transport, reused for both the fleet
+        // config and the cached routing geometry — an RPC transport
+        // whose config is fetched remotely must not be able to hand
+        // the two readers different answers.
+        let mut services = Vec::with_capacity(transports.len());
+        let shards: Vec<Shard> = transports
+            .into_iter()
+            .map(|transport| {
+                let svc = transport.config();
+                let geometry = svc.geometry.clone();
+                services.push(svc);
+                Shard {
+                    geometry,
+                    transport,
                     outstanding: AtomicU64::new(0),
                     healthy: AtomicBool::new(true),
                     rerouted_from: AtomicU64::new(0),
-                })
+                }
             })
-            .collect::<Result<Vec<_>>>()?;
+            .collect();
         Ok(ShardedSortService {
             shards,
-            route: config.route,
+            route,
             rr: AtomicU64::new(0),
             fleet: ServiceMetrics::new(),
-            config,
+            recovered: AtomicU64::new(0),
+            config: ShardedConfig { route, services },
         })
     }
 
@@ -273,22 +381,70 @@ impl ShardedSortService {
     }
 
     /// Retire shard `i` the way a crashed host would: its workers are
-    /// told to exit ([`SortService::halt`]) and routing stops offering
+    /// told to exit (the transport's halt) and routing stops offering
     /// it work immediately. In-flight jobs on it either drain (they
     /// were queued ahead of the halt) or surface as dropped replies,
-    /// which the fleet re-routes.
-    pub fn fail_shard(&self, i: usize) {
-        assert!(i < self.shards.len(), "shard {i} out of range");
-        self.shards[i].healthy.store(false, Ordering::Relaxed);
-        self.shards[i].service.halt();
+    /// which the fleet re-routes. An out-of-range index is an error,
+    /// not a panic — it can come from a CLI flag or an operator tool.
+    pub fn fail_shard(&self, i: usize) -> Result<()> {
+        let shard = self
+            .shards
+            .get(i)
+            .ok_or_else(|| anyhow!("shard {i} out of range (fleet has {})", self.shards.len()))?;
+        shard.healthy.store(false, Ordering::Relaxed);
+        shard.transport.halt();
+        Ok(())
+    }
+
+    /// Re-admit shard `i`: restart the host through its transport and
+    /// put it back into routing. The host comes back *empty* (no queued
+    /// work, no metric history — like a real restarted process), which
+    /// is exactly what warms it back in: its jobs all settled when they
+    /// were re-routed off the dead host, so it is the least-outstanding
+    /// pick, and its cost falls back to the nominal constant — every
+    /// policy starts offering it work immediately (pinned by
+    /// `recovered_shard_receives_new_work_under_every_policy`). The
+    /// outstanding counter is deliberately *not* reset: every submit
+    /// settles exactly once on every path, so the counter already
+    /// tracks genuinely in-flight fleet jobs, and zeroing it would let
+    /// late settles from the old host eat decrements belonging to new
+    /// post-recovery work. Recovering a healthy shard is allowed and
+    /// restarts it (an operator-driven host replacement).
+    pub fn recover_shard(&self, i: usize) -> Result<()> {
+        let shard = self
+            .shards
+            .get(i)
+            .ok_or_else(|| anyhow!("shard {i} out of range (fleet has {})", self.shards.len()))?;
+        shard.transport.restart()?;
+        shard.healthy.store(true, Ordering::Relaxed);
+        self.recovered.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// The cost-aware routing score for serving `len` elements on shard
+    /// `sid`: the geometry-aware modelled arrival of that chunk on this
+    /// host ([`shard_model`]: observed per-class cyc/num, plus the
+    /// oversize-assembly merge when the request exceeds the host's
+    /// tallest bank), scaled by the live queue depth. Lower is better.
+    fn route_cost(&self, sid: usize, len: usize) -> f64 {
+        let shard = &self.shards[sid];
+        let n = len.max(1);
+        let cyc = shard
+            .transport
+            .cyc_per_num_for(n, crate::params::NOMINAL_COLSKIP_CYC_PER_NUM);
+        let fanout = shard.geometry.merge_fanout.max(2);
+        let m = shard_model(n, fanout, &shard.geometry, cyc);
+        (shard.outstanding.load(Ordering::Relaxed) + 1) as f64 * m.arrival.max(1) as f64
     }
 
     /// Pick a shard for a request of `len` elements under the policy,
     /// skipping unhealthy shards. `offset` distinguishes the chunks of
-    /// one hierarchical fan-out (0 for plain requests): round-robin and
-    /// least-outstanding ignore it, size-class affinity adds it to the
-    /// class's home shard so one sort's same-class chunks still spread.
-    /// `None` when the whole fleet is down.
+    /// one hierarchical fan-out (0 for plain requests): round-robin,
+    /// least-outstanding and cost ignore it (the latter two spread via
+    /// the outstanding counts the fan-out itself builds up), size-class
+    /// affinity adds it to the class's home shard so one sort's
+    /// same-class chunks still spread. `None` when the whole fleet is
+    /// down.
     fn route_for(&self, len: usize, offset: usize) -> Option<usize> {
         let healthy: Vec<usize> = (0..self.shards.len())
             .filter(|&i| self.shards[i].healthy.load(Ordering::Relaxed))
@@ -305,6 +461,22 @@ impl ShardedSortService {
                 .min_by_key(|&&i| (self.shards[i].outstanding.load(Ordering::Relaxed), i))
                 .expect("non-empty"),
             RoutePolicy::SizeClass => healthy[(size_class(len) + offset) % healthy.len()],
+            RoutePolicy::Cost => {
+                // Score each shard once, then take the minimum —
+                // `min_by` comparators re-evaluate their keys, and a
+                // 977-chunk fan-out pays the cost model per decision.
+                let scores: Vec<(f64, usize)> =
+                    healthy.iter().map(|&i| (self.route_cost(i, len), i)).collect();
+                scores
+                    .into_iter()
+                    .min_by(|a, b| {
+                        a.0.partial_cmp(&b.0)
+                            .unwrap_or(std::cmp::Ordering::Equal)
+                            .then(a.1.cmp(&b.1))
+                    })
+                    .expect("non-empty")
+                    .1
+            }
         };
         Some(pick)
     }
@@ -324,7 +496,7 @@ impl ShardedSortService {
             let Some(sid) = self.route_for(data.len(), offset) else {
                 return Err(anyhow!("every shard is down"));
             };
-            match self.shards[sid].service.submit(data.to_vec()) {
+            match self.shards[sid].transport.submit(data.to_vec()) {
                 Ok(rx) => {
                     self.shards[sid].outstanding.fetch_add(1, Ordering::Relaxed);
                     *rerouted += tries;
@@ -346,7 +518,16 @@ impl ShardedSortService {
     }
 
     fn settle(&self, sid: usize) {
-        self.shards[sid].outstanding.fetch_sub(1, Ordering::Relaxed);
+        // Every submit settles exactly once on every path, so the
+        // counter cannot genuinely underflow; saturate anyway — a wrap
+        // to u64::MAX would permanently starve the shard under
+        // least-outstanding routing, far worse than a transiently low
+        // count.
+        let _ = self.shards[sid].outstanding.fetch_update(
+            Ordering::Relaxed,
+            Ordering::Relaxed,
+            |v| Some(v.saturating_sub(1)),
+        );
     }
 
     /// Wait for one routed job, re-routing off every shard that dies
@@ -387,17 +568,21 @@ impl ShardedSortService {
 
     /// Sort through the hierarchical pipeline across the fleet: route
     /// bank-sized chunks over the shards, absorb the responses into the
-    /// shared [`ChunkAssembly`] (byte-identical to the single-service
+    /// shared `ChunkAssembly` (byte-identical to the single-service
     /// path), re-routing chunks off any shard that dies mid-flight.
     pub fn sort_hierarchical(
         &self,
         data: &[u32],
         cfg: &HierarchicalConfig,
     ) -> Result<ShardedOutput> {
-        assert!(cfg.fanout >= 2, "merge fanout must be at least 2");
+        if cfg.fanout < 2 {
+            return Err(anyhow!("merge fanout must be at least 2, got {}", cfg.fanout));
+        }
         let n = data.len();
         let (capacity, fanout) = self.resolve_chunking(n, cfg);
-        assert!(capacity >= 1, "bank capacity must be positive");
+        if capacity < 1 {
+            return Err(anyhow!("bank capacity must be positive"));
+        }
         let mut asm = ChunkAssembly::new(partition(n, capacity), fanout, cfg.streaming);
         let chunks = asm.spans().len();
 
@@ -473,7 +658,10 @@ impl ShardedSortService {
             worst + model_merge_cycles(n, active.len(), fanout)
         };
 
-        let out = asm.finish(&self.config.service, capacity);
+        // Cost totals are referenced to shard 0's engine configuration;
+        // a heterogeneous fleet's silicon differs per host, but the
+        // pipeline output needs one deterministic reference ensemble.
+        let out = asm.finish(&self.config.services[0], capacity);
         self.fleet.record_hierarchical(n, chunks, out.merge.cycles, out.merge.comparisons);
 
         Ok(ShardedOutput {
@@ -487,29 +675,46 @@ impl ShardedSortService {
 
     /// Resolve the `(bank capacity, merge fanout)` a fleet hierarchical
     /// sort will use: fixed from the config, or auto-tuned with the
-    /// shard dimension ([`auto_tune_sharded`]) at the element-weighted
-    /// per-class costs the fleet has observed. The tuner scores the
-    /// *healthy* shard count — a degraded fleet must not pick a plan
-    /// whose parallelism retired with its dead shards.
+    /// heterogeneous fleet model ([`auto_tune_hetero`]) over the
+    /// *healthy* shards' geometries and each shard's own observed
+    /// per-class costs — a degraded fleet must not pick a plan whose
+    /// parallelism (or geometry) retired with its dead shards. On a
+    /// uniform fleet this is exactly the PR-3
+    /// [`super::planner::auto_tune_sharded`] pick (the hetero tuner
+    /// reduces to it; pinned by `auto_capacity_uses_the_shard_dimension`).
     pub fn resolve_chunking(&self, n: usize, cfg: &HierarchicalConfig) -> (usize, usize) {
         match cfg.capacity {
             Capacity::Fixed(c) => (c, cfg.fanout),
             Capacity::Auto => {
-                let snap = self.fleet_metrics();
-                auto_tune_sharded(
-                    n,
-                    &self.config.service.geometry,
-                    self.healthy_count().max(1),
-                    cfg.streaming,
-                    |bank| snap.cyc_per_num_for(bank, crate::params::NOMINAL_COLSKIP_CYC_PER_NUM),
-                )
+                let healthy: Vec<&Shard> = self
+                    .shards
+                    .iter()
+                    .filter(|s| s.healthy.load(Ordering::Relaxed))
+                    .collect();
+                // A fully-degraded fleet still resolves a plan (the
+                // sort itself will fail on routing): score shard 0.
+                let healthy = if healthy.is_empty() {
+                    vec![&self.shards[0]]
+                } else {
+                    healthy
+                };
+                let geos: Vec<Geometry> =
+                    healthy.iter().map(|s| s.geometry.clone()).collect();
+                auto_tune_hetero(n, &geos, cfg.streaming, |s, bank| {
+                    healthy[s]
+                        .transport
+                        .cyc_per_num_for(bank, crate::params::NOMINAL_COLSKIP_CYC_PER_NUM)
+                })
             }
         }
     }
 
     /// Aggregate fleet metrics: totals, per-shard snapshots, imbalance.
+    /// A recovered shard reports from zero (its host restarted), so
+    /// fleet totals can step down across a recovery — like a real
+    /// fleet's gauge after losing a host's counters.
     pub fn fleet_metrics(&self) -> FleetSnapshot {
-        let snaps: Vec<Snapshot> = self.shards.iter().map(|s| s.service.metrics()).collect();
+        let snaps: Vec<Snapshot> = self.shards.iter().map(|s| s.transport.metrics()).collect();
         let healthy: Vec<bool> =
             self.shards.iter().map(|s| s.healthy.load(Ordering::Relaxed)).collect();
         let fleet = self.fleet.snapshot();
@@ -535,6 +740,7 @@ impl ShardedSortService {
                 .iter()
                 .map(|s| s.rerouted_from.load(Ordering::Relaxed))
                 .sum(),
+            recovered: self.recovered.load(Ordering::Relaxed),
             p50_us: snaps.iter().map(|s| s.p50_us).max().unwrap_or(0),
             p99_us: snaps.iter().map(|s| s.p99_us).max().unwrap_or(0),
             imbalance: if elements == 0 { 1.0 } else { max_elements as f64 / mean_elements },
@@ -550,7 +756,7 @@ impl ShardedSortService {
     /// Graceful shutdown of every shard.
     pub fn shutdown(self) {
         for shard in self.shards {
-            shard.service.shutdown();
+            shard.transport.shutdown();
         }
     }
 }
@@ -558,15 +764,24 @@ impl ShardedSortService {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::SortService;
     use crate::datasets::{Dataset, DatasetKind};
 
     fn fleet(shards: usize, route: RoutePolicy) -> ShardedSortService {
-        ShardedSortService::start(ShardedConfig {
+        ShardedSortService::start(ShardedConfig::uniform(
             shards,
             route,
-            service: ServiceConfig { workers: 2, ..Default::default() },
-        })
+            ServiceConfig { workers: 2, ..Default::default() },
+        ))
         .unwrap()
+    }
+
+    /// Block until shard `i`'s host observably rejects work (halt
+    /// drains asynchronously).
+    fn wait_dead(f: &ShardedSortService, i: usize) {
+        while f.shards[i].transport.submit(vec![1u32]).is_ok() {
+            std::thread::yield_now();
+        }
     }
 
     #[test]
@@ -636,10 +851,8 @@ mod tests {
         let f = fleet(2, RoutePolicy::RoundRobin);
         // Kill shard 1 and wait until its service observably rejects
         // work (the halt drains asynchronously).
-        f.fail_shard(1);
-        while f.shards[1].service.submit(vec![1u32]).is_ok() {
-            std::thread::yield_now();
-        }
+        f.fail_shard(1).unwrap();
+        wait_dead(&f, 1);
         assert_eq!(f.healthy_count(), 1);
         let d = Dataset::generate32(DatasetKind::Clustered, 1500, 5);
         let out = f.sort_hierarchical(&d.values, &HierarchicalConfig::fixed(128, 4)).unwrap();
@@ -660,10 +873,8 @@ mod tests {
         // Submit directly to a shard that is about to die, then let the
         // fleet's recv path observe the dropped reply and re-route.
         let f = fleet(2, RoutePolicy::LeastOutstanding);
-        f.fail_shard(0);
-        while f.shards[0].service.submit(vec![1u32]).is_ok() {
-            std::thread::yield_now();
-        }
+        f.fail_shard(0).unwrap();
+        wait_dead(&f, 0);
         // Undo the health mark so the router *tries* the dead shard:
         // this simulates a host that died without telling anyone.
         f.shards[0].healthy.store(true, Ordering::Relaxed);
@@ -685,8 +896,8 @@ mod tests {
     #[test]
     fn whole_fleet_down_is_an_error() {
         let f = fleet(2, RoutePolicy::RoundRobin);
-        f.fail_shard(0);
-        f.fail_shard(1);
+        f.fail_shard(0).unwrap();
+        f.fail_shard(1).unwrap();
         assert_eq!(f.healthy_count(), 0);
         assert!(f.submit_wait(vec![1, 2, 3]).is_err());
         assert!(f
@@ -830,9 +1041,12 @@ mod tests {
         let cfg = HierarchicalConfig::auto();
         let n = 50_000usize;
         let (bank, fanout) = f.resolve_chunking(n, &cfg);
+        // A fresh uniform fleet costs every shard at the nominal
+        // constant, so the hetero tuner reduces to the PR-3 uniform
+        // pick exactly.
         let expect = auto_tune_sharded(
             n,
-            &f.config().service.geometry,
+            &f.config().services[0].geometry,
             4,
             true,
             |_| NOMINAL_COLSKIP_CYC_PER_NUM,
@@ -842,6 +1056,297 @@ mod tests {
         let out = f.sort_hierarchical(&d.values, &cfg).unwrap();
         assert_eq!(out.hier.capacity, bank);
         assert_eq!(out.hier.merge.fanout, fanout);
+        f.shutdown();
+    }
+
+    #[test]
+    fn fleet_misconfiguration_is_an_error_not_a_panic() {
+        // Empty fleet.
+        assert!(ShardedSortService::start(ShardedConfig {
+            route: RoutePolicy::RoundRobin,
+            services: vec![],
+        })
+        .is_err());
+        // A bad per-shard config surfaces as the start error.
+        assert!(ShardedSortService::start(ShardedConfig::uniform(
+            2,
+            RoutePolicy::RoundRobin,
+            ServiceConfig { workers: 0, ..Default::default() },
+        ))
+        .is_err());
+        // An empty transport list is equally rejected, and a fleet
+        // assembled from transports reports the hosts' own configs —
+        // there is no parallel config list to get wrong.
+        assert!(ShardedSortService::with_transports(RoutePolicy::RoundRobin, vec![]).is_err());
+        let t = LocalTransport::start(ServiceConfig { workers: 1, ..Default::default() }).unwrap();
+        let f1 = ShardedSortService::with_transports(
+            RoutePolicy::RoundRobin,
+            vec![Box::new(t) as Box<dyn ShardTransport>],
+        )
+        .unwrap();
+        assert_eq!(f1.config().shards(), 1);
+        assert_eq!(f1.config().services[0].workers, 1, "config derives from the transport");
+        f1.shutdown();
+        // Out-of-range shard operations.
+        let f = fleet(2, RoutePolicy::RoundRobin);
+        assert!(f.fail_shard(2).is_err());
+        assert!(f.recover_shard(7).is_err());
+        // A degenerate fanout is an error, not a panic.
+        assert!(f
+            .sort_hierarchical(&[3, 1, 2], &HierarchicalConfig::fixed(2, 1))
+            .is_err());
+        f.shutdown();
+    }
+
+    #[test]
+    fn route_policy_parse_round_trips() {
+        // `ALL`, `name` and `FromStr` must stay in sync: every policy
+        // round-trips through its canonical name, and `from_str`
+        // delegates to `parse`.
+        for route in RoutePolicy::ALL {
+            assert_eq!(route.name().parse::<RoutePolicy>(), Ok(route));
+            assert_eq!(RoutePolicy::parse(route.name()), Some(route));
+        }
+        assert!("chaos".parse::<RoutePolicy>().is_err());
+    }
+
+    #[test]
+    fn recovered_shard_receives_new_work_under_every_policy() {
+        for route in RoutePolicy::ALL {
+            let f = fleet(2, route);
+            f.fail_shard(0).unwrap();
+            wait_dead(&f, 0);
+            assert_eq!(f.healthy_count(), 1, "{route:?}");
+            // The degraded fleet still serves (all on shard 1).
+            let d = Dataset::generate32(DatasetKind::MapReduce, 600, 4);
+            let out = f.sort_hierarchical(&d.values, &HierarchicalConfig::fixed(64, 4)).unwrap();
+            assert!(out.assignments.iter().all(|&s| s == 1), "{route:?}");
+            // Recover shard 0 and sort again: the router must resume
+            // offering it work under *every* policy (round-robin and
+            // size-class by rotation/offset, least-outstanding and
+            // cost because the empty host scores best-or-tied).
+            f.recover_shard(0).unwrap();
+            assert_eq!(f.healthy_count(), 2, "{route:?}");
+            let out = f.sort_hierarchical(&d.values, &HierarchicalConfig::fixed(64, 4)).unwrap();
+            let mut expect = d.values.clone();
+            expect.sort_unstable();
+            assert_eq!(out.hier.output.sorted, expect, "{route:?}");
+            assert!(
+                out.shard_chunks[0] > 0,
+                "{route:?}: recovered shard got no chunks: {:?}",
+                out.shard_chunks
+            );
+            let m = f.fleet_metrics();
+            assert_eq!(m.recovered, 1, "{route:?}");
+            assert!(m.healthy.iter().all(|&h| h), "{route:?}");
+            // Plain requests reach it too where the pick is fully
+            // deterministic (round-robin rotates onto it; least ties
+            // to the lowest id). Size-class pins by class and cost by
+            // whichever shard's observed chunk costs came out lower —
+            // the chunk assertion above already covers those.
+            if matches!(route, RoutePolicy::RoundRobin | RoutePolicy::LeastOutstanding) {
+                let before = f.shards[0].transport.metrics().completed;
+                for seed in 0..2u64 {
+                    let d = Dataset::generate32(DatasetKind::Uniform, 64, seed);
+                    f.submit_wait(d.values).unwrap();
+                }
+                assert!(
+                    f.shards[0].transport.metrics().completed > before,
+                    "{route:?}: no plain request reached the recovered shard"
+                );
+            }
+            f.shutdown();
+        }
+    }
+
+    #[test]
+    fn late_settle_after_recovery_cannot_underflow_outstanding() {
+        let f = fleet(2, RoutePolicy::LeastOutstanding);
+        // A spurious settle at 0 must saturate, not wrap to u64::MAX
+        // (which would permanently starve the shard under
+        // least-outstanding routing and overflow the cost score).
+        f.settle(0);
+        assert_eq!(f.shards[0].outstanding.load(Ordering::Relaxed), 0);
+        let d = Dataset::generate32(DatasetKind::Uniform, 32, 1);
+        f.submit_wait(d.values).unwrap();
+        assert_eq!(f.shards[0].transport.metrics().completed, 1, "ties still pin to shard 0");
+        f.shutdown();
+    }
+
+    #[test]
+    fn recovery_restarts_a_dead_host_with_empty_metrics() {
+        let f = fleet(2, RoutePolicy::RoundRobin);
+        let d = Dataset::generate32(DatasetKind::MapReduce, 256, 9);
+        for _ in 0..4 {
+            f.submit_wait(d.values.clone()).unwrap();
+        }
+        assert_eq!(f.shards[1].transport.metrics().completed, 2);
+        f.fail_shard(1).unwrap();
+        wait_dead(&f, 1);
+        f.recover_shard(1).unwrap();
+        // The restarted host starts from zero — like a real process
+        // that came back from a crash.
+        assert_eq!(f.shards[1].transport.metrics().completed, 0);
+        let resp = f.shards[1].transport.submit(d.values.clone()).unwrap();
+        assert!(resp.recv().unwrap().is_ok());
+        f.shutdown();
+    }
+
+    #[test]
+    fn cost_routing_prefers_the_cheap_shard_on_observed_traffic() {
+        // Train shard 0 with expensive uniform traffic and shard 1 with
+        // cheap MapReduce traffic in the same size class, by talking to
+        // the hosts directly; then the fleet's cost router must send a
+        // same-class request to shard 1 (uniform ~28-30 cyc/num vs
+        // MapReduce ~7-8 — robustly apart).
+        let f = fleet(2, RoutePolicy::Cost);
+        let expensive = Dataset::generate32(DatasetKind::Uniform, 256, 3);
+        let cheap = Dataset::generate32(DatasetKind::MapReduce, 256, 3);
+        f.shards[0].transport.submit(expensive.values.clone()).unwrap().recv().unwrap().unwrap();
+        f.shards[1].transport.submit(cheap.values.clone()).unwrap().recv().unwrap().unwrap();
+        assert!(
+            f.route_cost(0, 256) > f.route_cost(1, 256),
+            "{} vs {}",
+            f.route_cost(0, 256),
+            f.route_cost(1, 256)
+        );
+        let before = f.shards[1].transport.metrics().completed;
+        let resp = f.submit_wait(Dataset::generate32(DatasetKind::Kruskal, 300, 8).values);
+        assert!(resp.is_ok());
+        assert_eq!(
+            f.shards[1].transport.metrics().completed,
+            before + 1,
+            "same size class must route to the observed-cheap shard"
+        );
+        f.shutdown();
+    }
+
+    #[test]
+    fn cost_routing_penalizes_undersized_geometry() {
+        // Shard 0's tallest bank is 256, shard 1's is 1024: a 1024-row
+        // request pays the oversize-assembly merge on shard 0, so an
+        // idle fresh fleet (both at the nominal cost) must route it to
+        // shard 1. A 256-row request ties and takes shard 0.
+        let services = vec![
+            ServiceConfig {
+                workers: 1,
+                geometry: Geometry::from_spec("256x32").unwrap(),
+                ..Default::default()
+            },
+            ServiceConfig {
+                workers: 1,
+                geometry: Geometry::from_spec("1024x32").unwrap(),
+                ..Default::default()
+            },
+        ];
+        // Each decision on a *fresh* fleet: observed traffic would move
+        // the costs off the deterministic nominal fallback.
+        let f = ShardedSortService::start(ShardedConfig {
+            route: RoutePolicy::Cost,
+            services: services.clone(),
+        })
+        .unwrap();
+        assert!(f.route_cost(0, 1024) > f.route_cost(1, 1024));
+        let d = Dataset::generate32(DatasetKind::MapReduce, 1024, 5);
+        f.submit_wait(d.values).unwrap();
+        assert_eq!(f.shards[1].transport.metrics().completed, 1);
+        f.shutdown();
+        let f = ShardedSortService::start(ShardedConfig { route: RoutePolicy::Cost, services })
+            .unwrap();
+        let d = Dataset::generate32(DatasetKind::MapReduce, 256, 5);
+        f.submit_wait(d.values).unwrap();
+        assert_eq!(f.shards[0].transport.metrics().completed, 1, "in-geometry tie -> shard 0");
+        f.shutdown();
+    }
+
+    #[test]
+    fn heterogeneous_fleet_is_byte_identical_and_tunes_heterogeneously() {
+        use crate::coordinator::planner::auto_tune_hetero;
+        use crate::params::NOMINAL_COLSKIP_CYC_PER_NUM;
+        // Mixed geometries *and* mixed worker pools: the pipeline output
+        // must still be byte-identical to one service, for every policy.
+        let services = vec![
+            ServiceConfig {
+                workers: 2,
+                geometry: Geometry::from_spec("1024x32").unwrap(),
+                ..Default::default()
+            },
+            ServiceConfig {
+                workers: 1,
+                geometry: Geometry::from_spec("512x32").unwrap(),
+                ..Default::default()
+            },
+            ServiceConfig {
+                workers: 3,
+                geometry: Geometry::from_spec("256x32").unwrap(),
+                ..Default::default()
+            },
+        ];
+        let single =
+            SortService::start(ServiceConfig { workers: 2, ..Default::default() }).unwrap();
+        let d = Dataset::generate32(DatasetKind::Kruskal, 3000, 21);
+        let cfg = HierarchicalConfig::fixed(256, 4);
+        let reference = single.sort_hierarchical(&d.values, &cfg).unwrap();
+        for route in RoutePolicy::ALL {
+            let f = ShardedSortService::start(ShardedConfig {
+                route,
+                services: services.clone(),
+            })
+            .unwrap();
+            let out = f.sort_hierarchical(&d.values, &cfg).unwrap();
+            assert_eq!(out.hier.output.sorted, reference.output.sorted, "{route:?}");
+            assert_eq!(out.hier.output.order, reference.output.order, "{route:?}");
+            assert_eq!(out.hier.output.stats, reference.output.stats, "{route:?}");
+            // Auto capacity resolves through the heterogeneous tuner
+            // over the healthy geometries at per-shard observed costs.
+            let resolved = f.resolve_chunking(50_000, &HierarchicalConfig::auto());
+            let geos: Vec<Geometry> =
+                f.shards.iter().map(|s| s.geometry.clone()).collect();
+            let expect = auto_tune_hetero(50_000, &geos, true, |s, bank| {
+                f.shards[s]
+                    .transport
+                    .cyc_per_num_for(bank, NOMINAL_COLSKIP_CYC_PER_NUM)
+            });
+            assert_eq!(resolved, expect, "{route:?}");
+            f.shutdown();
+        }
+        single.shutdown();
+    }
+
+    #[test]
+    fn flaky_transport_failover_and_recovery() {
+        use crate::coordinator::transport::FlakyTransport;
+        // A fleet over fault-injecting transports: break shard 1's
+        // link, watch the router fail over at submit time, then recover
+        // through the same transport seam.
+        let svc = ServiceConfig { workers: 1, ..Default::default() };
+        let handles: Vec<std::sync::Arc<FlakyTransport>> = (0..2)
+            .map(|_| std::sync::Arc::new(FlakyTransport::start(svc.clone()).unwrap()))
+            .collect();
+        let f = ShardedSortService::with_transports(
+            RoutePolicy::RoundRobin,
+            handles
+                .iter()
+                .map(|t| Box::new(std::sync::Arc::clone(t)) as Box<dyn ShardTransport>)
+                .collect(),
+        )
+        .unwrap();
+        handles[1].break_link();
+        let d = Dataset::generate32(DatasetKind::Clustered, 900, 13);
+        let out = f.sort_hierarchical(&d.values, &HierarchicalConfig::fixed(128, 4)).unwrap();
+        let mut expect = d.values.clone();
+        expect.sort_unstable();
+        assert_eq!(out.hier.output.sorted, expect);
+        assert!(out.assignments.iter().all(|&s| s == 0), "broken link serves nothing");
+        assert!(out.rerouted >= 1, "the submit-time failover must be counted");
+        assert_eq!(f.healthy_count(), 1, "the flaky shard is isolated");
+        // Recover through the transport: the link heals, the host
+        // restarts, routing resumes.
+        f.recover_shard(1).unwrap();
+        assert!(!handles[1].is_down());
+        let out = f.sort_hierarchical(&d.values, &HierarchicalConfig::fixed(128, 4)).unwrap();
+        assert_eq!(out.hier.output.sorted, expect);
+        assert!(out.shard_chunks[1] > 0, "{:?}", out.shard_chunks);
         f.shutdown();
     }
 }

@@ -1,0 +1,299 @@
+//! The shard transport boundary: how the fleet coordinator talks to one
+//! shard host.
+//!
+//! [`super::shard::ShardedSortService`] used to hold a `Vec<SortService>`
+//! directly, which welded the routing layer to in-process hosts. The
+//! [`ShardTransport`] trait is the seam at exactly that spot: everything
+//! the router needs from a host — submit a job, read its cost/metric
+//! observations, crash it, restart it — expressed without naming the
+//! host's implementation. The fleet code is written against the trait,
+//! so a future RPC transport (a wire where the `Vec<Box<dyn
+//! ShardTransport>>` is) drops in without touching routing, recovery or
+//! the latency models.
+//!
+//! Two implementations ship today:
+//!
+//! * [`LocalTransport`] — the in-process host: owns a [`SortService`]
+//!   behind an `RwLock` so [`ShardTransport::restart`] can replace a
+//!   halted service with a fresh one from the same config (the shard
+//!   *recovery* primitive; a real deployment would restart the remote
+//!   process instead).
+//! * [`FlakyTransport`] — a fault-injecting wrapper for tests: a local
+//!   host whose submissions can be made to fail on demand, simulating a
+//!   network partition or a crashed host that the router must observe,
+//!   isolate and — after [`ShardTransport::restart`] — re-admit.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, RwLock};
+
+use anyhow::{anyhow, Result};
+
+use super::metrics::Snapshot;
+use super::{ServiceConfig, SortResponse, SortService};
+
+/// Everything the fleet coordinator needs from one shard host. The
+/// contract mirrors a crashed-host reality: [`ShardTransport::submit`]
+/// fails fast when the host is down, an in-flight job on a dying host
+/// surfaces as a dropped reply (the receiver's `recv` errors), and
+/// [`ShardTransport::restart`] brings the host back *empty* — a
+/// restarted host has lost its metric observations, exactly like a real
+/// process that came back from a crash.
+pub trait ShardTransport: Send + Sync {
+    /// Submit one sort job; returns the response receiver. Errors when
+    /// the host is down (closed channel / dead process).
+    fn submit(&self, data: Vec<u32>) -> Result<mpsc::Receiver<Result<SortResponse>>>;
+
+    /// Full metrics snapshot of the host.
+    fn metrics(&self) -> Snapshot;
+
+    /// The host's observed cycles/number for `n`'s size class, with
+    /// `fallback` before any traffic — the cost-aware router's input.
+    /// Must be cheap: it is called once per routing decision.
+    fn cyc_per_num_for(&self, n: usize, fallback: f64) -> f64;
+
+    /// The service configuration the host runs (geometry, workers, …).
+    fn config(&self) -> ServiceConfig;
+
+    /// Kill the host the way a crash would: asynchronously, leaving the
+    /// handle valid for accounting. Queued work drains; later submits
+    /// fail.
+    fn halt(&self);
+
+    /// Restart a halted host from its configuration. The returned host
+    /// is empty: no queued work, no metric history.
+    fn restart(&self) -> Result<()>;
+
+    /// Graceful shutdown (drain, then stop). Idempotent.
+    fn shutdown(&self);
+}
+
+/// Shared-ownership pass-through: a fleet can own `Arc`s of transports
+/// that a test (or an operator tool) also holds, to crash or inspect a
+/// host behind the router's back — exactly what a real host failure
+/// looks like from the coordinator's side.
+impl<T: ShardTransport + ?Sized> ShardTransport for std::sync::Arc<T> {
+    fn submit(&self, data: Vec<u32>) -> Result<mpsc::Receiver<Result<SortResponse>>> {
+        (**self).submit(data)
+    }
+
+    fn metrics(&self) -> Snapshot {
+        (**self).metrics()
+    }
+
+    fn cyc_per_num_for(&self, n: usize, fallback: f64) -> f64 {
+        (**self).cyc_per_num_for(n, fallback)
+    }
+
+    fn config(&self) -> ServiceConfig {
+        (**self).config()
+    }
+
+    fn halt(&self) {
+        (**self).halt();
+    }
+
+    fn restart(&self) -> Result<()> {
+        (**self).restart()
+    }
+
+    fn shutdown(&self) {
+        (**self).shutdown();
+    }
+}
+
+/// The in-process shard host: one [`SortService`] plus the restart
+/// machinery. `None` in the slot means the host is shut down; only an
+/// explicit [`ShardTransport::restart`] (a host replacement) revives it.
+pub struct LocalTransport {
+    config: ServiceConfig,
+    service: RwLock<Option<SortService>>,
+}
+
+impl LocalTransport {
+    /// Start an in-process host from `config`.
+    pub fn start(config: ServiceConfig) -> Result<Self> {
+        let service = SortService::start(config.clone())?;
+        Ok(LocalTransport { config, service: RwLock::new(Some(service)) })
+    }
+
+    fn with_service<T>(&self, f: impl FnOnce(&SortService) -> T) -> Result<T> {
+        let guard = self.service.read().expect("transport poisoned");
+        guard.as_ref().map(f).ok_or_else(|| anyhow!("shard host is shut down"))
+    }
+}
+
+impl ShardTransport for LocalTransport {
+    fn submit(&self, data: Vec<u32>) -> Result<mpsc::Receiver<Result<SortResponse>>> {
+        self.with_service(|svc| svc.submit(data))?
+    }
+
+    fn metrics(&self) -> Snapshot {
+        self.with_service(SortService::metrics)
+            .unwrap_or_else(|_| super::metrics::ServiceMetrics::new().snapshot())
+    }
+
+    fn cyc_per_num_for(&self, n: usize, fallback: f64) -> f64 {
+        self.with_service(|svc| svc.cyc_per_num_for(n, fallback)).unwrap_or(fallback)
+    }
+
+    fn config(&self) -> ServiceConfig {
+        self.config.clone()
+    }
+
+    fn halt(&self) {
+        if let Ok(guard) = self.service.read() {
+            if let Some(svc) = guard.as_ref() {
+                svc.halt();
+            }
+        }
+    }
+
+    fn restart(&self) -> Result<()> {
+        // Build the replacement before taking the write lock so a
+        // failed start leaves the old (halted) host in place.
+        let fresh = SortService::start(self.config.clone())?;
+        let old = self
+            .service
+            .write()
+            .expect("transport poisoned")
+            .replace(fresh);
+        if let Some(old) = old {
+            // The halted workers exit on their own; join them off the
+            // routing path so the restart does not leak threads.
+            old.shutdown();
+        }
+        Ok(())
+    }
+
+    fn shutdown(&self) {
+        let old = self.service.write().expect("transport poisoned").take();
+        if let Some(svc) = old {
+            svc.shutdown();
+        }
+    }
+}
+
+/// Fault-injecting transport for tests: a [`LocalTransport`] whose
+/// submissions fail while the injected fault is armed — the shape of a
+/// network partition (the host itself may be healthy, but the fleet
+/// cannot reach it). [`ShardTransport::restart`] clears the fault *and*
+/// restarts the inner host, modelling a full host replacement.
+pub struct FlakyTransport {
+    inner: LocalTransport,
+    down: AtomicBool,
+}
+
+impl FlakyTransport {
+    /// A healthy flaky host (fault disarmed).
+    pub fn start(config: ServiceConfig) -> Result<Self> {
+        Ok(FlakyTransport { inner: LocalTransport::start(config)?, down: AtomicBool::new(false) })
+    }
+
+    /// Arm the fault: every submit fails until [`ShardTransport::restart`].
+    pub fn break_link(&self) {
+        self.down.store(true, Ordering::Relaxed);
+    }
+
+    /// Whether the fault is armed.
+    pub fn is_down(&self) -> bool {
+        self.down.load(Ordering::Relaxed)
+    }
+}
+
+impl ShardTransport for FlakyTransport {
+    fn submit(&self, data: Vec<u32>) -> Result<mpsc::Receiver<Result<SortResponse>>> {
+        if self.is_down() {
+            return Err(anyhow!("injected fault: shard link is down"));
+        }
+        self.inner.submit(data)
+    }
+
+    fn metrics(&self) -> Snapshot {
+        self.inner.metrics()
+    }
+
+    fn cyc_per_num_for(&self, n: usize, fallback: f64) -> f64 {
+        self.inner.cyc_per_num_for(n, fallback)
+    }
+
+    fn config(&self) -> ServiceConfig {
+        self.inner.config()
+    }
+
+    fn halt(&self) {
+        self.inner.halt();
+    }
+
+    fn restart(&self) -> Result<()> {
+        self.inner.restart()?;
+        self.down.store(false, Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn shutdown(&self) {
+        self.inner.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{Dataset, DatasetKind};
+
+    fn config() -> ServiceConfig {
+        ServiceConfig { workers: 2, ..Default::default() }
+    }
+
+    #[test]
+    fn local_transport_serves_and_restarts() {
+        let t = LocalTransport::start(config()).unwrap();
+        let d = Dataset::generate32(DatasetKind::Uniform, 64, 3);
+        let rx = t.submit(d.values.clone()).unwrap();
+        let resp = rx.recv().unwrap().unwrap();
+        let mut expect = d.values.clone();
+        expect.sort_unstable();
+        assert_eq!(resp.sorted, expect);
+        assert_eq!(t.metrics().completed, 1);
+        // Crash the host; once the workers are gone, submits fail.
+        t.halt();
+        while t.submit(vec![1u32]).is_ok() {
+            std::thread::yield_now();
+        }
+        // Restart: a fresh host with *empty* metrics serves again.
+        t.restart().unwrap();
+        let resp = t.submit(d.values.clone()).unwrap().recv().unwrap().unwrap();
+        assert_eq!(resp.sorted, expect);
+        assert_eq!(t.metrics().completed, 1, "a restarted host starts from zero");
+        t.shutdown();
+        assert!(t.submit(vec![1u32]).is_err(), "shutdown is final");
+        assert!(t.restart().is_ok(), "but an explicit restart still revives the slot");
+        t.shutdown();
+    }
+
+    #[test]
+    fn local_transport_cost_reader_matches_snapshot() {
+        let t = LocalTransport::start(config()).unwrap();
+        let d = Dataset::generate32(DatasetKind::MapReduce, 256, 5);
+        t.submit(d.values).unwrap().recv().unwrap().unwrap();
+        let snap = t.metrics();
+        for n in [16usize, 256, 4096] {
+            assert!((t.cyc_per_num_for(n, 7.84) - snap.cyc_per_num_for(n, 7.84)).abs() < 1e-12);
+        }
+        t.shutdown();
+        assert_eq!(t.cyc_per_num_for(256, 7.84), 7.84, "a dead host falls back");
+    }
+
+    #[test]
+    fn flaky_transport_fails_and_recovers_on_demand() {
+        let t = FlakyTransport::start(config()).unwrap();
+        assert!(t.submit(vec![3u32, 1, 2]).is_ok());
+        t.break_link();
+        assert!(t.is_down());
+        assert!(t.submit(vec![3u32, 1, 2]).is_err(), "armed fault fails fast");
+        t.restart().unwrap();
+        assert!(!t.is_down());
+        let resp = t.submit(vec![3u32, 1, 2]).unwrap().recv().unwrap().unwrap();
+        assert_eq!(resp.sorted, vec![1, 2, 3]);
+        t.shutdown();
+    }
+}

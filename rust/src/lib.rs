@@ -13,7 +13,9 @@
 //!   pipeline (chunk → column-skip → k-way loser-tree merge) that sorts
 //!   datasets far beyond one array's capacity, and a shard layer
 //!   ([`coordinator::shard`]) that routes that pipeline across a fleet
-//!   of independent service hosts.
+//!   of independent — possibly heterogeneous — service hosts behind the
+//!   [`coordinator::transport::ShardTransport`] boundary, with
+//!   cost-aware routing and shard recovery.
 //! * **L2/L1 (python/, build-time only)** — the in-memory *array compute*
 //!   (iterative min search over bit columns) expressed as a JAX scan over
 //!   a Pallas kernel, AOT-lowered to HLO text.
@@ -54,9 +56,11 @@ pub mod testing;
 pub mod prelude {
     pub use crate::bits::{BitPlanes, RowMask};
     pub use crate::coordinator::hierarchical::{Capacity, HierarchicalConfig, HierarchicalOutput};
+    pub use crate::coordinator::planner::Geometry;
     pub use crate::coordinator::shard::{
         FleetSnapshot, RoutePolicy, ShardedConfig, ShardedOutput, ShardedSortService,
     };
+    pub use crate::coordinator::transport::{FlakyTransport, LocalTransport, ShardTransport};
     pub use crate::coordinator::{ServiceConfig, SortService};
     pub use crate::cost::{CostModel, SorterArch};
     pub use crate::datasets::{Dataset, DatasetKind};

@@ -15,6 +15,7 @@ use anyhow::{anyhow, bail, Result};
 
 use memsort::cli::Args;
 use memsort::coordinator::hierarchical::{Capacity, HierarchicalConfig};
+use memsort::coordinator::planner::Geometry;
 use memsort::coordinator::shard::{RoutePolicy, ShardedConfig, ShardedSortService};
 use memsort::coordinator::{EngineKind, ServiceConfig, SortService};
 use memsort::cost::{Activity, CostModel, SorterArch};
@@ -76,15 +77,19 @@ fn usage() {
                     --fanout 4 --workers 4; sizes accept k/m/g;\n\
                     --capacity auto picks the cheapest bank/fanout,\n\
                     --barrier disables the streaming merge overlap,\n\
-                    --shards N --route <round|least|class> runs the\n\
-                    pipeline across a fleet of N service hosts)\n\
+                    --shards N --route <round|least|class|cost> runs\n\
+                    the pipeline across a fleet of N service hosts;\n\
+                    --shard-geometry 1024x32,512x32 makes the fleet\n\
+                    heterogeneous — one shard per HxW entry, with the\n\
+                    cost router and tuner aware of each host's banks)\n\
            gen     --dataset <kind> --n 1024 --seed 42\n\
            stats   --dataset <kind> --n 1024 --seed 42\n\
            fig     --id <6|7|8a|8b> [--trials 5] [--n 1024] [--json]\n\
            scale   --max 1m --capacity 1024 --fanout 4 [--json]\n\
-                   [--streaming] [--shards N --route <round|least|class>]\n\
+                   [--streaming] [--shards N | --shard-geometry ...]\n\
+                   [--route <round|least|class|cost>]\n\
                    (hierarchical sweep: chunks, latency, merge share,\n\
-                   streamed-vs-barrier overlap saving; with --shards\n\
+                   streamed-vs-barrier overlap saving; with a fleet\n\
                    also the fleet latency model + fleet metrics)\n\
            report  [--trials 5] [--seed 42]\n\
            serve   --engine <native|pjrt|hybrid> --workers 4\n\
@@ -94,6 +99,40 @@ fn usage() {
            energy  --dataset <kind> --n 1024 --k 2\n\
                    (per-op energy breakdown from the metered run)\n"
     );
+}
+
+/// Build the fleet's per-shard service configs from `--shards` /
+/// `--shard-geometry`. A geometry list (`1024x32,512x32`) defines one
+/// shard per entry — a heterogeneous fleet; a bare `--shards N` clones
+/// the template. The spec widths must match the engine `--width`: the
+/// geometry is the planner's view of the same banks the engine
+/// simulates, and silently sorting 32-bit data on a 16-bit host would
+/// corrupt the result rather than model it.
+fn shard_services(args: &Args, template: &ServiceConfig) -> Result<Vec<ServiceConfig>> {
+    let shards = args.parse_num("shards", 1usize)?;
+    if shards == 0 {
+        bail!("--shards must be at least 1");
+    }
+    let Some(spec) = args.get("shard-geometry") else {
+        return Ok(vec![template.clone(); shards]);
+    };
+    let geos = spec.split(',').map(Geometry::from_spec).collect::<Result<Vec<_>>>()?;
+    if args.get("shards").is_some() && shards != geos.len() {
+        bail!("--shards {shards} disagrees with --shard-geometry ({} entries)", geos.len());
+    }
+    for g in &geos {
+        if g.width != template.colskip.width {
+            bail!(
+                "--shard-geometry width {} conflicts with engine --width {}",
+                g.width,
+                template.colskip.width
+            );
+        }
+    }
+    Ok(geos
+        .into_iter()
+        .map(|geometry| ServiceConfig { geometry, ..template.clone() })
+        .collect())
 }
 
 fn dataset_from(args: &Args) -> Result<Dataset> {
@@ -195,9 +234,9 @@ fn cmd_sort_hierarchical(
 ) -> Result<()> {
     let fanout = args.parse_num("fanout", 4usize)?;
     let workers = args.parse_num("workers", 4usize)?;
-    let shards = args.parse_num("shards", 1usize)?;
-    let route = RoutePolicy::parse(args.get_or("route", "round"))
-        .ok_or_else(|| anyhow!("--route must be round|least|class"))?;
+    // `FromStr` impls make fleet flags parse through the same typed
+    // accessor as every numeric option.
+    let route = args.parse_num("route", RoutePolicy::RoundRobin)?;
     let streaming = !args.flag("barrier");
     if capacity == Capacity::Fixed(0) {
         bail!("--capacity must be at least 1 (or `auto`)");
@@ -208,9 +247,6 @@ fn cmd_sort_hierarchical(
     if workers == 0 {
         bail!("--workers must be at least 1");
     }
-    if shards == 0 {
-        bail!("--shards must be at least 1");
-    }
     let sub_banks = if args.get_or("sorter", "colskip") == "multibank" { banks } else { 1 };
     let service_cfg = ServiceConfig {
         workers,
@@ -218,6 +254,8 @@ fn cmd_sort_hierarchical(
         colskip: ColSkipConfig { width, k, ..Default::default() },
         ..Default::default()
     };
+    let services = shard_services(args, &service_cfg)?;
+    let shards = services.len();
     let auto = capacity == Capacity::Auto;
     let cfg = HierarchicalConfig { capacity, fanout, streaming };
     // One host below, a routed fleet of hosts above one shard; the
@@ -225,11 +263,7 @@ fn cmd_sort_hierarchical(
     // the fleet adds routing, failure isolation and the fleet latency
     // model on top.
     let (out, fleet_view, wall) = if shards > 1 {
-        let fleet = ShardedSortService::start(ShardedConfig {
-            shards,
-            route,
-            service: service_cfg,
-        })?;
+        let fleet = ShardedSortService::start(ShardedConfig { route, services })?;
         let t0 = std::time::Instant::now();
         let sharded = fleet.sort_hierarchical(&d.values, &cfg)?;
         let wall = t0.elapsed();
@@ -238,7 +272,7 @@ fn cmd_sort_hierarchical(
         let extras = (sharded.sharded_latency_cycles, sharded.shard_chunks.clone(), snap);
         (sharded.hier, Some(extras), wall)
     } else {
-        let svc = SortService::start(service_cfg)?;
+        let svc = SortService::start(services.into_iter().next().expect("one shard"))?;
         let t0 = std::time::Instant::now();
         let out = svc.sort_hierarchical(&d.values, &cfg)?;
         let wall = t0.elapsed();
@@ -323,12 +357,15 @@ fn cmd_scale(args: &Args) -> Result<()> {
         bail!("--max ({max}) must exceed --capacity ({capacity})");
     }
     let streaming = args.flag("streaming");
-    let shards = args.parse_num("shards", 1usize)?;
-    let route = RoutePolicy::parse(args.get_or("route", "round"))
-        .ok_or_else(|| anyhow!("--route must be round|least|class"))?;
-    if shards == 0 {
-        bail!("--shards must be at least 1");
-    }
+    let route = args.parse_num("route", RoutePolicy::RoundRobin)?;
+    // Shard count before the worker split: a geometry list defines one
+    // (possibly heterogeneous) shard per entry.
+    let shards_hint = match args.get("shard-geometry") {
+        Some(spec) => spec.split(',').count(),
+        None => args.parse_num("shards", 1usize)?,
+    };
+    let services = shard_services(args, &report::sweep_service(width, k, shards_hint))?;
+    let shards = services.len();
     let mut ns = Vec::new();
     let mut n = capacity.saturating_mul(4);
     while n < max {
@@ -336,14 +373,9 @@ fn cmd_scale(args: &Args) -> Result<()> {
         n = n.saturating_mul(4);
     }
     ns.push(max);
-    let (pts, fleet) = if shards > 1 {
-        let (pts, snap) = report::scaling_sharded(
-            &ns, capacity, fanout, width, k, seed, streaming, shards, route,
-        );
-        (pts, Some(snap))
-    } else {
-        (report::scaling(&ns, capacity, fanout, width, k, seed, streaming), None)
-    };
+    let (pts, snap) =
+        report::scaling_sharded(&ns, capacity, fanout, seed, streaming, services, route);
+    let fleet = (shards > 1).then_some(snap);
     if args.flag("json") {
         let points = Json::arr(pts.iter().map(|p| Json::obj([
             ("n", p.n.into()),
@@ -374,6 +406,7 @@ fn cmd_scale(args: &Args) -> Result<()> {
                     ("errors", snap.errors.into()),
                     ("elements", snap.elements.into()),
                     ("rerouted", snap.rerouted.into()),
+                    ("recovered", snap.recovered.into()),
                     ("imbalance", snap.imbalance.into()),
                     ("p50_us", snap.p50_us.into()),
                     ("p99_us", snap.p99_us.into()),
@@ -433,12 +466,13 @@ fn cmd_scale(args: &Args) -> Result<()> {
         );
         if let Some(snap) = &fleet {
             println!(
-                "fleet ({}): {} jobs, {} errors, imbalance {:.2}, rerouted {}",
+                "fleet ({}): {} jobs, {} errors, imbalance {:.2}, rerouted {}, recovered {}",
                 route.name(),
                 snap.completed,
                 snap.errors,
                 snap.imbalance,
-                snap.rerouted
+                snap.rerouted,
+                snap.recovered
             );
             for (i, (s, h)) in snap.shards.iter().zip(&snap.healthy).enumerate() {
                 println!(
@@ -712,8 +746,7 @@ fn cmd_energy(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let engine = EngineKind::parse(args.get_or("engine", "native"))
-        .ok_or_else(|| anyhow!("--engine must be native|pjrt|hybrid"))?;
+    let engine = args.parse_num("engine", EngineKind::Native)?;
     let workers = args.parse_num("workers", 4usize)?;
     let requests = args.parse_num("requests", 64usize)?;
     let n = args.parse_num("n", 1024usize)?;

@@ -277,54 +277,57 @@ pub fn scaling(
         ns,
         capacity,
         fanout,
-        width,
-        k,
         seed,
         streaming,
-        1,
+        vec![sweep_service(width, k, 1)],
         crate::coordinator::shard::RoutePolicy::RoundRobin,
     )
     .0
 }
 
+/// The per-shard service configuration the scaling sweeps run with:
+/// host parallelism split across `shards`, the requested engine
+/// width/k, defaults elsewhere. The CLI overrides the geometry per
+/// shard for `--shard-geometry` sweeps.
+pub fn sweep_service(width: u32, k: usize, shards: usize) -> crate::coordinator::ServiceConfig {
+    crate::coordinator::ServiceConfig {
+        workers: std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(4)
+            .div_ceil(shards.max(1))
+            .min(8),
+        colskip: crate::sorter::colskip::ColSkipConfig { width, k, ..Default::default() },
+        ..Default::default()
+    }
+}
+
 /// [`scaling`] across a fleet: the sweep runs on a
-/// [`crate::coordinator::shard::ShardedSortService`] of `shards` hosts
-/// under `route`, and the fleet's metric snapshot is returned alongside
-/// the points (totals, per-shard percentiles, imbalance) so the CLI can
-/// surface it. With one shard the per-element rates derive from the
-/// mode-run latency (exactly [`scaling`]'s historical numbers); above
-/// one they derive from the fleet model, so each row stays internally
-/// consistent (`Mnum/s == 500 / cyc_per_num`).
-#[allow(clippy::too_many_arguments)]
+/// [`crate::coordinator::shard::ShardedSortService`] with one host per
+/// `services` entry (a heterogeneous fleet when the entries differ —
+/// e.g. per-shard geometries from `--shard-geometry`) under `route`,
+/// and the fleet's metric snapshot is returned alongside the points
+/// (totals, per-shard percentiles, imbalance) so the CLI can surface
+/// it. With one shard the per-element rates derive from the mode-run
+/// latency (exactly [`scaling`]'s historical numbers); above one they
+/// derive from the fleet model, so each row stays internally
+/// consistent (`Mnum/s == 500 / cyc_per_num`). The dataset width comes
+/// from the first shard's engine config.
 pub fn scaling_sharded(
     ns: &[usize],
     capacity: usize,
     fanout: usize,
-    width: u32,
-    k: usize,
     seed: u64,
     streaming: bool,
-    shards: usize,
+    services: Vec<crate::coordinator::ServiceConfig>,
     route: crate::coordinator::shard::RoutePolicy,
 ) -> (Vec<ScalePoint>, crate::coordinator::shard::FleetSnapshot) {
     use crate::coordinator::hierarchical::{Capacity, HierarchicalConfig};
     use crate::coordinator::shard::{ShardedConfig, ShardedSortService};
-    use crate::coordinator::ServiceConfig;
 
-    let fleet = ShardedSortService::start(ShardedConfig {
-        shards,
-        route,
-        service: ServiceConfig {
-            workers: std::thread::available_parallelism()
-                .map(|p| p.get())
-                .unwrap_or(4)
-                .div_ceil(shards)
-                .min(8),
-            colskip: crate::sorter::colskip::ColSkipConfig { width, k, ..Default::default() },
-            ..Default::default()
-        },
-    })
-    .expect("fleet start");
+    let shards = services.len();
+    let width = services.first().map_or(32, |s| s.colskip.width);
+    let fleet =
+        ShardedSortService::start(ShardedConfig { route, services }).expect("fleet start");
     let cfg = HierarchicalConfig { capacity: Capacity::Fixed(capacity), fanout, streaming };
     let pts = ns
         .iter()
@@ -494,16 +497,30 @@ mod tests {
     fn sharded_scaling_matches_single_service_points() {
         use crate::coordinator::shard::RoutePolicy;
         let single = scaling(&[2048, 8192], 256, 4, 32, 2, 7, true);
-        let (one, snap1) =
-            scaling_sharded(&[2048, 8192], 256, 4, 32, 2, 7, true, 1, RoutePolicy::RoundRobin);
+        let (one, snap1) = scaling_sharded(
+            &[2048, 8192],
+            256,
+            4,
+            7,
+            true,
+            vec![sweep_service(32, 2, 1)],
+            RoutePolicy::RoundRobin,
+        );
         for (a, b) in one.iter().zip(&single) {
             assert_eq!(a.latency_cycles, b.latency_cycles);
             assert_eq!(a.sharded_cycles, b.streamed_cycles, "1 shard = single engine");
             assert_eq!(a.chunks, b.chunks);
         }
         assert_eq!(snap1.hier_completed, 2);
-        let (four, snap4) =
-            scaling_sharded(&[2048, 8192], 256, 4, 32, 2, 7, true, 4, RoutePolicy::RoundRobin);
+        let (four, snap4) = scaling_sharded(
+            &[2048, 8192],
+            256,
+            4,
+            7,
+            true,
+            vec![sweep_service(32, 2, 4); 4],
+            RoutePolicy::RoundRobin,
+        );
         for (a, b) in four.iter().zip(&single) {
             assert_eq!(a.shards, 4);
             // Byte-identical pipeline: same chunks, same flat models.
@@ -515,6 +532,30 @@ mod tests {
         assert_eq!(snap4.shards.len(), 4);
         assert!(snap4.shards.iter().all(|s| s.completed > 0), "round-robin spreads chunks");
         assert_eq!(snap4.hier_chunks, 8 + 32);
+    }
+
+    #[test]
+    fn heterogeneous_scaling_sweep_stays_correct() {
+        use crate::coordinator::planner::Geometry;
+        use crate::coordinator::shard::RoutePolicy;
+        // A mixed-geometry fleet under the cost router: the sweep's
+        // points stay byte-identical to the single-service models
+        // (routing never changes the pipeline), and the fleet snapshot
+        // carries per-shard views for every host.
+        let single = scaling(&[2048, 8192], 256, 4, 32, 2, 7, true);
+        let mut services = vec![sweep_service(32, 2, 2); 2];
+        services[1].geometry = Geometry::from_spec("512x32").unwrap();
+        let (pts, snap) =
+            scaling_sharded(&[2048, 8192], 256, 4, 7, true, services, RoutePolicy::Cost);
+        for (a, b) in pts.iter().zip(&single) {
+            assert_eq!(a.chunks, b.chunks);
+            assert_eq!(a.streamed_cycles, b.streamed_cycles);
+            assert_eq!(a.barrier_cycles, b.barrier_cycles);
+            assert!(a.sharded_cycles > 0);
+        }
+        assert_eq!(snap.shards.len(), 2);
+        assert_eq!(snap.hier_completed, 2);
+        assert_eq!(snap.recovered, 0);
     }
 
     #[test]

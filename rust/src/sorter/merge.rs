@@ -437,19 +437,72 @@ pub fn model_sharded_completion(
     fanout: usize,
 ) -> u64 {
     assert!(shards >= 1, "a fleet has at least one shard");
-    assert!(fanout >= 2, "merge fanout must be at least 2");
     if chunks == 0 {
+        assert!(fanout >= 2, "merge fanout must be at least 2");
         return 0;
     }
     let shards = shards.min(chunks);
     let (base, extra) = (chunks / shards, chunks % shards);
-    let leaves: Vec<(u64, usize)> = (0..shards)
-        .map(|s| {
-            let c = base + usize::from(s < extra);
-            (model_streamed_completion_uniform(c, len, arrival, fanout), c * len)
-        })
+    let deal: Vec<(usize, u64)> =
+        (0..shards).map(|s| (base + usize::from(s < extra), arrival)).collect();
+    model_sharded_completion_hetero(len, &deal, fanout)
+}
+
+/// Streamed completion of a *heterogeneous* fleet: shard `s` owns
+/// `deal[s].0` uniform runs of `len` rows, each becoming available at
+/// that shard's own `deal[s].1` arrival cycle (a slower host — worse
+/// cyc/num, or a bank too small for the chunk — simply arrives later).
+/// Every shard drains its share through its own merge engine under the
+/// uniform closed form and one top-level fanout-`fanout` merge combines
+/// the shard streams; shards dealt zero chunks contribute nothing.
+///
+/// [`model_sharded_completion`] is exactly this model with an equal
+/// deal (round-robin counts, one shared arrival) — the uniform-fleet
+/// special case, pinned by `hetero_model_reduces_to_uniform_deal`.
+pub fn model_sharded_completion_hetero(
+    len: usize,
+    deal: &[(usize, u64)],
+    fanout: usize,
+) -> u64 {
+    assert!(fanout >= 2, "merge fanout must be at least 2");
+    let leaves: Vec<(u64, usize)> = deal
+        .iter()
+        .filter(|&&(c, _)| c > 0)
+        .map(|&(c, a)| (model_streamed_completion_uniform(c, len, a, fanout), c * len))
         .collect();
     model_streamed_completion(&leaves, fanout)
+}
+
+/// Deal `chunks` chunks over shards in proportion to `weights`
+/// (largest-remainder apportionment; ties go to the lower shard id).
+/// With equal positive weights this reduces exactly to the round-robin
+/// deal of [`model_sharded_completion`]: `chunks / shards` each, the
+/// first `chunks % shards` shards taking one extra. A shard with zero
+/// (or non-finite) weight is dealt nothing unless every weight is
+/// degenerate, in which case the deal falls back to equal shares.
+pub fn apportion_chunks(chunks: usize, weights: &[f64]) -> Vec<usize> {
+    assert!(!weights.is_empty(), "apportionment needs at least one shard");
+    let sane: Vec<f64> =
+        weights.iter().map(|&w| if w.is_finite() && w > 0.0 { w } else { 0.0 }).collect();
+    let total: f64 = sane.iter().sum();
+    let sane = if total > 0.0 { sane } else { vec![1.0; weights.len()] };
+    let total: f64 = sane.iter().sum();
+    let quotas: Vec<f64> = sane.iter().map(|w| chunks as f64 * w / total).collect();
+    let mut deal: Vec<usize> = quotas.iter().map(|q| q.floor() as usize).collect();
+    let dealt: usize = deal.iter().sum();
+    // Distribute the remainder by descending fractional part, ties to
+    // the lower shard id (sort_by is stable, so equal keys keep index
+    // order).
+    let mut order: Vec<usize> = (0..sane.len()).collect();
+    order.sort_by(|&a, &b| {
+        let (fa, fb) = (quotas[a] - quotas[a].floor(), quotas[b] - quotas[b].floor());
+        fb.partial_cmp(&fa).expect("fractional parts are finite")
+    });
+    for &s in order.iter().take(chunks.saturating_sub(dealt)) {
+        deal[s] += 1;
+    }
+    debug_assert_eq!(deal.iter().sum::<usize>(), chunks);
+    deal
 }
 
 /// Result of a completed [`StreamingMerge`].
@@ -932,6 +985,70 @@ mod tests {
         let flat = model_streamed_completion_uniform(chunks, 1024, arrival, 4);
         for (s, &l) in lat.iter().enumerate().skip(1) {
             assert!(l < flat, "shards={} {l} vs flat {flat}", s + 1);
+        }
+    }
+
+    #[test]
+    fn hetero_model_reduces_to_uniform_deal() {
+        // The uniform fleet model IS the heterogeneous model with an
+        // equal deal — across chunk counts, shard counts and fanouts,
+        // including shards > chunks (zero-chunk shards drop out).
+        for chunks in [1usize, 2, 3, 5, 61, 977] {
+            for shards in [1usize, 2, 3, 4, 8, 16] {
+                for fanout in [2usize, 4, 16] {
+                    let s = shards.min(chunks);
+                    let (base, extra) = (chunks / s, chunks % s);
+                    // Equal deal padded with zero-chunk shards: they
+                    // must not change the result.
+                    let mut deal: Vec<(usize, u64)> =
+                        (0..s).map(|i| (base + usize::from(i < extra), 8028)).collect();
+                    deal.resize(shards, (0, 8028));
+                    assert_eq!(
+                        model_sharded_completion_hetero(1024, &deal, fanout),
+                        model_sharded_completion(chunks, 1024, 8028, shards, fanout),
+                        "chunks={chunks} shards={shards} fanout={fanout}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hetero_model_penalizes_slow_shards() {
+        // 8 chunks over 2 shards, fanout 4. A fleet with one shard at
+        // twice the arrival cost must complete strictly later than the
+        // uniform fleet at the fast arrival, and a cost-aware deal that
+        // shifts chunks onto the fast shard must beat the even deal.
+        let fast = model_sharded_completion(8, 1024, 8028, 2, 4);
+        let even = model_sharded_completion_hetero(1024, &[(4, 8028), (4, 16056)], 4);
+        let skewed = model_sharded_completion_hetero(1024, &[(5, 8028), (3, 16056)], 4);
+        // Hand-computed under the scheduler: 20316 < 27320 < 28344.
+        assert_eq!(fast, 20_316);
+        assert_eq!(even, 28_344);
+        assert_eq!(skewed, 27_320);
+        assert!(even > fast, "{even} vs {fast}");
+        assert!(skewed < even, "{skewed} vs {even}");
+    }
+
+    #[test]
+    fn apportionment_follows_weights_and_reduces_round_robin() {
+        // Equal weights = the uniform round-robin deal.
+        assert_eq!(apportion_chunks(9, &[1.0, 1.0, 1.0]), vec![3, 3, 3]);
+        assert_eq!(apportion_chunks(5, &[1.0, 1.0, 1.0]), vec![2, 2, 1]);
+        assert_eq!(apportion_chunks(3, &[2.0; 16])[..4], [1, 1, 1, 0]);
+        // Proportional split, remainders to the largest fractional part.
+        assert_eq!(apportion_chunks(9, &[2.0, 1.0]), vec![6, 3]);
+        assert_eq!(apportion_chunks(10, &[3.0, 1.0]), vec![8, 2]);
+        assert_eq!(apportion_chunks(7, &[2.0, 1.0]), vec![5, 2], "4.67 -> 5, 2.33 -> 2");
+        // Zero / non-finite weights are dealt nothing...
+        assert_eq!(apportion_chunks(6, &[1.0, 0.0, 1.0]), vec![3, 0, 3]);
+        assert_eq!(apportion_chunks(4, &[f64::NAN, 2.0]), vec![0, 4]);
+        // ...unless every weight is degenerate (fallback: equal).
+        assert_eq!(apportion_chunks(4, &[0.0, 0.0]), vec![2, 2]);
+        // Every deal covers exactly the chunk count.
+        for chunks in [0usize, 1, 7, 977] {
+            let deal = apportion_chunks(chunks, &[5.0, 0.5, 1.0, 3.25]);
+            assert_eq!(deal.iter().sum::<usize>(), chunks, "chunks={chunks}");
         }
     }
 

@@ -284,11 +284,11 @@ fn sharded_pipeline_is_byte_identical_across_datasets() {
         let reference = single.sort_hierarchical(&d.values, &cfg).unwrap();
         for shards in [1usize, 2, 4] {
             for route in RoutePolicy::ALL {
-                let fleet = ShardedSortService::start(ShardedConfig {
+                let fleet = ShardedSortService::start(ShardedConfig::uniform(
                     shards,
                     route,
-                    service: ServiceConfig { workers: 2, ..Default::default() },
-                })
+                    ServiceConfig { workers: 2, ..Default::default() },
+                ))
                 .unwrap();
                 let out = fleet.sort_hierarchical(&d.values, &cfg).unwrap();
                 let tag = format!("{kind:?} shards={shards} route={route:?}");
@@ -305,6 +305,75 @@ fn sharded_pipeline_is_byte_identical_across_datasets() {
                 assert_eq!(out.rerouted, 0, "{tag}");
                 fleet.shutdown();
             }
+        }
+    }
+    single.shutdown();
+}
+
+/// Failure during flight + recovery, across every dataset family and
+/// routing policy: a shard host dies behind the router's back (killed
+/// through a transport handle the fleet shares — the router still
+/// believes it healthy), the next `sort_hierarchical` trips over the
+/// dead host with its chunk fan-out in flight, the output must stay
+/// byte-identical to the single-service pipeline, and after
+/// `recover_shard` the router must resume offering the host work.
+#[test]
+fn shard_death_mid_sort_then_recovery_is_transparent() {
+    use std::sync::Arc;
+
+    use memsort::coordinator::transport::{LocalTransport, ShardTransport};
+
+    let single = SortService::start(ServiceConfig { workers: 2, ..Default::default() }).unwrap();
+    let cfg = HierarchicalConfig::fixed(128, 4);
+    for kind in DatasetKind::ALL {
+        let d = Dataset::generate32(kind, 1500, 31);
+        let reference = single.sort_hierarchical(&d.values, &cfg).unwrap();
+        for route in RoutePolicy::ALL {
+            let svc = ServiceConfig { workers: 2, ..Default::default() };
+            let hosts: Vec<Arc<LocalTransport>> = (0..2)
+                .map(|_| Arc::new(LocalTransport::start(svc.clone()).unwrap()))
+                .collect();
+            let fleet = ShardedSortService::with_transports(
+                route,
+                hosts
+                    .iter()
+                    .map(|t| Box::new(Arc::clone(t)) as Box<dyn ShardTransport>)
+                    .collect(),
+            )
+            .unwrap();
+            let tag = format!("{kind:?} route={route:?}");
+            // Kill shard 0 behind the router's back and wait until the
+            // host observably rejects work. The next hierarchical sort
+            // fans its chunks out, trips over the dead host mid-flight,
+            // and must re-route without changing a byte of the output.
+            hosts[0].halt();
+            while hosts[0].submit(vec![1u32]).is_ok() {
+                std::thread::yield_now();
+            }
+            let out = fleet.sort_hierarchical(&d.values, &cfg).unwrap();
+            assert_eq!(out.hier.output.sorted, reference.output.sorted, "{tag}");
+            assert_eq!(out.hier.output.order, reference.output.order, "{tag}");
+            assert_eq!(out.hier.output.stats, reference.output.stats, "{tag}");
+            assert_eq!(out.hier.chunk_stats, reference.chunk_stats, "{tag}");
+            assert!(out.rerouted >= 1, "{tag}: the mid-flight death must be observed");
+            assert!(
+                out.assignments.iter().all(|&s| s == 1),
+                "{tag}: every chunk must land on the survivor"
+            );
+            // Recover the dead host and sort again: byte-identical
+            // still, and the router offers the recovered shard work.
+            fleet.recover_shard(0).unwrap();
+            let out = fleet.sort_hierarchical(&d.values, &cfg).unwrap();
+            assert_eq!(out.hier.output.sorted, reference.output.sorted, "{tag}");
+            assert_eq!(out.hier.output.order, reference.output.order, "{tag}");
+            assert_eq!(out.rerouted, 0, "{tag}: a recovered fleet re-routes nothing");
+            assert!(
+                out.shard_chunks[0] > 0,
+                "{tag}: recovered shard got no chunks: {:?}",
+                out.shard_chunks
+            );
+            assert_eq!(fleet.fleet_metrics().recovered, 1, "{tag}");
+            fleet.shutdown();
         }
     }
     single.shutdown();

@@ -286,11 +286,11 @@ fn prop_sharded_pipeline_identical_to_single_service() {
         .iter()
         .flat_map(|&shards| {
             RoutePolicy::ALL.iter().map(move |&route| {
-                ShardedSortService::start(ShardedConfig {
+                ShardedSortService::start(ShardedConfig::uniform(
                     shards,
                     route,
-                    service: ServiceConfig { workers: 2, ..Default::default() },
-                })
+                    ServiceConfig { workers: 2, ..Default::default() },
+                ))
                 .unwrap()
             })
         })
@@ -304,7 +304,7 @@ fn prop_sharded_pipeline_identical_to_single_service() {
                 let reference =
                     single.sort_hierarchical(&case.values, &cfg).map_err(|e| e.to_string())?;
                 for fleet in &fleets {
-                    let shards = fleet.config().shards;
+                    let shards = fleet.config().shards();
                     let route = fleet.config().route;
                     let out = fleet
                         .sort_hierarchical(&case.values, &cfg)
@@ -356,6 +356,45 @@ fn prop_sharded_pipeline_identical_to_single_service() {
         fleet.shutdown();
     }
     single.shutdown();
+}
+
+#[test]
+fn prop_hetero_scoring_reduces_to_uniform() {
+    // The acceptance criterion: the heterogeneous sharded latency model
+    // must reduce *exactly* to PR 3's uniform models when every shard
+    // shares one geometry and cost — across random plan shapes, shard
+    // counts, fanouts and costs, for both schedules. (The generated
+    // values only seed the shape parameters; no sorting runs here.)
+    use memsort::coordinator::planner::{candidate, shard_model, Geometry};
+    check(
+        "hetero-reduces-to-uniform",
+        PropConfig { seed: 11, cases: 192, ..Default::default() },
+        |case| {
+            let v = |i: usize| case.values.get(i).copied().unwrap_or(7) as usize;
+            let n = (v(0) % 100_000).max(1);
+            let bank = [16usize, 64, 256, 1024][v(1) % 4];
+            let fanout = [2usize, 4, 8, 16][v(2) % 4];
+            let shards = (v(3) % 8) + 1;
+            let cyc = 0.5 + (v(4) % 64) as f64 / 2.0;
+            let c = candidate(n, bank, fanout);
+            let models = vec![shard_model(bank, fanout, &Geometry::default(), cyc); shards];
+            for streaming in [true, false] {
+                let hetero = c.estimated_cycles_hetero(&models, streaming);
+                let uniform = if streaming {
+                    c.estimated_cycles_sharded(cyc, shards)
+                } else {
+                    c.estimated_cycles_sharded_barrier(cyc, shards)
+                };
+                if hetero != uniform {
+                    return Err(format!(
+                        "n={n} bank={bank} fanout={fanout} shards={shards} cyc={cyc} \
+                         streaming={streaming}: hetero {hetero} != uniform {uniform}"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
 }
 
 #[test]
