@@ -34,7 +34,11 @@ fn main() -> Result<()> {
         Ok(ServiceConfig { workers: 2, geometry: Geometry::from_spec(spec)?, ..Default::default() })
     };
     let services = vec![host("1024x32")?, host("1024x32")?, host("512x32")?];
-    let fleet = ShardedSortService::start(ShardedConfig { route: RoutePolicy::Cost, services })?;
+    let fleet = ShardedSortService::start(ShardedConfig {
+        route: RoutePolicy::Cost,
+        services,
+        ..Default::default()
+    })?;
     let cfg = HierarchicalConfig::fixed(1024, 4);
 
     println!("heterogeneous fleet (2x 1024-bank + 1x 512-bank, cost routing):");

@@ -1,0 +1,59 @@
+#!/usr/bin/env python3
+"""Relative-link checker for the repo's Markdown docs (CI's docs step).
+
+Walks every ``*.md`` file under the repo root, extracts inline Markdown
+links and image references, and fails (exit 1) when a *relative* target
+does not exist on disk. External links (``http(s)://``, ``mailto:``)
+and pure in-page anchors (``#...``) are skipped — this guards the
+cross-file wiring (README → rust/OPERATIONS.md → DESIGN.md → ...), not
+the internet. Anchors on existing files (``file.md#section``) are
+checked for the file part only.
+
+Usage: ``python3 python/check_links.py [repo_root]``
+"""
+
+import re
+import sys
+from pathlib import Path
+
+# Inline links/images: [text](target) — tolerates titles ("...") and
+# angle-bracketed targets; reference-style links are rare here and the
+# repo does not use them.
+LINK = re.compile(r"!?\[[^\]]*\]\(\s*<?([^)\s>]+)>?(?:\s+\"[^\"]*\")?\s*\)")
+
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+SKIP_DIRS = {".git", "target", ".github"}
+
+
+def iter_markdown(root: Path):
+    for path in sorted(root.rglob("*.md")):
+        if not any(part in SKIP_DIRS for part in path.parts):
+            yield path
+
+
+def check(root: Path) -> int:
+    broken = []
+    checked = 0
+    for md in iter_markdown(root):
+        text = md.read_text(encoding="utf-8")
+        for match in LINK.finditer(text):
+            target = match.group(1)
+            if target.startswith(SKIP_PREFIXES):
+                continue
+            checked += 1
+            rel = target.split("#", 1)[0]
+            if not rel:
+                continue
+            resolved = (md.parent / rel).resolve()
+            if not resolved.exists():
+                line = text[: match.start()].count("\n") + 1
+                broken.append(f"{md.relative_to(root)}:{line}: broken link -> {target}")
+    for b in broken:
+        print(b)
+    print(f"checked {checked} relative links across the repo's *.md files: "
+          f"{len(broken)} broken")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    sys.exit(check(Path(sys.argv[1] if len(sys.argv) > 1 else ".").resolve()))

@@ -142,6 +142,58 @@ def round_half_away(x: float) -> int:
     return floor(x + 0.5)
 
 
+def model_hedge_deadline(length: int, cyc: float, mult: float, floor: int) -> int:
+    """Mirror of ``sorter::merge::model_hedge_deadline``: the straggler
+    bound is `mult` times the modelled leaf arrival ``round(len*cyc)``,
+    floored."""
+    return max(round_half_away(length * cyc * mult), floor)
+
+
+def hedge_completion(primary: float, deadline: int, fresh: float):
+    """Hedge-once semantics for one request: a primary reply slower
+    than `deadline` triggers one speculative copy that completes a
+    `fresh` draw after the deadline; first completion wins. Returns
+    (completion, fired, won)."""
+    if primary <= deadline:
+        return primary, False, False
+    hedged = deadline + fresh
+    return min(primary, hedged), True, hedged < primary
+
+
+def hedge_mixture(slow_fraction: float, slow_factor: float, length: int = 1024,
+                  cyc: float = 7.84, mult: float = 4.0):
+    """Closed-form hedging outcome for the slow-shard mixture used in
+    EXPERIMENTS.md §Remote transport: a `slow_fraction` of chunks land
+    on a shard `slow_factor` times slower (inf = stalled); the rest
+    arrive at the nominal ``round(len*cyc)``. Returns (deadline,
+    fired fraction, win rate among fired, mean cycles without hedging,
+    mean cycles with hedging)."""
+    normal = round_half_away(length * cyc)
+    slow = float("inf") if slow_factor == float("inf") else slow_factor * normal
+    deadline = model_hedge_deadline(length, cyc, mult, 0)
+    base = (1 - slow_fraction) * normal + slow_fraction * slow
+    n_done, n_fired, n_won = hedge_completion(normal, deadline, normal)
+    s_done, s_fired, s_won = hedge_completion(slow, deadline, normal)
+    hedged = (1 - slow_fraction) * n_done + slow_fraction * s_done
+    fired = (1 - slow_fraction) * n_fired + slow_fraction * s_fired
+    won = (1 - slow_fraction) * (n_fired and n_won) + slow_fraction * (s_fired and s_won)
+    win_rate = won / fired if fired else 0.0
+    return deadline, fired, win_rate, base, hedged
+
+
+def frame_bytes_job(n: int) -> int:
+    """Wire bytes of a SortJob frame: 16-byte header + 8-byte count +
+    4 bytes per element (coordinator::wire)."""
+    return 16 + 8 + 4 * n
+
+
+def frame_bytes_ok(n: int) -> int:
+    """Wire bytes of a full SortOk frame (argsort present): header +
+    id + sorted (8 + 4n) + order (8 + 8n) + 7x8 stats + latency +
+    worker."""
+    return 16 + 8 + (8 + 4 * n) + (8 + 8 * n) + 7 * 8 + 8 + 8
+
+
 def shard_model(bank: int, fanout: int, largest_bank: int, cyc: float):
     """(arrival, weight, oversize) for one shard at a (bank, fanout)
     candidate. `arrival` is when the shard's FIRST chunk run exists
@@ -210,6 +262,27 @@ def main():
         deal = apportion_chunks(chunks, [w for (_, w, _) in models])
         print(f"  {name:38s}: {cycles:>9d} cycles "
               f"({cycles / 1_000_000:.3f} cyc/num, deal {deal})")
+
+    print()
+    print("== EXPERIMENTS.md §Remote transport ==")
+    print("wire overhead (coordinator::wire, pinned by "
+          "frame_sizes_match_the_documented_overhead_model):")
+    for n in [1024, 512]:
+        print(f"  n={n:4d}: SortJob {frame_bytes_job(n)} B "
+              f"({frame_bytes_job(n) / n:.2f} B/elem), "
+              f"SortOk {frame_bytes_ok(n)} B ({frame_bytes_ok(n) / n:.2f} B/elem)")
+    print("hedge deadline (merge::model_hedge_deadline, bank=1024, cyc=7.84):")
+    for mult in [1.0, 4.0]:
+        print(f"  mult={mult}: {model_hedge_deadline(1024, 7.84, mult, 0)} cycles")
+    print("hedging under a 25% slow-shard mixture (mult=4, hedge-once, "
+          "fresh draw = nominal):")
+    for factor in [2.0, 4.0, 8.0, float("inf")]:
+        deadline, fired, win, base, hedged = hedge_mixture(0.25, factor)
+        gain = "inf" if base == float("inf") else f"{100 * (1 - hedged / base):.1f}%"
+        base_s = "inf" if base == float("inf") else f"{base:.0f}"
+        print(f"  slow x{factor:<4}: fired {100 * fired:.0f}%, win rate "
+              f"{100 * win:.0f}%, mean {base_s} -> {hedged:.0f} cycles ({gain} saved, "
+              f"deadline {deadline})")
 
 
 if __name__ == "__main__":

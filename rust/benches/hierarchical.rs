@@ -152,6 +152,7 @@ fn main() {
         let fleet = ShardedSortService::start(ShardedConfig {
             route,
             services: hetero_services.clone(),
+            ..Default::default()
         })
         .unwrap();
         let cfg = HierarchicalConfig::fixed(1024, 4);

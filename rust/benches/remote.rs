@@ -1,0 +1,102 @@
+//! Bench: the wire layer (EXPERIMENTS.md §Remote transport) — frame
+//! encode/decode throughput for the two hot frame kinds, and the
+//! end-to-end overhead of a duplex `RemoteTransport` fleet against the
+//! in-process `LocalTransport` baseline on the same pipeline.
+//!
+//! Run: `cargo bench --bench remote`
+
+use std::sync::Arc;
+
+use memsort::bench::run;
+use memsort::coordinator::hierarchical::HierarchicalConfig;
+use memsort::coordinator::shard::{RoutePolicy, ShardedSortService};
+use memsort::coordinator::shard_server::ShardServer;
+use memsort::coordinator::transport::{LocalTransport, RemoteTransport, ShardTransport};
+use memsort::coordinator::wire::{encode_frame, read_frame, Frame};
+use memsort::coordinator::ServiceConfig;
+use memsort::datasets::{Dataset, DatasetKind};
+
+fn main() {
+    let bank = 1024usize;
+    let d = Dataset::generate32(DatasetKind::MapReduce, bank, 42);
+
+    println!("--- wire codec: one bank-sized chunk per frame (n={bank}) ---");
+    let job = Frame::SortJob(d.values.clone());
+    let job_bytes = encode_frame(7, &job);
+    println!(
+        "    SortJob frame : {} bytes ({:.2} B/elem)",
+        job_bytes.len(),
+        job_bytes.len() as f64 / bank as f64
+    );
+    let r = run("wire/encode/job1k", 800, || encode_frame(7, &job).len());
+    println!("    -> {:.1} Melem/s encode", r.throughput(bank) / 1e6);
+    let r = run("wire/decode/job1k", 800, || {
+        read_frame(&mut &job_bytes[..]).expect("decodes").0
+    });
+    println!("    -> {:.1} Melem/s decode", r.throughput(bank) / 1e6);
+
+    // A realistic response: sort the chunk on a host once, then bench
+    // the codec on the reply it produced (values + argsort + stats).
+    let host = LocalTransport::start(ServiceConfig { workers: 1, ..Default::default() })
+        .expect("host starts");
+    let resp = host.submit(d.values.clone()).unwrap().recv().unwrap().unwrap();
+    host.shutdown();
+    let ok = Frame::SortOk(resp);
+    let ok_bytes = encode_frame(9, &ok);
+    println!(
+        "    SortOk frame  : {} bytes ({:.2} B/elem with argsort + stats)",
+        ok_bytes.len(),
+        ok_bytes.len() as f64 / bank as f64
+    );
+    let r = run("wire/encode/ok1k", 800, || encode_frame(9, &ok).len());
+    println!("    -> {:.1} Melem/s encode", r.throughput(bank) / 1e6);
+    let r = run("wire/decode/ok1k", 800, || {
+        read_frame(&mut &ok_bytes[..]).expect("decodes").0
+    });
+    println!("    -> {:.1} Melem/s decode", r.throughput(bank) / 1e6);
+
+    println!("--- end-to-end: 100k hierarchical sort, local vs duplex-remote fleet ---");
+    let n = 100_000usize;
+    let dd = Dataset::generate32(DatasetKind::MapReduce, n, 42);
+    let cfg = HierarchicalConfig::fixed(1024, 4);
+    let svc = ServiceConfig { workers: 2, ..Default::default() };
+
+    let local = ShardedSortService::with_transports(
+        RoutePolicy::RoundRobin,
+        (0..2)
+            .map(|_| {
+                Box::new(LocalTransport::start(svc.clone()).unwrap()) as Box<dyn ShardTransport>
+            })
+            .collect(),
+    )
+    .unwrap();
+    let r = run("hier_sort/local2/n100k", 2000, || {
+        local.sort_hierarchical(&dd.values, &cfg).unwrap().hier.output.sorted.len()
+    });
+    let local_rate = r.throughput(n);
+    println!("    -> {:.2} Melem/s in-process fleet", local_rate / 1e6);
+    local.shutdown();
+
+    let remote = ShardedSortService::with_transports(
+        RoutePolicy::RoundRobin,
+        (0..2)
+            .map(|_| {
+                let server = Arc::new(ShardServer::start(svc.clone()).unwrap());
+                let connector = ShardServer::duplex_connector(server);
+                Box::new(RemoteTransport::connect(connector).unwrap())
+                    as Box<dyn ShardTransport>
+            })
+            .collect(),
+    )
+    .unwrap();
+    let r = run("hier_sort/duplex2/n100k", 2000, || {
+        remote.sort_hierarchical(&dd.values, &cfg).unwrap().hier.output.sorted.len()
+    });
+    let remote_rate = r.throughput(n);
+    println!(
+        "    -> {:.2} Melem/s duplex-remote fleet ({:.1}% of in-process)",
+        remote_rate / 1e6,
+        100.0 * remote_rate / local_rate.max(1.0)
+    );
+    remote.shutdown();
+}

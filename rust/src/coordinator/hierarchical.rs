@@ -213,7 +213,9 @@ impl HierarchicalOutput {
 /// the two paths are byte-identical by construction (the frontier
 /// consumes run arrivals in chunk order regardless of which host — or
 /// host geometry — sorted each chunk, and a [`SortResponse`] looks the
-/// same whether it crossed a thread boundary or, one day, a wire).
+/// same whether it crossed a thread boundary or the
+/// [`super::wire`] protocol — pinned by the remote-vs-local
+/// integration sweep).
 pub(crate) struct ChunkAssembly {
     spans: Vec<Range<usize>>,
     streaming: bool,

@@ -88,6 +88,14 @@ pub struct Snapshot {
 }
 
 impl Snapshot {
+    /// The all-zero snapshot a dead or unreachable host reports — what
+    /// [`super::transport::LocalTransport`] returns after shutdown and
+    /// what a `RemoteTransport` reports for a dead link, so fleet
+    /// aggregation never needs a special case for missing hosts.
+    pub fn empty() -> Self {
+        ServiceMetrics::new().snapshot()
+    }
+
     /// Observed cycles/number for requests in `n`'s size class,
     /// falling back to the global average over all served traffic,
     /// then to `fallback` (e.g. the paper's nominal
@@ -287,6 +295,8 @@ mod tests {
         assert_eq!(s.completed, 0);
         assert_eq!(s.p50_us, 0);
         assert_eq!(s.cycles_per_number, 0.0);
+        // The dead-host constructor is exactly the fresh-service view.
+        assert_eq!(Snapshot::empty(), s);
     }
 
     #[test]

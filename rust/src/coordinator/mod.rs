@@ -23,7 +23,9 @@ pub mod hierarchical;
 pub mod metrics;
 pub mod planner;
 pub mod shard;
+pub mod shard_server;
 pub mod transport;
+pub mod wire;
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -84,7 +86,7 @@ impl std::str::FromStr for EngineKind {
 }
 
 /// Service configuration.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ServiceConfig {
     /// Worker threads (each with its own engine instance).
     pub workers: usize,
@@ -119,14 +121,14 @@ impl Default for ServiceConfig {
 }
 
 /// A sort job.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct SortRequest {
     pub id: u64,
     pub data: Vec<u32>,
 }
 
 /// A completed job.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct SortResponse {
     pub id: u64,
     pub sorted: Vec<u32>,

@@ -31,7 +31,7 @@ use crate::sorter::merge::{
 use crate::sorter::{InMemorySorter, SortStats};
 
 /// Fixed hardware geometry the planner targets.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Geometry {
     /// Available bank heights (must be sorted ascending), e.g. AOT
     /// artifact sizes or physical bank heights.

@@ -46,16 +46,32 @@
 //!   (it comes back empty, like a real restarted process; the router
 //!   warms it back in — zero outstanding work and cost fallbacks make
 //!   it immediately attractive to every policy).
+//! * **Resilience** — a lossy link to the hosts is survivable *and
+//!   bounded*: a per-fleet [`RetryBudgetConfig`] token bucket caps how
+//!   many failover hops (and hedges) the fleet will spend, so retries
+//!   cannot storm a degraded fleet; and with hedging enabled
+//!   ([`HedgeConfig`]) a reply outstanding past the
+//!   latency-model-derived straggler deadline
+//!   ([`crate::sorter::merge::model_hedge_deadline`]) is re-issued to
+//!   the next-best shard by the cost route — first delivered reply
+//!   wins, the loser is abandoned (hedging never changes the output:
+//!   the simulated response is a deterministic function of the data).
+//!   All of it is observable in [`FleetSnapshot`] (`retries`,
+//!   `hedges_won`/`hedges_lost`, `budget_exhausted`, `retry_tokens`).
 //!
-//! No RPC yet — but the coordinator no longer knows that: each shard is
-//! a [`ShardTransport`] ([`super::transport`]), the in-process
-//! [`LocalTransport`] being one implementation (and the fault-injecting
-//! `FlakyTransport` another). A future RPC transport drops in at that
-//! seam without touching routing, recovery or the models; in-process
-//! hosts remain what makes the byte-identity property testable today.
+//! The coordinator does not know where its hosts run: each shard is a
+//! [`ShardTransport`] ([`super::transport`]) — the in-process
+//! [`LocalTransport`], the fault-injecting `FlakyTransport`, or the
+//! wire-speaking `RemoteTransport` against a
+//! [`super::shard_server::ShardServer`] (TCP in production, the
+//! in-memory duplex in tests). Routing, recovery and the models are
+//! written against the trait alone; in-process hosts remain what makes
+//! the byte-identity property testable, and the remote fleet is pinned
+//! byte-identical to them in the integration sweep.
 
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc;
+use std::sync::{mpsc, Mutex};
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
@@ -64,7 +80,7 @@ use super::metrics::{size_class, ServiceMetrics, Snapshot};
 use super::planner::{auto_tune_hetero, partition, shard_model, Geometry};
 use super::transport::{LocalTransport, ShardTransport};
 use super::{ServiceConfig, SortResponse};
-use crate::sorter::merge::{model_merge_cycles, model_streamed_completion};
+use crate::sorter::merge::{model_hedge_deadline, model_merge_cycles, model_streamed_completion};
 
 /// How the fleet routes a request (or a hierarchical chunk) to a shard.
 #[derive(Copy, Clone, Debug, PartialEq, Eq)]
@@ -135,6 +151,93 @@ impl std::str::FromStr for RoutePolicy {
     }
 }
 
+/// The fleet's retry budget: a deterministic token bucket that bounds
+/// how many failover hops (and hedges) the fleet will spend, so a
+/// degraded fleet degrades instead of amplifying its own load with a
+/// retry storm. The bucket starts at `capacity` tokens; every failover
+/// hop or hedge costs one; every *successful* submit deposits
+/// `deposit` back (capped at `capacity`) — the classic
+/// retries-as-a-fraction-of-traffic budget, with `capacity` as the
+/// burst allowance. Deliberately clockless: the budget refills with
+/// served work, not wall time, so tests and replays are deterministic.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RetryBudgetConfig {
+    /// Token capacity (and the initial balance). 0 disables retries
+    /// entirely: any failover hop errors with "retry budget exhausted".
+    pub capacity: f64,
+    /// Tokens deposited per successful submit (`0.1` ≈ the classic
+    /// "retries may add 10% load" budget).
+    pub deposit: f64,
+}
+
+impl Default for RetryBudgetConfig {
+    fn default() -> Self {
+        RetryBudgetConfig { capacity: 10.0, deposit: 0.1 }
+    }
+}
+
+/// Hedged-request configuration. A reply still outstanding past the
+/// straggler deadline — [`crate::sorter::merge::model_hedge_deadline`]
+/// (`straggler_mult ×` the modelled arrival at the shard's observed
+/// cycles/number), converted to host time with the fleet's observed
+/// µs-per-simulated-cycle calibration and floored at `floor_us` — is
+/// re-issued once to the next-best healthy shard by the cost route.
+/// First delivered reply wins; the loser is abandoned (settled and its
+/// late reply discarded). Hedges draw from the retry budget, so a
+/// degraded fleet hedges less, not more.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HedgeConfig {
+    /// How many times the modelled arrival a reply may be outstanding
+    /// before it counts as a straggler.
+    pub straggler_mult: f64,
+    /// Lower bound on the hedge deadline in host µs, so tiny chunks
+    /// (and the cold start before any µs-per-cycle observation) don't
+    /// hedge on scheduling noise.
+    pub floor_us: u64,
+}
+
+impl Default for HedgeConfig {
+    fn default() -> Self {
+        HedgeConfig { straggler_mult: 4.0, floor_us: 20_000 }
+    }
+}
+
+/// Fleet-level resilience: the retry budget is always on (set
+/// `capacity` high to effectively disable the bound); hedging is
+/// opt-in — it re-routes straggling work *speculatively*, which an
+/// operator should choose, not inherit.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub struct ResilienceConfig {
+    /// The failover/hedge token bucket.
+    pub retry_budget: RetryBudgetConfig,
+    /// Hedged requests; `None` (the default) waits indefinitely on the
+    /// serving shard like PR 4 did.
+    pub hedge: Option<HedgeConfig>,
+}
+
+impl ResilienceConfig {
+    fn validate(&self) -> Result<()> {
+        let b = &self.retry_budget;
+        if !b.capacity.is_finite() || b.capacity < 0.0 || !b.deposit.is_finite() || b.deposit < 0.0
+        {
+            return Err(anyhow!(
+                "retry budget must be finite and non-negative (capacity {}, deposit {})",
+                b.capacity,
+                b.deposit
+            ));
+        }
+        if let Some(h) = &self.hedge {
+            if !h.straggler_mult.is_finite() || h.straggler_mult < 0.0 {
+                return Err(anyhow!(
+                    "hedge straggler multiplier must be finite and non-negative, got {}",
+                    h.straggler_mult
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
 /// Fleet configuration: one independent host per entry of `services`
 /// (hosts may differ in geometry, workers, engine — a heterogeneous
 /// fleet), routed by `route`.
@@ -145,13 +248,19 @@ pub struct ShardedConfig {
     /// Per-shard service configurations; `services.len()` is the shard
     /// count.
     pub services: Vec<ServiceConfig>,
+    /// Retry-budget / hedging behaviour.
+    pub resilience: ResilienceConfig,
 }
 
 impl ShardedConfig {
     /// The classic uniform fleet: `shards` identical hosts cloned from
     /// one `service` template.
     pub fn uniform(shards: usize, route: RoutePolicy, service: ServiceConfig) -> Self {
-        ShardedConfig { route, services: vec![service; shards] }
+        ShardedConfig {
+            route,
+            services: vec![service; shards],
+            resilience: ResilienceConfig::default(),
+        }
     }
 
     /// Number of shards.
@@ -217,6 +326,19 @@ pub struct FleetSnapshot {
     /// Shards re-admitted to routing by
     /// [`ShardedSortService::recover_shard`] since the fleet started.
     pub recovered: u64,
+    /// Failover hops actually paid for from the retry budget (every
+    /// `rerouted` hop spends one token; a hop denied by an empty
+    /// bucket shows up in `budget_exhausted` instead).
+    pub retries: u64,
+    /// Hedged requests whose speculative copy delivered first.
+    pub hedges_won: u64,
+    /// Hedged requests whose original delivered first (the hedge was
+    /// abandoned).
+    pub hedges_lost: u64,
+    /// Retry/hedge attempts denied because the token bucket was empty.
+    pub budget_exhausted: u64,
+    /// Current retry-budget balance, in tokens.
+    pub retry_tokens: f64,
     /// Worst per-shard p50 (µs) — the fleet's slow-median shard.
     pub p50_us: u64,
     /// Worst per-shard p99 (µs).
@@ -301,6 +423,17 @@ pub struct ShardedSortService {
     fleet: ServiceMetrics,
     /// Shards re-admitted by [`Self::recover_shard`].
     recovered: AtomicU64,
+    resilience: ResilienceConfig,
+    /// Retry-budget token balance (see [`RetryBudgetConfig`]).
+    tokens: Mutex<f64>,
+    retries: AtomicU64,
+    hedges_won: AtomicU64,
+    hedges_lost: AtomicU64,
+    budget_exhausted: AtomicU64,
+    /// Observed host-µs per simulated cycle (EWMA over delivered
+    /// replies): the calibration that converts the model-derived hedge
+    /// deadline from cycles to wall time. `None` before any reply.
+    us_per_cycle: Mutex<Option<f64>>,
     config: ShardedConfig,
 }
 
@@ -319,7 +452,16 @@ impl ShardedSortService {
                 Ok(Box::new(LocalTransport::start(svc.clone())?) as Box<dyn ShardTransport>)
             })
             .collect::<Result<Vec<_>>>()?;
-        Self::with_transports(config.route, transports)
+        Self::with_transports_resilient(config.route, config.resilience, transports)
+    }
+
+    /// [`Self::with_transports`] with default resilience (the classic
+    /// retry budget, no hedging).
+    pub fn with_transports(
+        route: RoutePolicy,
+        transports: Vec<Box<dyn ShardTransport>>,
+    ) -> Result<Self> {
+        Self::with_transports_resilient(route, ResilienceConfig::default(), transports)
     }
 
     /// Assemble a fleet over caller-provided transports — the RPC /
@@ -328,13 +470,15 @@ impl ShardedSortService {
     /// derived from the transports themselves
     /// ([`ShardTransport::config`]), so a caller cannot hand the
     /// coordinator a config list that disagrees with the hosts.
-    pub fn with_transports(
+    pub fn with_transports_resilient(
         route: RoutePolicy,
+        resilience: ResilienceConfig,
         transports: Vec<Box<dyn ShardTransport>>,
     ) -> Result<Self> {
         if transports.is_empty() {
             return Err(anyhow!("a fleet has at least one shard (got --shards 0?)"));
         }
+        resilience.validate()?;
         // One `config()` call per transport, reused for both the fleet
         // config and the cached routing geometry — an RPC transport
         // whose config is fetched remotely must not be able to hand
@@ -361,7 +505,14 @@ impl ShardedSortService {
             rr: AtomicU64::new(0),
             fleet: ServiceMetrics::new(),
             recovered: AtomicU64::new(0),
-            config: ShardedConfig { route, services },
+            resilience,
+            tokens: Mutex::new(resilience.retry_budget.capacity),
+            retries: AtomicU64::new(0),
+            hedges_won: AtomicU64::new(0),
+            hedges_lost: AtomicU64::new(0),
+            budget_exhausted: AtomicU64::new(0),
+            us_per_cycle: Mutex::new(None),
+            config: ShardedConfig { route, services, resilience },
         })
     }
 
@@ -482,9 +633,10 @@ impl ShardedSortService {
     }
 
     /// Route and submit one job, failing over to surviving shards when
-    /// a submit hits a dead service (each failover bumps `rerouted`).
-    /// Returns the serving shard id and the response receiver; the
-    /// caller owns the outstanding decrement (via [`Self::settle`]).
+    /// a submit hits a dead service (each failover bumps `rerouted`
+    /// and spends one retry token). Returns the serving shard id and
+    /// the response receiver; the caller owns the outstanding
+    /// decrement (via [`Self::settle`]).
     fn submit_routed(
         &self,
         data: &[u32],
@@ -500,13 +652,16 @@ impl ShardedSortService {
                 Ok(rx) => {
                     self.shards[sid].outstanding.fetch_add(1, Ordering::Relaxed);
                     *rerouted += tries;
+                    self.deposit_budget();
                     return Ok((sid, rx));
                 }
                 Err(_) => {
                     // The shard's channel is closed: a dead host.
-                    // Isolate it and try the next healthy shard.
+                    // Isolate it and — budget permitting — try the
+                    // next healthy shard.
                     self.mark_dead(sid);
                     tries += 1;
+                    self.charge_retry()?;
                 }
             }
         }
@@ -515,6 +670,116 @@ impl ShardedSortService {
     fn mark_dead(&self, sid: usize) {
         self.shards[sid].healthy.store(false, Ordering::Relaxed);
         self.shards[sid].rerouted_from.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Deposit the per-success refill into the retry bucket (capped).
+    fn deposit_budget(&self) {
+        let b = self.resilience.retry_budget;
+        if b.deposit > 0.0 {
+            let mut tokens = self.tokens.lock().expect("budget poisoned");
+            *tokens = (*tokens + b.deposit).min(b.capacity);
+        }
+    }
+
+    /// Take one token if the bucket has it; an empty bucket counts a
+    /// `budget_exhausted` and denies.
+    fn try_spend_budget(&self) -> bool {
+        let mut tokens = self.tokens.lock().expect("budget poisoned");
+        if *tokens >= 1.0 {
+            *tokens -= 1.0;
+            true
+        } else {
+            self.budget_exhausted.fetch_add(1, Ordering::Relaxed);
+            false
+        }
+    }
+
+    /// A failover hop is about to happen: pay for it or refuse it. The
+    /// refusal is an *error*, not a silent wait — a fleet that has
+    /// burnt its budget must shed load visibly rather than amplify it.
+    fn charge_retry(&self) -> Result<()> {
+        if self.try_spend_budget() {
+            self.retries.fetch_add(1, Ordering::Relaxed);
+            Ok(())
+        } else {
+            Err(anyhow!(
+                "retry budget exhausted ({} denied so far): the fleet is shedding failovers",
+                self.budget_exhausted.load(Ordering::Relaxed)
+            ))
+        }
+    }
+
+    /// Fold a delivered reply into the µs-per-simulated-cycle EWMA —
+    /// the calibration that turns the cycle-domain hedge deadline into
+    /// host time.
+    fn observe_reply(&self, resp: &Result<SortResponse>) {
+        if let Ok(r) = resp {
+            let cycles = r.stats.cycles();
+            if cycles > 0 {
+                let sample = r.latency_us as f64 / cycles as f64;
+                let mut g = self.us_per_cycle.lock().expect("calibration poisoned");
+                *g = Some(match *g {
+                    Some(prev) => 0.8 * prev + 0.2 * sample,
+                    None => sample,
+                });
+            }
+        }
+    }
+
+    /// The hedge deadline for a job of `len` elements outstanding on
+    /// shard `sid`, in host time: the straggler bound in modelled
+    /// cycles ([`model_hedge_deadline`] at the shard's observed
+    /// cycles/number), converted through the observed µs-per-cycle
+    /// calibration, floored at the config's `floor_us`. `None` when
+    /// hedging is off.
+    fn hedge_deadline(&self, sid: usize, len: usize) -> Option<Duration> {
+        let h = self.resilience.hedge.as_ref()?;
+        let n = len.max(1);
+        let cyc = self.shards[sid]
+            .transport
+            .cyc_per_num_for(n, crate::params::NOMINAL_COLSKIP_CYC_PER_NUM);
+        let cycles = model_hedge_deadline(n, cyc, h.straggler_mult, 0);
+        let us = match *self.us_per_cycle.lock().expect("calibration poisoned") {
+            Some(ratio) => (cycles as f64 * ratio) as u64,
+            None => 0, // cold start: the floor carries the deadline
+        };
+        Some(Duration::from_micros(us.max(h.floor_us)))
+    }
+
+    /// Try to issue a hedge for a straggling job: pick the next-best
+    /// healthy shard by the cost route (excluding the straggler),
+    /// spend a budget token, and submit the same data there. `None`
+    /// when no other shard is healthy, the budget denies, or the
+    /// chosen shard turns out dead at submit (it is isolated, and the
+    /// hedge is simply not placed — the original stays the only lane).
+    fn issue_hedge(
+        &self,
+        primary: usize,
+        data: &[u32],
+    ) -> Option<(usize, mpsc::Receiver<Result<SortResponse>>)> {
+        let scores: Vec<(f64, usize)> = (0..self.shards.len())
+            .filter(|&i| i != primary && self.shards[i].healthy.load(Ordering::Relaxed))
+            .map(|i| (self.route_cost(i, data.len()), i))
+            .collect();
+        let hsid = scores
+            .into_iter()
+            .min_by(|a, b| {
+                a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal).then(a.1.cmp(&b.1))
+            })?
+            .1;
+        if !self.try_spend_budget() {
+            return None;
+        }
+        match self.shards[hsid].transport.submit(data.to_vec()) {
+            Ok(rx) => {
+                self.shards[hsid].outstanding.fetch_add(1, Ordering::Relaxed);
+                Some((hsid, rx))
+            }
+            Err(_) => {
+                self.mark_dead(hsid);
+                None
+            }
+        }
     }
 
     fn settle(&self, sid: usize) {
@@ -531,28 +796,100 @@ impl ShardedSortService {
     }
 
     /// Wait for one routed job, re-routing off every shard that dies
-    /// with the job in flight (`rerouted` counts the hops). Settles the
-    /// outstanding count of each shard tried, on every exit path.
+    /// with the job in flight (`rerouted` counts the hops, each paid
+    /// from the retry budget) and — when hedging is enabled — racing a
+    /// straggler against one speculative copy on the next-best shard.
+    /// Settles the outstanding count of each shard tried, on every
+    /// exit path; an abandoned hedge loser is settled when abandoned
+    /// and its late reply discarded.
     fn recv_rerouted(
         &self,
-        mut sid: usize,
-        mut rx: mpsc::Receiver<Result<SortResponse>>,
+        sid: usize,
+        rx: mpsc::Receiver<Result<SortResponse>>,
         data: &[u32],
         offset: usize,
         rerouted: &mut u64,
     ) -> Result<(usize, SortResponse)> {
+        use mpsc::RecvTimeoutError::{Disconnected, Timeout};
+        let mut primary = (sid, rx);
+        let mut hedge: Option<(usize, mpsc::Receiver<Result<SortResponse>>)> = None;
+        // One hedge per job: armed while hedging is configured and the
+        // attempt has not been spent (issued, denied, or the hedge lane
+        // died — in every case the job is back to a single lane).
+        let mut hedge_armed = self.resilience.hedge.is_some();
         loop {
-            match rx.recv() {
-                Ok(resp) => {
-                    self.settle(sid);
-                    return resp.map(|r| (sid, r));
+            if let Some((hsid, hrx)) = hedge.take() {
+                // Two lanes in flight: race them in short slices.
+                // First *delivered* reply wins (identical content
+                // either way — the simulated response is a function of
+                // the data); the loser is abandoned: settled now, its
+                // late reply discarded by the dropped receiver.
+                let slice = Duration::from_millis(1);
+                match primary.1.recv_timeout(slice) {
+                    Ok(resp) => {
+                        self.settle(primary.0);
+                        self.settle(hsid);
+                        self.hedges_lost.fetch_add(1, Ordering::Relaxed);
+                        self.observe_reply(&resp);
+                        return resp.map(|r| (primary.0, r));
+                    }
+                    Err(Disconnected) => {
+                        // The straggler turned out dead: the hedge is
+                        // promoted to the only lane.
+                        self.settle(primary.0);
+                        self.mark_dead(primary.0);
+                        *rerouted += 1;
+                        primary = (hsid, hrx);
+                        continue;
+                    }
+                    Err(Timeout) => {}
                 }
-                Err(_) => {
+                match hrx.recv_timeout(slice) {
+                    Ok(resp) => {
+                        self.settle(hsid);
+                        self.settle(primary.0);
+                        self.hedges_won.fetch_add(1, Ordering::Relaxed);
+                        self.observe_reply(&resp);
+                        return resp.map(|r| (hsid, r));
+                    }
+                    Err(Disconnected) => {
+                        // The hedge lane died; the original carries on
+                        // alone (no second hedge for this job).
+                        self.settle(hsid);
+                        self.mark_dead(hsid);
+                        *rerouted += 1;
+                    }
+                    Err(Timeout) => hedge = Some((hsid, hrx)),
+                }
+                continue;
+            }
+            // Single lane: wait outright, or up to the straggler
+            // deadline while a hedge is still available.
+            let deadline =
+                if hedge_armed { self.hedge_deadline(primary.0, data.len()) } else { None };
+            let outcome = match deadline {
+                Some(t) => primary.1.recv_timeout(t),
+                None => primary.1.recv().map_err(|_| Disconnected),
+            };
+            match outcome {
+                Ok(resp) => {
+                    self.settle(primary.0);
+                    self.observe_reply(&resp);
+                    return resp.map(|r| (primary.0, r));
+                }
+                Err(Disconnected) => {
                     // The worker vanished under the job: dead host.
-                    self.settle(sid);
-                    self.mark_dead(sid);
+                    self.settle(primary.0);
+                    self.mark_dead(primary.0);
                     *rerouted += 1;
-                    (sid, rx) = self.submit_routed(data, offset, rerouted)?;
+                    self.charge_retry()?;
+                    primary = self.submit_routed(data, offset, rerouted)?;
+                }
+                Err(Timeout) => {
+                    // Straggler: hedge once if the fleet and the
+                    // budget allow; either way the attempt is spent.
+                    hedge = self.issue_hedge(primary.0, data);
+                    hedge_armed = false;
                 }
             }
         }
@@ -723,7 +1060,13 @@ impl ShardedSortService {
         let elements: u64 = snaps.iter().map(|s| s.elements).sum();
         let sim_cycles: u64 = snaps.iter().map(|s| s.sim_cycles).sum();
         let max_elements = snaps.iter().map(|s| s.elements).max().unwrap_or(0);
+        // Clamp the imbalance denominator: a fleet whose serving shards
+        // all just recovered reports zero elements everywhere (restarted
+        // hosts lose their counters), and max/mean must degrade to the
+        // balanced 1.0, never to a 0/0 NaN or a division by zero.
         let mean_elements = elements as f64 / self.shards.len() as f64;
+        let imbalance =
+            if mean_elements > 0.0 { max_elements as f64 / mean_elements } else { 1.0 };
         FleetSnapshot {
             healthy,
             completed,
@@ -741,9 +1084,14 @@ impl ShardedSortService {
                 .map(|s| s.rerouted_from.load(Ordering::Relaxed))
                 .sum(),
             recovered: self.recovered.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            hedges_won: self.hedges_won.load(Ordering::Relaxed),
+            hedges_lost: self.hedges_lost.load(Ordering::Relaxed),
+            budget_exhausted: self.budget_exhausted.load(Ordering::Relaxed),
+            retry_tokens: *self.tokens.lock().expect("budget poisoned"),
             p50_us: snaps.iter().map(|s| s.p50_us).max().unwrap_or(0),
             p99_us: snaps.iter().map(|s| s.p99_us).max().unwrap_or(0),
-            imbalance: if elements == 0 { 1.0 } else { max_elements as f64 / mean_elements },
+            imbalance,
             cycles_per_number: if elements == 0 {
                 0.0
             } else {
@@ -753,12 +1101,23 @@ impl ShardedSortService {
         }
     }
 
-    /// Graceful shutdown of every shard.
+    /// Graceful shutdown of every shard — for remote shards this sends
+    /// the wire `Shutdown` and *terminates the host processes*. A
+    /// coordinator that merely wants to end its session with long-lived
+    /// hosts should [`Self::disconnect`] instead.
     pub fn shutdown(self) {
         for shard in self.shards {
             shard.transport.shutdown();
         }
     }
+
+    /// End the coordinator's session without touching the hosts: every
+    /// shard link simply drops (a remote host sees the connection close
+    /// and serves its next coordinator; `memsort sort --connect` uses
+    /// this so operator-started `serve --shard` processes outlive the
+    /// sort). In-process hosts are torn down with the handles — there
+    /// is no one left to reach them.
+    pub fn disconnect(self) {}
 }
 
 #[cfg(test)]
@@ -1065,6 +1424,7 @@ mod tests {
         assert!(ShardedSortService::start(ShardedConfig {
             route: RoutePolicy::RoundRobin,
             services: vec![],
+            ..Default::default()
         })
         .is_err());
         // A bad per-shard config surfaces as the start error.
@@ -1244,6 +1604,7 @@ mod tests {
         let f = ShardedSortService::start(ShardedConfig {
             route: RoutePolicy::Cost,
             services: services.clone(),
+            ..Default::default()
         })
         .unwrap();
         assert!(f.route_cost(0, 1024) > f.route_cost(1, 1024));
@@ -1251,8 +1612,12 @@ mod tests {
         f.submit_wait(d.values).unwrap();
         assert_eq!(f.shards[1].transport.metrics().completed, 1);
         f.shutdown();
-        let f = ShardedSortService::start(ShardedConfig { route: RoutePolicy::Cost, services })
-            .unwrap();
+        let f = ShardedSortService::start(ShardedConfig {
+            route: RoutePolicy::Cost,
+            services,
+            ..Default::default()
+        })
+        .unwrap();
         let d = Dataset::generate32(DatasetKind::MapReduce, 256, 5);
         f.submit_wait(d.values).unwrap();
         assert_eq!(f.shards[0].transport.metrics().completed, 1, "in-geometry tie -> shard 0");
@@ -1291,6 +1656,7 @@ mod tests {
             let f = ShardedSortService::start(ShardedConfig {
                 route,
                 services: services.clone(),
+                ..Default::default()
             })
             .unwrap();
             let out = f.sort_hierarchical(&d.values, &cfg).unwrap();
@@ -1347,6 +1713,243 @@ mod tests {
         let out = f.sort_hierarchical(&d.values, &HierarchicalConfig::fixed(128, 4)).unwrap();
         assert_eq!(out.hier.output.sorted, expect);
         assert!(out.shard_chunks[1] > 0, "{:?}", out.shard_chunks);
+        f.shutdown();
+    }
+
+    type FlakyHandles = Vec<std::sync::Arc<crate::coordinator::transport::FlakyTransport>>;
+
+    /// A fleet of flaky hosts under explicit resilience settings.
+    fn flaky_fleet(
+        shards: usize,
+        route: RoutePolicy,
+        resilience: ResilienceConfig,
+    ) -> (FlakyHandles, ShardedSortService) {
+        use crate::coordinator::transport::FlakyTransport;
+        let svc = ServiceConfig { workers: 2, ..Default::default() };
+        let handles: FlakyHandles = (0..shards)
+            .map(|_| std::sync::Arc::new(FlakyTransport::start(svc.clone()).unwrap()))
+            .collect();
+        let f = ShardedSortService::with_transports_resilient(
+            route,
+            resilience,
+            handles
+                .iter()
+                .map(|t| Box::new(std::sync::Arc::clone(t)) as Box<dyn ShardTransport>)
+                .collect(),
+        )
+        .unwrap();
+        (handles, f)
+    }
+
+    #[test]
+    fn retry_budget_denies_failover_when_exhausted() {
+        // Capacity 0: the fleet isolates dead shards but refuses to
+        // *pay* for failover hops — the hop errors instead of storming
+        // the survivors.
+        let resilience = ResilienceConfig {
+            retry_budget: RetryBudgetConfig { capacity: 0.0, deposit: 0.0 },
+            hedge: None,
+        };
+        let (_, f) = flaky_fleet(2, RoutePolicy::LeastOutstanding, resilience);
+        // Kill shard 0 behind the router's back (ties route to it).
+        f.shards[0].transport.halt();
+        wait_dead(&f, 0);
+        let d = Dataset::generate32(DatasetKind::Uniform, 64, 1);
+        let err = f.submit_wait(d.values.clone()).unwrap_err().to_string();
+        assert!(err.contains("retry budget"), "{err}");
+        let m = f.fleet_metrics();
+        assert!(m.budget_exhausted >= 1);
+        assert_eq!(m.retries, 0, "no hop was paid for");
+        assert_eq!(m.retry_tokens, 0.0);
+        // The denied hop still isolated the dead shard, so the next
+        // submit routes straight to the survivor — no retry needed.
+        let resp = f.submit_wait(d.values.clone()).unwrap();
+        let mut expect = d.values;
+        expect.sort_unstable();
+        assert_eq!(resp.sorted, expect);
+        f.shutdown();
+    }
+
+    #[test]
+    fn retry_budget_spends_and_refills_on_successful_traffic() {
+        let resilience = ResilienceConfig {
+            retry_budget: RetryBudgetConfig { capacity: 2.0, deposit: 0.5 },
+            hedge: None,
+        };
+        let (_, f) = flaky_fleet(2, RoutePolicy::RoundRobin, resilience);
+        assert!((f.fleet_metrics().retry_tokens - 2.0).abs() < 1e-12, "starts full");
+        assert!(f.try_spend_budget());
+        assert!(f.try_spend_budget());
+        assert!(!f.try_spend_budget(), "an empty bucket denies");
+        assert_eq!(f.fleet_metrics().budget_exhausted, 1);
+        // Successful traffic deposits back, capped at capacity.
+        for seed in 0..6u64 {
+            f.submit_wait(Dataset::generate32(DatasetKind::Uniform, 32, seed).values).unwrap();
+        }
+        let tokens = f.fleet_metrics().retry_tokens;
+        assert!((tokens - 2.0).abs() < 1e-9, "refilled to the cap, got {tokens}");
+        assert!(f.try_spend_budget());
+        f.shutdown();
+    }
+
+    #[test]
+    fn bad_resilience_config_is_an_error_not_a_panic() {
+        for resilience in [
+            ResilienceConfig {
+                retry_budget: RetryBudgetConfig { capacity: f64::NAN, deposit: 0.1 },
+                hedge: None,
+            },
+            ResilienceConfig {
+                retry_budget: RetryBudgetConfig { capacity: 1.0, deposit: -0.5 },
+                hedge: None,
+            },
+            ResilienceConfig {
+                retry_budget: RetryBudgetConfig::default(),
+                hedge: Some(HedgeConfig { straggler_mult: f64::INFINITY, floor_us: 0 }),
+            },
+        ] {
+            let t = LocalTransport::start(ServiceConfig { workers: 1, ..Default::default() })
+                .unwrap();
+            assert!(
+                ShardedSortService::with_transports_resilient(
+                    RoutePolicy::RoundRobin,
+                    resilience,
+                    vec![Box::new(t) as Box<dyn ShardTransport>],
+                )
+                .is_err(),
+                "{resilience:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn hedged_request_wins_over_a_stalled_shard() {
+        // Shard 0 accepts the job and never answers (a hung host, not
+        // a dead one — the reply channel stays open). The straggler
+        // deadline fires, the hedge lands on shard 1, and the first
+        // delivered reply wins.
+        let resilience = ResilienceConfig {
+            retry_budget: RetryBudgetConfig::default(),
+            hedge: Some(HedgeConfig { straggler_mult: 4.0, floor_us: 2_000 }),
+        };
+        let (handles, f) = flaky_fleet(2, RoutePolicy::LeastOutstanding, resilience);
+        handles[0].stall(); // ties pin the primary to shard 0
+        let d = Dataset::generate32(DatasetKind::MapReduce, 256, 3);
+        let resp = f.submit_wait(d.values.clone()).unwrap();
+        let mut expect = d.values;
+        expect.sort_unstable();
+        assert_eq!(resp.sorted, expect);
+        let m = f.fleet_metrics();
+        assert_eq!((m.hedges_won, m.hedges_lost), (1, 0));
+        // Both lanes settled when the race ended: the abandoned
+        // straggler cannot skew least-outstanding routing forever.
+        assert_eq!(f.shards[0].outstanding.load(Ordering::Relaxed), 0);
+        assert_eq!(f.shards[1].outstanding.load(Ordering::Relaxed), 0);
+        assert!(m.retry_tokens < resilience.retry_budget.capacity, "the hedge cost a token");
+        f.shutdown();
+    }
+
+    #[test]
+    fn hedge_loses_when_the_primary_answers_first() {
+        // Zero floor + no calibration yet = a zero deadline: the hedge
+        // fires immediately — at the *stalled* shard 1, so the healthy
+        // primary always delivers first and the hedge is abandoned.
+        let resilience = ResilienceConfig {
+            retry_budget: RetryBudgetConfig::default(),
+            hedge: Some(HedgeConfig { straggler_mult: 4.0, floor_us: 0 }),
+        };
+        let (handles, f) = flaky_fleet(2, RoutePolicy::LeastOutstanding, resilience);
+        handles[1].stall();
+        let d = Dataset::generate32(DatasetKind::Uniform, 4096, 3);
+        let resp = f.submit_wait(d.values.clone()).unwrap();
+        let mut expect = d.values;
+        expect.sort_unstable();
+        assert_eq!(resp.sorted, expect);
+        let m = f.fleet_metrics();
+        assert_eq!((m.hedges_won, m.hedges_lost), (0, 1));
+        assert_eq!(f.shards[0].outstanding.load(Ordering::Relaxed), 0);
+        assert_eq!(f.shards[1].outstanding.load(Ordering::Relaxed), 0);
+        f.shutdown();
+    }
+
+    #[test]
+    fn hedge_denied_on_empty_budget_still_serves() {
+        // A zero-capacity budget turns hedging off in practice: the
+        // straggler deadline fires, the hedge is denied (counted), and
+        // the job simply waits out its primary like PR 4 did.
+        let resilience = ResilienceConfig {
+            retry_budget: RetryBudgetConfig { capacity: 0.0, deposit: 0.0 },
+            hedge: Some(HedgeConfig { straggler_mult: 4.0, floor_us: 0 }),
+        };
+        let (_, f) = flaky_fleet(2, RoutePolicy::LeastOutstanding, resilience);
+        let d = Dataset::generate32(DatasetKind::MapReduce, 1024, 5);
+        let resp = f.submit_wait(d.values.clone()).unwrap();
+        let mut expect = d.values;
+        expect.sort_unstable();
+        assert_eq!(resp.sorted, expect);
+        let m = f.fleet_metrics();
+        assert_eq!((m.hedges_won, m.hedges_lost), (0, 0));
+        assert!(m.budget_exhausted >= 1, "the denied hedge must be visible");
+        f.shutdown();
+    }
+
+    #[test]
+    fn hedging_sweep_is_byte_identical_under_stall_faults() {
+        // The fault-injection sweep: one stalled shard in a 3-shard
+        // round-robin fleet, hedging on. Every chunk the stalled host
+        // sits on is hedged to a survivor, the output stays
+        // byte-identical to the single-service pipeline (the simulated
+        // response is a deterministic function of the data), and the
+        // wins are visible in the fleet snapshot.
+        let single =
+            SortService::start(ServiceConfig { workers: 2, ..Default::default() }).unwrap();
+        let cfg = HierarchicalConfig::fixed(128, 4);
+        let resilience = ResilienceConfig {
+            retry_budget: RetryBudgetConfig { capacity: 64.0, deposit: 0.1 },
+            hedge: Some(HedgeConfig { straggler_mult: 4.0, floor_us: 2_000 }),
+        };
+        for kind in DatasetKind::ALL {
+            let d = Dataset::generate32(kind, 1200, 9);
+            let reference = single.sort_hierarchical(&d.values, &cfg).unwrap();
+            let (handles, f) = flaky_fleet(3, RoutePolicy::RoundRobin, resilience);
+            handles[2].stall();
+            let out = f.sort_hierarchical(&d.values, &cfg).unwrap();
+            let tag = format!("{kind:?}");
+            assert_eq!(out.hier.output.sorted, reference.output.sorted, "{tag}");
+            assert_eq!(out.hier.output.order, reference.output.order, "{tag}");
+            assert_eq!(out.hier.output.stats, reference.output.stats, "{tag}");
+            assert_eq!(out.hier.chunk_stats, reference.chunk_stats, "{tag}");
+            let m = f.fleet_metrics();
+            assert!(m.hedges_won >= 1, "{tag}: the stalled shard's chunks must be hedged");
+            assert_eq!(m.errors, 0, "{tag}");
+            // No chunk may be *assigned* to the stalled shard in the
+            // final accounting — every one of its jobs was won by a
+            // survivor's hedge.
+            assert_eq!(out.shard_chunks[2], 0, "{tag}: {:?}", out.shard_chunks);
+            f.shutdown();
+        }
+        single.shutdown();
+    }
+
+    #[test]
+    fn imbalance_clamps_when_every_counter_reset_on_recovery() {
+        // The regression: per-shard element counters restart from zero
+        // across a recovery, and a fleet whose serving shards all just
+        // recovered must report the balanced 1.0 — never NaN or a
+        // division by zero — while the totals honestly read 0.
+        let f = fleet(2, RoutePolicy::RoundRobin);
+        for seed in 0..4u64 {
+            f.submit_wait(Dataset::generate32(DatasetKind::Uniform, 64, seed).values).unwrap();
+        }
+        let m = f.fleet_metrics();
+        assert!(m.imbalance >= 1.0 && m.imbalance.is_finite());
+        // Operator-driven replacement of *every* host.
+        f.recover_shard(0).unwrap();
+        f.recover_shard(1).unwrap();
+        let m = f.fleet_metrics();
+        assert_eq!(m.elements, 0, "restarted hosts lost their counters");
+        assert!((m.imbalance - 1.0).abs() < 1e-12, "clamped, got {}", m.imbalance);
+        assert!(m.imbalance.is_finite());
         f.shutdown();
     }
 }

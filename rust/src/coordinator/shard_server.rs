@@ -1,0 +1,335 @@
+//! The shard host's side of the wire: a blocking server loop that
+//! speaks the [`super::wire`] protocol on behalf of one
+//! [`super::SortService`].
+//!
+//! One [`ShardServer`] is one shard host — exactly the thing a
+//! [`super::transport::LocalTransport`] is in-process, so it *wraps*
+//! one: the wire's `Halt`/`Restart` frames map straight onto the
+//! transport's crash/replace machinery, and the coordinator-visible
+//! semantics (submits fail fast on a dead host, a restarted host comes
+//! back empty) are the same whether the shard sits behind a thread
+//! boundary or a socket.
+//!
+//! Connections are served one at a time ([`ShardServer::serve_conn`]
+//! blocks until EOF or `Shutdown`); a shard has one coordinator, and a
+//! reconnect — the remote side of
+//! [`super::transport::ShardTransport::restart`] — simply starts the
+//! next `serve_conn`. Within a connection, sort jobs are fully
+//! pipelined: each job is submitted to the service immediately and a
+//! per-job collector thread writes the reply whenever the worker pool
+//! finishes it, so responses may return out of submission order (the
+//! correlation id in the frame header is what keys them, not arrival
+//! order).
+//!
+//! **Dropped replies stay dropped.** When the host dies with a job in
+//! flight (submit rejected, or the worker vanished under it), the
+//! server answers [`super::wire::Frame::Dropped`] — never an error
+//! *reply* — so the coordinator's re-route path observes exactly what
+//! an in-process dropped channel looks like. A sort that fails as a
+//! *result* (engine mismatch) is a [`super::wire::Frame::ErrReply`],
+//! which fails the request on the coordinator without re-routing, same
+//! as the local path.
+
+use std::io::{Read, Write};
+use std::net::TcpListener;
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use super::transport::{LocalTransport, ShardTransport};
+use super::wire::{read_frame, read_hello, write_frame, Frame, WIRE_VERSION};
+use super::ServiceConfig;
+
+/// One shard host behind the wire: a restartable in-process service
+/// plus the connection loop that exposes it.
+pub struct ShardServer {
+    host: Arc<LocalTransport>,
+}
+
+impl ShardServer {
+    /// Start the host's service from `config`.
+    pub fn start(config: ServiceConfig) -> Result<Self> {
+        Ok(ShardServer { host: Arc::new(LocalTransport::start(config)?) })
+    }
+
+    /// The in-process transport this server fronts. Tests use it to
+    /// kill the host behind the wire's back (the remote analogue of a
+    /// host crashing without telling its coordinator).
+    pub fn host(&self) -> &Arc<LocalTransport> {
+        &self.host
+    }
+
+    /// A [`super::transport::Connector`] that dials this server over a
+    /// fresh in-memory duplex per call, each connection served by its
+    /// own thread — the deterministic stand-in for re-dialling a TCP
+    /// host, shared by the remote-path tests, benches and examples.
+    pub fn duplex_connector(server: Arc<Self>) -> super::transport::Connector {
+        Box::new(move || {
+            let (client, (sr, sw)) = super::wire::duplex();
+            let srv = Arc::clone(&server);
+            std::thread::spawn(move || {
+                let _ = srv.serve_conn(sr, sw);
+            });
+            Ok(client)
+        })
+    }
+
+    /// Serve one connection until EOF or a `Shutdown` frame. Returns
+    /// `Ok(true)` after `Shutdown` (the host is shut down too — stop
+    /// accepting), `Ok(false)` after a plain disconnect (the host keeps
+    /// running; the coordinator may reconnect, e.g. on restart).
+    pub fn serve_conn(
+        &self,
+        mut r: Box<dyn Read + Send>,
+        w: Box<dyn Write + Send>,
+    ) -> Result<bool> {
+        // The write half is shared with the per-job collector threads;
+        // every frame goes out as one locked write_all, so frames never
+        // interleave.
+        let w: Arc<Mutex<Box<dyn Write + Send>>> = Arc::new(Mutex::new(w));
+        let write = |id: u64, frame: &Frame| {
+            let mut g = w.lock().expect("writer poisoned");
+            write_frame(g.as_mut(), id, frame)
+        };
+
+        // Version negotiation: the connection must open with Hello.
+        let (hid, version) = read_hello(r.as_mut())?;
+        if version != WIRE_VERSION {
+            let msg = format!(
+                "unsupported wire version {version} (this host speaks {WIRE_VERSION})"
+            );
+            let _ = write(hid, &Frame::ErrReply(msg.clone()));
+            anyhow::bail!("{msg}");
+        }
+        write(hid, &Frame::HelloAck(self.host.config()))?;
+
+        loop {
+            // EOF or a framing error ends the connection; the host
+            // stays up for the next one.
+            let Ok((id, frame)) = read_frame(r.as_mut()) else { return Ok(false) };
+            match frame {
+                // A job whose *reply* would exceed the frame cap is
+                // answered with a delivered error — never with an
+                // over-cap SortOk that would kill the connection (and
+                // every other job in flight on it).
+                Frame::SortJob(data) if data.len() > super::wire::MAX_SORT_ELEMS => {
+                    let msg = format!(
+                        "sort job of {} elements exceeds the wire cap of {}",
+                        data.len(),
+                        super::wire::MAX_SORT_ELEMS
+                    );
+                    let _ = write(id, &Frame::ErrReply(msg));
+                }
+                Frame::SortJob(data) => match self.host.submit(data) {
+                    Ok(rx) => {
+                        // Collector: one thread per in-flight job, so
+                        // replies pipeline in completion order while
+                        // the read loop keeps accepting jobs.
+                        let w = Arc::clone(&w);
+                        std::thread::spawn(move || {
+                            let frame = match rx.recv() {
+                                Ok(Ok(resp)) => Frame::SortOk(resp),
+                                Ok(Err(e)) => Frame::ErrReply(format!("{e:#}")),
+                                // The worker vanished under the job —
+                                // the wire form of a dropped reply.
+                                Err(_) => Frame::Dropped,
+                            };
+                            let mut g = w.lock().expect("writer poisoned");
+                            // The connection may already be gone; the
+                            // coordinator then sees the drop anyway.
+                            let _ = write_frame(g.as_mut(), id, &frame);
+                        });
+                    }
+                    // Submit rejected: the host is down. Fail "fast"
+                    // the only way a reply channel can — by dropping.
+                    Err(_) => {
+                        let _ = write(id, &Frame::Dropped);
+                    }
+                },
+                Frame::GetMetrics => write(id, &Frame::MetricsReply(self.host.metrics()))?,
+                Frame::Halt => self.host.halt(),
+                Frame::Restart => {
+                    let reply = match self.host.restart() {
+                        Ok(()) => Frame::Ack,
+                        Err(e) => Frame::ErrReply(format!("restart failed: {e:#}")),
+                    };
+                    write(id, &reply)?;
+                }
+                Frame::Shutdown => {
+                    self.host.shutdown();
+                    return Ok(true);
+                }
+                // Server-bound streams never carry reply kinds; a
+                // coordinator that sends one is broken — drop the link.
+                other => anyhow::bail!("unexpected frame {other:?} on a shard server"),
+            }
+        }
+    }
+}
+
+impl super::transport::ShardTransport for ShardServer {
+    // A ShardServer *is* its LocalTransport with a wire bolted on; the
+    // trait pass-through lets operator tooling (and tests) poke the
+    // host directly through the same seam the wire serves.
+    fn submit(
+        &self,
+        data: Vec<u32>,
+    ) -> Result<std::sync::mpsc::Receiver<Result<super::SortResponse>>> {
+        self.host.submit(data)
+    }
+
+    fn metrics(&self) -> super::metrics::Snapshot {
+        self.host.metrics()
+    }
+
+    fn cyc_per_num_for(&self, n: usize, fallback: f64) -> f64 {
+        self.host.cyc_per_num_for(n, fallback)
+    }
+
+    fn config(&self) -> ServiceConfig {
+        self.host.config()
+    }
+
+    fn halt(&self) {
+        self.host.halt();
+    }
+
+    fn restart(&self) -> Result<()> {
+        self.host.restart()
+    }
+
+    fn shutdown(&self) {
+        self.host.shutdown();
+    }
+}
+
+/// Accept loop for a TCP-fronted shard host: serve connections one at a
+/// time until a coordinator sends `Shutdown`. This is what
+/// `memsort serve --shard --port N` runs; each accepted connection gets
+/// the full handshake + job loop, and a dropped coordinator only ends
+/// its own connection.
+pub fn serve_tcp(listener: TcpListener, config: ServiceConfig) -> Result<()> {
+    let server = ShardServer::start(config)?;
+    for conn in listener.incoming() {
+        let stream = match conn {
+            Ok(s) => s,
+            Err(_) => continue,
+        };
+        let _ = stream.set_nodelay(true);
+        let read = Box::new(stream.try_clone()?) as Box<dyn Read + Send>;
+        let write = Box::new(stream) as Box<dyn Write + Send>;
+        match server.serve_conn(read, write) {
+            Ok(true) => return Ok(()), // coordinator asked for shutdown
+            Ok(false) => continue,     // disconnect; await a reconnect
+            Err(e) => eprintln!("shard connection error: {e:#}"),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::transport::ShardTransport;
+    use super::super::wire::{duplex, encode_frame, read_frame, write_frame, Frame};
+    use super::*;
+
+    fn start() -> (Arc<ShardServer>, std::thread::JoinHandle<Result<bool>>, super::super::wire::WireConn)
+    {
+        let server = Arc::new(
+            ShardServer::start(ServiceConfig { workers: 2, ..Default::default() }).unwrap(),
+        );
+        let (client, (sr, sw)) = duplex();
+        let srv = Arc::clone(&server);
+        let t = std::thread::spawn(move || srv.serve_conn(sr, sw));
+        (server, t, client)
+    }
+
+    #[test]
+    fn handshake_sort_and_shutdown_over_a_duplex_link() {
+        let (_server, t, (mut r, mut w)) = start();
+        write_frame(w.as_mut(), 1, &Frame::Hello).unwrap();
+        let (id, frame) = read_frame(r.as_mut()).unwrap();
+        assert_eq!(id, 1);
+        let Frame::HelloAck(cfg) = frame else { panic!("expected HelloAck, got {frame:?}") };
+        assert_eq!(cfg.workers, 2);
+        // Two pipelined jobs; replies come back keyed by id.
+        write_frame(w.as_mut(), 10, &Frame::SortJob(vec![3, 1, 2])).unwrap();
+        write_frame(w.as_mut(), 11, &Frame::SortJob(vec![9, 7])).unwrap();
+        let mut got = std::collections::HashMap::new();
+        for _ in 0..2 {
+            let (id, frame) = read_frame(r.as_mut()).unwrap();
+            let Frame::SortOk(resp) = frame else { panic!("expected SortOk, got {frame:?}") };
+            got.insert(id, resp.sorted);
+        }
+        assert_eq!(got[&10], vec![1, 2, 3]);
+        assert_eq!(got[&11], vec![7, 9]);
+        write_frame(w.as_mut(), 12, &Frame::Shutdown).unwrap();
+        assert!(t.join().unwrap().unwrap(), "Shutdown ends the accept contract");
+    }
+
+    #[test]
+    fn dead_host_answers_dropped_not_error() {
+        let (server, t, (mut r, mut w)) = start();
+        write_frame(w.as_mut(), 1, &Frame::Hello).unwrap();
+        let _ = read_frame(r.as_mut()).unwrap();
+        // Kill the host behind the wire's back and wait for the death
+        // to be observable, like the local-transport tests do.
+        server.host().halt();
+        while server.host().submit(vec![1u32]).is_ok() {
+            std::thread::yield_now();
+        }
+        write_frame(w.as_mut(), 5, &Frame::SortJob(vec![4, 4, 1])).unwrap();
+        let (id, frame) = read_frame(r.as_mut()).unwrap();
+        assert_eq!((id, frame), (5, Frame::Dropped));
+        // Restart over the wire brings the host back empty.
+        write_frame(w.as_mut(), 6, &Frame::Restart).unwrap();
+        let (id, frame) = read_frame(r.as_mut()).unwrap();
+        assert_eq!((id, frame), (6, Frame::Ack));
+        write_frame(w.as_mut(), 7, &Frame::SortJob(vec![4, 4, 1])).unwrap();
+        let (id, frame) = read_frame(r.as_mut()).unwrap();
+        assert_eq!(id, 7);
+        let Frame::SortOk(resp) = frame else { panic!("expected SortOk, got {frame:?}") };
+        assert_eq!(resp.sorted, vec![1, 4, 4]);
+        write_frame(w.as_mut(), 8, &Frame::GetMetrics).unwrap();
+        let (_, frame) = read_frame(r.as_mut()).unwrap();
+        let Frame::MetricsReply(snap) = frame else { panic!("expected metrics") };
+        assert_eq!(snap.completed, 1, "a restarted host reports from zero");
+        write_frame(w.as_mut(), 9, &Frame::Shutdown).unwrap();
+        t.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn version_mismatch_is_rejected_at_hello() {
+        let (_server, t, (mut r, mut w)) = start();
+        let mut hello = encode_frame(1, &Frame::Hello);
+        hello[2] = super::super::wire::WIRE_VERSION + 1;
+        w.write_all(&hello).unwrap();
+        let (id, frame) = read_frame(r.as_mut()).unwrap();
+        assert_eq!(id, 1);
+        let Frame::ErrReply(msg) = frame else { panic!("expected ErrReply, got {frame:?}") };
+        assert!(msg.contains("version"), "{msg}");
+        assert!(t.join().unwrap().is_err(), "the server drops the connection");
+    }
+
+    #[test]
+    fn plain_disconnect_keeps_the_host_alive_for_a_reconnect() {
+        let server = Arc::new(
+            ShardServer::start(ServiceConfig { workers: 1, ..Default::default() }).unwrap(),
+        );
+        for round in 0..2 {
+            let ((mut r, mut w), (sr, sw)) = duplex();
+            let srv = Arc::clone(&server);
+            let t = std::thread::spawn(move || srv.serve_conn(sr, sw));
+            write_frame(w.as_mut(), 1, &Frame::Hello).unwrap();
+            let _ = read_frame(r.as_mut()).unwrap();
+            write_frame(w.as_mut(), 2, &Frame::SortJob(vec![2, 1])).unwrap();
+            let (_, frame) = read_frame(r.as_mut()).unwrap();
+            assert!(matches!(frame, Frame::SortOk(_)), "round {round}: {frame:?}");
+            drop((r, w)); // plain disconnect
+            assert!(!t.join().unwrap().unwrap(), "host survives the disconnect");
+        }
+        // The same host served both connections: its metrics persisted.
+        assert_eq!(server.host().metrics().completed, 2);
+        server.host().shutdown();
+    }
+}

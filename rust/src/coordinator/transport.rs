@@ -11,24 +11,33 @@
 //! ShardTransport>>` is) drops in without touching routing, recovery or
 //! the latency models.
 //!
-//! Two implementations ship today:
+//! Three implementations ship today:
 //!
 //! * [`LocalTransport`] — the in-process host: owns a [`SortService`]
 //!   behind an `RwLock` so [`ShardTransport::restart`] can replace a
 //!   halted service with a fresh one from the same config (the shard
 //!   *recovery* primitive; a real deployment would restart the remote
 //!   process instead).
+//! * [`RemoteTransport`] — the wire: speaks the [`super::wire`] frame
+//!   protocol over any byte stream (a `TcpStream` against
+//!   `memsort serve --shard`, or the in-memory [`super::wire::duplex`]
+//!   against a [`super::shard_server::ShardServer`] in deterministic
+//!   tests), preserving the dropped-reply semantics across the link.
 //! * [`FlakyTransport`] — a fault-injecting wrapper for tests: a local
-//!   host whose submissions can be made to fail on demand, simulating a
-//!   network partition or a crashed host that the router must observe,
-//!   isolate and — after [`ShardTransport::restart`] — re-admit.
+//!   host whose submissions can be made to fail on demand (a partition)
+//!   or stall forever (a straggling host — the hedging tests' food),
+//!   simulating failures the router must observe, isolate and — after
+//!   [`ShardTransport::restart`] — re-admit.
 
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, RwLock};
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex, RwLock};
 
 use anyhow::{anyhow, Result};
 
-use super::metrics::Snapshot;
+use super::metrics::{ServiceMetrics, Snapshot};
+use super::wire::{self, Frame};
 use super::{ServiceConfig, SortResponse, SortService};
 
 /// Everything the fleet coordinator needs from one shard host. The
@@ -128,8 +137,7 @@ impl ShardTransport for LocalTransport {
     }
 
     fn metrics(&self) -> Snapshot {
-        self.with_service(SortService::metrics)
-            .unwrap_or_else(|_| super::metrics::ServiceMetrics::new().snapshot())
+        self.with_service(SortService::metrics).unwrap_or_else(|_| Snapshot::empty())
     }
 
     fn cyc_per_num_for(&self, n: usize, fallback: f64) -> f64 {
@@ -173,20 +181,365 @@ impl ShardTransport for LocalTransport {
     }
 }
 
+// ---------------------------------------------------------------------
+// RemoteTransport: the wire implementation of the seam.
+// ---------------------------------------------------------------------
+
+/// How a [`RemoteTransport`] (re-)establishes its connection: a factory
+/// producing a fresh [`wire::WireConn`] per call. For TCP this dials
+/// the shard server's address ([`RemoteTransport::connect_tcp`]); in
+/// tests it hands out [`wire::duplex`] ends served by an in-process
+/// [`super::shard_server::ShardServer`]. Re-invoked on
+/// [`ShardTransport::restart`], which is what makes recovery work over
+/// a link that died.
+pub type Connector = Box<dyn Fn() -> Result<wire::WireConn> + Send + Sync>;
+
+enum PendingReply {
+    Sort(mpsc::Sender<Result<SortResponse>>),
+    Metrics(mpsc::Sender<Snapshot>),
+    Control(mpsc::Sender<Result<()>>),
+}
+
+type PendingMap = Arc<Mutex<HashMap<u64, PendingReply>>>;
+
+/// One live connection: the shared write half, the reply routing table
+/// its reader thread dispatches into, and the liveness flag the reader
+/// clears on exit. Dropping the link drops the write half (the peer
+/// sees EOF), which unblocks the reader, which flips `alive` and
+/// drains `pending` — every in-flight request observes a dropped
+/// reply, exactly like an in-process worker pool dying. `alive` is
+/// what keeps a *later* submit from parking a sender in a map nobody
+/// will ever drain again (a TCP write into a dead peer's socket buffer
+/// can succeed long before the OS reports the connection gone).
+struct Link {
+    writer: Arc<Mutex<Box<dyn Write + Send>>>,
+    pending: PendingMap,
+    alive: Arc<AtomicBool>,
+}
+
+/// The RPC shard host: a [`ShardTransport`] that reaches its
+/// [`SortService`] through the [`super::wire`] protocol instead of a
+/// thread boundary.
+///
+/// * **Pipelined** — `submit` writes one `SortJob` frame and returns
+///   immediately with a receiver; a per-link reader thread routes
+///   replies back by correlation id, so any number of jobs are in
+///   flight at once and replies arrive in completion order.
+/// * **Fail-fast** — once the link is observed dead (a write error, a
+///   read error, EOF), later submits error immediately and every
+///   pending receiver sees a dropped reply; the fleet's re-route path
+///   cannot tell this host from a crashed in-process one.
+/// * **Restart = reconnect + host restart** — [`ShardTransport::restart`]
+///   closes any existing connection (a shard host accepts one
+///   connection at a time, so the old link must go before a new
+///   handshake can start), dials afresh through the [`Connector`],
+///   re-handshakes, and sends `Restart`; only after the host
+///   acknowledges is the new link installed. A failed restart leaves
+///   the shard link down and known-down — the same observable state a
+///   crashed host has.
+/// * **Cost reads stay cheap** — [`ShardTransport::cyc_per_num_for`] is
+///   called once per routing decision and must not cross the wire.
+///   The transport keeps a local [`ServiceMetrics`] *mirror*, recorded
+///   from every response's stats as it arrives: for the traffic this
+///   coordinator routed since (re)connect, the mirror's per-class
+///   cycles/number is identical to the host's own observation (the
+///   stats are deterministic functions of the data), and it resets on
+///   restart exactly when the host's history does.
+///   [`ShardTransport::metrics`], by contrast, is a real `GetMetrics`
+///   RPC — fleet snapshots report the host's own counters.
+pub struct RemoteTransport {
+    connector: Connector,
+    link: RwLock<Option<Link>>,
+    config: RwLock<ServiceConfig>,
+    mirror: RwLock<Arc<ServiceMetrics>>,
+    next_id: AtomicU64,
+}
+
+impl RemoteTransport {
+    /// Dial the host through `connector`, handshake, and return the
+    /// connected transport. Errors when the connection cannot be
+    /// established or the host rejects the protocol version.
+    pub fn connect(connector: Connector) -> Result<Self> {
+        let mirror = Arc::new(ServiceMetrics::new());
+        let (link, config) = Self::dial(&connector, Arc::clone(&mirror))?;
+        Ok(RemoteTransport {
+            connector,
+            link: RwLock::new(Some(link)),
+            config: RwLock::new(config),
+            mirror: RwLock::new(mirror),
+            next_id: AtomicU64::new(1),
+        })
+    }
+
+    /// [`RemoteTransport::connect`] over TCP to a
+    /// `memsort serve --shard` host at `addr` (`host:port`).
+    pub fn connect_tcp(addr: &str) -> Result<Self> {
+        let addr = addr.to_string();
+        Self::connect(Box::new(move || {
+            let stream = std::net::TcpStream::connect(&addr)
+                .map_err(|e| anyhow!("connecting to shard {addr}: {e}"))?;
+            let _ = stream.set_nodelay(true);
+            let read = Box::new(stream.try_clone()?) as Box<dyn Read + Send>;
+            let write = Box::new(TcpWriteHalf(stream)) as Box<dyn Write + Send>;
+            Ok((read, write))
+        }))
+    }
+
+    /// Establish one connection: handshake on the calling thread, then
+    /// hand the read half to a reader thread that routes replies into
+    /// `mirror` and the link's pending map until the connection dies.
+    fn dial(connector: &Connector, mirror: Arc<ServiceMetrics>) -> Result<(Link, ServiceConfig)> {
+        let (mut read, mut write) = connector()?;
+        wire::write_frame(write.as_mut(), 0, &Frame::Hello)?;
+        let (_, frame) = wire::read_frame(read.as_mut())?;
+        let config = match frame {
+            Frame::HelloAck(cfg) => cfg,
+            Frame::ErrReply(msg) => return Err(anyhow!("shard handshake rejected: {msg}")),
+            other => return Err(anyhow!("unexpected handshake frame {other:?}")),
+        };
+        let pending: PendingMap = Arc::new(Mutex::new(HashMap::new()));
+        let alive = Arc::new(AtomicBool::new(true));
+        let (routing, liveness) = (Arc::clone(&pending), Arc::clone(&alive));
+        std::thread::spawn(move || reader_loop(read, routing, liveness, mirror));
+        Ok((Link { writer: Arc::new(Mutex::new(write)), pending, alive }, config))
+    }
+
+    /// Send `frame` with a fresh id, registering `reply` for the
+    /// answer. Fails fast when the link is down — including a link
+    /// whose reader thread has exited (a dead peer can accept TCP
+    /// writes into its socket buffer long after it stopped answering)
+    /// — and a write error tears that same link down, never a fresh
+    /// one a concurrent restart just installed.
+    fn send(&self, frame: &Frame, reply: PendingReply) -> Result<u64> {
+        let guard = self.link.read().expect("transport poisoned");
+        let Some(link) = guard.as_ref() else {
+            return Err(anyhow!("remote shard link is down"));
+        };
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        link.pending.lock().expect("pending poisoned").insert(id, reply);
+        // Check liveness *after* inserting: the reader flips `alive`
+        // before its final drain, so either the drain removes this
+        // entry (a dropped reply) or this check observes the death —
+        // an entry can never outlive its reader unnoticed.
+        if !link.alive.load(Ordering::Acquire) {
+            link.pending.lock().expect("pending poisoned").remove(&id);
+            return Err(anyhow!("remote shard link is down (reader exited)"));
+        }
+        let wrote = {
+            let mut w = link.writer.lock().expect("writer poisoned");
+            wire::write_frame(w.as_mut(), id, frame)
+        };
+        if let Err(e) = wrote {
+            link.pending.lock().expect("pending poisoned").remove(&id);
+            let failed = Arc::clone(&link.writer);
+            drop(guard);
+            // Tear down the link that failed — and only that one: a
+            // concurrent restart may already have installed a fresh,
+            // healthy link, which this write failure says nothing
+            // about.
+            let mut slot = self.link.write().expect("transport poisoned");
+            if slot.as_ref().is_some_and(|l| Arc::ptr_eq(&l.writer, &failed)) {
+                *slot = None;
+            }
+            return Err(anyhow!("remote shard link failed: {e}"));
+        }
+        Ok(id)
+    }
+
+    /// Fire-and-forget control frame (`Halt`, `Shutdown`): best-effort,
+    /// link errors are swallowed — the host is unreachable, which for
+    /// these frames is indistinguishable from already-dead.
+    fn send_control(&self, frame: &Frame) {
+        if let Some(link) = self.link.read().expect("transport poisoned").as_ref() {
+            let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+            let mut w = link.writer.lock().expect("writer poisoned");
+            let _ = wire::write_frame(w.as_mut(), id, frame);
+        }
+    }
+}
+
+/// The write half of a TCP wire connection. Dropping it shuts the
+/// socket down both ways: a `try_clone`'d fd is only *closed* once
+/// every clone drops, and the transport's reader thread keeps one —
+/// without an explicit shutdown, tearing down a link would never send
+/// a FIN, the serially-accepting shard server would stay blocked on
+/// the dead connection, and a restart's re-dial could never be
+/// accepted. (The in-memory duplex gets the same semantics from
+/// `PipeWriter::drop`.)
+struct TcpWriteHalf(std::net::TcpStream);
+
+impl Write for TcpWriteHalf {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        self.0.write(buf)
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.0.flush()
+    }
+}
+
+impl Drop for TcpWriteHalf {
+    fn drop(&mut self) {
+        let _ = self.0.shutdown(std::net::Shutdown::Both);
+    }
+}
+
+fn reader_loop(
+    mut read: Box<dyn Read + Send>,
+    pending: PendingMap,
+    alive: Arc<AtomicBool>,
+    mirror: Arc<ServiceMetrics>,
+) {
+    loop {
+        let Ok((id, frame)) = wire::read_frame(read.as_mut()) else { break };
+        let slot = pending.lock().expect("pending poisoned").remove(&id);
+        match (slot, frame) {
+            (Some(PendingReply::Sort(tx)), Frame::SortOk(resp)) => {
+                // The coordinator-side mirror of the host's cost
+                // observations: same stats, same element count, so the
+                // per-class cycles/number agrees with the host's own.
+                mirror.record(resp.latency_us, &resp.stats, resp.sorted.len());
+                let _ = tx.send(Ok(resp));
+            }
+            (Some(PendingReply::Sort(tx)), Frame::ErrReply(msg)) => {
+                let _ = tx.send(Err(anyhow!(msg)));
+            }
+            // A dropped reply crosses the wire as Frame::Dropped: drop
+            // the sender without sending, and the receiver's recv()
+            // errors exactly like a vanished in-process worker.
+            (Some(PendingReply::Sort(_)), Frame::Dropped) => {}
+            (Some(PendingReply::Metrics(tx)), Frame::MetricsReply(snap)) => {
+                let _ = tx.send(snap);
+            }
+            (Some(PendingReply::Control(tx)), Frame::Ack) => {
+                let _ = tx.send(Ok(()));
+            }
+            (Some(PendingReply::Control(tx)), Frame::ErrReply(msg)) => {
+                let _ = tx.send(Err(anyhow!(msg)));
+            }
+            // A reply for an id nobody is waiting on: an abandoned
+            // request (e.g. a hedge loser whose receiver was dropped).
+            // Late answers are discarded, not errors.
+            (None, _) => {}
+            // A reply of the wrong shape is a broken peer: fail the
+            // connection rather than guess.
+            (Some(_), _) => break,
+        }
+    }
+    // Connection over. Flip liveness *before* the final drain: a
+    // concurrent submit either loses its entry to the drain (a dropped
+    // reply) or sees `alive == false` right after inserting and fails
+    // fast — there is no window in which a sender parks forever.
+    alive.store(false, Ordering::Release);
+    // Every still-pending request observes a dropped reply (senders
+    // drop with the map entries).
+    pending.lock().expect("pending poisoned").clear();
+}
+
+impl ShardTransport for RemoteTransport {
+    fn submit(&self, data: Vec<u32>) -> Result<mpsc::Receiver<Result<SortResponse>>> {
+        // Enforce the wire's job cap before writing anything: the
+        // *response* frame (12 B/element with argsort) is the fat
+        // direction, and letting it exceed MAX_PAYLOAD would kill the
+        // connection — and every other job in flight on it.
+        if data.len() > wire::MAX_SORT_ELEMS {
+            return Err(anyhow!(
+                "sort job of {} elements exceeds the wire cap of {} (submit it through \
+                 the hierarchical pipeline, which chunks to bank size)",
+                data.len(),
+                wire::MAX_SORT_ELEMS
+            ));
+        }
+        let (tx, rx) = mpsc::channel();
+        self.send(&Frame::SortJob(data), PendingReply::Sort(tx))?;
+        Ok(rx)
+    }
+
+    fn metrics(&self) -> Snapshot {
+        // A real RPC: the host's own counters. A dead link reports the
+        // empty snapshot, like a dead LocalTransport; a half-dead one
+        // (TCP partition with no RST yet) is bounded by a timeout so a
+        // fleet snapshot can never hang on one unreachable shard.
+        let (tx, rx) = mpsc::channel();
+        if self.send(&Frame::GetMetrics, PendingReply::Metrics(tx)).is_err() {
+            return Snapshot::empty();
+        }
+        rx.recv_timeout(std::time::Duration::from_secs(5)).unwrap_or_else(|_| Snapshot::empty())
+    }
+
+    fn cyc_per_num_for(&self, n: usize, fallback: f64) -> f64 {
+        self.mirror.read().expect("mirror poisoned").cyc_per_num_for(n, fallback)
+    }
+
+    fn config(&self) -> ServiceConfig {
+        self.config.read().expect("transport poisoned").clone()
+    }
+
+    fn halt(&self) {
+        self.send_control(&Frame::Halt);
+    }
+
+    fn restart(&self) -> Result<()> {
+        // Close any existing connection *first*: a shard host serves
+        // one connection at a time (`shard_server::serve_tcp` accepts
+        // serially), so dialling while the old link is open would wait
+        // forever on a handshake the server cannot start. Restart is a
+        // host replacement — in-flight work on the old link was dead
+        // either way, and a failed re-dial leaves the shard down and
+        // known-down, which routing already handles.
+        *self.link.write().expect("transport poisoned") = None;
+        // Dial a fresh connection and restart the host through it;
+        // only a fully-acknowledged restart installs the new link (and
+        // the cost mirror — the host's history is gone, so is ours).
+        let mirror = Arc::new(ServiceMetrics::new());
+        let (link, config) = Self::dial(&self.connector, Arc::clone(&mirror))?;
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        link.pending.lock().expect("pending poisoned").insert(id, PendingReply::Control(tx));
+        {
+            let mut w = link.writer.lock().expect("writer poisoned");
+            wire::write_frame(w.as_mut(), id, &Frame::Restart)?;
+        }
+        rx.recv().map_err(|_| anyhow!("shard link dropped during restart"))??;
+        *self.config.write().expect("transport poisoned") = config;
+        *self.mirror.write().expect("mirror poisoned") = mirror;
+        *self.link.write().expect("transport poisoned") = Some(link);
+        Ok(())
+    }
+
+    fn shutdown(&self) {
+        self.send_control(&Frame::Shutdown);
+        *self.link.write().expect("transport poisoned") = None;
+    }
+}
+
 /// Fault-injecting transport for tests: a [`LocalTransport`] whose
 /// submissions fail while the injected fault is armed — the shape of a
 /// network partition (the host itself may be healthy, but the fleet
-/// cannot reach it). [`ShardTransport::restart`] clears the fault *and*
-/// restarts the inner host, modelling a full host replacement.
+/// cannot reach it) — or stall forever while the straggler fault is
+/// armed (submits are accepted and never answered: a hung host, the
+/// hedging path's trigger). [`ShardTransport::restart`] clears both
+/// faults *and* restarts the inner host, modelling a full host
+/// replacement; stalled jobs surface as dropped replies then.
 pub struct FlakyTransport {
     inner: LocalTransport,
     down: AtomicBool,
+    stalled: AtomicBool,
+    /// Senders of stalled jobs, kept alive so their receivers block
+    /// (a reply that never comes, rather than a dropped one). Drained
+    /// on restart: a replaced host drops what it was sitting on.
+    parked: Mutex<Vec<mpsc::Sender<Result<SortResponse>>>>,
 }
 
 impl FlakyTransport {
-    /// A healthy flaky host (fault disarmed).
+    /// A healthy flaky host (faults disarmed).
     pub fn start(config: ServiceConfig) -> Result<Self> {
-        Ok(FlakyTransport { inner: LocalTransport::start(config)?, down: AtomicBool::new(false) })
+        Ok(FlakyTransport {
+            inner: LocalTransport::start(config)?,
+            down: AtomicBool::new(false),
+            stalled: AtomicBool::new(false),
+            parked: Mutex::new(Vec::new()),
+        })
     }
 
     /// Arm the fault: every submit fails until [`ShardTransport::restart`].
@@ -194,9 +547,20 @@ impl FlakyTransport {
         self.down.store(true, Ordering::Relaxed);
     }
 
-    /// Whether the fault is armed.
+    /// Whether the partition fault is armed.
     pub fn is_down(&self) -> bool {
         self.down.load(Ordering::Relaxed)
+    }
+
+    /// Arm the straggler fault: submits are accepted but never
+    /// answered, until [`ShardTransport::restart`].
+    pub fn stall(&self) {
+        self.stalled.store(true, Ordering::Relaxed);
+    }
+
+    /// Whether the straggler fault is armed.
+    pub fn is_stalled(&self) -> bool {
+        self.stalled.load(Ordering::Relaxed)
     }
 }
 
@@ -204,6 +568,13 @@ impl ShardTransport for FlakyTransport {
     fn submit(&self, data: Vec<u32>) -> Result<mpsc::Receiver<Result<SortResponse>>> {
         if self.is_down() {
             return Err(anyhow!("injected fault: shard link is down"));
+        }
+        if self.is_stalled() {
+            // Accept the job and never answer: park the sender so the
+            // receiver blocks like a hung host's caller would.
+            let (tx, rx) = mpsc::channel();
+            self.parked.lock().expect("parked poisoned").push(tx);
+            return Ok(rx);
         }
         self.inner.submit(data)
     }
@@ -222,11 +593,18 @@ impl ShardTransport for FlakyTransport {
 
     fn halt(&self) {
         self.inner.halt();
+        // Halt's contract: in-flight jobs surface as dropped replies —
+        // including the ones the straggler fault was sitting on.
+        self.parked.lock().expect("parked poisoned").clear();
     }
 
     fn restart(&self) -> Result<()> {
         self.inner.restart()?;
         self.down.store(false, Ordering::Relaxed);
+        self.stalled.store(false, Ordering::Relaxed);
+        // The replaced host drops the jobs it was sitting on: their
+        // receivers observe dropped replies and the fleet re-routes.
+        self.parked.lock().expect("parked poisoned").clear();
         Ok(())
     }
 
@@ -294,6 +672,106 @@ mod tests {
         assert!(!t.is_down());
         let resp = t.submit(vec![3u32, 1, 2]).unwrap().recv().unwrap().unwrap();
         assert_eq!(resp.sorted, vec![1, 2, 3]);
+        t.shutdown();
+    }
+
+    #[test]
+    fn stalled_transport_accepts_but_never_answers_until_restart() {
+        let t = FlakyTransport::start(config()).unwrap();
+        t.stall();
+        assert!(t.is_stalled());
+        let rx = t.submit(vec![3u32, 1, 2]).unwrap();
+        assert!(
+            rx.recv_timeout(std::time::Duration::from_millis(20)).is_err(),
+            "a stalled host never answers"
+        );
+        // Restart replaces the host: the parked job surfaces as a
+        // dropped reply and fresh submits serve normally.
+        t.restart().unwrap();
+        assert!(!t.is_stalled());
+        assert!(
+            matches!(rx.recv(), Err(mpsc::RecvError)),
+            "the replaced host drops its stalled jobs"
+        );
+        let resp = t.submit(vec![3u32, 1, 2]).unwrap().recv().unwrap().unwrap();
+        assert_eq!(resp.sorted, vec![1, 2, 3]);
+        t.shutdown();
+    }
+
+    use crate::coordinator::shard_server::ShardServer;
+
+    fn remote_pair() -> (RemoteTransport, Arc<ShardServer>) {
+        let server = Arc::new(ShardServer::start(config()).unwrap());
+        let connector = ShardServer::duplex_connector(Arc::clone(&server));
+        let t = RemoteTransport::connect(connector).unwrap();
+        (t, server)
+    }
+
+    #[test]
+    fn remote_transport_sorts_and_reports_host_metrics() {
+        let (t, server) = remote_pair();
+        assert_eq!(t.config().workers, 2, "config comes from the handshake");
+        let d = Dataset::generate32(DatasetKind::MapReduce, 256, 5);
+        let resp = t.submit(d.values.clone()).unwrap().recv().unwrap().unwrap();
+        let mut expect = d.values.clone();
+        expect.sort_unstable();
+        assert_eq!(resp.sorted, expect);
+        assert_eq!(resp.order.len(), d.values.len(), "the argsort crosses the wire");
+        // metrics() is a real RPC: it reports the host's own counters.
+        let snap = t.metrics();
+        assert_eq!(snap.completed, 1);
+        assert_eq!(snap.elements, 256);
+        // The cost mirror agrees with the host's per-class observation.
+        for n in [16usize, 256, 4096] {
+            assert!(
+                (t.cyc_per_num_for(n, 7.84) - server.host().cyc_per_num_for(n, 7.84)).abs()
+                    < 1e-12,
+                "n={n}"
+            );
+        }
+        t.shutdown();
+        assert!(t.submit(vec![1u32]).is_err(), "shutdown closes the link");
+        assert_eq!(t.metrics().completed, 0, "a dead link reports the empty snapshot");
+    }
+
+    #[test]
+    fn remote_transport_drops_replies_when_the_host_dies_and_restarts_empty() {
+        let (t, server) = remote_pair();
+        t.submit(vec![5u32, 2]).unwrap().recv().unwrap().unwrap();
+        // Kill the host behind the wire's back and wait until the death
+        // is observable server-side.
+        server.host().halt();
+        while server.host().submit(vec![1u32]).is_ok() {
+            std::thread::yield_now();
+        }
+        // The link is still up, so submit succeeds — and the reply is
+        // *dropped*, not an error: exactly the in-process semantics.
+        let rx = t.submit(vec![4u32, 3]).unwrap();
+        assert!(matches!(rx.recv(), Err(mpsc::RecvError)), "dropped reply crosses the wire");
+        // Restart: a fresh connection, a fresh host, empty history.
+        t.restart().unwrap();
+        let resp = t.submit(vec![4u32, 3]).unwrap().recv().unwrap().unwrap();
+        assert_eq!(resp.sorted, vec![3, 4]);
+        assert_eq!(t.metrics().completed, 1, "a restarted host starts from zero");
+        let (mine, hosts) = (t.cyc_per_num_for(2, 7.84), server.host().cyc_per_num_for(2, 7.84));
+        assert!((mine - hosts).abs() < 1e-12, "the cost mirror reset with the host");
+        t.shutdown();
+    }
+
+    #[test]
+    fn remote_transport_pipelines_concurrent_jobs() {
+        let (t, _server) = remote_pair();
+        let datasets: Vec<Vec<u32>> = (0..8u64)
+            .map(|seed| Dataset::generate32(DatasetKind::Uniform, 64, seed).values)
+            .collect();
+        let rxs: Vec<_> = datasets.iter().map(|d| t.submit(d.clone()).unwrap()).collect();
+        for (d, rx) in datasets.iter().zip(rxs) {
+            let resp = rx.recv().unwrap().unwrap();
+            let mut expect = d.clone();
+            expect.sort_unstable();
+            assert_eq!(resp.sorted, expect);
+        }
+        assert_eq!(t.metrics().completed, 8);
         t.shutdown();
     }
 }

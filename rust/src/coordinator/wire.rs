@@ -1,0 +1,841 @@
+//! Wire protocol for the shard transport: how a coordinator talks to a
+//! remote shard host over a byte stream.
+//!
+//! The [`super::transport::ShardTransport`] seam was built so that "a
+//! wire where the `Vec<Box<dyn ShardTransport>>` is" could drop in
+//! without touching routing, recovery or the latency models. This
+//! module is that wire's codec: a versioned header plus length-prefixed
+//! frames, self-contained (encode into any `io::Write`, decode from any
+//! `io::Read`) so the same bytes flow over a `TcpStream` in production
+//! and over the in-memory [`duplex`] pipe in deterministic tests.
+//!
+//! ## Frame layout
+//!
+//! Every frame is a fixed 16-byte header followed by a length-prefixed
+//! payload (all integers little-endian):
+//!
+//! ```text
+//! offset  size  field
+//! 0       2     magic   0x4D53 ("MS")
+//! 2       1     version WIRE_VERSION (1)
+//! 3       1     kind    frame discriminant (see Frame)
+//! 4       8     id      correlation id (request id; replies echo it)
+//! 12      4     len     payload length in bytes (<= MAX_PAYLOAD)
+//! 16      len   payload kind-specific encoding
+//! ```
+//!
+//! Version negotiation happens once per connection: the client opens
+//! with [`Frame::Hello`] (its version is in the header), the server
+//! answers [`Frame::HelloAck`] carrying its [`ServiceConfig`] — the
+//! coordinator derives the shard's planner geometry and cost reference
+//! from it, so a remote fleet cannot disagree with its hosts — or
+//! [`Frame::ErrReply`] when the version is unsupported. A decoder that
+//! sees a wrong magic or an unknown kind fails the connection rather
+//! than resynchronising: the stream is trusted-transport framing, not a
+//! self-healing radio protocol.
+//!
+//! Dropped-reply semantics cross the wire intact: a host that dies with
+//! a job in flight answers [`Frame::Dropped`] (or simply closes the
+//! connection), and the coordinator surfaces both exactly like an
+//! in-process worker dropping its reply channel — the re-route path
+//! cannot tell the difference. A sort that fails *as a result* (an
+//! engine mismatch, a validation error) is a [`Frame::ErrReply`]: an
+//! error reply is a delivered answer, not a dropped one, and fails the
+//! request instead of re-routing it, same as the local path.
+//!
+//! The full operator-facing specification (deploy topology, error
+//! codes, tuning knobs) lives in `rust/OPERATIONS.md`.
+
+use std::collections::VecDeque;
+use std::io::{self, Read, Write};
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::metrics::Snapshot;
+use super::planner::Geometry;
+use super::{EngineKind, ServiceConfig, SortResponse};
+use crate::sorter::colskip::ColSkipConfig;
+use crate::sorter::SortStats;
+
+/// Protocol version this build speaks. Bumped on any incompatible
+/// header or payload change; the server rejects other versions at
+/// `Hello` time with an [`Frame::ErrReply`].
+pub const WIRE_VERSION: u8 = 1;
+
+/// `0x4D53` — "MS" (memsort), the frame magic.
+pub const WIRE_MAGIC: u16 = 0x4D53;
+
+/// Upper bound on one frame's payload (64 MiB): a corrupt or hostile
+/// length prefix must not allocate unbounded memory.
+pub const MAX_PAYLOAD: u32 = 64 << 20;
+
+/// Largest sort job the wire carries, in elements — sized so the
+/// *response* frame (the fat direction: `112 + 12n` bytes with argsort
+/// and stats) fits [`MAX_PAYLOAD`], not just the `24 + 4n` job frame.
+/// Both sides enforce it: a `RemoteTransport` rejects a bigger submit
+/// before writing anything, and the shard server answers an `ErrReply`
+/// instead of producing an over-cap reply that would kill the
+/// connection (and every other job in flight on it). Far beyond one
+/// bank-sized chunk, which is what actually crosses the wire; only a
+/// plain multi-million-element `submit` can reach it.
+pub const MAX_SORT_ELEMS: usize = (MAX_PAYLOAD as usize - 112) / 12;
+
+/// One protocol frame. Client→server kinds: `Hello`, `SortJob`,
+/// `GetMetrics`, `Halt`, `Restart`, `Shutdown`. Server→client kinds:
+/// `HelloAck`, `SortOk`, `ErrReply`, `Dropped`, `MetricsReply`, `Ack`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    /// Connection opener; the client's version rides in the header.
+    Hello,
+    /// Handshake answer: the host's service configuration (geometry,
+    /// workers, engine — everything the coordinator's planner and cost
+    /// router read).
+    HelloAck(ServiceConfig),
+    /// Sort these values; the header id correlates the reply.
+    SortJob(Vec<u32>),
+    /// The completed sort for the echoed id.
+    SortOk(SortResponse),
+    /// A delivered *error answer* for the echoed id (sort failure,
+    /// version rejection, restart failure). Fails the request; never
+    /// triggers a re-route.
+    ErrReply(String),
+    /// The host died with the echoed id's job in flight: the wire form
+    /// of a dropped reply. The coordinator re-routes, exactly as if an
+    /// in-process worker had dropped its channel.
+    Dropped,
+    /// Request a full metrics snapshot of the host.
+    GetMetrics,
+    /// The host's metrics snapshot.
+    MetricsReply(Snapshot),
+    /// Crash the host the way [`super::transport::ShardTransport::halt`]
+    /// does: queued work drains, later submits drop. Fire-and-forget.
+    Halt,
+    /// Restart the host from its configuration (empty queue, empty
+    /// metrics). Answered with `Ack` or `ErrReply`.
+    Restart,
+    /// Positive answer to a control frame (`Restart`).
+    Ack,
+    /// Graceful connection + host shutdown. Fire-and-forget; the server
+    /// closes the connection after draining.
+    Shutdown,
+}
+
+impl Frame {
+    fn kind(&self) -> u8 {
+        match self {
+            Frame::Hello => 0,
+            Frame::HelloAck(_) => 1,
+            Frame::SortJob(_) => 2,
+            Frame::SortOk(_) => 3,
+            Frame::ErrReply(_) => 4,
+            Frame::Dropped => 5,
+            Frame::GetMetrics => 6,
+            Frame::MetricsReply(_) => 7,
+            Frame::Halt => 8,
+            Frame::Restart => 9,
+            Frame::Ack => 10,
+            Frame::Shutdown => 11,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Primitive encoders: a small buffer-writer / buffer-reader pair. All
+// integers are little-endian; usize crosses the wire as u64 (a 32-bit
+// peer rejects oversized values at decode time instead of truncating).
+// ---------------------------------------------------------------------
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_usize(buf: &mut Vec<u8>, v: usize) {
+    put_u64(buf, v as u64);
+}
+
+fn put_f64(buf: &mut Vec<u8>, v: f64) {
+    put_u64(buf, v.to_bits());
+}
+
+fn put_bool(buf: &mut Vec<u8>, v: bool) {
+    buf.push(u8::from(v));
+}
+
+fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_usize(buf, s.len());
+    buf.extend_from_slice(s.as_bytes());
+}
+
+/// Cursor over a received payload; every read is bounds-checked so a
+/// truncated payload is an error, never a panic or a silent zero.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    at: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, at: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .at
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| anyhow!("truncated payload: wanted {n} bytes at {}", self.at))?;
+        let s = &self.buf[self.at..end];
+        self.at = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn bool(&mut self) -> Result<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            b => bail!("invalid bool byte {b}"),
+        }
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    fn usize(&mut self) -> Result<usize> {
+        usize::try_from(self.u64()?).map_err(|_| anyhow!("value exceeds this host's usize"))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// A length prefix about to drive a `Vec` allocation: bound it by
+    /// what the enclosing payload can actually hold (`elem` bytes per
+    /// element) so a corrupt prefix cannot over-allocate.
+    fn len_prefix(&mut self, elem: usize) -> Result<usize> {
+        let n = self.usize()?;
+        let remaining = self.buf.len() - self.at;
+        if n.checked_mul(elem.max(1)).is_none_or(|bytes| bytes > remaining) {
+            bail!("length prefix {n} exceeds the remaining {remaining}-byte payload");
+        }
+        Ok(n)
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.len_prefix(1)?;
+        Ok(String::from_utf8(self.take(n)?.to_vec())?)
+    }
+
+    fn finish(self) -> Result<()> {
+        if self.at != self.buf.len() {
+            bail!("{} trailing bytes after payload", self.buf.len() - self.at);
+        }
+        Ok(())
+    }
+}
+
+fn put_u32_slice(buf: &mut Vec<u8>, v: &[u32]) {
+    put_usize(buf, v.len());
+    for &x in v {
+        put_u32(buf, x);
+    }
+}
+
+fn get_u32_vec(c: &mut Cursor) -> Result<Vec<u32>> {
+    let n = c.len_prefix(4)?;
+    (0..n).map(|_| c.u32()).collect()
+}
+
+fn put_stats(buf: &mut Vec<u8>, s: &SortStats) {
+    for v in [s.crs, s.res, s.srs, s.sls, s.invalidations, s.drains, s.iterations] {
+        put_u64(buf, v);
+    }
+}
+
+fn get_stats(c: &mut Cursor) -> Result<SortStats> {
+    Ok(SortStats {
+        crs: c.u64()?,
+        res: c.u64()?,
+        srs: c.u64()?,
+        sls: c.u64()?,
+        invalidations: c.u64()?,
+        drains: c.u64()?,
+        iterations: c.u64()?,
+    })
+}
+
+fn put_response(buf: &mut Vec<u8>, r: &SortResponse) {
+    put_u64(buf, r.id);
+    put_u32_slice(buf, &r.sorted);
+    put_usize(buf, r.order.len());
+    for &row in &r.order {
+        put_usize(buf, row);
+    }
+    put_stats(buf, &r.stats);
+    put_u64(buf, r.latency_us);
+    put_usize(buf, r.worker);
+}
+
+fn get_response(c: &mut Cursor) -> Result<SortResponse> {
+    let id = c.u64()?;
+    let sorted = get_u32_vec(c)?;
+    let order_len = c.len_prefix(8)?;
+    let order = (0..order_len).map(|_| c.usize()).collect::<Result<Vec<_>>>()?;
+    Ok(SortResponse {
+        id,
+        sorted,
+        order,
+        stats: get_stats(c)?,
+        latency_us: c.u64()?,
+        worker: c.usize()?,
+    })
+}
+
+fn put_config(buf: &mut Vec<u8>, cfg: &ServiceConfig) {
+    put_usize(buf, cfg.workers);
+    put_u32(buf, cfg.colskip.width);
+    put_usize(buf, cfg.colskip.k);
+    put_bool(buf, cfg.colskip.skip_leading);
+    put_bool(buf, cfg.colskip.stall_on_duplicates);
+    put_usize(buf, cfg.banks);
+    buf.push(match cfg.engine {
+        EngineKind::Native => 0,
+        EngineKind::Pjrt => 1,
+        EngineKind::Hybrid => 2,
+    });
+    // The artifacts directory is host-local (the coordinator never
+    // loads a remote host's AOT artifacts) but is carried so the
+    // handshake config round-trips; non-UTF-8 paths degrade lossily.
+    put_str(buf, &cfg.artifacts_dir.to_string_lossy());
+    put_usize(buf, cfg.queue_depth);
+    put_usize(buf, cfg.geometry.bank_sizes.len());
+    for &b in &cfg.geometry.bank_sizes {
+        put_usize(buf, b);
+    }
+    put_u32(buf, cfg.geometry.width);
+    put_usize(buf, cfg.geometry.merge_fanout);
+}
+
+fn get_config(c: &mut Cursor) -> Result<ServiceConfig> {
+    let workers = c.usize()?;
+    let colskip = ColSkipConfig {
+        width: c.u32()?,
+        k: c.usize()?,
+        skip_leading: c.bool()?,
+        stall_on_duplicates: c.bool()?,
+    };
+    let banks = c.usize()?;
+    let engine = match c.u8()? {
+        0 => EngineKind::Native,
+        1 => EngineKind::Pjrt,
+        2 => EngineKind::Hybrid,
+        b => bail!("unknown engine discriminant {b}"),
+    };
+    let artifacts_dir = std::path::PathBuf::from(c.str()?);
+    let queue_depth = c.usize()?;
+    let n = c.len_prefix(8)?;
+    let bank_sizes = (0..n).map(|_| c.usize()).collect::<Result<Vec<_>>>()?;
+    let geometry = Geometry { bank_sizes, width: c.u32()?, merge_fanout: c.usize()? };
+    Ok(ServiceConfig { workers, colskip, banks, engine, artifacts_dir, queue_depth, geometry })
+}
+
+fn put_snapshot(buf: &mut Vec<u8>, s: &Snapshot) {
+    for v in [
+        s.completed,
+        s.errors,
+        s.elements,
+        s.sim_cycles,
+        s.sim_crs,
+        s.hier_completed,
+        s.hier_elements,
+        s.hier_chunks,
+        s.merge_cycles,
+        s.merge_comparisons,
+        s.p50_us,
+        s.p99_us,
+        s.max_us,
+    ] {
+        put_u64(buf, v);
+    }
+    put_f64(buf, s.cycles_per_number);
+    put_usize(buf, s.class_cyc_per_num.len());
+    for &v in &s.class_cyc_per_num {
+        put_f64(buf, v);
+    }
+    put_usize(buf, s.class_elements.len());
+    for &v in &s.class_elements {
+        put_u64(buf, v);
+    }
+}
+
+fn get_snapshot(c: &mut Cursor) -> Result<Snapshot> {
+    let mut u = || c.u64();
+    let (completed, errors, elements, sim_cycles, sim_crs) = (u()?, u()?, u()?, u()?, u()?);
+    let (hier_completed, hier_elements, hier_chunks) = (u()?, u()?, u()?);
+    let (merge_cycles, merge_comparisons) = (u()?, u()?);
+    let (p50_us, p99_us, max_us) = (u()?, u()?, u()?);
+    let cycles_per_number = c.f64()?;
+    let n = c.len_prefix(8)?;
+    let class_cyc_per_num = (0..n).map(|_| c.f64()).collect::<Result<Vec<_>>>()?;
+    let n = c.len_prefix(8)?;
+    let class_elements = (0..n).map(|_| c.u64()).collect::<Result<Vec<_>>>()?;
+    Ok(Snapshot {
+        completed,
+        errors,
+        elements,
+        sim_cycles,
+        sim_crs,
+        hier_completed,
+        hier_elements,
+        hier_chunks,
+        merge_cycles,
+        merge_comparisons,
+        p50_us,
+        p99_us,
+        max_us,
+        cycles_per_number,
+        class_cyc_per_num,
+        class_elements,
+    })
+}
+
+// ---------------------------------------------------------------------
+// Frame I/O
+// ---------------------------------------------------------------------
+
+/// Encode `frame` (correlated by `id`) into a single buffer. Kept
+/// separate from [`write_frame`] so a shared writer can hold its lock
+/// for exactly one `write_all`.
+pub fn encode_frame(id: u64, frame: &Frame) -> Vec<u8> {
+    let mut payload = Vec::new();
+    match frame {
+        Frame::Hello
+        | Frame::Dropped
+        | Frame::GetMetrics
+        | Frame::Halt
+        | Frame::Restart
+        | Frame::Ack
+        | Frame::Shutdown => {}
+        Frame::HelloAck(cfg) => put_config(&mut payload, cfg),
+        Frame::SortJob(data) => put_u32_slice(&mut payload, data),
+        Frame::SortOk(resp) => put_response(&mut payload, resp),
+        Frame::ErrReply(msg) => put_str(&mut payload, msg),
+        Frame::MetricsReply(snap) => put_snapshot(&mut payload, snap),
+    }
+    debug_assert!(payload.len() <= MAX_PAYLOAD as usize, "oversized frame payload");
+    let mut buf = Vec::with_capacity(16 + payload.len());
+    buf.extend_from_slice(&WIRE_MAGIC.to_le_bytes());
+    buf.push(WIRE_VERSION);
+    buf.push(frame.kind());
+    buf.extend_from_slice(&id.to_le_bytes());
+    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&payload);
+    buf
+}
+
+/// Write one frame. The whole frame goes out in a single `write_all`,
+/// so concurrent writers serialised by a mutex never interleave frames.
+pub fn write_frame(w: &mut dyn Write, id: u64, frame: &Frame) -> io::Result<()> {
+    w.write_all(&encode_frame(id, frame))?;
+    w.flush()
+}
+
+/// Read one frame (blocking). `Err` means the connection is unusable —
+/// EOF, a short read, bad magic, an unsupported version on a non-Hello
+/// frame, or a malformed payload; framing never resynchronises.
+///
+/// A `Hello` whose header carries a *different* version is returned as
+/// `(id, Frame::Hello)` with the version in the error position — see
+/// [`read_hello`] — so the server can answer with a versioned
+/// rejection; every other frame requires an exact version match.
+pub fn read_frame(r: &mut dyn Read) -> Result<(u64, Frame)> {
+    let (id, version, kind, payload) = read_raw(r)?;
+    if version != WIRE_VERSION {
+        bail!("unsupported wire version {version} (this build speaks {WIRE_VERSION})");
+    }
+    decode(id, kind, &payload)
+}
+
+/// Read the connection-opening frame, tolerating a version mismatch so
+/// the server can reject it politely: returns `(id, client_version)`
+/// when the frame is a structurally-valid `Hello` of *any* version.
+pub fn read_hello(r: &mut dyn Read) -> Result<(u64, u8)> {
+    let (id, version, kind, payload) = read_raw(r)?;
+    if kind != 0 || !payload.is_empty() {
+        bail!("connection must open with Hello (got kind {kind})");
+    }
+    Ok((id, version))
+}
+
+fn read_raw(r: &mut dyn Read) -> Result<(u64, u8, u8, Vec<u8>)> {
+    let mut header = [0u8; 16];
+    r.read_exact(&mut header)?;
+    let magic = u16::from_le_bytes([header[0], header[1]]);
+    if magic != WIRE_MAGIC {
+        bail!("bad frame magic {magic:#06x}");
+    }
+    let version = header[2];
+    let kind = header[3];
+    let id = u64::from_le_bytes(header[4..12].try_into().expect("8 bytes"));
+    let len = u32::from_le_bytes(header[12..16].try_into().expect("4 bytes"));
+    if len > MAX_PAYLOAD {
+        bail!("frame payload of {len} bytes exceeds the {MAX_PAYLOAD}-byte cap");
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)?;
+    Ok((id, version, kind, payload))
+}
+
+fn decode(id: u64, kind: u8, payload: &[u8]) -> Result<(u64, Frame)> {
+    let mut c = Cursor::new(payload);
+    let frame = match kind {
+        0 => Frame::Hello,
+        1 => Frame::HelloAck(get_config(&mut c)?),
+        2 => Frame::SortJob(get_u32_vec(&mut c)?),
+        3 => Frame::SortOk(get_response(&mut c)?),
+        4 => Frame::ErrReply(c.str()?),
+        5 => Frame::Dropped,
+        6 => Frame::GetMetrics,
+        7 => Frame::MetricsReply(get_snapshot(&mut c)?),
+        8 => Frame::Halt,
+        9 => Frame::Restart,
+        10 => Frame::Ack,
+        11 => Frame::Shutdown,
+        k => bail!("unknown frame kind {k}"),
+    };
+    c.finish()?;
+    Ok((id, frame))
+}
+
+// ---------------------------------------------------------------------
+// In-memory duplex: the deterministic test stand-in for a TcpStream.
+// ---------------------------------------------------------------------
+
+/// One directed byte half of a connection: reader and writer halves of
+/// one [`pipe`]. Dropping the writer closes the pipe (EOF at the
+/// reader), like a peer closing its socket.
+struct PipeState {
+    buf: VecDeque<u8>,
+    closed: bool,
+}
+
+struct Pipe {
+    state: Mutex<PipeState>,
+    ready: Condvar,
+}
+
+/// Read half of a [`pipe`]; dropping it makes later writes fail like
+/// `EPIPE` (bytes toward a dead reader must not buffer forever).
+pub struct PipeReader(Arc<Pipe>);
+
+/// Write half of a [`pipe`]; dropping it is EOF at the reader.
+pub struct PipeWriter(Arc<Pipe>);
+
+/// An in-memory unidirectional byte pipe with blocking reads, EOF on
+/// writer drop and broken-pipe write errors on reader drop —
+/// `io::Read`/`io::Write` over `Mutex` + `Condvar`, no sockets
+/// involved.
+pub fn pipe() -> (PipeReader, PipeWriter) {
+    let p = Arc::new(Pipe {
+        state: Mutex::new(PipeState { buf: VecDeque::new(), closed: false }),
+        ready: Condvar::new(),
+    });
+    (PipeReader(Arc::clone(&p)), PipeWriter(p))
+}
+
+impl Read for PipeReader {
+    fn read(&mut self, out: &mut [u8]) -> io::Result<usize> {
+        if out.is_empty() {
+            return Ok(0);
+        }
+        let mut st = self.0.state.lock().expect("pipe poisoned");
+        while st.buf.is_empty() && !st.closed {
+            st = self.0.ready.wait(st).expect("pipe poisoned");
+        }
+        if st.buf.is_empty() {
+            return Ok(0); // closed: EOF
+        }
+        // Bulk-copy out of the ring's two contiguous runs — this pipe
+        // is the bench's stand-in for a socket, so per-byte pops under
+        // the lock would show up as fictitious wire overhead.
+        let n = out.len().min(st.buf.len());
+        let (a, b) = st.buf.as_slices();
+        let from_a = a.len().min(n);
+        out[..from_a].copy_from_slice(&a[..from_a]);
+        if from_a < n {
+            out[from_a..n].copy_from_slice(&b[..n - from_a]);
+        }
+        st.buf.drain(..n);
+        Ok(n)
+    }
+}
+
+impl Write for PipeWriter {
+    fn write(&mut self, data: &[u8]) -> io::Result<usize> {
+        let mut st = self.0.state.lock().expect("pipe poisoned");
+        if st.closed {
+            return Err(io::Error::new(io::ErrorKind::BrokenPipe, "pipe closed"));
+        }
+        st.buf.extend(data.iter().copied());
+        self.0.ready.notify_all();
+        Ok(data.len())
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        Ok(())
+    }
+}
+
+impl Drop for PipeWriter {
+    fn drop(&mut self) {
+        let mut st = self.0.state.lock().expect("pipe poisoned");
+        st.closed = true;
+        self.0.ready.notify_all();
+    }
+}
+
+impl Drop for PipeReader {
+    fn drop(&mut self) {
+        let mut st = self.0.state.lock().expect("pipe poisoned");
+        st.closed = true;
+        self.0.ready.notify_all();
+    }
+}
+
+/// One side of a bidirectional connection: the read half and the write
+/// half handed to a reader thread and a shared writer independently
+/// (the same split a `TcpStream::try_clone` pair gives).
+pub type WireConn = (Box<dyn Read + Send>, Box<dyn Write + Send>);
+
+/// An in-memory full-duplex connection: returns the client-side and
+/// server-side [`WireConn`]s of a fresh link. Deterministic (no
+/// sockets, no ports), used by the remote-transport tests and benches.
+pub fn duplex() -> (WireConn, WireConn) {
+    let (client_read, server_write) = pipe();
+    let (server_read, client_write) = pipe();
+    (
+        (Box::new(client_read), Box::new(client_write)),
+        (Box::new(server_read), Box::new(server_write)),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(id: u64, frame: Frame) -> (u64, Frame) {
+        let bytes = encode_frame(id, &frame);
+        read_frame(&mut &bytes[..]).expect("round trip decodes")
+    }
+
+    fn sample_response() -> SortResponse {
+        SortResponse {
+            id: 77,
+            sorted: vec![1, 2, 2, 9, u32::MAX],
+            order: vec![4, 0, 3, 1, 2],
+            stats: SortStats {
+                crs: 40,
+                res: 11,
+                srs: 3,
+                sls: 2,
+                invalidations: 1,
+                drains: 2,
+                iterations: 3,
+            },
+            latency_us: 123,
+            worker: 1,
+        }
+    }
+
+    #[test]
+    fn every_frame_kind_round_trips() {
+        let frames = [
+            Frame::Hello,
+            Frame::HelloAck(ServiceConfig::default()),
+            Frame::SortJob(vec![3, 1, 2, u32::MAX, 0]),
+            Frame::SortJob(Vec::new()),
+            Frame::SortOk(sample_response()),
+            Frame::ErrReply("engine mismatch on request 7".into()),
+            Frame::ErrReply(String::new()),
+            Frame::Dropped,
+            Frame::GetMetrics,
+            Frame::MetricsReply(super::super::metrics::ServiceMetrics::new().snapshot()),
+            Frame::Halt,
+            Frame::Restart,
+            Frame::Ack,
+            Frame::Shutdown,
+        ];
+        for (i, frame) in frames.into_iter().enumerate() {
+            let id = 0x1234_5678_9ABC_DEF0 ^ i as u64;
+            let (rid, rframe) = roundtrip(id, frame.clone());
+            assert_eq!(rid, id);
+            assert_eq!(rframe, frame);
+        }
+    }
+
+    #[test]
+    fn response_without_argsort_round_trips() {
+        // A pure-PJRT backend returns no row provenance; the empty
+        // order must survive the wire as empty, not as len zeros.
+        let mut resp = sample_response();
+        resp.order = Vec::new();
+        let (_, frame) = roundtrip(1, Frame::SortOk(resp.clone()));
+        assert_eq!(frame, Frame::SortOk(resp));
+    }
+
+    #[test]
+    fn config_with_custom_geometry_round_trips() {
+        let cfg = ServiceConfig {
+            workers: 3,
+            banks: 4,
+            engine: EngineKind::Hybrid,
+            queue_depth: 17,
+            colskip: ColSkipConfig {
+                width: 16,
+                k: 5,
+                skip_leading: false,
+                stall_on_duplicates: false,
+            },
+            artifacts_dir: "some/artifacts".into(),
+            geometry: Geometry::from_spec("512x16").unwrap(),
+        };
+        let (_, frame) = roundtrip(9, Frame::HelloAck(cfg.clone()));
+        assert_eq!(frame, Frame::HelloAck(cfg));
+    }
+
+    #[test]
+    fn metrics_snapshot_with_traffic_round_trips() {
+        let m = super::super::metrics::ServiceMetrics::new();
+        m.record(12, &SortStats { crs: 2048, ..Default::default() }, 256);
+        m.record(15, &SortStats { crs: 30_000, drains: 7, ..Default::default() }, 1024);
+        m.record_error();
+        m.record_hierarchical(5000, 5, 10_000, 60_000);
+        let snap = m.snapshot();
+        let (_, frame) = roundtrip(2, Frame::MetricsReply(snap.clone()));
+        assert_eq!(frame, Frame::MetricsReply(snap));
+    }
+
+    #[test]
+    fn frame_sizes_match_the_documented_overhead_model() {
+        // EXPERIMENTS.md §Remote transport (cross-checked by
+        // python/fleet_model.py): a SortJob frame is 24 + 4n bytes, a
+        // full SortOk (argsort + stats) 112 + 12n.
+        let n = 1024usize;
+        assert_eq!(encode_frame(1, &Frame::SortJob(vec![0u32; n])).len(), 24 + 4 * n);
+        let resp = SortResponse {
+            id: 1,
+            sorted: vec![0u32; n],
+            order: (0..n).collect(),
+            stats: SortStats::default(),
+            latency_us: 0,
+            worker: 0,
+        };
+        assert_eq!(encode_frame(1, &Frame::SortOk(resp)).len(), 112 + 12 * n);
+        // The job cap is derived from the response model: the largest
+        // accepted job's reply still fits the payload cap, and one
+        // more element would not.
+        assert!(112 + 12 * MAX_SORT_ELEMS <= MAX_PAYLOAD as usize);
+        assert!(112 + 12 * (MAX_SORT_ELEMS + 1) > MAX_PAYLOAD as usize);
+    }
+
+    #[test]
+    fn bad_magic_version_kind_and_truncation_are_errors() {
+        let good = encode_frame(5, &Frame::SortJob(vec![1, 2, 3]));
+        // Magic.
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        assert!(read_frame(&mut &bad[..]).unwrap_err().to_string().contains("magic"));
+        // Version.
+        let mut bad = good.clone();
+        bad[2] = WIRE_VERSION + 1;
+        assert!(read_frame(&mut &bad[..]).unwrap_err().to_string().contains("version"));
+        // Unknown kind.
+        let mut bad = good.clone();
+        bad[3] = 200;
+        assert!(read_frame(&mut &bad[..]).unwrap_err().to_string().contains("kind"));
+        // Truncated payload (header promises more than the stream has).
+        let bad = &good[..good.len() - 2];
+        assert!(read_frame(&mut &bad[..]).is_err());
+        // Trailing garbage inside the declared payload.
+        let mut bad = encode_frame(5, &Frame::Dropped);
+        bad[12] = 3; // declare a 3-byte payload on a payload-less kind
+        bad.extend_from_slice(&[0, 0, 0]);
+        assert!(read_frame(&mut &bad[..]).unwrap_err().to_string().contains("trailing"));
+        // Oversized length prefix.
+        let mut bad = encode_frame(5, &Frame::Dropped);
+        bad[12..16].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+        assert!(read_frame(&mut &bad[..]).unwrap_err().to_string().contains("cap"));
+    }
+
+    #[test]
+    fn corrupt_inner_length_prefix_cannot_overallocate() {
+        // A SortJob whose element-count prefix claims more elements
+        // than the payload could hold must error out of the bounded
+        // reader, not attempt a huge Vec.
+        let mut bytes = encode_frame(1, &Frame::SortJob(vec![1, 2, 3]));
+        // Payload starts at 16; its first 8 bytes are the count.
+        bytes[16..24].copy_from_slice(&u64::MAX.to_le_bytes());
+        let err = read_frame(&mut &bytes[..]).unwrap_err().to_string();
+        assert!(err.contains("length prefix") || err.contains("usize"), "{err}");
+    }
+
+    #[test]
+    fn hello_of_a_future_version_is_readable_as_hello() {
+        let mut bytes = encode_frame(3, &Frame::Hello);
+        bytes[2] = WIRE_VERSION + 9;
+        let (id, version) = read_hello(&mut &bytes[..]).unwrap();
+        assert_eq!((id, version), (3, WIRE_VERSION + 9));
+        // ...while the strict reader refuses it.
+        assert!(read_frame(&mut &bytes[..]).is_err());
+        // And a non-Hello opener is rejected by the hello reader.
+        let bytes = encode_frame(3, &Frame::SortJob(vec![1]));
+        assert!(read_hello(&mut &bytes[..]).unwrap_err().to_string().contains("Hello"));
+    }
+
+    #[test]
+    fn frames_concatenate_on_one_stream() {
+        let mut stream = Vec::new();
+        stream.extend_from_slice(&encode_frame(1, &Frame::Hello));
+        stream.extend_from_slice(&encode_frame(2, &Frame::SortJob(vec![9, 8])));
+        stream.extend_from_slice(&encode_frame(3, &Frame::Shutdown));
+        let mut r: &[u8] = &stream;
+        assert_eq!(read_frame(&mut r).unwrap(), (1, Frame::Hello));
+        assert_eq!(read_frame(&mut r).unwrap(), (2, Frame::SortJob(vec![9, 8])));
+        assert_eq!(read_frame(&mut r).unwrap(), (3, Frame::Shutdown));
+        assert!(read_frame(&mut r).is_err(), "EOF after the last frame");
+    }
+
+    #[test]
+    fn duplex_carries_frames_both_ways_and_eofs_on_drop() {
+        let ((mut cr, mut cw), (mut sr, mut sw)) = duplex();
+        let t = std::thread::spawn(move || {
+            let (id, frame) = read_frame(&mut *sr).unwrap();
+            assert_eq!((id, frame), (7, Frame::Hello));
+            write_frame(&mut *sw, 7, &Frame::HelloAck(ServiceConfig::default())).unwrap();
+            drop(sw);
+        });
+        write_frame(&mut *cw, 7, &Frame::Hello).unwrap();
+        let (id, frame) = read_frame(&mut *cr).unwrap();
+        assert_eq!(id, 7);
+        assert!(matches!(frame, Frame::HelloAck(_)));
+        t.join().unwrap();
+        // The server write half is dropped: the client sees EOF.
+        assert!(read_frame(&mut *cr).is_err());
+        // And writing toward a dropped reader fails like EPIPE (the
+        // server thread dropped `sr` when it exited).
+        assert!(write_frame(&mut *cw, 8, &Frame::Shutdown).is_err());
+    }
+}

@@ -15,7 +15,13 @@
 //!   ([`coordinator::shard`]) that routes that pipeline across a fleet
 //!   of independent — possibly heterogeneous — service hosts behind the
 //!   [`coordinator::transport::ShardTransport`] boundary, with
-//!   cost-aware routing and shard recovery.
+//!   cost-aware routing, shard recovery, fleet retry budgets and hedged
+//!   requests. Hosts can be in-process or remote: the
+//!   [`coordinator::wire`] protocol carries sort jobs over TCP (or an
+//!   in-memory duplex in tests) between a
+//!   [`coordinator::transport::RemoteTransport`] and a
+//!   [`coordinator::shard_server::ShardServer`] — the operator guide is
+//!   `rust/OPERATIONS.md`.
 //! * **L2/L1 (python/, build-time only)** — the in-memory *array compute*
 //!   (iterative min search over bit columns) expressed as a JAX scan over
 //!   a Pallas kernel, AOT-lowered to HLO text.
@@ -35,8 +41,10 @@
 //! assert_eq!(out.stats.crs, 7); // Fig. 3 of the paper: 7 CRs vs baseline's 12
 //! ```
 //!
-//! See `DESIGN.md` for the full system inventory and `EXPERIMENTS.md` for
-//! the paper-vs-measured record of every figure and table.
+//! See `DESIGN.md` for the full system inventory, `EXPERIMENTS.md` for
+//! the paper-vs-measured record of every figure and table, and
+//! `OPERATIONS.md` for running a distributed fleet (wire protocol,
+//! deploy topology, retry/hedging knobs, failure runbook).
 
 pub mod bench;
 pub mod bits;
@@ -58,9 +66,13 @@ pub mod prelude {
     pub use crate::coordinator::hierarchical::{Capacity, HierarchicalConfig, HierarchicalOutput};
     pub use crate::coordinator::planner::Geometry;
     pub use crate::coordinator::shard::{
-        FleetSnapshot, RoutePolicy, ShardedConfig, ShardedOutput, ShardedSortService,
+        FleetSnapshot, HedgeConfig, ResilienceConfig, RetryBudgetConfig, RoutePolicy,
+        ShardedConfig, ShardedOutput, ShardedSortService,
     };
-    pub use crate::coordinator::transport::{FlakyTransport, LocalTransport, ShardTransport};
+    pub use crate::coordinator::shard_server::ShardServer;
+    pub use crate::coordinator::transport::{
+        FlakyTransport, LocalTransport, RemoteTransport, ShardTransport,
+    };
     pub use crate::coordinator::{ServiceConfig, SortService};
     pub use crate::cost::{CostModel, SorterArch};
     pub use crate::datasets::{Dataset, DatasetKind};

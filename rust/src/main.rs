@@ -16,7 +16,11 @@ use anyhow::{anyhow, bail, Result};
 use memsort::cli::Args;
 use memsort::coordinator::hierarchical::{Capacity, HierarchicalConfig};
 use memsort::coordinator::planner::Geometry;
-use memsort::coordinator::shard::{RoutePolicy, ShardedConfig, ShardedSortService};
+use memsort::coordinator::shard::{
+    HedgeConfig, ResilienceConfig, RetryBudgetConfig, RoutePolicy, ShardedConfig,
+    ShardedSortService,
+};
+use memsort::coordinator::transport::{RemoteTransport, ShardTransport};
 use memsort::coordinator::{EngineKind, ServiceConfig, SortService};
 use memsort::cost::{Activity, CostModel, SorterArch};
 use memsort::datasets::{stats::analyze, Dataset, DatasetKind};
@@ -81,7 +85,13 @@ fn usage() {
                     the pipeline across a fleet of N service hosts;\n\
                     --shard-geometry 1024x32,512x32 makes the fleet\n\
                     heterogeneous — one shard per HxW entry, with the\n\
-                    cost router and tuner aware of each host's banks)\n\
+                    cost router and tuner aware of each host's banks;\n\
+                    --connect host:port,... uses remote shard hosts\n\
+                    (serve --shard) instead of in-process ones;\n\
+                    --retry-budget T bounds failover hops (default 10\n\
+                    tokens, +0.1/success), --hedge re-issues stragglers\n\
+                    to the next-best shard after the model-derived\n\
+                    deadline [--hedge-mult 4 --hedge-floor-us 20000])\n\
            gen     --dataset <kind> --n 1024 --seed 42\n\
            stats   --dataset <kind> --n 1024 --seed 42\n\
            fig     --id <6|7|8a|8b> [--trials 5] [--n 1024] [--json]\n\
@@ -94,6 +104,10 @@ fn usage() {
            report  [--trials 5] [--seed 42]\n\
            serve   --engine <native|pjrt|hybrid> --workers 4\n\
                    --requests 64 --n 1024 [--artifacts artifacts]\n\
+                   (--shard [--host 127.0.0.1] [--port 7600]\n\
+                   [--geometry 1024x32] runs a wire shard host serving\n\
+                   the RPC protocol instead of the local demo —\n\
+                   see rust/OPERATIONS.md for the wire format)\n\
            trace   --dataset <kind> --n 8 --width 8 --k 2 [--iters 6]\n\
                    (Fig. 2/3-style near-memory circuit schedule)\n\
            energy  --dataset <kind> --n 1024 --k 2\n\
@@ -133,6 +147,29 @@ fn shard_services(args: &Args, template: &ServiceConfig) -> Result<Vec<ServiceCo
         .into_iter()
         .map(|geometry| ServiceConfig { geometry, ..template.clone() })
         .collect())
+}
+
+/// Fleet resilience from the CLI: `--retry-budget T` sizes the token
+/// bucket (deposit stays at the default 0.1/success), `--hedge` turns
+/// hedged requests on with `--hedge-mult` / `--hedge-floor-us` tuning
+/// the straggler deadline. See `rust/OPERATIONS.md` for how to pick
+/// these.
+fn resilience_from(args: &Args) -> Result<ResilienceConfig> {
+    let defaults = RetryBudgetConfig::default();
+    let capacity = args.parse_num("retry-budget", defaults.capacity)?;
+    let hedge = if args.flag("hedge")
+        || args.get("hedge-mult").is_some()
+        || args.get("hedge-floor-us").is_some()
+    {
+        let h = HedgeConfig::default();
+        Some(HedgeConfig {
+            straggler_mult: args.parse_num("hedge-mult", h.straggler_mult)?,
+            floor_us: args.parse_num("hedge-floor-us", h.floor_us)?,
+        })
+    } else {
+        None
+    };
+    Ok(ResilienceConfig { retry_budget: RetryBudgetConfig { capacity, ..defaults }, hedge })
 }
 
 fn dataset_from(args: &Args) -> Result<Dataset> {
@@ -255,20 +292,54 @@ fn cmd_sort_hierarchical(
         ..Default::default()
     };
     let services = shard_services(args, &service_cfg)?;
-    let shards = services.len();
+    let resilience = resilience_from(args)?;
+    // `--connect host:port,...` swaps the in-process hosts for remote
+    // shard servers behind `RemoteTransport`s — same routing, same
+    // byte-identical pipeline, the coordinator just dials instead of
+    // spawning.
+    let remote: Option<Vec<String>> = args
+        .get("connect")
+        .map(|s| s.split(',').map(|a| a.trim().to_string()).collect());
+    if let Some(addrs) = &remote {
+        if args.get("shards").is_some() || args.get("shard-geometry").is_some() {
+            bail!("--connect defines the fleet; drop --shards/--shard-geometry");
+        }
+        if addrs.iter().any(String::is_empty) {
+            bail!("--connect needs a comma-separated host:port list");
+        }
+    }
+    let shards = remote.as_ref().map_or(services.len(), Vec::len);
     let auto = capacity == Capacity::Auto;
     let cfg = HierarchicalConfig { capacity, fanout, streaming };
-    // One host below, a routed fleet of hosts above one shard; the
-    // pipeline output is byte-identical either way (pinned by tests) —
-    // the fleet adds routing, failure isolation and the fleet latency
-    // model on top.
-    let (out, fleet_view, wall) = if shards > 1 {
-        let fleet = ShardedSortService::start(ShardedConfig { route, services })?;
+    // One host below, a routed fleet of hosts above one shard (always a
+    // fleet when remote); the pipeline output is byte-identical either
+    // way (pinned by tests) — the fleet adds routing, failure
+    // isolation, retry budgets/hedging and the fleet latency model.
+    let (out, fleet_view, wall) = if shards > 1 || remote.is_some() {
+        let fleet = match &remote {
+            Some(addrs) => {
+                let transports = addrs
+                    .iter()
+                    .map(|a| {
+                        Ok(Box::new(RemoteTransport::connect_tcp(a)?)
+                            as Box<dyn ShardTransport>)
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                ShardedSortService::with_transports_resilient(route, resilience, transports)?
+            }
+            None => ShardedSortService::start(ShardedConfig { route, services, resilience })?,
+        };
         let t0 = std::time::Instant::now();
         let sharded = fleet.sort_hierarchical(&d.values, &cfg)?;
         let wall = t0.elapsed();
         let snap = fleet.fleet_metrics();
-        fleet.shutdown();
+        if remote.is_some() {
+            // Operator-started shard hosts outlive the sort: close the
+            // links, don't send the wire Shutdown.
+            fleet.disconnect();
+        } else {
+            fleet.shutdown();
+        }
         let extras = (sharded.sharded_latency_cycles, sharded.shard_chunks.clone(), snap);
         (sharded.hier, Some(extras), wall)
     } else {
@@ -288,8 +359,13 @@ fn cmd_sort_hierarchical(
         if auto { ", auto" } else { "" },
         out.merge.fanout,
         if streaming { "streaming" } else { "barrier" },
-        if shards > 1 {
-            format!(" across {shards} shards ({})", route.name())
+        if shards > 1 || remote.is_some() {
+            format!(
+                " across {shards}{} shard{} ({})",
+                if remote.is_some() { " remote" } else { "" },
+                if shards == 1 { "" } else { "s" },
+                route.name()
+            )
         } else {
             String::new()
         }
@@ -329,6 +405,15 @@ fn cmd_sort_hierarchical(
             "fleet metrics : {} jobs, {} errors, imbalance {:.2}, \
              worst p50/p99 {}/{} µs, {} rerouted",
             snap.completed, snap.errors, snap.imbalance, snap.p50_us, snap.p99_us, snap.rerouted
+        );
+        println!(
+            "resilience    : {} retries, {} hedges won / {} lost, \
+             {} budget-denied, {:.1} tokens left",
+            snap.retries,
+            snap.hedges_won,
+            snap.hedges_lost,
+            snap.budget_exhausted,
+            snap.retry_tokens
         );
     }
     println!("cycles/number : {:.3}", out.latency_cycles as f64 / n as f64);
@@ -407,6 +492,11 @@ fn cmd_scale(args: &Args) -> Result<()> {
                     ("elements", snap.elements.into()),
                     ("rerouted", snap.rerouted.into()),
                     ("recovered", snap.recovered.into()),
+                    ("retries", snap.retries.into()),
+                    ("hedges_won", snap.hedges_won.into()),
+                    ("hedges_lost", snap.hedges_lost.into()),
+                    ("budget_exhausted", snap.budget_exhausted.into()),
+                    ("retry_tokens", snap.retry_tokens.into()),
                     ("imbalance", snap.imbalance.into()),
                     ("p50_us", snap.p50_us.into()),
                     ("p99_us", snap.p99_us.into()),
@@ -466,13 +556,18 @@ fn cmd_scale(args: &Args) -> Result<()> {
         );
         if let Some(snap) = &fleet {
             println!(
-                "fleet ({}): {} jobs, {} errors, imbalance {:.2}, rerouted {}, recovered {}",
+                "fleet ({}): {} jobs, {} errors, imbalance {:.2}, rerouted {}, recovered {}, \
+                 {} retries, hedges {}/{}, {} budget-denied",
                 route.name(),
                 snap.completed,
                 snap.errors,
                 snap.imbalance,
                 snap.rerouted,
-                snap.recovered
+                snap.recovered,
+                snap.retries,
+                snap.hedges_won,
+                snap.hedges_lost,
+                snap.budget_exhausted
             );
             for (i, (s, h)) in snap.shards.iter().zip(&snap.healthy).enumerate() {
                 println!(
@@ -752,6 +847,45 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let n = args.parse_num("n", 1024usize)?;
     let seed = args.parse_num("seed", 42u64)?;
     let artifacts = args.get_or("artifacts", "artifacts");
+    if args.flag("shard") {
+        // A wire shard host: serve the RPC protocol on a TCP socket
+        // until a coordinator sends Shutdown. `sort --connect` is the
+        // matching client; the frame format is specced in
+        // rust/OPERATIONS.md.
+        let width = args.parse_num("width", 32u32)?;
+        let k = args.parse_num("k", 2usize)?;
+        let banks = args.parse_num("banks", 1usize)?;
+        let mut cfg = ServiceConfig {
+            workers,
+            engine,
+            banks,
+            colskip: ColSkipConfig { width, k, ..Default::default() },
+            artifacts_dir: artifacts.into(),
+            ..Default::default()
+        };
+        if let Some(spec) = args.get("geometry") {
+            cfg.geometry = Geometry::from_spec(spec)?;
+            if cfg.geometry.width != width {
+                bail!(
+                    "--geometry width {} conflicts with engine --width {width}",
+                    cfg.geometry.width
+                );
+            }
+        }
+        let host = args.get_or("host", "127.0.0.1");
+        let port = args.parse_num("port", 7600u16)?;
+        let listener = std::net::TcpListener::bind((host, port))
+            .map_err(|e| anyhow!("binding {host}:{port}: {e}"))?;
+        println!(
+            "shard host on {} ({} workers, geometry {}x{}, engine {})",
+            listener.local_addr()?,
+            cfg.workers,
+            cfg.geometry.largest_bank(),
+            cfg.geometry.width,
+            engine.name()
+        );
+        return memsort::coordinator::shard_server::serve_tcp(listener, cfg);
+    }
     let svc = SortService::start(ServiceConfig {
         workers,
         engine,

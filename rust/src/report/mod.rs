@@ -327,7 +327,8 @@ pub fn scaling_sharded(
     let shards = services.len();
     let width = services.first().map_or(32, |s| s.colskip.width);
     let fleet =
-        ShardedSortService::start(ShardedConfig { route, services }).expect("fleet start");
+        ShardedSortService::start(ShardedConfig { route, services, ..Default::default() })
+            .expect("fleet start");
     let cfg = HierarchicalConfig { capacity: Capacity::Fixed(capacity), fanout, streaming };
     let pts = ns
         .iter()

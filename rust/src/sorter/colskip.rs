@@ -30,7 +30,7 @@ use super::state::StateTable;
 use super::{InMemorySorter, SortOutput, SortStats};
 
 /// Configuration of a column-skipping sorter.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct ColSkipConfig {
     /// Bit width of the stored elements.
     pub width: u32,

@@ -505,6 +505,25 @@ pub fn apportion_chunks(chunks: usize, weights: &[f64]) -> Vec<usize> {
     deal
 }
 
+/// The hedging straggler bound, in modelled cycles: a chunk of `len`
+/// rows on a host observed at `cyc` cycles/number is *expected* to
+/// arrive at `round(len·cyc)` cycles (the completion models' leaf
+/// arrival — [`model_streamed_completion`] consumes exactly these), so
+/// a reply still outstanding past `mult` times that is a straggler and
+/// worth hedging to another shard. `floor` bounds the deadline from
+/// below so tiny chunks (whose expected arrival is a handful of cycles)
+/// don't hedge on scheduling noise. The fleet layer converts this cycle
+/// budget to host time with its observed µs-per-cycle calibration; the
+/// model itself is deterministic and mirrored by
+/// `python/fleet_model.py::model_hedge_deadline`.
+pub fn model_hedge_deadline(len: usize, cyc: f64, mult: f64, floor: u64) -> u64 {
+    assert!(
+        cyc.is_finite() && cyc >= 0.0 && mult.is_finite() && mult >= 0.0,
+        "hedge deadline inputs must be finite and non-negative (cyc={cyc}, mult={mult})"
+    );
+    ((len as f64 * cyc * mult).round() as u64).max(floor)
+}
+
 /// Result of a completed [`StreamingMerge`].
 #[derive(Clone, Debug)]
 pub struct StreamedMerge<T> {
@@ -1050,6 +1069,23 @@ mod tests {
             let deal = apportion_chunks(chunks, &[5.0, 0.5, 1.0, 3.25]);
             assert_eq!(deal.iter().sum::<usize>(), chunks, "chunks={chunks}");
         }
+    }
+
+    #[test]
+    fn hedge_deadline_scales_with_the_arrival_model_and_floors() {
+        // The deadline is `mult` times the modelled leaf arrival
+        // (`round(len·cyc)` — the quantity the completion models
+        // consume), floored. Values pinned against the Python mirror
+        // (`python/fleet_model.py::model_hedge_deadline`).
+        assert_eq!(model_hedge_deadline(1024, 7.84, 4.0, 0), 32_113);
+        assert_eq!(model_hedge_deadline(1024, 7.84, 1.0, 0), 8_028);
+        assert_eq!(model_hedge_deadline(512, 15.68, 2.0, 0), 16_056);
+        // The floor wins for tiny chunks.
+        assert_eq!(model_hedge_deadline(4, 7.84, 4.0, 10_000), 10_000);
+        assert_eq!(model_hedge_deadline(0, 7.84, 4.0, 77), 77);
+        // Degenerate-but-legal inputs stay sane.
+        assert_eq!(model_hedge_deadline(1024, 0.0, 4.0, 5), 5);
+        assert_eq!(model_hedge_deadline(1024, 7.84, 0.0, 0), 0);
     }
 
     #[test]

@@ -379,6 +379,144 @@ fn shard_death_mid_sort_then_recovery_is_transparent() {
     single.shutdown();
 }
 
+/// The wire acceptance criterion: a fleet reached via `RemoteTransport`
+/// (in-memory duplex — deterministic, no sockets) produces
+/// byte-identical sort + argsort output to a `LocalTransport` fleet for
+/// the full DatasetKind × route-policy sweep, per `ChunkAssembly`:
+/// values, argsort, summed stats, per-chunk stats, merge accounting,
+/// latency models, and even the routing assignments (the router sees
+/// identical cost/queue inputs on both sides of the wire).
+#[test]
+fn remote_fleet_over_duplex_matches_local_transport_byte_for_byte() {
+    use std::sync::Arc;
+
+    use memsort::coordinator::shard_server::ShardServer;
+    use memsort::coordinator::transport::{LocalTransport, RemoteTransport, ShardTransport};
+
+    let svc = ServiceConfig { workers: 2, ..Default::default() };
+    let cfg = HierarchicalConfig::fixed(256, 4);
+    for kind in DatasetKind::ALL {
+        let d = Dataset::generate32(kind, 2000, 27);
+        for route in RoutePolicy::ALL {
+            let tag = format!("{kind:?} route={route:?}");
+            let local = ShardedSortService::with_transports(
+                route,
+                (0..2)
+                    .map(|_| {
+                        Box::new(LocalTransport::start(svc.clone()).unwrap())
+                            as Box<dyn ShardTransport>
+                    })
+                    .collect(),
+            )
+            .unwrap();
+            let remote = ShardedSortService::with_transports(
+                route,
+                (0..2)
+                    .map(|_| {
+                        let server = Arc::new(ShardServer::start(svc.clone()).unwrap());
+                        let connector = ShardServer::duplex_connector(server);
+                        Box::new(RemoteTransport::connect(connector).unwrap())
+                            as Box<dyn ShardTransport>
+                    })
+                    .collect(),
+            )
+            .unwrap();
+            let a = local.sort_hierarchical(&d.values, &cfg).unwrap();
+            let b = remote.sort_hierarchical(&d.values, &cfg).unwrap();
+            assert_eq!(b.hier.output.sorted, a.hier.output.sorted, "{tag}");
+            assert_eq!(b.hier.output.order, a.hier.output.order, "{tag}");
+            assert_eq!(b.hier.output.stats, a.hier.output.stats, "{tag}");
+            assert_eq!(b.hier.chunk_stats, a.hier.chunk_stats, "{tag}");
+            assert_eq!(b.hier.merge.comparisons, a.hier.merge.comparisons, "{tag}");
+            assert_eq!(b.hier.merge.passes, a.hier.merge.passes, "{tag}");
+            assert_eq!(b.hier.merge.cycles, a.hier.merge.cycles, "{tag}");
+            assert_eq!(
+                b.hier.streamed_latency_cycles, a.hier.streamed_latency_cycles,
+                "{tag}"
+            );
+            assert_eq!(b.hier.barrier_latency_cycles, a.hier.barrier_latency_cycles, "{tag}");
+            // Routing itself is deterministic for every policy except
+            // Cost, whose scores read live per-class observations that
+            // update with worker completion timing mid-fan-out — there
+            // the *output* identity above is the contract, not the
+            // assignment vector.
+            if route != RoutePolicy::Cost {
+                assert_eq!(b.assignments, a.assignments, "{tag}");
+                assert_eq!(b.sharded_latency_cycles, a.sharded_latency_cycles, "{tag}");
+            }
+            assert_eq!(b.rerouted, 0, "{tag}");
+            // Plain (non-hierarchical) requests cross the wire intact
+            // too, argsort included.
+            let ra = local.submit_wait(d.values.clone()).unwrap();
+            let rb = remote.submit_wait(d.values.clone()).unwrap();
+            assert_eq!(rb.sorted, ra.sorted, "{tag}");
+            assert_eq!(rb.order, ra.order, "{tag}");
+            assert_eq!(rb.stats, ra.stats, "{tag}");
+            remote.shutdown();
+            local.shutdown();
+        }
+    }
+}
+
+/// Failure and recovery across the wire: a remote host dies behind the
+/// link's back (the fleet still believes it healthy), the dropped
+/// replies re-route mid-sort without changing a byte, and
+/// `recover_shard` re-dials a fresh connection and restarts the host.
+#[test]
+fn remote_shard_death_and_recovery_through_the_fleet() {
+    use std::sync::Arc;
+
+    use memsort::coordinator::shard_server::ShardServer;
+    use memsort::coordinator::transport::{RemoteTransport, ShardTransport};
+
+    let single = SortService::start(ServiceConfig { workers: 2, ..Default::default() }).unwrap();
+    let cfg = HierarchicalConfig::fixed(128, 4);
+    let d = Dataset::generate32(DatasetKind::Clustered, 1500, 31);
+    let reference = single.sort_hierarchical(&d.values, &cfg).unwrap();
+    single.shutdown();
+
+    let svc = ServiceConfig { workers: 2, ..Default::default() };
+    let servers: Vec<Arc<ShardServer>> =
+        (0..2).map(|_| Arc::new(ShardServer::start(svc.clone()).unwrap())).collect();
+    let fleet = ShardedSortService::with_transports(
+        RoutePolicy::RoundRobin,
+        servers
+            .iter()
+            .map(|s| {
+                let connector = ShardServer::duplex_connector(Arc::clone(s));
+                Box::new(RemoteTransport::connect(connector).unwrap())
+                    as Box<dyn ShardTransport>
+            })
+            .collect(),
+    )
+    .unwrap();
+
+    // Kill shard 0's host server-side; the link stays up, so the fleet
+    // only finds out via dropped replies mid-flight.
+    servers[0].host().halt();
+    while servers[0].host().submit(vec![1u32]).is_ok() {
+        std::thread::yield_now();
+    }
+    let out = fleet.sort_hierarchical(&d.values, &cfg).unwrap();
+    assert_eq!(out.hier.output.sorted, reference.output.sorted);
+    assert_eq!(out.hier.output.order, reference.output.order);
+    assert_eq!(out.hier.output.stats, reference.output.stats);
+    assert!(out.rerouted >= 1, "the remote death must be observed and re-routed");
+    assert!(out.assignments.iter().all(|&s| s == 1), "{:?}", out.assignments);
+
+    // Recover: the transport re-dials (a fresh duplex served by the
+    // same host process) and restarts the service over the wire.
+    fleet.recover_shard(0).unwrap();
+    let out = fleet.sort_hierarchical(&d.values, &cfg).unwrap();
+    assert_eq!(out.hier.output.sorted, reference.output.sorted);
+    assert_eq!(out.rerouted, 0, "a recovered remote fleet re-routes nothing");
+    assert!(out.shard_chunks[0] > 0, "{:?}", out.shard_chunks);
+    let m = fleet.fleet_metrics();
+    assert_eq!(m.recovered, 1);
+    assert!(m.retries >= 1, "the failover hops were paid from the budget");
+    fleet.shutdown();
+}
+
 /// Hierarchical pipeline over multibank chunk engines (§IV per chunk):
 /// same result, and the multibank trace invariance keeps the chunk
 /// cycle counts identical to single-bank chunks.

@@ -398,6 +398,62 @@ fn prop_hetero_scoring_reduces_to_uniform() {
 }
 
 #[test]
+fn prop_wire_roundtrip_is_identity() {
+    // The wire codec must be an identity for arbitrary
+    // `SortRequest`/`SortResponse` payloads — values of any width and
+    // shape, argsort payloads present or absent, full stats, and error
+    // replies — with the correlation id preserved bit-for-bit.
+    use memsort::coordinator::wire::{encode_frame, read_frame, Frame};
+    use memsort::coordinator::SortResponse;
+    use memsort::sorter::SortStats;
+
+    check("wire-roundtrip", PropConfig { seed: 12, cases: 192, ..Default::default() }, |case| {
+        let v = |i: usize| case.values.get(i).copied().unwrap_or(3) as u64;
+        let trip = |id: u64, frame: Frame| -> Result<(), String> {
+            let bytes = encode_frame(id, &frame);
+            let (rid, decoded) = read_frame(&mut &bytes[..]).map_err(|e| e.to_string())?;
+            if rid != id {
+                return Err(format!("id {id} decoded as {rid}"));
+            }
+            if decoded != frame {
+                return Err(format!("{frame:?} decoded as {decoded:?}"));
+            }
+            Ok(())
+        };
+        // The job: the raw random values.
+        trip(v(0).wrapping_mul(0x9E37_79B9), Frame::SortJob(case.values.clone()))?;
+        // The response: sorted values + an argsort payload (any
+        // permutation-shaped vector; every third case drops it, the
+        // pure-PJRT shape) + stats built from the case bytes.
+        let mut sorted = case.values.clone();
+        sorted.sort_unstable();
+        let order: Vec<usize> = (0..case.values.len()).rev().collect();
+        let resp = SortResponse {
+            id: v(1),
+            sorted,
+            order: if v(2) % 3 == 0 { Vec::new() } else { order },
+            stats: SortStats {
+                crs: v(3),
+                res: v(4),
+                srs: v(5),
+                sls: v(6),
+                invalidations: v(7),
+                drains: v(8),
+                iterations: v(9),
+            },
+            latency_us: v(10),
+            worker: (v(11) % 64) as usize,
+        };
+        trip(u64::MAX - v(1), Frame::SortOk(resp))?;
+        // An error reply: arbitrary printable text survives verbatim.
+        let msg: String =
+            case.values.iter().take(48).map(|&x| char::from((32 + x % 95) as u8)).collect();
+        trip(v(12), Frame::ErrReply(msg))?;
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_stats_are_internally_consistent() {
     check("stats-consistency", PropConfig { seed: 7, ..Default::default() }, |case| {
         let mut s =
