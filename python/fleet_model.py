@@ -194,6 +194,38 @@ def frame_bytes_ok(n: int) -> int:
     return 16 + 8 + (8 + 4 * n) + (8 + 8 * n) + 7 * 8 + 8 + 8
 
 
+def frame_bytes_job_tagged(n: int, tenant_len: int) -> int:
+    """Wire bytes of a v2 SortJobTagged frame: header + tenant string
+    (8-byte length + bytes) + 1 priority byte + 8-byte count + 4 bytes
+    per element = 33 + t + 4n."""
+    return 16 + (8 + tenant_len) + 1 + 8 + 4 * n
+
+
+def model_coalescing(lens, tenant_len: int):
+    """Mirror of ``planner::model_coalescing``: a request's round-trip
+    envelope (tagged job + full response, minus the per-element 16 B)
+    is a fixed ``145 + t`` bytes, so folding k same-class requests into
+    one carrier job saves exactly ``(k-1) * (145 + t)``. Returns
+    (solo_bytes, coalesced_bytes)."""
+    fixed = 145 + tenant_len
+    solo = sum(fixed + 16 * n for n in lens)
+    coalesced = 0 if not lens else fixed + 16 * sum(lens)
+    return solo, coalesced
+
+
+def concurrent_makespan(clients: int, jobs: int, n: int, workers: int,
+                        cyc: float) -> int:
+    """Makespan of `clients` connections each pipelining `jobs`
+    bank-sized sorts into ONE shard host with `workers` workers: every
+    job is in flight up front (the sessions share the worker pool, not
+    a per-connection lock), so the pool drains ceil(total / workers)
+    rounds of ``round(n * cyc)`` cycles. Aggregate throughput is flat
+    in C at ``workers / cyc`` elem/cycle; per-client latency grows
+    linearly in C."""
+    total = clients * jobs
+    return -(-total // workers) * round_half_away(n * cyc)
+
+
 def shard_model(bank: int, fanout: int, largest_bank: int, cyc: float):
     """(arrival, weight, oversize) for one shard at a (bank, fanout)
     candidate. `arrival` is when the shard's FIRST chunk run exists
@@ -283,6 +315,32 @@ def main():
         print(f"  slow x{factor:<4}: fired {100 * fired:.0f}%, win rate "
               f"{100 * win:.0f}%, mean {base_s} -> {hedged:.0f} cycles ({gain} saved, "
               f"deadline {deadline})")
+
+    print()
+    print("== EXPERIMENTS.md §Concurrent request plane ==")
+    t = len("acme")
+    # The fixed envelope is the whole round trip minus the 16 B/elem.
+    assert frame_bytes_job_tagged(64, t) + frame_bytes_ok(64) == (145 + t) + 16 * 64
+    print(f"tagged job frame (tenant 'acme', t={t}): n=64 -> "
+          f"{frame_bytes_job_tagged(64, t)} B; round-trip envelope "
+          f"145+t = {145 + t} B/request + 16 B/elem")
+    print("coalescing (planner::model_coalescing, tenant 'acme'):")
+    packs = [("8 x 64", [64] * 8), ("4 x 64", [64] * 4), ("8 x 16", [16] * 8),
+             ("17+13+30 (uneven)", [17, 13, 30])]
+    for name, lens in packs:
+        solo, coalesced = model_coalescing(lens, t)
+        saved = solo - coalesced
+        assert saved == (len(lens) - 1) * (145 + t), (name, saved)
+        print(f"  {name:18s}: solo {solo:5d} B -> carrier {coalesced:5d} B "
+              f"(saved {saved} = {len(lens) - 1}*{145 + t}, "
+              f"{100 * saved / solo:.1f}%)")
+    print("concurrent makespan (one host, workers=4, 32 jobs/client, "
+          "bank=1024, cyc=7.84):")
+    for c in [1, 2, 4, 8]:
+        m = concurrent_makespan(c, 32, 1024, 4, 7.84)
+        agg = c * 32 * 1024 / m
+        print(f"  C={c}: makespan {m:>7d} cycles, aggregate {agg:.3f} elem/cyc, "
+              f"per-client {agg / c:.3f}")
 
 
 if __name__ == "__main__":

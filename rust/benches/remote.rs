@@ -99,4 +99,52 @@ fn main() {
         100.0 * remote_rate / local_rate.max(1.0)
     );
     remote.shutdown();
+
+    // The concurrent request plane: C coordinator connections pipeline
+    // bank-sized jobs into ONE shard host over their own duplex links.
+    // Aggregate throughput should hold (and improve toward the worker
+    // count) as C grows — the sessions share the host's worker pool,
+    // not a per-connection lock.
+    println!("--- multi-connection: C clients x 32 jobs on one shard host (duplex) ---");
+    let server =
+        Arc::new(ShardServer::start(ServiceConfig { workers: 4, ..Default::default() }).unwrap());
+    let jobs_per_client = 32usize;
+    for &c in &[1usize, 2, 4, 8] {
+        let transports: Vec<Arc<RemoteTransport>> = (0..c)
+            .map(|_| {
+                let connector = ShardServer::duplex_connector(Arc::clone(&server));
+                Arc::new(RemoteTransport::connect(connector).unwrap())
+            })
+            .collect();
+        let t0 = std::time::Instant::now();
+        let handles: Vec<_> = transports
+            .iter()
+            .cloned()
+            .map(|t| {
+                let data = d.values.clone();
+                std::thread::spawn(move || {
+                    // Pipelined: all jobs in flight before the first
+                    // reply is drained, like a real coordinator.
+                    let rxs: Vec<_> = (0..jobs_per_client)
+                        .map(|_| t.submit(data.clone()).unwrap())
+                        .collect();
+                    for rx in rxs {
+                        rx.recv().unwrap().unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let wall = t0.elapsed();
+        let total_elems = (c * jobs_per_client * bank) as f64;
+        println!(
+            "    C={c}: {:.2} Melem/s aggregate ({} jobs of {bank})",
+            total_elems / wall.as_secs_f64() / 1e6,
+            c * jobs_per_client
+        );
+        drop(transports); // plain disconnects; the host keeps running
+    }
+    server.host().shutdown();
 }

@@ -1,0 +1,684 @@
+//! The coordinator's request plane: fair-share admission over a
+//! [`super::shard::ShardedSortService`] fleet.
+//!
+//! The fleet layer (PRs 4–5) routes *one caller's* work well; this
+//! module is what stands in front of it when there are many callers.
+//! A [`Frontend`] admits concurrent sort requests tagged with a tenant
+//! and a [`Priority`] class, enforcing three deterministic rules:
+//!
+//! 1. **Per-tenant caps** — a tenant may hold at most
+//!    [`FrontendConfig::tenant_cap`] outstanding requests; a breach is
+//!    the typed [`AdmitError::TenantCap`], never a queue (a misbehaving
+//!    tenant must not grow an invisible backlog inside the
+//!    coordinator).
+//! 2. **Saturation shedding, lowest class first** — once the frontend
+//!    is saturated (outstanding at [`FrontendConfig::max_outstanding`],
+//!    or the fleet's retry budget has burnt to empty — the same
+//!    token-bucket signal the failover path sheds on), `Batch` work is
+//!    shed immediately with [`AdmitError::Saturated`]. `Interactive`
+//!    work rides an *overdraft* token bucket
+//!    ([`FrontendConfig::overdraft`], the same clockless machinery as
+//!    [`super::shard::RetryBudgetConfig`]): each admission past
+//!    saturation spends a token, and tokens refill as admitted work
+//!    *releases* — so a saturated frontend keeps absorbing a bounded
+//!    burst of interactive traffic while batch traffic sheds, and the
+//!    bound regenerates with served work, not wall time. Deterministic
+//!    by construction: tests replay exact shed orderings.
+//! 3. **Cross-request coalescing** — [`Frontend::sort_batch`] packs
+//!    small same-class requests into one bank-sized carrier job before
+//!    routing and splits the result back per request via the argsort
+//!    (`order[i]` = the original index of `sorted[i]`, and the
+//!    single-bank sorter drains duplicates in ascending original index,
+//!    so each request's slice of the carrier's output is exactly its
+//!    solo stable sort). One wire frame and one routing decision
+//!    amortise over the whole pack —
+//!    [`super::planner::model_coalescing`] quantifies the saving, and
+//!    `python/fleet_model.py` §coalescing mirrors it.
+//!
+//! Admission state is one mutex-guarded scoreboard (outstanding total,
+//! per-tenant counts, overdraft balance); a [`Permit`] decrements it on
+//! drop, so every admitted request releases exactly once on every exit
+//! path — success, sort error, or panic unwind.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Result};
+
+use super::shard::{FleetSnapshot, RetryBudgetConfig, ShardedSortService};
+use super::SortResponse;
+
+/// Request priority class. Two classes are deliberate: the admission
+/// contract is "who sheds first", and a total order over many levels
+/// invites starvation games; interactive-over-batch is the whole
+/// policy.
+#[derive(Copy, Clone, Debug, PartialEq, Eq, Hash)]
+pub enum Priority {
+    /// Latency-sensitive foreground work: admitted past saturation
+    /// while the overdraft bucket holds tokens.
+    Interactive,
+    /// Throughput work: the first class shed at saturation.
+    Batch,
+}
+
+impl Priority {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "interactive" => Some(Priority::Interactive),
+            "batch" => Some(Priority::Batch),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+        }
+    }
+
+    /// Every class, for sweeps and the parse round-trip test.
+    pub const ALL: [Priority; 2] = [Priority::Interactive, Priority::Batch];
+}
+
+impl std::str::FromStr for Priority {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        Priority::parse(s).ok_or_else(|| format!("unknown priority `{s}` (interactive|batch)"))
+    }
+}
+
+/// The request-plane tag riding on a sort job: who is asking and how
+/// urgently. Crosses the wire on v2 links
+/// ([`super::wire::Frame::SortJobTagged`]); the host sorts tagged and
+/// untagged jobs identically — the tag is coordination metadata, not an
+/// execution parameter.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct JobTag {
+    /// Accounting identity for the per-tenant outstanding cap.
+    pub tenant: String,
+    /// Shed class under saturation.
+    pub priority: Priority,
+}
+
+impl JobTag {
+    pub fn new(tenant: impl Into<String>, priority: Priority) -> Self {
+        JobTag { tenant: tenant.into(), priority }
+    }
+}
+
+impl Default for JobTag {
+    /// Untagged traffic: an anonymous batch-class tenant, so work that
+    /// never asked for priority is the first to shed.
+    fn default() -> Self {
+        JobTag { tenant: "anon".into(), priority: Priority::Batch }
+    }
+}
+
+/// Why admission refused a request. A typed error, deliberately not an
+/// `anyhow` string: callers shed load *programmatically* (retry later,
+/// downshift priority, surface a 429-equivalent), so the variant and
+/// its numbers must survive the boundary. Convertible into
+/// `anyhow::Error` (it is a `std::error::Error`), and recoverable from
+/// one via `downcast_ref::<AdmitError>()`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum AdmitError {
+    /// The tenant is at its outstanding cap. Not a hang: the caller
+    /// decides whether to wait, not the coordinator.
+    TenantCap {
+        tenant: String,
+        cap: usize,
+    },
+    /// The frontend is saturated and this class is being shed —
+    /// `Batch` always, `Interactive` once the overdraft bucket is dry.
+    Saturated {
+        priority: Priority,
+        outstanding: usize,
+        limit: usize,
+    },
+}
+
+impl std::fmt::Display for AdmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmitError::TenantCap { tenant, cap } => {
+                write!(f, "tenant `{tenant}` is at its cap of {cap} outstanding requests")
+            }
+            AdmitError::Saturated { priority, outstanding, limit } => write!(
+                f,
+                "frontend saturated ({outstanding}/{limit} outstanding): shedding {} work",
+                priority.name()
+            ),
+        }
+    }
+}
+
+impl std::error::Error for AdmitError {}
+
+/// Frontend admission configuration.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FrontendConfig {
+    /// Outstanding requests across all tenants before the frontend
+    /// counts as saturated.
+    pub max_outstanding: usize,
+    /// Outstanding requests one tenant may hold.
+    pub tenant_cap: usize,
+    /// The interactive overdraft past saturation: `capacity` is the
+    /// burst bound, `deposit` refills per *released* request — the
+    /// fleet's retry-budget machinery, reused for admission.
+    pub overdraft: RetryBudgetConfig,
+    /// Coalescing cap for [`Frontend::sort_batch`], in elements per
+    /// carrier job. `0` = auto: the fleet's largest bank, so a carrier
+    /// is exactly one bank-sized chunk and never triggers hierarchical
+    /// splitting.
+    pub coalesce_elems: usize,
+}
+
+impl Default for FrontendConfig {
+    fn default() -> Self {
+        FrontendConfig {
+            max_outstanding: 64,
+            tenant_cap: 16,
+            overdraft: RetryBudgetConfig { capacity: 4.0, deposit: 0.25 },
+            coalesce_elems: 0,
+        }
+    }
+}
+
+impl FrontendConfig {
+    fn validate(&self) -> Result<()> {
+        if self.max_outstanding == 0 || self.tenant_cap == 0 {
+            return Err(anyhow!(
+                "admission caps must be positive (max_outstanding {}, tenant_cap {})",
+                self.max_outstanding,
+                self.tenant_cap
+            ));
+        }
+        let b = &self.overdraft;
+        if !b.capacity.is_finite() || b.capacity < 0.0 || !b.deposit.is_finite() || b.deposit < 0.0
+        {
+            return Err(anyhow!(
+                "overdraft must be finite and non-negative (capacity {}, deposit {})",
+                b.capacity,
+                b.deposit
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// The mutex-guarded admission scoreboard.
+struct AdmitState {
+    /// Admitted and not yet released, across all tenants.
+    outstanding: usize,
+    /// Admitted and not yet released, per tenant. Entries are removed
+    /// at zero so an idle tenant costs nothing.
+    per_tenant: HashMap<String, usize>,
+    /// Interactive overdraft balance, in tokens.
+    overdraft_tokens: f64,
+}
+
+/// An admitted request's slot. Dropping it releases the admission —
+/// decrements the scoreboard and deposits the overdraft refill — so
+/// release happens exactly once on every exit path.
+pub struct Permit<'a> {
+    frontend: &'a Frontend,
+    tenant: String,
+}
+
+impl Drop for Permit<'_> {
+    fn drop(&mut self) {
+        self.frontend.release(&self.tenant);
+    }
+}
+
+/// Point-in-time view of the admission plane (the frontend's own
+/// counters; fleet counters live in [`FleetSnapshot`]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct AdmissionSnapshot {
+    /// Requests admitted since start (including overdraft admissions).
+    pub admitted: u64,
+    /// Batch requests shed at saturation.
+    pub shed_batch: u64,
+    /// Interactive requests shed (saturation with a dry overdraft).
+    pub shed_interactive: u64,
+    /// Requests refused at a tenant cap.
+    pub shed_tenant_cap: u64,
+    /// Interactive admissions that spent an overdraft token.
+    pub overdraft_spent: u64,
+    /// Carrier jobs [`Frontend::sort_batch`] submitted on behalf of
+    /// coalesced requests.
+    pub coalesced_batches: u64,
+    /// Requests that rode a carrier (≥ 2 per carrier).
+    pub coalesced_requests: u64,
+    /// Currently admitted and unreleased.
+    pub outstanding: usize,
+    /// Current overdraft balance, in tokens.
+    pub overdraft_tokens: f64,
+}
+
+/// The concurrent request plane over one fleet: admission (caps,
+/// priorities, shedding) in front, [`ShardedSortService`] routing
+/// behind. All methods take `&self`; wrap it in an `Arc` to serve many
+/// client threads.
+pub struct Frontend {
+    fleet: ShardedSortService,
+    cfg: FrontendConfig,
+    /// Resolved coalescing cap (cfg value, or the fleet's largest bank).
+    coalesce_elems: usize,
+    state: Mutex<AdmitState>,
+    admitted: AtomicU64,
+    shed_batch: AtomicU64,
+    shed_interactive: AtomicU64,
+    shed_tenant_cap: AtomicU64,
+    overdraft_spent: AtomicU64,
+    coalesced_batches: AtomicU64,
+    coalesced_requests: AtomicU64,
+}
+
+impl Frontend {
+    /// Put an admission plane in front of `fleet`.
+    pub fn new(fleet: ShardedSortService, cfg: FrontendConfig) -> Result<Self> {
+        cfg.validate()?;
+        let coalesce_elems = if cfg.coalesce_elems > 0 {
+            cfg.coalesce_elems
+        } else {
+            fleet.config().services[0].geometry.largest_bank()
+        };
+        Ok(Frontend {
+            fleet,
+            coalesce_elems,
+            state: Mutex::new(AdmitState {
+                outstanding: 0,
+                per_tenant: HashMap::new(),
+                overdraft_tokens: cfg.overdraft.capacity,
+            }),
+            cfg,
+            admitted: AtomicU64::new(0),
+            shed_batch: AtomicU64::new(0),
+            shed_interactive: AtomicU64::new(0),
+            shed_tenant_cap: AtomicU64::new(0),
+            overdraft_spent: AtomicU64::new(0),
+            coalesced_batches: AtomicU64::new(0),
+            coalesced_requests: AtomicU64::new(0),
+        })
+    }
+
+    /// The fleet behind the admission plane.
+    pub fn fleet(&self) -> &ShardedSortService {
+        &self.fleet
+    }
+
+    /// The admission configuration.
+    pub fn config(&self) -> &FrontendConfig {
+        &self.cfg
+    }
+
+    /// The resolved coalescing cap ([`FrontendConfig::coalesce_elems`],
+    /// or the fleet's largest bank when that was 0).
+    pub fn coalesce_elems(&self) -> usize {
+        self.coalesce_elems
+    }
+
+    /// Whether the frontend is shedding: the outstanding count is at
+    /// the cap, or the *fleet's* retry budget has burnt to empty (a
+    /// degraded fleet paying for failovers must not also absorb new
+    /// load). A fleet configured with a sub-token budget capacity never
+    /// trips the second signal — it never had tokens to burn.
+    fn saturated(&self, outstanding: usize) -> bool {
+        outstanding >= self.cfg.max_outstanding
+            || (self.fleet.config().resilience.retry_budget.capacity >= 1.0
+                && self.fleet.retry_tokens() < 1.0)
+    }
+
+    /// Admit one request, or say exactly why not. Never blocks beyond
+    /// the scoreboard mutex; a refusal is a typed [`AdmitError`].
+    ///
+    /// Decision order is the contract (pinned by the admission tests):
+    /// tenant cap first — a capped tenant is refused even when the
+    /// frontend is idle — then saturation, where `Batch` sheds
+    /// outright and `Interactive` spends the overdraft while it lasts.
+    pub fn try_admit(&self, tag: &JobTag) -> std::result::Result<Permit<'_>, AdmitError> {
+        let mut st = self.state.lock().expect("admission poisoned");
+        let used = st.per_tenant.get(&tag.tenant).copied().unwrap_or(0);
+        if used >= self.cfg.tenant_cap {
+            self.shed_tenant_cap.fetch_add(1, Ordering::Relaxed);
+            return Err(AdmitError::TenantCap {
+                tenant: tag.tenant.clone(),
+                cap: self.cfg.tenant_cap,
+            });
+        }
+        if self.saturated(st.outstanding) {
+            match tag.priority {
+                Priority::Batch => {
+                    self.shed_batch.fetch_add(1, Ordering::Relaxed);
+                    return Err(AdmitError::Saturated {
+                        priority: Priority::Batch,
+                        outstanding: st.outstanding,
+                        limit: self.cfg.max_outstanding,
+                    });
+                }
+                Priority::Interactive => {
+                    if st.overdraft_tokens >= 1.0 {
+                        st.overdraft_tokens -= 1.0;
+                        self.overdraft_spent.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        self.shed_interactive.fetch_add(1, Ordering::Relaxed);
+                        return Err(AdmitError::Saturated {
+                            priority: Priority::Interactive,
+                            outstanding: st.outstanding,
+                            limit: self.cfg.max_outstanding,
+                        });
+                    }
+                }
+            }
+        }
+        st.outstanding += 1;
+        *st.per_tenant.entry(tag.tenant.clone()).or_insert(0) += 1;
+        self.admitted.fetch_add(1, Ordering::Relaxed);
+        Ok(Permit { frontend: self, tenant: tag.tenant.clone() })
+    }
+
+    /// Release one admission (the [`Permit`] drop path).
+    fn release(&self, tenant: &str) {
+        let mut st = self.state.lock().expect("admission poisoned");
+        st.outstanding = st.outstanding.saturating_sub(1);
+        if let Some(n) = st.per_tenant.get_mut(tenant) {
+            *n = n.saturating_sub(1);
+            if *n == 0 {
+                st.per_tenant.remove(tenant);
+            }
+        }
+        let b = self.cfg.overdraft;
+        if b.deposit > 0.0 {
+            st.overdraft_tokens = (st.overdraft_tokens + b.deposit).min(b.capacity);
+        }
+    }
+
+    /// Admit and sort one request, releasing the admission on every
+    /// exit path. A shed request surfaces its [`AdmitError`] inside the
+    /// `anyhow` error (recover it with `downcast_ref::<AdmitError>()`).
+    pub fn sort(&self, tag: &JobTag, data: Vec<u32>) -> Result<SortResponse> {
+        let _permit = self.try_admit(tag).map_err(anyhow::Error::new)?;
+        self.fleet.submit_wait_tagged(tag, data)
+    }
+
+    /// Admit and sort a batch of requests, coalescing small same-class
+    /// jobs into bank-sized carrier jobs before routing. Per-request
+    /// outcomes: a shed request carries its [`AdmitError`]; admitted
+    /// requests return responses **byte-identical in `(sorted, order)`
+    /// to their solo runs** — the split-back walks the carrier's
+    /// argsort, and the sorter's stable duplicate order makes each
+    /// request's slice exactly its own stable sort. `stats`,
+    /// `latency_us` and `worker` on a coalesced response describe the
+    /// *carrier* run, shared by every rider (the simulator cost of the
+    /// pack is a property of the pack, not divisible per rider).
+    ///
+    /// Requests bigger than the coalescing cap, and packs that end up
+    /// with a single admitted rider, are submitted plain. A carrier
+    /// whose engine returns no argsort (a provenance-free PJRT host)
+    /// falls back to plain per-request submits — identity over
+    /// amortisation.
+    pub fn sort_batch(
+        &self,
+        jobs: Vec<(JobTag, Vec<u32>)>,
+    ) -> Vec<Result<SortResponse>> {
+        let mut results: Vec<Option<Result<SortResponse>>> =
+            (0..jobs.len()).map(|_| None).collect();
+        for class in Priority::ALL {
+            // Pack same-class requests greedily, preserving submission
+            // order: a pack closes when the next job would overflow the
+            // carrier cap. An oversized job gets a singleton pack
+            // (submitted plain below).
+            let idxs: Vec<usize> =
+                (0..jobs.len()).filter(|&i| jobs[i].0.priority == class).collect();
+            let mut packs: Vec<Vec<usize>> = Vec::new();
+            let mut cur: Vec<usize> = Vec::new();
+            let mut cur_len = 0usize;
+            for &i in &idxs {
+                let n = jobs[i].1.len();
+                if !cur.is_empty() && cur_len + n > self.coalesce_elems {
+                    packs.push(std::mem::take(&mut cur));
+                    cur_len = 0;
+                }
+                cur.push(i);
+                cur_len += n;
+                if cur_len >= self.coalesce_elems {
+                    packs.push(std::mem::take(&mut cur));
+                    cur_len = 0;
+                }
+            }
+            if !cur.is_empty() {
+                packs.push(cur);
+            }
+            for pack in packs {
+                // Admit every rider individually — coalescing must not
+                // let a capped tenant smuggle work in under a sibling's
+                // admission.
+                let mut riders: Vec<(usize, Permit<'_>)> = Vec::new();
+                for &i in &pack {
+                    match self.try_admit(&jobs[i].0) {
+                        Ok(permit) => riders.push((i, permit)),
+                        Err(e) => results[i] = Some(Err(anyhow::Error::new(e))),
+                    }
+                }
+                if riders.is_empty() {
+                    continue;
+                }
+                if riders.len() == 1 || riders.iter().map(|&(i, _)| jobs[i].1.len()).sum::<usize>()
+                    > self.coalesce_elems
+                {
+                    for (i, _permit) in riders {
+                        results[i] =
+                            Some(self.fleet.submit_wait_tagged(&jobs[i].0, jobs[i].1.clone()));
+                    }
+                    continue;
+                }
+                let rider_idx: Vec<usize> = riders.iter().map(|&(i, _)| i).collect();
+                match self.sort_coalesced(&jobs, &rider_idx) {
+                    Ok(split) => {
+                        for (i, resp) in rider_idx.iter().zip(split) {
+                            results[*i] = Some(Ok(resp));
+                        }
+                    }
+                    Err(e) => {
+                        // The carrier failed as a unit: every rider
+                        // sees the same delivered error.
+                        for &i in &rider_idx {
+                            results[i] = Some(Err(anyhow!("coalesced carrier failed: {e:#}")));
+                        }
+                    }
+                }
+                drop(riders);
+            }
+        }
+        results
+            .into_iter()
+            .map(|r| r.expect("every job got exactly one outcome"))
+            .collect()
+    }
+
+    /// Submit one carrier for the (already admitted) riders and split
+    /// the result back per rider via the argsort. Falls back to plain
+    /// per-rider submits when the carrier's engine returned no
+    /// provenance.
+    fn sort_coalesced(
+        &self,
+        jobs: &[(JobTag, Vec<u32>)],
+        riders: &[usize],
+    ) -> Result<Vec<SortResponse>> {
+        // Spans of each rider inside the concatenated carrier.
+        let mut spans = Vec::with_capacity(riders.len());
+        let mut carrier = Vec::new();
+        for &i in riders {
+            let start = carrier.len();
+            carrier.extend_from_slice(&jobs[i].1);
+            spans.push(start..carrier.len());
+        }
+        let n = carrier.len();
+        // The carrier rides the first rider's tag: one frame, one tag —
+        // per-rider accounting already happened at admission.
+        let tag = &jobs[riders[0]].0;
+        let resp = self.fleet.submit_wait_tagged(tag, carrier)?;
+        if resp.order.len() != n {
+            // No argsort to split by (a provenance-free engine):
+            // identity over amortisation — run every rider plain.
+            return riders
+                .iter()
+                .map(|&i| self.fleet.submit_wait_tagged(&jobs[i].0, jobs[i].1.clone()))
+                .collect();
+        }
+        self.coalesced_batches.fetch_add(1, Ordering::Relaxed);
+        self.coalesced_requests.fetch_add(riders.len() as u64, Ordering::Relaxed);
+        // Walk the carrier's output once: `order[k]` says which
+        // original index produced `sorted[k]`, and the span containing
+        // it says which rider. Within a rider the walk preserves the
+        // carrier's stable (value, original index) order, which is the
+        // rider's own stable sort.
+        let mut outs: Vec<(Vec<u32>, Vec<usize>)> =
+            spans.iter().map(|s| (Vec::with_capacity(s.len()), Vec::with_capacity(s.len()))).collect();
+        for (k, &src) in resp.order.iter().enumerate() {
+            // First span whose end is past `src`; empty spans have
+            // `end <= src` whenever a non-empty successor holds it, so
+            // the walk never lands on one.
+            let r = spans.partition_point(|s| s.end <= src);
+            debug_assert!(spans[r].contains(&src));
+            outs[r].0.push(resp.sorted[k]);
+            outs[r].1.push(src - spans[r].start);
+        }
+        Ok(outs
+            .into_iter()
+            .map(|(sorted, order)| SortResponse {
+                id: resp.id,
+                sorted,
+                order,
+                stats: resp.stats.clone(),
+                latency_us: resp.latency_us,
+                worker: resp.worker,
+            })
+            .collect())
+    }
+
+    /// The frontend's own counters.
+    pub fn admission(&self) -> AdmissionSnapshot {
+        let st = self.state.lock().expect("admission poisoned");
+        AdmissionSnapshot {
+            admitted: self.admitted.load(Ordering::Relaxed),
+            shed_batch: self.shed_batch.load(Ordering::Relaxed),
+            shed_interactive: self.shed_interactive.load(Ordering::Relaxed),
+            shed_tenant_cap: self.shed_tenant_cap.load(Ordering::Relaxed),
+            overdraft_spent: self.overdraft_spent.load(Ordering::Relaxed),
+            coalesced_batches: self.coalesced_batches.load(Ordering::Relaxed),
+            coalesced_requests: self.coalesced_requests.load(Ordering::Relaxed),
+            outstanding: st.outstanding,
+            overdraft_tokens: st.overdraft_tokens,
+        }
+    }
+
+    /// The fleet snapshot with the admission-plane counters filled in
+    /// ([`FleetSnapshot::admitted`] and the shed counters are 0 when
+    /// the snapshot comes straight from the fleet — only the frontend
+    /// knows them).
+    pub fn fleet_metrics(&self) -> FleetSnapshot {
+        let mut snap = self.fleet.fleet_metrics();
+        let adm = self.admission();
+        snap.admitted = adm.admitted;
+        snap.shed_saturated = adm.shed_batch + adm.shed_interactive;
+        snap.shed_tenant_cap = adm.shed_tenant_cap;
+        snap
+    }
+
+    /// Graceful shutdown of the fleet behind the plane.
+    pub fn shutdown(self) {
+        self.fleet.shutdown();
+    }
+
+    /// Dismantle the admission plane and hand the fleet back — for
+    /// callers that must [`ShardedSortService::disconnect`] from
+    /// operator-owned remote hosts instead of shutting them down.
+    pub fn into_fleet(self) -> ShardedSortService {
+        self.fleet
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::shard::{RoutePolicy, ShardedConfig};
+    use crate::coordinator::ServiceConfig;
+
+    fn frontend(cfg: FrontendConfig) -> Frontend {
+        let fleet = ShardedSortService::start(ShardedConfig::uniform(
+            2,
+            RoutePolicy::RoundRobin,
+            ServiceConfig { workers: 2, ..Default::default() },
+        ))
+        .unwrap();
+        Frontend::new(fleet, cfg).unwrap()
+    }
+
+    fn tag(tenant: &str, priority: Priority) -> JobTag {
+        JobTag::new(tenant, priority)
+    }
+
+    #[test]
+    fn priority_parse_round_trips() {
+        for p in Priority::ALL {
+            assert_eq!(Priority::parse(p.name()), Some(p));
+            assert_eq!(p.name().parse::<Priority>().unwrap(), p);
+        }
+        assert!("realtime".parse::<Priority>().is_err());
+        assert_eq!(JobTag::default().priority, Priority::Batch);
+    }
+
+    #[test]
+    fn sorts_through_admission() {
+        let fe = frontend(FrontendConfig::default());
+        let resp = fe.sort(&tag("acme", Priority::Interactive), vec![3, 1, 2]).unwrap();
+        assert_eq!(resp.sorted, vec![1, 2, 3]);
+        let adm = fe.admission();
+        assert_eq!((adm.admitted, adm.outstanding), (1, 0), "the permit released");
+        let snap = fe.fleet_metrics();
+        assert_eq!(snap.admitted, 1);
+        assert_eq!(snap.shed_saturated + snap.shed_tenant_cap, 0);
+        fe.shutdown();
+    }
+
+    #[test]
+    fn permit_releases_on_drop_even_without_a_sort() {
+        let fe = frontend(FrontendConfig::default());
+        let t = tag("acme", Priority::Batch);
+        {
+            let _p = fe.try_admit(&t).unwrap();
+            assert_eq!(fe.admission().outstanding, 1);
+        }
+        assert_eq!(fe.admission().outstanding, 0);
+        fe.shutdown();
+    }
+
+    #[test]
+    fn invalid_configs_are_rejected() {
+        let fleet = ShardedSortService::start(ShardedConfig::uniform(
+            1,
+            RoutePolicy::RoundRobin,
+            ServiceConfig { workers: 1, ..Default::default() },
+        ))
+        .unwrap();
+        let bad = FrontendConfig { max_outstanding: 0, ..Default::default() };
+        assert!(Frontend::new(fleet, bad).is_err());
+    }
+
+    #[test]
+    fn coalesce_cap_defaults_to_the_fleet_bank() {
+        let fe = frontend(FrontendConfig::default());
+        assert_eq!(
+            fe.coalesce_elems(),
+            fe.fleet().config().services[0].geometry.largest_bank()
+        );
+        let fe = frontend(FrontendConfig { coalesce_elems: 128, ..Default::default() });
+        assert_eq!(fe.coalesce_elems(), 128);
+        fe.shutdown();
+    }
+}

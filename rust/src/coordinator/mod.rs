@@ -19,6 +19,7 @@
 //! ([`planner::partition`]), sort the chunks on this worker pool, and
 //! combine the runs in a k-way loser-tree merge network.
 
+pub mod frontend;
 pub mod hierarchical;
 pub mod metrics;
 pub mod planner;

@@ -275,6 +275,57 @@ pub fn shard_model(bank: usize, fanout: usize, geo: &Geometry, cyc: f64) -> Shar
     ShardModel { arrival, cyc_per_num: cyc, oversize, weight: 1.0 / arrival.max(1) as f64 }
 }
 
+/// Wire-byte outcome of coalescing small same-class requests into one
+/// carrier sort, built by [`model_coalescing`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CoalescingModel {
+    /// Total wire bytes when every request travels solo (one tagged job
+    /// frame plus one provenance reply each).
+    pub solo_bytes: u64,
+    /// Total wire bytes through one shared carrier frame pair.
+    pub coalesced_bytes: u64,
+    /// Number of requests folded together.
+    pub requests: usize,
+}
+
+impl CoalescingModel {
+    /// Bytes the carrier saves over solo submission — always
+    /// `(requests − 1) · (145 + tenant_len)`: the payload bytes are
+    /// conserved, only the per-request frame envelopes are folded.
+    pub fn saved_bytes(&self) -> u64 {
+        self.solo_bytes - self.coalesced_bytes
+    }
+
+    /// Solo-to-coalesced byte ratio (> 1 whenever two or more requests
+    /// fold); the amortization factor quoted in EXPERIMENTS.md.
+    pub fn amortization(&self) -> f64 {
+        if self.coalesced_bytes == 0 {
+            1.0
+        } else {
+            self.solo_bytes as f64 / self.coalesced_bytes as f64
+        }
+    }
+}
+
+/// Model the wire cost of the frontend's cross-request coalescing
+/// ([`super::frontend::Frontend::sort_batch`]): `lens` are the element
+/// counts of small same-class requests from a tenant whose name is
+/// `tenant_len` bytes. Frame sizes are the pinned wire sizes
+/// (`wire::tests` size pins): a tagged job frame is `33 + t + 4n`
+/// bytes, a provenance `SortOk` reply is `112 + 12n`, so each request
+/// costs a fixed `145 + t` envelope plus `16` bytes per element. Solo,
+/// every request pays its own envelope; coalesced, one carrier pays it
+/// once over the concatenated payload. Mirrored independently by
+/// `python/fleet_model.py` (`§ coalescing amortization`) and quoted in
+/// EXPERIMENTS.md §Concurrent request plane.
+pub fn model_coalescing(lens: &[usize], tenant_len: usize) -> CoalescingModel {
+    let fixed = 145 + tenant_len as u64;
+    let total: u64 = lens.iter().map(|&n| n as u64).sum();
+    let solo: u64 = lens.iter().map(|&n| fixed + 16 * n as u64).sum();
+    let coalesced = if lens.is_empty() { 0 } else { fixed + 16 * total };
+    CoalescingModel { solo_bytes: solo, coalesced_bytes: coalesced, requests: lens.len() }
+}
+
 /// Merge fanouts the auto-tuner enumerates (a hardware fanout-f merge
 /// unit is an `f·log2 f` comparator tree; past 16 the silicon cost of a
 /// unit outgrows the pass savings on realistic chunk counts).
@@ -955,6 +1006,36 @@ mod tests {
         for bad in ["1024", "x32", "1024x", "0x32", "1024x0", "1024x33", "ax32", "1024xb"] {
             assert!(Geometry::from_spec(bad).is_err(), "{bad}");
         }
+    }
+
+    #[test]
+    fn coalescing_saves_exactly_the_folded_envelopes() {
+        // 8 requests of 64 elements from tenant "acme" (4 bytes):
+        // envelope = 145 + 4 = 149 bytes, payload 16·64 = 1024 per
+        // request. Solo: 8·1173 = 9384; carrier: 149 + 16·512 = 8341.
+        let m = model_coalescing(&[64; 8], 4);
+        assert_eq!(m.solo_bytes, 9384);
+        assert_eq!(m.coalesced_bytes, 8341);
+        assert_eq!(m.saved_bytes(), 7 * 149, "(k-1) envelopes folded");
+        assert!(m.amortization() > 1.0);
+        // The invariant across shapes: savings are exactly the folded
+        // envelopes, never a byte of payload.
+        for lens in [vec![1usize], vec![3, 5, 7], vec![100, 1, 100, 1]] {
+            for t in [0usize, 4, 32] {
+                let m = model_coalescing(&lens, t);
+                assert_eq!(
+                    m.saved_bytes(),
+                    (lens.len() as u64 - 1) * (145 + t as u64),
+                    "lens={lens:?} t={t}"
+                );
+            }
+        }
+        // Degenerate shapes.
+        let empty = model_coalescing(&[], 4);
+        assert_eq!((empty.solo_bytes, empty.coalesced_bytes), (0, 0));
+        assert_eq!(empty.amortization(), 1.0);
+        let single = model_coalescing(&[64], 4);
+        assert_eq!(single.saved_bytes(), 0, "a lone request gains nothing");
     }
 
     #[test]

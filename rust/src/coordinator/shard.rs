@@ -75,6 +75,7 @@ use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
+use super::frontend::JobTag;
 use super::hierarchical::{Capacity, ChunkAssembly, HierarchicalConfig, HierarchicalOutput};
 use super::metrics::{size_class, ServiceMetrics, Snapshot};
 use super::planner::{auto_tune_hetero, partition, shard_model, Geometry};
@@ -339,6 +340,15 @@ pub struct FleetSnapshot {
     pub budget_exhausted: u64,
     /// Current retry-budget balance, in tokens.
     pub retry_tokens: f64,
+    /// Requests admitted by the frontend's request plane. 0 in a
+    /// snapshot taken straight from the fleet — only
+    /// [`super::frontend::Frontend::fleet_metrics`] knows the
+    /// admission plane and fills these three in.
+    pub admitted: u64,
+    /// Requests shed at saturation (both priority classes).
+    pub shed_saturated: u64,
+    /// Requests refused at a per-tenant outstanding cap.
+    pub shed_tenant_cap: u64,
     /// Worst per-shard p50 (µs) — the fleet's slow-median shard.
     pub p50_us: u64,
     /// Worst per-shard p99 (µs).
@@ -634,11 +644,13 @@ impl ShardedSortService {
 
     /// Route and submit one job, failing over to surviving shards when
     /// a submit hits a dead service (each failover bumps `rerouted`
-    /// and spends one retry token). Returns the serving shard id and
-    /// the response receiver; the caller owns the outstanding
-    /// decrement (via [`Self::settle`]).
+    /// and spends one retry token). A tagged job keeps its tag across
+    /// every hop — attribution survives failover. Returns the serving
+    /// shard id and the response receiver; the caller owns the
+    /// outstanding decrement (via [`Self::settle`]).
     fn submit_routed(
         &self,
+        tag: Option<&JobTag>,
         data: &[u32],
         offset: usize,
         rerouted: &mut u64,
@@ -648,7 +660,7 @@ impl ShardedSortService {
             let Some(sid) = self.route_for(data.len(), offset) else {
                 return Err(anyhow!("every shard is down"));
             };
-            match self.shards[sid].transport.submit(data.to_vec()) {
+            match self.shard_submit(sid, tag, data) {
                 Ok(rx) => {
                     self.shards[sid].outstanding.fetch_add(1, Ordering::Relaxed);
                     *rerouted += tries;
@@ -664,6 +676,20 @@ impl ShardedSortService {
                     self.charge_retry()?;
                 }
             }
+        }
+    }
+
+    /// One shard submit, tagged or plain — the single spot where the
+    /// optional tag meets the transport seam.
+    fn shard_submit(
+        &self,
+        sid: usize,
+        tag: Option<&JobTag>,
+        data: &[u32],
+    ) -> Result<mpsc::Receiver<Result<SortResponse>>> {
+        match tag {
+            Some(t) => self.shards[sid].transport.submit_tagged(t, data.to_vec()),
+            None => self.shards[sid].transport.submit(data.to_vec()),
         }
     }
 
@@ -755,6 +781,7 @@ impl ShardedSortService {
     fn issue_hedge(
         &self,
         primary: usize,
+        tag: Option<&JobTag>,
         data: &[u32],
     ) -> Option<(usize, mpsc::Receiver<Result<SortResponse>>)> {
         let scores: Vec<(f64, usize)> = (0..self.shards.len())
@@ -770,7 +797,7 @@ impl ShardedSortService {
         if !self.try_spend_budget() {
             return None;
         }
-        match self.shards[hsid].transport.submit(data.to_vec()) {
+        match self.shard_submit(hsid, tag, data) {
             Ok(rx) => {
                 self.shards[hsid].outstanding.fetch_add(1, Ordering::Relaxed);
                 Some((hsid, rx))
@@ -806,6 +833,7 @@ impl ShardedSortService {
         &self,
         sid: usize,
         rx: mpsc::Receiver<Result<SortResponse>>,
+        tag: Option<&JobTag>,
         data: &[u32],
         offset: usize,
         rerouted: &mut u64,
@@ -883,12 +911,12 @@ impl ShardedSortService {
                     self.mark_dead(primary.0);
                     *rerouted += 1;
                     self.charge_retry()?;
-                    primary = self.submit_routed(data, offset, rerouted)?;
+                    primary = self.submit_routed(tag, data, offset, rerouted)?;
                 }
                 Err(Timeout) => {
                     // Straggler: hedge once if the fleet and the
                     // budget allow; either way the attempt is spent.
-                    hedge = self.issue_hedge(primary.0, data);
+                    hedge = self.issue_hedge(primary.0, tag, data);
                     hedge_armed = false;
                 }
             }
@@ -899,8 +927,31 @@ impl ShardedSortService {
     /// with the job in flight.
     pub fn submit_wait(&self, data: Vec<u32>) -> Result<SortResponse> {
         let mut rerouted = 0;
-        let (sid, rx) = self.submit_routed(&data, 0, &mut rerouted)?;
-        self.recv_rerouted(sid, rx, &data, 0, &mut rerouted).map(|(_, resp)| resp)
+        let (sid, rx) = self.submit_routed(None, &data, 0, &mut rerouted)?;
+        self.recv_rerouted(sid, rx, None, &data, 0, &mut rerouted).map(|(_, resp)| resp)
+    }
+
+    /// [`Self::submit_wait`] with the request-plane tag riding along:
+    /// same routing, same failover and hedging (the tag survives every
+    /// hop), and on wire transports the tag crosses to the host
+    /// ([`super::wire::Frame::SortJobTagged`]). The frontend's sort
+    /// path ([`super::frontend::Frontend::sort`]) comes through here.
+    pub fn submit_wait_tagged(&self, tag: &JobTag, data: Vec<u32>) -> Result<SortResponse> {
+        let mut rerouted = 0;
+        let (sid, rx) = self.submit_routed(Some(tag), &data, 0, &mut rerouted)?;
+        self.recv_rerouted(sid, rx, Some(tag), &data, 0, &mut rerouted).map(|(_, resp)| resp)
+    }
+
+    /// Current retry-budget balance — the saturation signal the
+    /// frontend's admission plane reads (cheap: one mutex, no
+    /// per-shard RPC).
+    pub fn retry_tokens(&self) -> f64 {
+        *self.tokens.lock().expect("budget poisoned")
+    }
+
+    /// Jobs submitted to shards and not yet settled, across the fleet.
+    pub fn outstanding_total(&self) -> u64 {
+        self.shards.iter().map(|s| s.outstanding.load(Ordering::Relaxed)).sum()
     }
 
     /// Sort through the hierarchical pipeline across the fleet: route
@@ -933,7 +984,7 @@ impl ShardedSortService {
         let mut assignments = Vec::with_capacity(chunks);
         let mut rerouted = 0u64;
         let fanned: Result<()> = spans.iter().enumerate().try_for_each(|(i, span)| {
-            pending.push(Some(self.submit_routed(&data[span.clone()], i, &mut rerouted)?));
+            pending.push(Some(self.submit_routed(None, &data[span.clone()], i, &mut rerouted)?));
             Ok(())
         });
         // Collect in chunk order; a dropped reply means the serving
@@ -943,7 +994,7 @@ impl ShardedSortService {
             for (i, slot) in pending.iter_mut().enumerate() {
                 let (sid, rx) = slot.take().expect("fan-out filled every slot");
                 let (served, resp) =
-                    self.recv_rerouted(sid, rx, &data[spans[i].clone()], i, &mut rerouted)?;
+                    self.recv_rerouted(sid, rx, None, &data[spans[i].clone()], i, &mut rerouted)?;
                 assignments.push(served);
                 asm.absorb(i, &resp)?;
             }
@@ -1089,6 +1140,9 @@ impl ShardedSortService {
             hedges_lost: self.hedges_lost.load(Ordering::Relaxed),
             budget_exhausted: self.budget_exhausted.load(Ordering::Relaxed),
             retry_tokens: *self.tokens.lock().expect("budget poisoned"),
+            admitted: 0,
+            shed_saturated: 0,
+            shed_tenant_cap: 0,
             p50_us: snaps.iter().map(|s| s.p50_us).max().unwrap_or(0),
             p99_us: snaps.iter().map(|s| s.p99_us).max().unwrap_or(0),
             imbalance,

@@ -10,16 +10,20 @@
 //! back empty) are the same whether the shard sits behind a thread
 //! boundary or a socket.
 //!
-//! Connections are served one at a time ([`ShardServer::serve_conn`]
-//! blocks until EOF or `Shutdown`); a shard has one coordinator, and a
-//! reconnect — the remote side of
-//! [`super::transport::ShardTransport::restart`] — simply starts the
-//! next `serve_conn`. Within a connection, sort jobs are fully
-//! pipelined: each job is submitted to the service immediately and a
-//! per-job collector thread writes the reply whenever the worker pool
-//! finishes it, so responses may return out of submission order (the
-//! correlation id in the frame header is what keys them, not arrival
-//! order).
+//! Connections are served **concurrently**: [`ShardServer::serve_conn`]
+//! is one session (blocking until EOF or `Shutdown`) and any number of
+//! sessions may run at once against the shared restartable host —
+//! [`serve_tcp`] spawns one session thread per accepted connection, up
+//! to a cap. A reconnect — the remote side of
+//! [`super::transport::ShardTransport::restart`] — is simply a fresh
+//! session; sibling sessions never notice, because the host outlives
+//! every connection. Within a session, sort jobs are fully pipelined:
+//! each job is submitted to the service immediately and a per-job
+//! collector thread writes the reply whenever the worker pool finishes
+//! it, so responses may return out of submission order (the correlation
+//! id in the frame header is what keys them, not arrival order). The
+//! ids are scoped per connection, so concurrent coordinators can reuse
+//! the same ids without collision.
 //!
 //! **Dropped replies stay dropped.** When the host dies with a job in
 //! flight (submit rejected, or the worker vanished under it), the
@@ -30,14 +34,16 @@
 //! which fails the request on the coordinator without re-routing, same
 //! as the local path.
 
+use std::collections::HashMap;
 use std::io::{Read, Write};
-use std::net::TcpListener;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
 use super::transport::{LocalTransport, ShardTransport};
-use super::wire::{read_frame, read_hello, write_frame, Frame, WIRE_VERSION};
+use super::wire::{read_frame, read_hello, write_frame, Frame, MIN_WIRE_VERSION, WIRE_VERSION};
 use super::ServiceConfig;
 
 /// One shard host behind the wire: a restartable in-process service
@@ -92,11 +98,14 @@ impl ShardServer {
             write_frame(g.as_mut(), id, frame)
         };
 
-        // Version negotiation: the connection must open with Hello.
+        // Version negotiation: the connection must open with Hello. Any
+        // version the codec can read is served — a v1 coordinator only
+        // ever sends v1 kinds, which still decode and answer v1 replies.
         let (hid, version) = read_hello(r.as_mut())?;
-        if version != WIRE_VERSION {
+        if !(MIN_WIRE_VERSION..=WIRE_VERSION).contains(&version) {
             let msg = format!(
-                "unsupported wire version {version} (this host speaks {WIRE_VERSION})"
+                "unsupported wire version {version} (this host speaks \
+                 {MIN_WIRE_VERSION}..={WIRE_VERSION})"
             );
             let _ = write(hid, &Frame::ErrReply(msg.clone()));
             anyhow::bail!("{msg}");
@@ -108,44 +117,59 @@ impl ShardServer {
             // stays up for the next one.
             let Ok((id, frame)) = read_frame(r.as_mut()) else { return Ok(false) };
             match frame {
-                // A job whose *reply* would exceed the frame cap is
-                // answered with a delivered error — never with an
-                // over-cap SortOk that would kill the connection (and
-                // every other job in flight on it).
-                Frame::SortJob(data) if data.len() > super::wire::MAX_SORT_ELEMS => {
-                    let msg = format!(
-                        "sort job of {} elements exceeds the wire cap of {}",
-                        data.len(),
-                        super::wire::MAX_SORT_ELEMS
-                    );
-                    let _ = write(id, &Frame::ErrReply(msg));
+                frame @ (Frame::SortJob(_) | Frame::SortJobTagged(..)) => {
+                    let (tag, data) = match frame {
+                        Frame::SortJob(data) => (None, data),
+                        Frame::SortJobTagged(tag, data) => (Some(tag), data),
+                        _ => unreachable!("guarded by the arm pattern"),
+                    };
+                    // A job whose *reply* would exceed the frame cap is
+                    // answered with a delivered error — never with an
+                    // over-cap SortOk that would kill the connection
+                    // (and every other job in flight on it).
+                    if data.len() > super::wire::MAX_SORT_ELEMS {
+                        let msg = format!(
+                            "sort job of {} elements exceeds the wire cap of {}",
+                            data.len(),
+                            super::wire::MAX_SORT_ELEMS
+                        );
+                        let _ = write(id, &Frame::ErrReply(msg));
+                        continue;
+                    }
+                    let submitted = match &tag {
+                        Some(t) => self.host.submit_tagged(t, data),
+                        None => self.host.submit(data),
+                    };
+                    match submitted {
+                        Ok(rx) => {
+                            // Collector: one thread per in-flight job,
+                            // so replies pipeline in completion order
+                            // while the read loop keeps accepting jobs.
+                            let w = Arc::clone(&w);
+                            std::thread::spawn(move || {
+                                let frame = match rx.recv() {
+                                    Ok(Ok(resp)) => Frame::SortOk(resp),
+                                    Ok(Err(e)) => Frame::ErrReply(format!("{e:#}")),
+                                    // The worker vanished under the job
+                                    // — the wire form of a dropped
+                                    // reply.
+                                    Err(_) => Frame::Dropped,
+                                };
+                                let mut g = w.lock().expect("writer poisoned");
+                                // The connection may already be gone;
+                                // the coordinator then sees the drop
+                                // anyway.
+                                let _ = write_frame(g.as_mut(), id, &frame);
+                            });
+                        }
+                        // Submit rejected: the host is down. Fail
+                        // "fast" the only way a reply channel can — by
+                        // dropping.
+                        Err(_) => {
+                            let _ = write(id, &Frame::Dropped);
+                        }
+                    }
                 }
-                Frame::SortJob(data) => match self.host.submit(data) {
-                    Ok(rx) => {
-                        // Collector: one thread per in-flight job, so
-                        // replies pipeline in completion order while
-                        // the read loop keeps accepting jobs.
-                        let w = Arc::clone(&w);
-                        std::thread::spawn(move || {
-                            let frame = match rx.recv() {
-                                Ok(Ok(resp)) => Frame::SortOk(resp),
-                                Ok(Err(e)) => Frame::ErrReply(format!("{e:#}")),
-                                // The worker vanished under the job —
-                                // the wire form of a dropped reply.
-                                Err(_) => Frame::Dropped,
-                            };
-                            let mut g = w.lock().expect("writer poisoned");
-                            // The connection may already be gone; the
-                            // coordinator then sees the drop anyway.
-                            let _ = write_frame(g.as_mut(), id, &frame);
-                        });
-                    }
-                    // Submit rejected: the host is down. Fail "fast"
-                    // the only way a reply channel can — by dropping.
-                    Err(_) => {
-                        let _ = write(id, &Frame::Dropped);
-                    }
-                },
                 Frame::GetMetrics => write(id, &Frame::MetricsReply(self.host.metrics()))?,
                 Frame::Halt => self.host.halt(),
                 Frame::Restart => {
@@ -178,6 +202,14 @@ impl super::transport::ShardTransport for ShardServer {
         self.host.submit(data)
     }
 
+    fn submit_tagged(
+        &self,
+        tag: &super::frontend::JobTag,
+        data: Vec<u32>,
+    ) -> Result<std::sync::mpsc::Receiver<Result<super::SortResponse>>> {
+        self.host.submit_tagged(tag, data)
+    }
+
     fn metrics(&self) -> super::metrics::Snapshot {
         self.host.metrics()
     }
@@ -203,28 +235,96 @@ impl super::transport::ShardTransport for ShardServer {
     }
 }
 
-/// Accept loop for a TCP-fronted shard host: serve connections one at a
-/// time until a coordinator sends `Shutdown`. This is what
-/// `memsort serve --shard --port N` runs; each accepted connection gets
-/// the full handshake + job loop, and a dropped coordinator only ends
-/// its own connection.
-pub fn serve_tcp(listener: TcpListener, config: ServiceConfig) -> Result<()> {
-    let server = ShardServer::start(config)?;
+/// Accept loop for a TCP-fronted shard host: spawn one session thread
+/// per accepted connection (up to `max_conns` concurrent sessions) and
+/// run until any coordinator sends `Shutdown`. This is what
+/// `memsort serve --shard --port N` runs.
+///
+/// * Each connection gets the full handshake + pipelined job loop; a
+///   dropped coordinator only ends its own session, the host (and every
+///   sibling session) keeps running.
+/// * At the cap, a new connection is *politely* rejected: its `Hello`
+///   is read and answered with an [`Frame::ErrReply`] naming the limit,
+///   so the client sees a typed refusal instead of a hung or reset
+///   socket. The rejection runs on its own thread so a client that
+///   never sends `Hello` cannot wedge the accept loop.
+/// * `Shutdown` on any session shuts the host down, closes every
+///   sibling connection (their in-flight jobs would only observe
+///   [`Frame::Dropped`] from the dead host anyway), unblocks the accept
+///   loop with a self-dial, and joins the remaining sessions.
+pub fn serve_tcp(listener: TcpListener, config: ServiceConfig, max_conns: usize) -> Result<()> {
+    anyhow::ensure!(max_conns >= 1, "a shard server needs at least one connection slot");
+    let server = Arc::new(ShardServer::start(config)?);
+    let addr = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let active = Arc::new(AtomicUsize::new(0));
+    // Raw handles to every live session's stream, keyed by a session
+    // id: Shutdown closes them all to wake sessions parked in a read.
+    let peers: Arc<Mutex<HashMap<u64, TcpStream>>> = Arc::new(Mutex::new(HashMap::new()));
+    let mut sessions = Vec::new();
+    let mut next_session = 0u64;
     for conn in listener.incoming() {
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
         let stream = match conn {
             Ok(s) => s,
             Err(_) => continue,
         };
         let _ = stream.set_nodelay(true);
-        let read = Box::new(stream.try_clone()?) as Box<dyn Read + Send>;
-        let write = Box::new(stream) as Box<dyn Write + Send>;
-        match server.serve_conn(read, write) {
-            Ok(true) => return Ok(()), // coordinator asked for shutdown
-            Ok(false) => continue,     // disconnect; await a reconnect
-            Err(e) => eprintln!("shard connection error: {e:#}"),
+        if active.load(Ordering::SeqCst) >= max_conns {
+            reject_over_cap(stream, max_conns);
+            continue;
         }
+        let sid = next_session;
+        next_session += 1;
+        active.fetch_add(1, Ordering::SeqCst);
+        peers.lock().expect("peers poisoned").insert(sid, stream.try_clone()?);
+        let srv = Arc::clone(&server);
+        let stop = Arc::clone(&stop);
+        let active = Arc::clone(&active);
+        let peers = Arc::clone(&peers);
+        sessions.push(std::thread::spawn(move || {
+            let read = stream.try_clone().map(|s| Box::new(s) as Box<dyn Read + Send>);
+            let outcome = match read {
+                Ok(read) => srv.serve_conn(read, Box::new(stream)),
+                Err(e) => Err(e.into()),
+            };
+            peers.lock().expect("peers poisoned").remove(&sid);
+            active.fetch_sub(1, Ordering::SeqCst);
+            match outcome {
+                Ok(true) => {
+                    // Orderly shutdown: close the siblings, then dial
+                    // ourselves so the accept loop re-checks the flag.
+                    stop.store(true, Ordering::SeqCst);
+                    for (_, peer) in peers.lock().expect("peers poisoned").drain() {
+                        let _ = peer.shutdown(std::net::Shutdown::Both);
+                    }
+                    let _ = TcpStream::connect(addr);
+                }
+                Ok(false) => {} // disconnect; the host awaits a reconnect
+                Err(e) => eprintln!("shard connection error: {e:#}"),
+            }
+        }));
+    }
+    for session in sessions {
+        let _ = session.join();
     }
     Ok(())
+}
+
+/// Politely refuse a connection over the session cap: read its `Hello`
+/// (on a throwaway thread — the client may never send one) and answer
+/// with a typed error naming the limit.
+fn reject_over_cap(mut stream: TcpStream, max_conns: usize) {
+    std::thread::spawn(move || {
+        if let Ok((hid, _)) = read_hello(&mut stream) {
+            let msg = format!(
+                "connection limit reached ({max_conns} active sessions): retry later"
+            );
+            let _ = write_frame(&mut stream, hid, &Frame::ErrReply(msg));
+        }
+    });
 }
 
 #[cfg(test)]
@@ -309,6 +409,153 @@ mod tests {
         let Frame::ErrReply(msg) = frame else { panic!("expected ErrReply, got {frame:?}") };
         assert!(msg.contains("version"), "{msg}");
         assert!(t.join().unwrap().is_err(), "the server drops the connection");
+    }
+
+    #[test]
+    fn tagged_jobs_sort_like_plain_ones() {
+        use super::super::frontend::{JobTag, Priority};
+        let (_server, t, (mut r, mut w)) = start();
+        write_frame(w.as_mut(), 1, &Frame::Hello).unwrap();
+        let _ = read_frame(r.as_mut()).unwrap();
+        let tag = JobTag::new("acme", Priority::Interactive);
+        write_frame(w.as_mut(), 2, &Frame::SortJobTagged(tag, vec![5, 3, 9, 1])).unwrap();
+        let (id, frame) = read_frame(r.as_mut()).unwrap();
+        assert_eq!(id, 2);
+        let Frame::SortOk(resp) = frame else { panic!("expected SortOk, got {frame:?}") };
+        assert_eq!(resp.sorted, vec![1, 3, 5, 9]);
+        write_frame(w.as_mut(), 3, &Frame::Shutdown).unwrap();
+        t.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn v1_coordinators_still_handshake() {
+        // A v1 peer stamps its Hello with version 1; the server must
+        // serve it (v1 kinds all decode), not slam the door.
+        let (_server, t, (mut r, mut w)) = start();
+        let mut hello = encode_frame(1, &Frame::Hello);
+        hello[2] = super::super::wire::MIN_WIRE_VERSION;
+        w.write_all(&hello).unwrap();
+        let (id, frame) = read_frame(r.as_mut()).unwrap();
+        assert_eq!(id, 1);
+        assert!(matches!(frame, Frame::HelloAck(_)), "got {frame:?}");
+        write_frame(w.as_mut(), 2, &Frame::SortJob(vec![2, 1])).unwrap();
+        let (_, frame) = read_frame(r.as_mut()).unwrap();
+        assert!(matches!(frame, Frame::SortOk(_)), "got {frame:?}");
+        write_frame(w.as_mut(), 3, &Frame::Shutdown).unwrap();
+        t.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn restart_drops_only_the_dead_sessions_jobs_and_siblings_recover() {
+        // The multi-connection regression: two sessions share one host.
+        // The host dies; session A observes Dropped for its job, session
+        // B restarts the host over *its* connection — and both sessions
+        // keep working on the same (restarted) host. Neither connection
+        // is torn down by the host's death.
+        let server = Arc::new(
+            ShardServer::start(ServiceConfig { workers: 2, ..Default::default() }).unwrap(),
+        );
+        let mut conns = Vec::new();
+        let mut threads = Vec::new();
+        for id in 0..2u64 {
+            let ((mut r, mut w), (sr, sw)) = duplex();
+            let srv = Arc::clone(&server);
+            threads.push(std::thread::spawn(move || srv.serve_conn(sr, sw)));
+            write_frame(w.as_mut(), id, &Frame::Hello).unwrap();
+            let (_, frame) = read_frame(r.as_mut()).unwrap();
+            assert!(matches!(frame, Frame::HelloAck(_)));
+            conns.push((r, w));
+        }
+        // Kill the host behind both sessions' backs and wait until the
+        // death is observable (no sleeps: submit() rejects when dead).
+        server.host().halt();
+        while server.host().submit(vec![1u32]).is_ok() {
+            std::thread::yield_now();
+        }
+        // Session A's job lands on the dead host: Dropped, session alive.
+        {
+            let (r, w) = &mut conns[0];
+            write_frame(w.as_mut(), 10, &Frame::SortJob(vec![3, 1])).unwrap();
+            assert_eq!(read_frame(r.as_mut()).unwrap(), (10, Frame::Dropped));
+        }
+        // Session B restarts the host through its own connection.
+        {
+            let (r, w) = &mut conns[1];
+            write_frame(w.as_mut(), 20, &Frame::Restart).unwrap();
+            assert_eq!(read_frame(r.as_mut()).unwrap(), (20, Frame::Ack));
+        }
+        // Both sessions sort on the restarted host — the session that
+        // saw the drop did not need to reconnect.
+        for (i, (r, w)) in conns.iter_mut().enumerate() {
+            let id = 30 + i as u64;
+            write_frame(w.as_mut(), id, &Frame::SortJob(vec![9, 4, 6])).unwrap();
+            let (rid, frame) = read_frame(r.as_mut()).unwrap();
+            assert_eq!(rid, id);
+            let Frame::SortOk(resp) = frame else { panic!("conn {i}: {frame:?}") };
+            assert_eq!(resp.sorted, vec![4, 6, 9], "conn {i}");
+        }
+        // One shutdown ends the host; the sibling sees EOF (duplex
+        // close) as a plain disconnect when we drop its connection.
+        let (_, w0) = &mut conns[0];
+        write_frame(w0.as_mut(), 40, &Frame::Shutdown).unwrap();
+        let shutdown_outcome = threads.remove(0).join().unwrap().unwrap();
+        assert!(shutdown_outcome, "session 0 saw Shutdown");
+        drop(conns); // EOF for session 1
+        assert!(!threads.remove(0).join().unwrap().unwrap(), "session 1: plain disconnect");
+    }
+
+    #[test]
+    fn tcp_accept_loop_serves_concurrent_sessions_and_caps_them() {
+        use std::net::TcpStream;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let cfg = ServiceConfig { workers: 2, ..Default::default() };
+        let server = std::thread::spawn(move || serve_tcp(listener, cfg, 2));
+        let dial = || {
+            let s = TcpStream::connect(addr).unwrap();
+            (s.try_clone().unwrap(), s)
+        };
+        // Two concurrent sessions, both fully served.
+        let mut live = Vec::new();
+        for id in 0..2u64 {
+            let (mut r, mut w) = dial();
+            write_frame(&mut w, id, &Frame::Hello).unwrap();
+            let (_, frame) = read_frame(&mut r).unwrap();
+            assert!(matches!(frame, Frame::HelloAck(_)), "conn {id}: {frame:?}");
+            write_frame(&mut w, 100 + id, &Frame::SortJob(vec![2, 1, 3])).unwrap();
+            let (rid, frame) = read_frame(&mut r).unwrap();
+            assert_eq!(rid, 100 + id);
+            assert!(matches!(frame, Frame::SortOk(_)), "conn {id}: {frame:?}");
+            live.push((r, w));
+        }
+        // A third connection is over the cap: polite typed refusal.
+        {
+            let (mut r, mut w) = dial();
+            write_frame(&mut w, 7, &Frame::Hello).unwrap();
+            let (id, frame) = read_frame(&mut r).unwrap();
+            assert_eq!(id, 7);
+            let Frame::ErrReply(msg) = frame else { panic!("expected ErrReply, got {frame:?}") };
+            assert!(msg.contains("connection limit"), "{msg}");
+        }
+        // Free a slot; the next dial is admitted. (The slot release
+        // races the accept of the new dial, so wait for the handshake
+        // to prove admission rather than asserting on the first try.)
+        live.remove(0);
+        let admitted = loop {
+            let (mut r, mut w) = dial();
+            write_frame(&mut w, 8, &Frame::Hello).unwrap();
+            let (_, frame) = read_frame(&mut r).unwrap();
+            match frame {
+                Frame::HelloAck(_) => break (r, w),
+                Frame::ErrReply(_) => std::thread::yield_now(),
+                other => panic!("unexpected {other:?}"),
+            }
+        };
+        let (r, mut w) = admitted;
+        write_frame(&mut w, 9, &Frame::Shutdown).unwrap();
+        drop((r, w));
+        drop(live);
+        server.join().unwrap().unwrap();
     }
 
     #[test]

@@ -36,6 +36,7 @@ use std::sync::{mpsc, Arc, Mutex, RwLock};
 
 use anyhow::{anyhow, Result};
 
+use super::frontend::JobTag;
 use super::metrics::{ServiceMetrics, Snapshot};
 use super::wire::{self, Frame};
 use super::{ServiceConfig, SortResponse, SortService};
@@ -51,6 +52,22 @@ pub trait ShardTransport: Send + Sync {
     /// Submit one sort job; returns the response receiver. Errors when
     /// the host is down (closed channel / dead process).
     fn submit(&self, data: Vec<u32>) -> Result<mpsc::Receiver<Result<SortResponse>>>;
+
+    /// Submit a sort job carrying its request-plane tag (tenant +
+    /// priority). The tag is coordination metadata — the host sorts
+    /// tagged and untagged jobs identically — so the default simply
+    /// forwards to [`ShardTransport::submit`]; a wire transport
+    /// overrides it to carry the tag in the frame
+    /// ([`wire::Frame::SortJobTagged`]) so the remote host's operator
+    /// view keeps the attribution.
+    fn submit_tagged(
+        &self,
+        tag: &JobTag,
+        data: Vec<u32>,
+    ) -> Result<mpsc::Receiver<Result<SortResponse>>> {
+        let _ = tag;
+        self.submit(data)
+    }
 
     /// Full metrics snapshot of the host.
     fn metrics(&self) -> Snapshot;
@@ -83,6 +100,17 @@ pub trait ShardTransport: Send + Sync {
 impl<T: ShardTransport + ?Sized> ShardTransport for std::sync::Arc<T> {
     fn submit(&self, data: Vec<u32>) -> Result<mpsc::Receiver<Result<SortResponse>>> {
         (**self).submit(data)
+    }
+
+    // Forwarded explicitly — the trait default would call *this* Arc's
+    // `submit` and silently bypass an inner override (the remote
+    // transport's tagged frame).
+    fn submit_tagged(
+        &self,
+        tag: &JobTag,
+        data: Vec<u32>,
+    ) -> Result<mpsc::Receiver<Result<SortResponse>>> {
+        (**self).submit_tagged(tag, data)
     }
 
     fn metrics(&self) -> Snapshot {
@@ -362,10 +390,10 @@ impl RemoteTransport {
 /// socket down both ways: a `try_clone`'d fd is only *closed* once
 /// every clone drops, and the transport's reader thread keeps one —
 /// without an explicit shutdown, tearing down a link would never send
-/// a FIN, the serially-accepting shard server would stay blocked on
-/// the dead connection, and a restart's re-dial could never be
-/// accepted. (The in-memory duplex gets the same semantics from
-/// `PipeWriter::drop`.)
+/// a FIN, the server's session thread would stay parked on the dead
+/// connection forever, and the transport's own reader would never see
+/// the EOF that drains its pending replies. (The in-memory duplex gets
+/// the same semantics from `PipeWriter::drop`.)
 struct TcpWriteHalf(std::net::TcpStream);
 
 impl Write for TcpWriteHalf {
@@ -436,22 +464,37 @@ fn reader_loop(
     pending.lock().expect("pending poisoned").clear();
 }
 
+/// Enforce the wire's job cap before writing anything: the *response*
+/// frame (12 B/element with argsort) is the fat direction, and letting
+/// it exceed MAX_PAYLOAD would kill the connection — and every other
+/// job in flight on it.
+fn check_wire_cap(len: usize) -> Result<()> {
+    if len > wire::MAX_SORT_ELEMS {
+        return Err(anyhow!(
+            "sort job of {len} elements exceeds the wire cap of {} (submit it through \
+             the hierarchical pipeline, which chunks to bank size)",
+            wire::MAX_SORT_ELEMS
+        ));
+    }
+    Ok(())
+}
+
 impl ShardTransport for RemoteTransport {
     fn submit(&self, data: Vec<u32>) -> Result<mpsc::Receiver<Result<SortResponse>>> {
-        // Enforce the wire's job cap before writing anything: the
-        // *response* frame (12 B/element with argsort) is the fat
-        // direction, and letting it exceed MAX_PAYLOAD would kill the
-        // connection — and every other job in flight on it.
-        if data.len() > wire::MAX_SORT_ELEMS {
-            return Err(anyhow!(
-                "sort job of {} elements exceeds the wire cap of {} (submit it through \
-                 the hierarchical pipeline, which chunks to bank size)",
-                data.len(),
-                wire::MAX_SORT_ELEMS
-            ));
-        }
+        check_wire_cap(data.len())?;
         let (tx, rx) = mpsc::channel();
         self.send(&Frame::SortJob(data), PendingReply::Sort(tx))?;
+        Ok(rx)
+    }
+
+    fn submit_tagged(
+        &self,
+        tag: &JobTag,
+        data: Vec<u32>,
+    ) -> Result<mpsc::Receiver<Result<SortResponse>>> {
+        check_wire_cap(data.len())?;
+        let (tx, rx) = mpsc::channel();
+        self.send(&Frame::SortJobTagged(tag.clone(), data), PendingReply::Sort(tx))?;
         Ok(rx)
     }
 
@@ -480,13 +523,14 @@ impl ShardTransport for RemoteTransport {
     }
 
     fn restart(&self) -> Result<()> {
-        // Close any existing connection *first*: a shard host serves
-        // one connection at a time (`shard_server::serve_tcp` accepts
-        // serially), so dialling while the old link is open would wait
-        // forever on a handshake the server cannot start. Restart is a
-        // host replacement — in-flight work on the old link was dead
-        // either way, and a failed re-dial leaves the shard down and
-        // known-down, which routing already handles.
+        // Close any existing connection *first*. The shard server
+        // accepts concurrent connections now, so the old link would no
+        // longer block a new handshake — but restart is a host
+        // replacement either way: in-flight work on the old link was
+        // dead, keeping the stale session around would only let its
+        // late replies race the fresh ones, and a failed re-dial must
+        // leave the shard down and known-down, which routing already
+        // handles.
         *self.link.write().expect("transport poisoned") = None;
         // Dial a fresh connection and restart the host through it;
         // only a fully-acknowledged restart installs the new link (and
@@ -755,6 +799,20 @@ mod tests {
         assert_eq!(t.metrics().completed, 1, "a restarted host starts from zero");
         let (mine, hosts) = (t.cyc_per_num_for(2, 7.84), server.host().cyc_per_num_for(2, 7.84));
         assert!((mine - hosts).abs() < 1e-12, "the cost mirror reset with the host");
+        t.shutdown();
+    }
+
+    #[test]
+    fn tagged_submit_crosses_the_wire_and_sorts_identically() {
+        use crate::coordinator::frontend::Priority;
+        let (t, server) = remote_pair();
+        let tag = JobTag::new("acme", Priority::Interactive);
+        let d = Dataset::generate32(DatasetKind::Clustered, 128, 9);
+        let tagged = t.submit_tagged(&tag, d.values.clone()).unwrap().recv().unwrap().unwrap();
+        let plain = server.host().submit(d.values.clone()).unwrap().recv().unwrap().unwrap();
+        assert_eq!(tagged.sorted, plain.sorted, "the tag is metadata, not execution");
+        assert_eq!(tagged.order, plain.order);
+        assert_eq!(t.metrics().completed, 2);
         t.shutdown();
     }
 

@@ -17,7 +17,7 @@
 //! ```text
 //! offset  size  field
 //! 0       2     magic   0x4D53 ("MS")
-//! 2       1     version WIRE_VERSION (1)
+//! 2       1     version the minimum version that can carry this kind
 //! 3       1     kind    frame discriminant (see Frame)
 //! 4       8     id      correlation id (request id; replies echo it)
 //! 12      4     len     payload length in bytes (<= MAX_PAYLOAD)
@@ -25,14 +25,20 @@
 //! ```
 //!
 //! Version negotiation happens once per connection: the client opens
-//! with [`Frame::Hello`] (its version is in the header), the server
-//! answers [`Frame::HelloAck`] carrying its [`ServiceConfig`] — the
-//! coordinator derives the shard's planner geometry and cost reference
-//! from it, so a remote fleet cannot disagree with its hosts — or
-//! [`Frame::ErrReply`] when the version is unsupported. A decoder that
-//! sees a wrong magic or an unknown kind fails the connection rather
-//! than resynchronising: the stream is trusted-transport framing, not a
-//! self-healing radio protocol.
+//! with [`Frame::Hello`] (its build's [`WIRE_VERSION`] is in the
+//! header), the server answers [`Frame::HelloAck`] carrying its
+//! [`ServiceConfig`] — the coordinator derives the shard's planner
+//! geometry and cost reference from it, so a remote fleet cannot
+//! disagree with its hosts — or [`Frame::ErrReply`] when the version is
+//! unsupported. Every *other* frame is stamped with the **minimum**
+//! version able to carry its kind ([`Frame::wire_version`]), and a
+//! reader accepts the whole [`MIN_WIRE_VERSION`]`..=`[`WIRE_VERSION`]
+//! range — so a v1 coordinator still reads a v2 server's replies (all
+//! v1 kinds), while the v2-only [`Frame::SortJobTagged`] is rejected by
+//! a v1 peer at the header, before it can misparse the payload. A
+//! decoder that sees a wrong magic or an unknown kind fails the
+//! connection rather than resynchronising: the stream is
+//! trusted-transport framing, not a self-healing radio protocol.
 //!
 //! Dropped-reply semantics cross the wire intact: a host that dies with
 //! a job in flight answers [`Frame::Dropped`] (or simply closes the
@@ -52,16 +58,24 @@ use std::sync::{Arc, Condvar, Mutex};
 
 use anyhow::{anyhow, bail, Result};
 
+use super::frontend::{JobTag, Priority};
 use super::metrics::Snapshot;
 use super::planner::Geometry;
 use super::{EngineKind, ServiceConfig, SortResponse};
 use crate::sorter::colskip::ColSkipConfig;
 use crate::sorter::SortStats;
 
-/// Protocol version this build speaks. Bumped on any incompatible
-/// header or payload change; the server rejects other versions at
-/// `Hello` time with an [`Frame::ErrReply`].
-pub const WIRE_VERSION: u8 = 1;
+/// Newest protocol version this build speaks. Bumped on any header or
+/// payload change; the server rejects a `Hello` outside
+/// [`MIN_WIRE_VERSION`]`..=WIRE_VERSION` with an [`Frame::ErrReply`].
+/// v2 added [`Frame::SortJobTagged`] (tenant + priority riding on a
+/// sort job, for the coordinator frontend's fair-share admission).
+pub const WIRE_VERSION: u8 = 2;
+
+/// Oldest protocol version this build still speaks. Every v1 kind
+/// encodes byte-identically under v2, so v1 peers interoperate fully —
+/// they just cannot send (or be sent) tagged jobs.
+pub const MIN_WIRE_VERSION: u8 = 1;
 
 /// `0x4D53` — "MS" (memsort), the frame magic.
 pub const WIRE_MAGIC: u16 = 0x4D53;
@@ -119,6 +133,12 @@ pub enum Frame {
     /// Graceful connection + host shutdown. Fire-and-forget; the server
     /// closes the connection after draining.
     Shutdown,
+    /// v2: a sort job carrying its request-plane tag (tenant +
+    /// priority). The host sorts it exactly like a [`Frame::SortJob`] —
+    /// the tag is coordination metadata for the frontend's fair-share
+    /// admission, not an execution parameter — but carrying it on the
+    /// wire lets a remote coordinator's accounting survive the hop.
+    SortJobTagged(JobTag, Vec<u32>),
 }
 
 impl Frame {
@@ -136,6 +156,20 @@ impl Frame {
             Frame::Restart => 9,
             Frame::Ack => 10,
             Frame::Shutdown => 11,
+            Frame::SortJobTagged(..) => 12,
+        }
+    }
+
+    /// The version stamped into this frame's header: the *minimum*
+    /// protocol version that can carry the kind, so a v2 build's v1
+    /// frames stay readable by v1 peers. `Hello` is the exception — it
+    /// advertises the build's newest version, which is the whole point
+    /// of the handshake.
+    pub fn wire_version(&self) -> u8 {
+        match self {
+            Frame::Hello => WIRE_VERSION,
+            Frame::SortJobTagged(..) => 2,
+            _ => MIN_WIRE_VERSION,
         }
     }
 }
@@ -245,6 +279,23 @@ impl<'a> Cursor<'a> {
         }
         Ok(())
     }
+}
+
+fn put_tag(buf: &mut Vec<u8>, tag: &JobTag) {
+    buf.push(match tag.priority {
+        Priority::Interactive => 0,
+        Priority::Batch => 1,
+    });
+    put_str(buf, &tag.tenant);
+}
+
+fn get_tag(c: &mut Cursor) -> Result<JobTag> {
+    let priority = match c.u8()? {
+        0 => Priority::Interactive,
+        1 => Priority::Batch,
+        b => bail!("unknown priority discriminant {b}"),
+    };
+    Ok(JobTag { tenant: c.str()?, priority })
 }
 
 fn put_u32_slice(buf: &mut Vec<u8>, v: &[u32]) {
@@ -434,11 +485,15 @@ pub fn encode_frame(id: u64, frame: &Frame) -> Vec<u8> {
         Frame::SortOk(resp) => put_response(&mut payload, resp),
         Frame::ErrReply(msg) => put_str(&mut payload, msg),
         Frame::MetricsReply(snap) => put_snapshot(&mut payload, snap),
+        Frame::SortJobTagged(tag, data) => {
+            put_tag(&mut payload, tag);
+            put_u32_slice(&mut payload, data);
+        }
     }
     debug_assert!(payload.len() <= MAX_PAYLOAD as usize, "oversized frame payload");
     let mut buf = Vec::with_capacity(16 + payload.len());
     buf.extend_from_slice(&WIRE_MAGIC.to_le_bytes());
-    buf.push(WIRE_VERSION);
+    buf.push(frame.wire_version());
     buf.push(frame.kind());
     buf.extend_from_slice(&id.to_le_bytes());
     buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
@@ -457,14 +512,19 @@ pub fn write_frame(w: &mut dyn Write, id: u64, frame: &Frame) -> io::Result<()> 
 /// EOF, a short read, bad magic, an unsupported version on a non-Hello
 /// frame, or a malformed payload; framing never resynchronises.
 ///
-/// A `Hello` whose header carries a *different* version is returned as
-/// `(id, Frame::Hello)` with the version in the error position — see
-/// [`read_hello`] — so the server can answer with a versioned
-/// rejection; every other frame requires an exact version match.
+/// Any version in [`MIN_WIRE_VERSION`]`..=`[`WIRE_VERSION`] is
+/// accepted — frames are stamped with the minimum version carrying
+/// their kind, so a v1 peer's whole vocabulary decodes here and this
+/// build's v1-kind frames decode there. Use [`read_hello`] for the
+/// connection opener, which tolerates *future* versions so the server
+/// can reject them politely.
 pub fn read_frame(r: &mut dyn Read) -> Result<(u64, Frame)> {
     let (id, version, kind, payload) = read_raw(r)?;
-    if version != WIRE_VERSION {
-        bail!("unsupported wire version {version} (this build speaks {WIRE_VERSION})");
+    if !(MIN_WIRE_VERSION..=WIRE_VERSION).contains(&version) {
+        bail!(
+            "unsupported wire version {version} (this build speaks \
+             {MIN_WIRE_VERSION}..={WIRE_VERSION})"
+        );
     }
     decode(id, kind, &payload)
 }
@@ -514,6 +574,10 @@ fn decode(id: u64, kind: u8, payload: &[u8]) -> Result<(u64, Frame)> {
         9 => Frame::Restart,
         10 => Frame::Ack,
         11 => Frame::Shutdown,
+        12 => {
+            let tag = get_tag(&mut c)?;
+            Frame::SortJobTagged(tag, get_u32_vec(&mut c)?)
+        }
         k => bail!("unknown frame kind {k}"),
     };
     c.finish()?;
@@ -677,6 +741,14 @@ mod tests {
             Frame::Restart,
             Frame::Ack,
             Frame::Shutdown,
+            Frame::SortJobTagged(
+                JobTag { tenant: "acme".into(), priority: Priority::Interactive },
+                vec![3, 1, 2],
+            ),
+            Frame::SortJobTagged(
+                JobTag { tenant: String::new(), priority: Priority::Batch },
+                Vec::new(),
+            ),
         ];
         for (i, frame) in frames.into_iter().enumerate() {
             let id = 0x1234_5678_9ABC_DEF0 ^ i as u64;
@@ -684,6 +756,38 @@ mod tests {
             assert_eq!(rid, id);
             assert_eq!(rframe, frame);
         }
+    }
+
+    #[test]
+    fn frames_are_stamped_with_their_minimum_version() {
+        // Every v1 kind keeps the v1 stamp, so a v1 peer reads a v2
+        // build's replies; only the tagged job (and the advertising
+        // Hello) carry v2.
+        let tag = JobTag { tenant: "t".into(), priority: Priority::Batch };
+        assert_eq!(encode_frame(1, &Frame::Hello)[2], WIRE_VERSION);
+        assert_eq!(encode_frame(1, &Frame::SortJobTagged(tag, vec![1]))[2], 2);
+        for frame in [
+            Frame::SortJob(vec![1]),
+            Frame::SortOk(sample_response()),
+            Frame::ErrReply("e".into()),
+            Frame::Dropped,
+            Frame::GetMetrics,
+            Frame::Halt,
+            Frame::Restart,
+            Frame::Ack,
+            Frame::Shutdown,
+        ] {
+            assert_eq!(encode_frame(1, &frame)[2], MIN_WIRE_VERSION, "{frame:?}");
+        }
+        // And the whole supported range decodes.
+        let mut bytes = encode_frame(7, &Frame::SortJob(vec![9]));
+        for v in MIN_WIRE_VERSION..=WIRE_VERSION {
+            bytes[2] = v;
+            assert_eq!(read_frame(&mut &bytes[..]).unwrap().1, Frame::SortJob(vec![9]));
+        }
+        // Version 0 (below the floor) is rejected like a future one.
+        bytes[2] = 0;
+        assert!(read_frame(&mut &bytes[..]).unwrap_err().to_string().contains("version"));
     }
 
     #[test]
@@ -744,6 +848,14 @@ mod tests {
             worker: 0,
         };
         assert_eq!(encode_frame(1, &Frame::SortOk(resp)).len(), 112 + 12 * n);
+        // A tagged job adds the 1-byte priority and the length-prefixed
+        // tenant to the v1 job frame: 33 + t + 4n bytes.
+        let tag = JobTag { tenant: "tenant-7".into(), priority: Priority::Batch };
+        let t = tag.tenant.len();
+        assert_eq!(
+            encode_frame(1, &Frame::SortJobTagged(tag, vec![0u32; n])).len(),
+            33 + t + 4 * n
+        );
         // The job cap is derived from the response model: the largest
         // accepted job's reply still fits the payload cap, and one
         // more element would not.

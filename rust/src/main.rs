@@ -10,10 +10,14 @@
 //! * `scale`  — out-of-bank scaling sweep of the hierarchical pipeline
 //! * `report` — headline paper-vs-measured summary (abstract numbers)
 //! * `serve`  — run the sort service demo (native/pjrt/hybrid engines)
+//! * `stress` — concurrent clients through the fair-share admission plane
 
 use anyhow::{anyhow, bail, Result};
 
+use std::sync::Arc;
+
 use memsort::cli::Args;
+use memsort::coordinator::frontend::{AdmitError, Frontend, FrontendConfig, JobTag, Priority};
 use memsort::coordinator::hierarchical::{Capacity, HierarchicalConfig};
 use memsort::coordinator::planner::Geometry;
 use memsort::coordinator::shard::{
@@ -48,6 +52,7 @@ fn main() {
         Some("scale") => cmd_scale(&args),
         Some("report") => cmd_report(&args),
         Some("serve") => cmd_serve(&args),
+        Some("stress") => cmd_stress(&args),
         Some("trace") => cmd_trace(&args),
         Some("energy") => cmd_energy(&args),
         Some(other) => {
@@ -91,7 +96,11 @@ fn usage() {
                     --retry-budget T bounds failover hops (default 10\n\
                     tokens, +0.1/success), --hedge re-issues stragglers\n\
                     to the next-best shard after the model-derived\n\
-                    deadline [--hedge-mult 4 --hedge-floor-us 20000])\n\
+                    deadline [--hedge-mult 4 --hedge-floor-us 20000];\n\
+                    --tenant NAME --priority <interactive|batch> on a\n\
+                    fleet submits one tagged request through the\n\
+                    fair-share admission plane instead of the\n\
+                    hierarchical fan-out)\n\
            gen     --dataset <kind> --n 1024 --seed 42\n\
            stats   --dataset <kind> --n 1024 --seed 42\n\
            fig     --id <6|7|8a|8b> [--trials 5] [--n 1024] [--json]\n\
@@ -105,9 +114,17 @@ fn usage() {
            serve   --engine <native|pjrt|hybrid> --workers 4\n\
                    --requests 64 --n 1024 [--artifacts artifacts]\n\
                    (--shard [--host 127.0.0.1] [--port 7600]\n\
-                   [--geometry 1024x32] runs a wire shard host serving\n\
-                   the RPC protocol instead of the local demo —\n\
-                   see rust/OPERATIONS.md for the wire format)\n\
+                   [--geometry 1024x32] [--max-conns 8] runs a wire\n\
+                   shard host serving the RPC protocol to up to\n\
+                   --max-conns concurrent coordinators instead of the\n\
+                   local demo — see rust/OPERATIONS.md for the wire\n\
+                   format)\n\
+           stress  --clients 8 --requests 32 --n 1024 [--shards 2]\n\
+                   [--workers 2] [--max-outstanding 64]\n\
+                   [--tenant-cap 16] [--seed 42]\n\
+                   (concurrent clients through one shared admission\n\
+                   plane: interactive/batch mix, prints admitted/shed\n\
+                   counters and throughput)\n\
            trace   --dataset <kind> --n 8 --width 8 --k 2 [--iters 6]\n\
                    (Fig. 2/3-style near-memory circuit schedule)\n\
            energy  --dataset <kind> --n 1024 --k 2\n\
@@ -219,11 +236,15 @@ fn cmd_sort(args: &Args) -> Result<()> {
         Capacity::Auto => true,
         Capacity::Fixed(c) => d.values.len() > c,
     };
-    let hier = match name {
-        "colskip" => exceeds,
-        "multibank" => args.get("capacity").is_some() && exceeds,
-        _ => false,
-    };
+    // A tagged request always goes through the service stack (the tag
+    // rides the request plane, which an inline sorter does not have).
+    let tagged = args.get("tenant").is_some() || args.get("priority").is_some();
+    let hier = tagged
+        || match name {
+            "colskip" => exceeds,
+            "multibank" => args.get("capacity").is_some() && exceeds,
+            _ => false,
+        };
     if hier {
         return cmd_sort_hierarchical(args, &d, width, k, banks, capacity);
     }
@@ -329,6 +350,13 @@ fn cmd_sort_hierarchical(
             }
             None => ShardedSortService::start(ShardedConfig { route, services, resilience })?,
         };
+        // `--tenant` / `--priority` reroute the request through the
+        // fair-share admission plane as one tagged job — the
+        // request-plane path a multi-tenant client of `serve --shard`
+        // takes — instead of the hierarchical fan-out.
+        if args.get("tenant").is_some() || args.get("priority").is_some() {
+            return cmd_sort_tagged(args, d, fleet, remote.is_some());
+        }
         let t0 = std::time::Instant::now();
         let sharded = fleet.sort_hierarchical(&d.values, &cfg)?;
         let wall = t0.elapsed();
@@ -343,6 +371,9 @@ fn cmd_sort_hierarchical(
         let extras = (sharded.sharded_latency_cycles, sharded.shard_chunks.clone(), snap);
         (sharded.hier, Some(extras), wall)
     } else {
+        if args.get("tenant").is_some() || args.get("priority").is_some() {
+            bail!("--tenant/--priority ride the request plane over a fleet: add --shards N or --connect");
+        }
         let svc = SortService::start(services.into_iter().next().expect("one shard"))?;
         let t0 = std::time::Instant::now();
         let out = svc.sort_hierarchical(&d.values, &cfg)?;
@@ -421,6 +452,148 @@ fn cmd_sort_hierarchical(
     println!("area (model)  : {:.1} Kµm²", out.area_kum2);
     println!("power (model) : {:.1} mW", out.power_mw);
     println!("host wall     : {:.1} ms", wall.as_secs_f64() * 1e3);
+    Ok(())
+}
+
+/// `sort --tenant/--priority` on a fleet: one tagged request through
+/// the fair-share admission plane ([`Frontend`]), the path a
+/// multi-tenant client takes, instead of the hierarchical fan-out.
+fn cmd_sort_tagged(
+    args: &Args,
+    d: &Dataset,
+    fleet: ShardedSortService,
+    remote: bool,
+) -> Result<()> {
+    let tenant = args.get_or("tenant", "anon").to_string();
+    let priority = args.parse_num("priority", Priority::Batch)?;
+    let tag = JobTag::new(tenant, priority);
+    let fe = Frontend::new(fleet, FrontendConfig::default())?;
+    let t0 = std::time::Instant::now();
+    let resp = fe.sort(&tag, d.values.clone())?;
+    let wall = t0.elapsed();
+    let n = d.values.len();
+    let mut check = d.values.clone();
+    check.sort_unstable();
+    println!(
+        "request plane : tagged sort as tenant `{}`, {} class",
+        tag.tenant,
+        tag.priority.name()
+    );
+    println!("dataset       : {} (n={n}, seed={})", d.kind.name(), d.seed);
+    println!("correct       : {}", resp.sorted == check);
+    println!(
+        "served by     : worker {} in {} µs ({} simulated cycles)",
+        resp.worker,
+        resp.latency_us,
+        resp.stats.cycles()
+    );
+    let adm = fe.admission();
+    println!(
+        "admission     : {} admitted, {} shed saturated, {} tenant-capped",
+        adm.admitted,
+        adm.shed_batch + adm.shed_interactive,
+        adm.shed_tenant_cap
+    );
+    println!("host wall     : {:.1} ms", wall.as_secs_f64() * 1e3);
+    if remote {
+        // Operator-started shard hosts outlive the sort.
+        fe.into_fleet().disconnect();
+    } else {
+        fe.shutdown();
+    }
+    Ok(())
+}
+
+/// Concurrency stress: `--clients` threads each push `--requests`
+/// tagged sorts through one shared [`Frontend`] over an in-process
+/// fleet. Even-numbered clients run interactive, odd batch, so a
+/// saturated run shows the shed ordering live.
+fn cmd_stress(args: &Args) -> Result<()> {
+    let clients = args.parse_num("clients", 8usize)?;
+    let requests = args.parse_num("requests", 32usize)?;
+    let n = args.parse_size("n", 1024)?;
+    let shards = args.parse_num("shards", 2usize)?;
+    let workers = args.parse_num("workers", 2usize)?;
+    let seed = args.parse_num("seed", 42u64)?;
+    let max_outstanding = args.parse_num("max-outstanding", 64usize)?;
+    let tenant_cap = args.parse_num("tenant-cap", 16usize)?;
+    let route = args.parse_num("route", RoutePolicy::RoundRobin)?;
+    if clients == 0 || requests == 0 {
+        bail!("--clients and --requests must be at least 1");
+    }
+    let fleet = ShardedSortService::start(ShardedConfig::uniform(
+        shards,
+        route,
+        ServiceConfig { workers, ..Default::default() },
+    ))?;
+    let fe = Arc::new(Frontend::new(
+        fleet,
+        FrontendConfig { max_outstanding, tenant_cap, ..Default::default() },
+    )?);
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..clients {
+        let fe = Arc::clone(&fe);
+        handles.push(std::thread::spawn(move || -> Result<(u64, u64, u64)> {
+            let class = if c % 2 == 0 { Priority::Interactive } else { Priority::Batch };
+            let tag = JobTag::new(format!("client-{c}"), class);
+            let (mut ok, mut shed, mut elems) = (0u64, 0u64, 0u64);
+            for r in 0..requests {
+                let s = seed + (c * requests + r) as u64;
+                let data = Dataset::generate32(DatasetKind::MapReduce, n, s).values;
+                match fe.sort(&tag, data) {
+                    Ok(resp) => {
+                        ok += 1;
+                        elems += resp.sorted.len() as u64;
+                    }
+                    // Shed load is the expected outcome under pressure,
+                    // not a failure of the run.
+                    Err(e) if e.downcast_ref::<AdmitError>().is_some() => shed += 1,
+                    Err(e) => return Err(e),
+                }
+            }
+            Ok((ok, shed, elems))
+        }));
+    }
+    let (mut ok, mut shed, mut elems) = (0u64, 0u64, 0u64);
+    for h in handles {
+        let (o, s, e) = h.join().expect("stress client panicked")?;
+        ok += o;
+        shed += s;
+        elems += e;
+    }
+    let wall = t0.elapsed();
+    let adm = fe.admission();
+    let snap = fe.fleet_metrics();
+    println!(
+        "stress        : {clients} clients x {requests} requests of {n} \
+         ({shards} shards, {workers} workers/shard, {})",
+        route.name()
+    );
+    println!("served        : {ok} ok, {shed} shed, {elems} elements");
+    println!(
+        "admission     : {} admitted, {} shed saturated ({} batch / {} interactive), \
+         {} tenant-capped, {} overdraft spends",
+        adm.admitted,
+        adm.shed_batch + adm.shed_interactive,
+        adm.shed_batch,
+        adm.shed_interactive,
+        adm.shed_tenant_cap,
+        adm.overdraft_spent
+    );
+    println!(
+        "fleet         : {} completed, {} errors, imbalance {:.2}, \
+         worst p50/p99 {}/{} µs",
+        snap.completed, snap.errors, snap.imbalance, snap.p50_us, snap.p99_us
+    );
+    println!(
+        "throughput    : {:.2} Mnum/s over {:.1} ms wall",
+        elems as f64 / wall.as_secs_f64() / 1e6,
+        wall.as_secs_f64() * 1e3
+    );
+    if let Ok(fe) = Arc::try_unwrap(fe) {
+        fe.shutdown();
+    }
     Ok(())
 }
 
@@ -874,17 +1047,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         let host = args.get_or("host", "127.0.0.1");
         let port = args.parse_num("port", 7600u16)?;
+        let max_conns = args.parse_num("max-conns", 8usize)?;
         let listener = std::net::TcpListener::bind((host, port))
             .map_err(|e| anyhow!("binding {host}:{port}: {e}"))?;
         println!(
-            "shard host on {} ({} workers, geometry {}x{}, engine {})",
+            "shard host on {} ({} workers, geometry {}x{}, engine {}, \
+             up to {max_conns} concurrent coordinators)",
             listener.local_addr()?,
             cfg.workers,
             cfg.geometry.largest_bank(),
             cfg.geometry.width,
             engine.name()
         );
-        return memsort::coordinator::shard_server::serve_tcp(listener, cfg);
+        return memsort::coordinator::shard_server::serve_tcp(listener, cfg, max_conns);
     }
     let svc = SortService::start(ServiceConfig {
         workers,

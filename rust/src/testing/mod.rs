@@ -4,8 +4,19 @@
 //!
 //! Used by `rust/tests/proptests.rs` to check the coordinator/sorter
 //! invariants the paper relies on (output sortedness, permutation
-//! property, cycle-count bounds, multi-bank equivalence).
+//! property, cycle-count bounds, multi-bank equivalence), and by
+//! `rust/tests/concurrency.rs` via the deterministic multi-client
+//! driver ([`run_interleaved`]) for the concurrent request plane.
 
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::frontend::JobTag;
+use crate::coordinator::shard_server::ShardServer;
+use crate::coordinator::wire::{duplex, read_frame, write_frame, Frame};
+use crate::coordinator::SortResponse;
 use crate::datasets::rng::Rng;
 
 /// Configuration for a property run.
@@ -126,6 +137,111 @@ fn shrink(case: &Case, prop: &impl Fn(&Case) -> Result<(), String>) -> Case {
     cur
 }
 
+/// One client's scripted workload for [`run_interleaved`]: the jobs it
+/// submits, in order, and the tag they travel under (`None` sends plain
+/// v1 `SortJob` frames; `Some` sends tagged v2 frames).
+#[derive(Clone, Debug)]
+pub struct ClientScript {
+    pub tag: Option<JobTag>,
+    pub jobs: Vec<Vec<u32>>,
+}
+
+/// Drive `K` concurrent clients against one [`ShardServer`] over
+/// in-memory duplex connections with a **seeded** interleaving, and
+/// return each client's replies in its own submission order.
+///
+/// Determinism without sleeps: a single scheduler thread owns every
+/// client handle and repeatedly asks the seeded [`Rng`] which client
+/// acts next and whether it *sends* its next job or *collects* one
+/// outstanding reply (collecting blocks on the duplex until the
+/// server's collector thread writes the reply — a rendezvous, not a
+/// timing guess). Replies are keyed by correlation id, so the per-job
+/// association is exact even when the shared worker pool completes
+/// jobs out of submission order. Every schedule for a given seed sends
+/// the same frames in the same global order; the only nondeterminism
+/// left is the server's internal completion order, which the
+/// correlation ids make invisible to the caller.
+///
+/// Sessions end as plain disconnects (the host stays up), so callers
+/// can inspect the server afterwards or run another wave.
+pub fn run_interleaved(
+    server: &Arc<ShardServer>,
+    clients: &[ClientScript],
+    seed: u64,
+) -> Result<Vec<Vec<SortResponse>>> {
+    let mut rng = Rng::new(seed);
+    // Dial every client over its own duplex; each connection is served
+    // by its own session thread against the shared host.
+    let mut conns = Vec::new();
+    let mut sessions = Vec::new();
+    for (ci, _) in clients.iter().enumerate() {
+        let ((mut r, mut w), (sr, sw)) = duplex();
+        let srv = Arc::clone(server);
+        sessions.push(std::thread::spawn(move || srv.serve_conn(sr, sw)));
+        write_frame(w.as_mut(), 0, &Frame::Hello)?;
+        let (_, frame) = read_frame(r.as_mut())?;
+        anyhow::ensure!(
+            matches!(frame, Frame::HelloAck(_)),
+            "client {ci}: handshake answered {frame:?}"
+        );
+        conns.push((r, w));
+    }
+    let mut sent = vec![0usize; clients.len()];
+    let mut collected = vec![0usize; clients.len()];
+    let mut stash: Vec<HashMap<u64, SortResponse>> =
+        clients.iter().map(|_| HashMap::new()).collect();
+    loop {
+        // Legal moves this step: any client with jobs left to send, any
+        // client with more sent than collected.
+        let mut moves: Vec<(usize, bool)> = Vec::new();
+        for ci in 0..clients.len() {
+            if sent[ci] < clients[ci].jobs.len() {
+                moves.push((ci, true));
+            }
+            if collected[ci] < sent[ci] {
+                moves.push((ci, false));
+            }
+        }
+        let Some(&(ci, send)) = moves.get(rng.below(moves.len().max(1) as u64) as usize)
+        else {
+            break; // everything sent and collected
+        };
+        if send {
+            let id = sent[ci] as u64 + 1; // 0 was the Hello
+            let data = clients[ci].jobs[sent[ci]].clone();
+            let frame = match &clients[ci].tag {
+                Some(tag) => Frame::SortJobTagged(tag.clone(), data),
+                None => Frame::SortJob(data),
+            };
+            write_frame(conns[ci].1.as_mut(), id, &frame)?;
+            sent[ci] += 1;
+        } else {
+            let (id, frame) = read_frame(conns[ci].0.as_mut())?;
+            let Frame::SortOk(resp) = frame else {
+                anyhow::bail!("client {ci}, reply {id}: expected SortOk, got {frame:?}")
+            };
+            stash[ci].insert(id, resp);
+            collected[ci] += 1;
+        }
+    }
+    drop(conns); // EOF on every duplex: sessions end as plain disconnects
+    for (ci, session) in sessions.into_iter().enumerate() {
+        let outcome = session.join().expect("session thread panicked");
+        anyhow::ensure!(
+            matches!(outcome, Ok(false)),
+            "client {ci}: session ended {outcome:?}, expected a plain disconnect"
+        );
+    }
+    Ok(stash
+        .into_iter()
+        .map(|m| {
+            let mut replies: Vec<(u64, SortResponse)> = m.into_iter().collect();
+            replies.sort_by_key(|&(id, _)| id);
+            replies.into_iter().map(|(_, resp)| resp).collect()
+        })
+        .collect())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -165,6 +281,28 @@ mod tests {
         let min = shrink(&case, &prop);
         assert_eq!(min.values.len(), 1, "{min:?}");
         assert!(min.values[0] >= 8 && min.values[0] <= 12, "{min:?}");
+    }
+
+    #[test]
+    fn interleaved_clients_get_their_own_replies_back() {
+        use crate::coordinator::frontend::Priority;
+        use crate::coordinator::ServiceConfig;
+        let server = Arc::new(
+            ShardServer::start(ServiceConfig { workers: 2, ..Default::default() }).unwrap(),
+        );
+        let scripts = vec![
+            ClientScript { tag: None, jobs: vec![vec![3, 1, 2], vec![9, 7]] },
+            ClientScript {
+                tag: Some(JobTag::new("acme", Priority::Interactive)),
+                jobs: vec![vec![5, 5, 0]],
+            },
+        ];
+        let replies = run_interleaved(&server, &scripts, 42).unwrap();
+        assert_eq!(replies[0][0].sorted, vec![1, 2, 3]);
+        assert_eq!(replies[0][1].sorted, vec![7, 9]);
+        assert_eq!(replies[1][0].sorted, vec![0, 5, 5]);
+        assert_eq!(server.host().metrics().completed, 3, "one shared host served all");
+        server.host().shutdown();
     }
 
     #[test]

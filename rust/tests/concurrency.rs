@@ -1,0 +1,321 @@
+//! Integration tests for the concurrent request plane: the
+//! multi-connection shard server driven by the deterministic
+//! multi-client harness ([`memsort::testing::run_interleaved`]), and
+//! the [`Frontend`] admission plane (priority shedding, tenant caps,
+//! cross-request coalescing).
+//!
+//! Everything here is sleep-free: interleavings come from a seeded
+//! scheduler, saturation from held permits, and host death from
+//! observable submit rejection — never from timing guesses.
+
+use std::sync::Arc;
+
+use memsort::coordinator::frontend::{
+    AdmitError, Frontend, FrontendConfig, JobTag, Priority,
+};
+use memsort::coordinator::shard::{
+    RetryBudgetConfig, RoutePolicy, ShardedConfig, ShardedSortService,
+};
+use memsort::coordinator::shard_server::ShardServer;
+use memsort::coordinator::ServiceConfig;
+use memsort::datasets::rng::Rng;
+use memsort::datasets::{Dataset, DatasetKind};
+use memsort::testing::{run_interleaved, ClientScript};
+
+const KINDS: [DatasetKind; 5] = [
+    DatasetKind::Uniform,
+    DatasetKind::Normal,
+    DatasetKind::Clustered,
+    DatasetKind::Kruskal,
+    DatasetKind::MapReduce,
+];
+
+fn server() -> Arc<ShardServer> {
+    Arc::new(ShardServer::start(ServiceConfig { workers: 2, ..Default::default() }).unwrap())
+}
+
+fn fleet(shards: usize) -> ShardedSortService {
+    ShardedSortService::start(ShardedConfig::uniform(
+        shards,
+        RoutePolicy::RoundRobin,
+        ServiceConfig { workers: 2, ..Default::default() },
+    ))
+    .unwrap()
+}
+
+/// The reference result: a stable sort and its argsort (duplicates in
+/// ascending original index — the sorter's pinned drain order).
+fn stable_sorted(data: &[u32]) -> (Vec<u32>, Vec<usize>) {
+    let mut idx: Vec<usize> = (0..data.len()).collect();
+    idx.sort_by_key(|&i| (data[i], i));
+    (idx.iter().map(|&i| data[i]).collect(), idx)
+}
+
+/// The tentpole property: K ≥ 4 clients interleaved over one shared
+/// host — any dataset kind, any priority mix, tagged and untagged
+/// frames — get responses byte-identical in `(sorted, order)` to the
+/// same scripts run solo on a fresh host. Seeded interleavings, no
+/// sleeps; the correlation ids carry the per-job association.
+#[test]
+fn interleaved_clients_are_byte_identical_to_solo_runs() {
+    let mut rng = Rng::new(0xC0FFEE);
+    for round in 0..10u64 {
+        let scripts: Vec<ClientScript> = (0..4)
+            .map(|c| {
+                let jobs: Vec<Vec<u32>> = (0..1 + rng.below(3))
+                    .map(|_| {
+                        let kind = KINDS[rng.below(KINDS.len() as u64) as usize];
+                        let n = 1 + rng.below(300) as usize;
+                        Dataset::generate32(kind, n, rng.next_u64()).values
+                    })
+                    .collect();
+                let tag = match rng.below(3) {
+                    0 => None, // plain v1 frames in the same mix
+                    1 => Some(JobTag::new(format!("tenant-{c}"), Priority::Interactive)),
+                    _ => Some(JobTag::new(format!("tenant-{c}"), Priority::Batch)),
+                };
+                ClientScript { tag, jobs }
+            })
+            .collect();
+        let shared = server();
+        let interleaved = run_interleaved(&shared, &scripts, 0x5EED ^ round).unwrap();
+        let total_jobs: usize = scripts.iter().map(|s| s.jobs.len()).sum();
+        assert_eq!(shared.host().metrics().completed, total_jobs as u64, "round {round}");
+        shared.host().shutdown();
+        for (ci, script) in scripts.iter().enumerate() {
+            let solo_host = server();
+            let solo = run_interleaved(&solo_host, std::slice::from_ref(script), 1).unwrap();
+            solo_host.host().shutdown();
+            assert_eq!(interleaved[ci].len(), solo[0].len(), "round {round} client {ci}");
+            for (j, (a, b)) in interleaved[ci].iter().zip(&solo[0]).enumerate() {
+                assert_eq!(a.sorted, b.sorted, "round {round} client {ci} job {j}");
+                assert_eq!(a.order, b.order, "round {round} client {ci} job {j}");
+            }
+        }
+    }
+}
+
+/// Same scripts + same seed = same schedule and same results, run to
+/// run: the harness is a reproduction tool, not a stress blender.
+#[test]
+fn harness_schedules_are_reproducible() {
+    let scripts: Vec<ClientScript> = (0..4)
+        .map(|c| ClientScript {
+            tag: Some(JobTag::new(format!("t{c}"), Priority::ALL[c % 2])),
+            jobs: (0..3)
+                .map(|j| Dataset::generate32(DatasetKind::Clustered, 64, c as u64 * 10 + j).values)
+                .collect(),
+        })
+        .collect();
+    let runs: Vec<_> = (0..2)
+        .map(|_| {
+            let s = server();
+            let replies = run_interleaved(&s, &scripts, 0xD5).unwrap();
+            s.host().shutdown();
+            replies
+        })
+        .collect();
+    for (ci, (a, b)) in runs[0].iter().zip(&runs[1]).enumerate() {
+        for (j, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.sorted, y.sorted, "client {ci} job {j}");
+            assert_eq!(x.order, y.order, "client {ci} job {j}");
+        }
+    }
+}
+
+/// Pinned shed ordering under saturation: batch sheds immediately,
+/// interactive rides the overdraft while it holds tokens, then sheds
+/// too; a released permit re-arms exactly one overdraft admission.
+#[test]
+fn saturation_sheds_batch_first_then_interactive_overdraft() {
+    let fe = Frontend::new(
+        fleet(2),
+        FrontendConfig {
+            max_outstanding: 2,
+            tenant_cap: 16,
+            overdraft: RetryBudgetConfig { capacity: 2.0, deposit: 1.0 },
+            coalesce_elems: 0,
+        },
+    )
+    .unwrap();
+    let it = |t: &str| JobTag::new(t, Priority::Interactive);
+    let bt = |t: &str| JobTag::new(t, Priority::Batch);
+
+    // Fill to the cap.
+    let _p1 = fe.try_admit(&it("a")).unwrap();
+    let p2 = fe.try_admit(&it("b")).unwrap();
+    // Batch sheds first, with the numbers in the error.
+    assert_eq!(
+        fe.try_admit(&bt("c")).unwrap_err(),
+        AdmitError::Saturated { priority: Priority::Batch, outstanding: 2, limit: 2 }
+    );
+    // Interactive rides the overdraft: exactly `capacity` admissions.
+    let _p3 = fe.try_admit(&it("c")).unwrap();
+    let _p4 = fe.try_admit(&it("d")).unwrap();
+    assert_eq!(
+        fe.try_admit(&it("e")).unwrap_err(),
+        AdmitError::Saturated { priority: Priority::Interactive, outstanding: 4, limit: 2 }
+    );
+    assert!(matches!(fe.try_admit(&bt("c")), Err(AdmitError::Saturated { .. })));
+    // One release deposits one token: one more interactive admission,
+    // batch still sheds (the frontend is still saturated).
+    drop(p2);
+    assert!(matches!(fe.try_admit(&bt("c")), Err(AdmitError::Saturated { .. })));
+    let _p5 = fe.try_admit(&it("e")).unwrap();
+    assert!(matches!(
+        fe.try_admit(&it("f")),
+        Err(AdmitError::Saturated { priority: Priority::Interactive, .. })
+    ));
+
+    let adm = fe.admission();
+    assert_eq!(adm.admitted, 5);
+    assert_eq!(adm.overdraft_spent, 3);
+    assert_eq!(adm.shed_batch, 3);
+    assert_eq!(adm.shed_interactive, 2);
+    assert_eq!(adm.overdraft_tokens, 0.0);
+    // The shed counters surface on the fleet snapshot too.
+    let snap = fe.fleet_metrics();
+    assert_eq!(snap.admitted, 5);
+    assert_eq!(snap.shed_saturated, 5);
+    assert_eq!(snap.shed_tenant_cap, 0);
+    fe.shutdown();
+}
+
+/// A tenant-cap breach is a typed, immediate error — never a hang and
+/// never a hidden queue — and it caps *that tenant only*.
+#[test]
+fn tenant_cap_is_a_typed_error_not_a_hang() {
+    let fe = Frontend::new(
+        fleet(2),
+        FrontendConfig { tenant_cap: 2, max_outstanding: 64, ..Default::default() },
+    )
+    .unwrap();
+    let acme = JobTag::new("acme", Priority::Interactive);
+    let _p1 = fe.try_admit(&acme).unwrap();
+    let _p2 = fe.try_admit(&acme).unwrap();
+    // The typed error survives the anyhow boundary of sort().
+    let err = fe.sort(&acme, vec![3, 1, 2]).unwrap_err();
+    assert_eq!(
+        err.downcast_ref::<AdmitError>(),
+        Some(&AdmitError::TenantCap { tenant: "acme".into(), cap: 2 })
+    );
+    // A capped tenant is refused even though the frontend is idle by
+    // every other measure — and other tenants sail through.
+    let resp = fe.sort(&JobTag::new("other", Priority::Batch), vec![9, 7, 8]).unwrap();
+    assert_eq!(resp.sorted, vec![7, 8, 9]);
+    assert_eq!(fe.admission().shed_tenant_cap, 1);
+    assert_eq!(fe.fleet_metrics().shed_tenant_cap, 1);
+    fe.shutdown();
+}
+
+/// Once shed traffic's cause drains, the frontend re-admits: shedding
+/// is a state, not a death sentence.
+#[test]
+fn drained_frontend_readmits_shed_classes() {
+    let fe = Frontend::new(
+        fleet(2),
+        FrontendConfig {
+            max_outstanding: 1,
+            tenant_cap: 16,
+            // No overdraft: interactive sheds at saturation too.
+            overdraft: RetryBudgetConfig { capacity: 0.0, deposit: 0.0 },
+            coalesce_elems: 0,
+        },
+    )
+    .unwrap();
+    let bt = JobTag::new("acme", Priority::Batch);
+    let it = JobTag::new("acme", Priority::Interactive);
+    let permit = fe.try_admit(&bt).unwrap();
+    assert!(matches!(fe.try_admit(&bt), Err(AdmitError::Saturated { .. })));
+    assert!(matches!(fe.try_admit(&it), Err(AdmitError::Saturated { .. })));
+    drop(permit); // the fleet drains
+    let resp = fe.sort(&bt, vec![2, 1]).unwrap();
+    assert_eq!(resp.sorted, vec![1, 2]);
+    let resp = fe.sort(&it, vec![5, 4]).unwrap();
+    assert_eq!(resp.sorted, vec![4, 5]);
+    assert_eq!(fe.admission().outstanding, 0);
+    fe.shutdown();
+}
+
+/// Coalescing identity: every rider of a carrier gets exactly its solo
+/// stable sort back — `(sorted, order)` both — across uneven tails,
+/// duplicate values shared between riders, an exact-cap pack, and an
+/// oversized job that must travel plain.
+#[test]
+fn coalesced_batch_responses_match_solo_stable_sorts() {
+    let fe = Frontend::new(
+        fleet(2),
+        FrontendConfig { coalesce_elems: 64, ..Default::default() },
+    )
+    .unwrap();
+    let mut rng = Rng::new(7);
+    let mut jobs: Vec<(JobTag, Vec<u32>)> = Vec::new();
+    // Duplicate-heavy interactive pack: 17 + 13 + 30 = 60 < 64, an
+    // uneven tail on the carrier. Values from a pool of 8 guarantee
+    // cross-rider duplicates, so the split-back's stability is earning
+    // its keep.
+    for (t, n) in [("a", 17usize), ("b", 13), ("a", 30)] {
+        let data: Vec<u32> = (0..n).map(|_| rng.below(8) as u32).collect();
+        jobs.push((JobTag::new(t, Priority::Interactive), data));
+    }
+    // Batch class: an exact-cap rider (64 alone fills a carrier), an
+    // oversized job that must go plain, and two small riders that pack.
+    jobs.push((
+        JobTag::new("c", Priority::Batch),
+        Dataset::generate32(DatasetKind::Kruskal, 64, 11).values,
+    ));
+    jobs.push((
+        JobTag::new("c", Priority::Batch),
+        Dataset::generate32(DatasetKind::Uniform, 100, 12).values,
+    ));
+    jobs.push((
+        JobTag::new("d", Priority::Batch),
+        Dataset::generate32(DatasetKind::Clustered, 20, 13).values,
+    ));
+    jobs.push((JobTag::new("d", Priority::Batch), vec![5, 5, 5, 1]));
+
+    let results = fe.sort_batch(jobs.clone());
+    assert_eq!(results.len(), jobs.len());
+    for (i, result) in results.iter().enumerate() {
+        let resp = result.as_ref().unwrap_or_else(|e| panic!("job {i}: {e:#}"));
+        let (sorted, order) = stable_sorted(&jobs[i].1);
+        assert_eq!(resp.sorted, sorted, "job {i}");
+        assert_eq!(resp.order, order, "job {i}");
+    }
+    let adm = fe.admission();
+    assert!(adm.coalesced_batches >= 2, "both classes packed: {adm:?}");
+    assert!(adm.coalesced_requests >= 5, "{adm:?}");
+    assert!(
+        (adm.coalesced_requests as usize) < jobs.len(),
+        "the oversized job must have travelled plain: {adm:?}"
+    );
+    assert_eq!(adm.outstanding, 0, "every rider released its permit");
+    fe.shutdown();
+}
+
+/// A shed rider inside a batch keeps its typed error while its pack
+/// siblings still sort — per-rider admission, not per-pack.
+#[test]
+fn shed_riders_do_not_sink_their_pack() {
+    let fe = Frontend::new(
+        fleet(2),
+        FrontendConfig { tenant_cap: 1, max_outstanding: 64, coalesce_elems: 64, ..Default::default() },
+    )
+    .unwrap();
+    // Three same-class riders from one tenant with cap 1: riders are
+    // admitted one at a time *while their permits are held for the
+    // pack*, so only the first fits; the other two carry TenantCap.
+    let jobs = vec![
+        (JobTag::new("acme", Priority::Batch), vec![3u32, 1]),
+        (JobTag::new("acme", Priority::Batch), vec![9u32, 7]),
+        (JobTag::new("zeta", Priority::Batch), vec![6u32, 2]),
+    ];
+    let results = fe.sort_batch(jobs);
+    assert_eq!(results[0].as_ref().unwrap().sorted, vec![1, 3]);
+    assert_eq!(
+        results[1].as_ref().unwrap_err().downcast_ref::<AdmitError>(),
+        Some(&AdmitError::TenantCap { tenant: "acme".into(), cap: 1 })
+    );
+    assert_eq!(results[2].as_ref().unwrap().sorted, vec![2, 6]);
+    fe.shutdown();
+}
