@@ -9,19 +9,25 @@ source), the closed forms and the event scheduler behind:
 * ``model_streamed_completion_uniform`` (closed form, equal arrivals),
 * ``model_sharded_completion`` / ``model_sharded_completion_hetero``
   (per-shard engines draining in parallel + one cross-shard merge),
-* ``apportion_chunks`` (largest-remainder deal),
+* ``apportion_chunks`` (largest-remainder deal, degenerate weights
+  clamped),
+* ``planner::schedule`` (the unified fleet-schedule layer: W(c, f)
+  merge work, per-lane ready/drain times, the lexicographic deal score
+  and the completion-balanced steepest-descent search),
 * ``planner::shard_model`` + ``Plan::estimated_cycles_hetero``
-  (streaming side).
+  (completion-balanced streaming side) and its arrival-balanced legacy
+  form.
 
 Running this file prints the pinned numbers used by the Rust tests and
-the EXPERIMENTS.md §Heterogeneous shard scaling table, so a reviewer
-without a Rust toolchain can still validate the models:
+the EXPERIMENTS.md §Heterogeneous shard scaling table, and hard-asserts
+every pin, so a reviewer without a Rust toolchain can still validate
+the models — and CI fails on any Rust-vs-mirror drift:
 
     python3 python/fleet_model.py
 """
 
 from fractions import Fraction
-from math import floor
+from math import floor, isfinite
 
 
 def model_merge_passes(runs: int, fanout: int) -> int:
@@ -120,8 +126,14 @@ def model_sharded_completion(chunks: int, length: int, arrival: int, shards: int
 
 def apportion_chunks(chunks: int, weights) -> list:
     """Largest-remainder deal; ties go to the lower shard id. Uses exact
-    rational quotas so the mirror has no float-tie ambiguity."""
-    sane = [Fraction(w).limit_denominator(10**12) if (w == w and w > 0) else Fraction(0)
+    rational quotas so the mirror has no float-tie ambiguity.
+
+    Degenerate weights (NaN, infinities, zero, negative) are clamped to
+    zero exactly as in the Rust model (``is_finite() && w > 0``); an
+    all-degenerate vector falls back to uniform, so every chunk is
+    always dealt. (An earlier revision let ``+inf`` through the filter,
+    which raised on ``Fraction(inf)`` instead of clamping.)"""
+    sane = [Fraction(w).limit_denominator(10**12) if (isfinite(w) and w > 0) else Fraction(0)
             for w in weights]
     if sum(sane) == 0:
         sane = [Fraction(1)] * len(weights)
@@ -239,8 +251,9 @@ def shard_model(bank: int, fanout: int, largest_bank: int, cyc: float):
 
 
 def hetero_streamed(n: int, bank: int, fanout: int, shards, cyc=7.84) -> int:
-    """Streaming Plan::estimated_cycles_hetero for a ChunkMerge plan:
-    `shards` is a list of (largest_bank, cyc_per_num)."""
+    """Streaming ``Plan::estimated_cycles_hetero_arrival_balanced`` for a
+    ChunkMerge plan — the legacy weight-proportional deal. `shards` is a
+    list of (largest_bank, cyc_per_num)."""
     chunks = -(-n // bank)
     models = [shard_model(bank, fanout, lb, c) for (lb, c) in shards]
     deal = apportion_chunks(chunks, [w for (_, w, _) in models])
@@ -253,47 +266,222 @@ def hetero_streamed(n: int, bank: int, fanout: int, shards, cyc=7.84) -> int:
         fanout)
 
 
+# --- planner::schedule mirror --------------------------------------------
+#
+# The Rust schedule layer derives every fleet number from one timeline:
+#
+#     dispatch ──► colskip ──► arrival ──► merge-drain ──► fleet completion
+#
+# These functions mirror `planner::schedule` exactly: `uniform_merge_work`
+# is W(c, f), `lane_drains` prices each shard's serialized engine, and
+# `completion_balanced_deal` is the steepest-descent search behind the
+# new `Plan::estimated_cycles_hetero` streaming arm.
+
+
+def uniform_merge_work(chunks: int, fanout: int) -> int:
+    """W(c, f): per-unit-length real-merge stream work of the fixed
+    fanout-f tree over `chunks` equal runs (schedule::uniform_merge_work)."""
+    if chunks == 0:
+        return 0
+    counts = [1] * chunks
+    work = 0
+    while len(counts) > 1:
+        nxt = []
+        for i in range(0, len(counts), fanout):
+            g = counts[i:i + fanout]
+            c = sum(g)
+            if len(g) > 1:
+                work += c
+            nxt.append(c)
+        counts = nxt
+    return work
+
+
+def lane_ready(c: int, a: int, o: int) -> int:
+    """When a shard dealt `c` chunks has its LAST run ready: arrival plus
+    one oversize assembly pass per further chunk (schedule::Lane)."""
+    return a + (c - 1) * o if c > 0 else a
+
+
+def lane_drains(length, deal, models, fanout, wmemo):
+    """Per-shard merge-drain times (0 for empty lanes); `wmemo` memoizes
+    W(c, f) across scoring calls."""
+    drains = []
+    for c, (a, w, o) in zip(deal, models):
+        if c == 0:
+            drains.append(0)
+            continue
+        if c not in wmemo:
+            wmemo[c] = uniform_merge_work(c, fanout)
+        drains.append(lane_ready(c, a, o) + wmemo[c] * length)
+    return drains
+
+
+def fleet_completion(length, deal, models, fanout, wmemo):
+    """Fleet completion of a deal: each non-empty lane contributes a
+    (drain, c*length) leaf to the cross-shard merge engine
+    (schedule::FleetSchedule::from_deal)."""
+    drains = lane_drains(length, deal, models, fanout, wmemo)
+    leaves = [(d, c * length) for (d, c) in zip(drains, deal) if c > 0]
+    return model_streamed_completion(leaves, fanout)
+
+
+def deal_score(length, deal, models, fanout, wmemo):
+    """(fleet completion, per-lane drains sorted descending).
+
+    The secondary key lets descent walk across completion plateaus
+    (two tied-max lanes: moving a chunk off one leaves the max on its
+    twin, so completion alone never strictly improves)."""
+    drains = lane_drains(length, deal, models, fanout, wmemo)
+    leaves = [(d, c * length) for (d, c) in zip(drains, deal) if c > 0]
+    return (model_streamed_completion(leaves, fanout),
+            tuple(sorted(drains, reverse=True)))
+
+
+def completion_balanced_deal(chunks, models, length, fanout):
+    """Mirror of ``schedule::completion_balanced_deal``: seed with the
+    arrival-proportional deal, then steepest descent over single-chunk
+    moves scored lexicographically by `deal_score`. Identical fleets
+    return the seed untouched (the uniform-reduction guard)."""
+    deal = apportion_chunks(chunks, [w for (_, w, _) in models])
+    if chunks == 0 or all(m == models[0] for m in models):
+        return deal
+    wmemo = {}
+    best = deal_score(length, deal, models, fanout, wmemo)
+    n = len(models)
+    for _ in range(2 * chunks * n):
+        move = None
+        for i in range(n):
+            if deal[i] == 0:
+                continue
+            for j in range(n):
+                if i == j:
+                    continue
+                deal[i] -= 1
+                deal[j] += 1
+                s = deal_score(length, deal, models, fanout, wmemo)
+                deal[i] += 1
+                deal[j] -= 1
+                if s < best and (move is None or s < move[0]):
+                    move = (s, i, j)
+        if move is None:
+            break
+        best = move[0]
+        i, j = move[1], move[2]
+        deal[i] -= 1
+        deal[j] += 1
+    return deal
+
+
+def hetero_arrival(n: int, bank: int, fanout: int, shards, cyc_ignored=None):
+    """(deal, completion) of the legacy arrival-balanced schedule —
+    FleetSchedule::arrival_balanced. `shards` is (largest_bank, cyc)."""
+    chunks = -(-n // bank)
+    models = [shard_model(bank, fanout, lb, c) for (lb, c) in shards]
+    deal = apportion_chunks(chunks, [w for (_, w, _) in models])
+    return deal, fleet_completion(bank, deal, models, fanout, {})
+
+
+def hetero_completion(n: int, bank: int, fanout: int, shards, cyc_ignored=None):
+    """(deal, completion) of the completion-balanced schedule — the new
+    streaming ``Plan::estimated_cycles_hetero`` path
+    (FleetSchedule::completion_balanced)."""
+    chunks = -(-n // bank)
+    models = [shard_model(bank, fanout, lb, c) for (lb, c) in shards]
+    deal = completion_balanced_deal(chunks, models, bank, fanout)
+    return deal, fleet_completion(bank, deal, models, fanout, {})
+
+
+def pin(got, want, tag):
+    """Hard pin: any drift between this mirror and the Rust models is a
+    CI failure, not a warning."""
+    assert got == want, f"{tag}: mirror {got} != pinned {want}"
+    return got
+
+
 def main():
     print("== cross-checks for the Rust unit tests ==")
     print("merge::hetero_model_penalizes_slow_shards (len=1024, fanout=4):")
-    print("  uniform 8x2@8028 :", model_sharded_completion(8, 1024, 8028, 2, 4))
+    print("  uniform 8x2@8028 :",
+          pin(model_sharded_completion(8, 1024, 8028, 2, 4), 20_316, "hetero uniform"))
     print("  even (4,8028)(4,16056):",
-          model_sharded_completion_hetero(1024, [(4, 8028), (4, 16056)], 4))
+          pin(model_sharded_completion_hetero(1024, [(4, 8028), (4, 16056)], 4),
+              28_344, "hetero even"))
     print("  skew (5,8028)(3,16056):",
-          model_sharded_completion_hetero(1024, [(5, 8028), (3, 16056)], 4))
+          pin(model_sharded_completion_hetero(1024, [(5, 8028), (3, 16056)], 4),
+              27_320, "hetero skew"))
+
+    print("merge::degenerate_weight_deals_account_for_every_chunk:")
+    pin(apportion_chunks(4, [float("inf"), 2.0]), [0, 4], "deal inf")
+    pin(apportion_chunks(4, [-3.0, 2.0]), [0, 4], "deal negative")
+    pin(apportion_chunks(5, [float("nan"), float("inf"), -1.0]), [2, 2, 1],
+        "deal all-degenerate")
+    pin(apportion_chunks(6, [float("-inf"), -0.0, 0.0]), [2, 2, 2], "deal zeros")
+    pin(apportion_chunks(0, [float("nan")] * 2), [0, 0], "deal empty")
+    print("  degenerate weights clamp as in Rust: OK")
 
     print("planner::hetero_fleet_scores_worse_with_a_slow_shard "
           "(n=50k, bank=1024, fanout=4):")
-    print("  uniform  :", hetero_streamed(50_000, 1024, 4, [(1024, 7.84)] * 2))
-    print("  mixed    :", hetero_streamed(50_000, 1024, 4,
-                                          [(1024, 7.84), (1024, 15.68)]))
-    print("  all-slow :", hetero_streamed(50_000, 1024, 4, [(1024, 15.68)] * 2))
+    uniform = [(1024, 7.84)] * 2
+    mixed = [(1024, 7.84), (1024, 15.68)]
+    all_slow = [(1024, 15.68)] * 2
+    print("  uniform  :", pin(hetero_streamed(50_000, 1024, 4, uniform),
+                              133_980, "50k uniform"))
+    print("  mixed (legacy arrival-balanced):",
+          pin(hetero_streamed(50_000, 1024, 4, mixed), 157_532, "50k mixed legacy"))
+    print("  all-slow :", pin(hetero_streamed(50_000, 1024, 4, all_slow),
+                              142_008, "50k all-slow"))
+    deal, cycles = hetero_completion(50_000, 1024, 4, mixed)
+    pin(cycles, 138_076, "50k mixed balanced")
+    pin(deal, [26, 23], "50k mixed balanced deal")
+    print(f"  mixed (completion-balanced)    : {cycles} (deal {deal})")
 
     print("uniform reduction spot-check (n=1M, bank=1024, fanout=4, cyc=7.84):")
     chunks = -(-1_000_000 // 1024)
     arrival = round_half_away(1024 * 7.84)
+    sharded_pins = {1: 5_008_220, 2: 3_511_132, 3: 2_671_452, 4: 2_010_972}
     for s in [1, 2, 3, 4, 8, 16]:
         uni = model_sharded_completion(chunks, 1024, arrival, s, 4)
         het = hetero_streamed(1_000_000, 1024, 4, [(1024, 7.84)] * s)
         assert uni == het, (s, uni, het)
+        _, bal = hetero_completion(1_000_000, 1024, 4, [(1024, 7.84)] * s)
+        assert uni == bal, (s, uni, bal)
+        if s in sharded_pins:
+            pin(uni, sharded_pins[s], f"sharded s={s}")
         print(f"  shards={s:2d}: {uni}")
 
     print()
     print("== EXPERIMENTS.md §Heterogeneous shard scaling "
           "(n=1M, bank=1024, fanout=4) ==")
-    fleets = {
-        "4x nominal (7.84)": [(1024, 7.84)] * 4,
-        "2x nominal + 2x half-speed (15.68)": [(1024, 7.84)] * 2 + [(1024, 15.68)] * 2,
-        "4x half-speed (15.68)": [(1024, 15.68)] * 4,
-        "2x 1024-bank + 2x 512-bank (7.84)": [(1024, 7.84)] * 2 + [(512, 7.84)] * 2,
-        "1x nominal + 3x half-speed": [(1024, 7.84)] + [(1024, 15.68)] * 3,
-    }
-    for name, shards in fleets.items():
-        cycles = hetero_streamed(1_000_000, 1024, 4, shards)
-        models = [shard_model(1024, 4, lb, c) for (lb, c) in shards]
-        deal = apportion_chunks(chunks, [w for (_, w, _) in models])
-        print(f"  {name:38s}: {cycles:>9d} cycles "
-              f"({cycles / 1_000_000:.3f} cyc/num, deal {deal})")
+    # Each row pins BOTH generations: the legacy arrival-balanced deal
+    # (kept in EXPERIMENTS.md for comparison) and the completion-balanced
+    # schedule the planner now routes on. The acceptance criterion —
+    # completion-balanced never loses — is asserted per row.
+    fleets = [
+        ("4x nominal (7.84)", [(1024, 7.84)] * 4,
+         2_010_972, 2_010_972, [245, 244, 244, 244]),
+        ("2x nominal + 2x half-speed (15.68)",
+         [(1024, 7.84)] * 2 + [(1024, 15.68)] * 2,
+         2_671_452, 2_011_832, [245, 245, 244, 243]),
+        ("4x half-speed (15.68)", [(1024, 15.68)] * 4,
+         2_019_000, 2_019_000, [245, 244, 244, 244]),
+        ("2x 1024-bank + 2x 512-bank (7.84)",
+         [(1024, 7.84)] * 2 + [(512, 7.84)] * 2,
+         2_325_340, 2_200_412, [256, 256, 233, 232]),
+        ("1x nominal + 3x half-speed", [(1024, 7.84)] + [(1024, 15.68)] * 3,
+         3_003_228, 2_011_832, [245, 244, 244, 244]),
+    ]
+    for name, shards, want_arr, want_bal, want_deal in fleets:
+        legacy_deal, legacy = hetero_arrival(1_000_000, 1024, 4, shards)
+        deal, balanced = hetero_completion(1_000_000, 1024, 4, shards)
+        pin(hetero_streamed(1_000_000, 1024, 4, shards), legacy, f"{name} legacy path")
+        pin(legacy, want_arr, f"{name} arrival-balanced")
+        pin(balanced, want_bal, f"{name} completion-balanced")
+        pin(deal, want_deal, f"{name} deal")
+        assert balanced <= legacy, (name, balanced, legacy)
+        saved = 100 * (legacy - balanced) / legacy
+        print(f"  {name:38s}: arrival {legacy:>9d} (deal {legacy_deal}) -> "
+              f"completion {balanced:>9d} (deal {deal}, saved {saved:.1f}%)")
 
     print()
     print("== EXPERIMENTS.md §Remote transport ==")
@@ -304,8 +492,10 @@ def main():
               f"({frame_bytes_job(n) / n:.2f} B/elem), "
               f"SortOk {frame_bytes_ok(n)} B ({frame_bytes_ok(n) / n:.2f} B/elem)")
     print("hedge deadline (merge::model_hedge_deadline, bank=1024, cyc=7.84):")
-    for mult in [1.0, 4.0]:
-        print(f"  mult={mult}: {model_hedge_deadline(1024, 7.84, mult, 0)} cycles")
+    for mult, want in [(1.0, 8_028), (2.0, 16_056), (4.0, 32_113)]:
+        print(f"  mult={mult}: "
+              f"{pin(model_hedge_deadline(1024, 7.84, mult, 0), want, f'hedge x{mult}')}"
+              " cycles")
     print("hedging under a 25% slow-shard mixture (mult=4, hedge-once, "
           "fresh draw = nominal):")
     for factor in [2.0, 4.0, 8.0, float("inf")]:
@@ -336,11 +526,14 @@ def main():
               f"{100 * saved / solo:.1f}%)")
     print("concurrent makespan (one host, workers=4, 32 jobs/client, "
           "bank=1024, cyc=7.84):")
+    makespan_pins = {1: 64_224, 2: 128_448, 4: 256_896, 8: 513_792}
     for c in [1, 2, 4, 8]:
-        m = concurrent_makespan(c, 32, 1024, 4, 7.84)
+        m = pin(concurrent_makespan(c, 32, 1024, 4, 7.84), makespan_pins[c],
+                f"makespan C={c}")
         agg = c * 32 * 1024 / m
         print(f"  C={c}: makespan {m:>7d} cycles, aggregate {agg:.3f} elem/cyc, "
               f"per-client {agg / c:.3f}")
+    pin(concurrent_makespan(1, 3, 1024, 2, 7.84), 16_056, "makespan 3-job/2-worker")
 
 
 if __name__ == "__main__":

@@ -7,7 +7,7 @@
 
 use memsort::bench::run;
 use memsort::coordinator::hierarchical::HierarchicalConfig;
-use memsort::coordinator::planner::Geometry;
+use memsort::coordinator::planner::{schedule::FleetSchedule, shard_model, Geometry};
 use memsort::coordinator::shard::{RoutePolicy, ShardedConfig, ShardedSortService};
 use memsort::coordinator::{ServiceConfig, SortService};
 use memsort::datasets::{Dataset, DatasetKind};
@@ -148,6 +148,36 @@ fn main() {
             ..Default::default()
         })
         .collect();
+    // Schedule-layer reference for the measured numbers below: the
+    // deterministic fleet timeline at the nominal cyc/num, both deal
+    // generations (EXPERIMENTS.md §Heterogeneous shard scaling).
+    {
+        let (cap, fanout) = (1024usize, 4usize);
+        let chunks = n.div_ceil(cap);
+        let models: Vec<_> = hetero_services
+            .iter()
+            .map(|s| {
+                shard_model(cap, fanout, &s.geometry, memsort::params::NOMINAL_COLSKIP_CYC_PER_NUM)
+            })
+            .collect();
+        let legacy = FleetSchedule::arrival_balanced(chunks, cap, &models, fanout);
+        let balanced = FleetSchedule::completion_balanced(chunks, cap, &models, fanout);
+        println!(
+            "    schedule model @ n=1M: arrival-balanced {} cycles (deal {:?}) -> \
+             completion-balanced {} cycles (deal {:?})",
+            legacy.completion(),
+            legacy.deal(),
+            balanced.completion(),
+            balanced.deal()
+        );
+        for lane in balanced.lanes() {
+            println!(
+                "      shard {}: {} chunks, colskip {}, first arrival {}, last ready {}, \
+                 merge drain {}",
+                lane.shard, lane.chunks, lane.colskip(), lane.arrival, lane.ready, lane.drain
+            );
+        }
+    }
     for route in [RoutePolicy::RoundRobin, RoutePolicy::Cost] {
         let fleet = ShardedSortService::start(ShardedConfig {
             route,

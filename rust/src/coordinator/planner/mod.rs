@@ -18,7 +18,11 @@
 //! executes it with any [`InMemorySorter`] factory. The full
 //! out-of-bank pipeline — worker-pool chunk sorting plus aggregated
 //! stats/cost — lives in [`super::hierarchical`]; this module is the
-//! shared planning arithmetic.
+//! shared planning arithmetic. The latency arithmetic itself — the
+//! event timeline every completion/deadline/makespan number derives
+//! from — lives in the [`schedule`] submodule.
+
+pub mod schedule;
 
 use std::ops::Range;
 
@@ -26,9 +30,11 @@ use anyhow::{anyhow, Result};
 
 use crate::sorter::merge::{
     apportion_chunks, merge_sorted_runs, model_merge_cycles, model_sharded_completion,
-    model_sharded_completion_hetero, model_streamed_completion_uniform,
+    model_streamed_completion_uniform,
 };
 use crate::sorter::{InMemorySorter, SortStats};
+
+use schedule::FleetSchedule;
 
 /// Fixed hardware geometry the planner targets.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -175,16 +181,21 @@ impl Plan {
     }
 
     /// Estimated latency on a *heterogeneous* fleet, one [`ShardModel`]
-    /// per healthy shard: chunks are dealt in proportion to the shard
-    /// weights ([`apportion_chunks`]), every shard drains its share
-    /// through its own merge engine from its own arrival cycle, and a
-    /// cross-shard merge combines the streams. A pad is one bank on one
-    /// host, so the cheapest shard serves it. With identical shard
-    /// models this reduces exactly to
+    /// per healthy shard: the streamed schedule deals chunks
+    /// **completion-balanced**
+    /// ([`schedule::completion_balanced_deal`]) — per-shard merge
+    /// serialization is folded into the deal, so the fleet is scored by
+    /// when the last shard *drains*, not when its chunks arrive — every
+    /// shard drains its share through its own merge engine from its own
+    /// arrival cycle, and a cross-shard merge combines the streams. A
+    /// pad is one bank on one host, so the cheapest shard serves it.
+    /// With identical shard models this reduces exactly to
     /// [`Plan::estimated_cycles_sharded`] (`streaming = true`) /
     /// [`Plan::estimated_cycles_sharded_barrier`] (`false`) — pinned by
     /// `prop_hetero_scoring_reduces_to_uniform` and
-    /// `hetero_scoring_reduces_to_uniform_models`.
+    /// `hetero_scoring_reduces_to_uniform_models`. The legacy
+    /// arrival-balanced streamed score stays callable as
+    /// [`Plan::estimated_cycles_hetero_arrival_balanced`].
     pub fn estimated_cycles_hetero(&self, shards: &[ShardModel], streaming: bool) -> f64 {
         assert!(!shards.is_empty(), "a fleet has at least one shard");
         match *self {
@@ -193,23 +204,12 @@ impl Plan {
                 .map(|s| bank as f64 * s.cyc_per_num + s.oversize as f64)
                 .fold(f64::INFINITY, f64::min),
             Plan::ChunkMerge { bank, chunks, fanout, .. } => {
-                let weights: Vec<f64> = shards.iter().map(|s| s.weight).collect();
-                let counts = apportion_chunks(chunks, &weights);
                 if streaming {
-                    // The assembly pass of an oversized chunk runs on
-                    // the shard's serialized merge engine, so it is
-                    // charged once per dealt chunk: `arrival` covers
-                    // the first chunk, each further chunk adds one
-                    // `oversize`.
-                    let deal: Vec<(usize, u64)> = counts
-                        .iter()
-                        .zip(shards)
-                        .map(|(&c, s)| {
-                            (c, s.arrival + (c as u64).saturating_sub(1) * s.oversize)
-                        })
-                        .collect();
-                    model_sharded_completion_hetero(bank, &deal, fanout) as f64
+                    FleetSchedule::completion_balanced(chunks, bank, shards, fanout).completion()
+                        as f64
                 } else {
+                    let weights: Vec<f64> = shards.iter().map(|s| s.weight).collect();
+                    let counts = apportion_chunks(chunks, &weights);
                     // Barrier fleet: every active shard barriers on its
                     // own chunks (sort + per-chunk assembly + local
                     // merge passes), then the cross-shard merge
@@ -228,6 +228,26 @@ impl Plan {
                         .fold(0.0f64, f64::max);
                     worst + model_merge_cycles(bank * chunks, active, fanout) as f64
                 }
+            }
+        }
+    }
+
+    /// The pre-schedule-layer streamed hetero score: chunks dealt by
+    /// reciprocal-arrival weights only
+    /// ([`schedule::arrival_balanced_deal`]), merge drain ignored by
+    /// the deal. Kept callable so the old EXPERIMENTS table stays
+    /// reproducible and the arrival-vs-completion comparison stays
+    /// pinned (`hetero_fleet_table_is_pinned`); everything that routes
+    /// traffic uses [`Plan::estimated_cycles_hetero`].
+    pub fn estimated_cycles_hetero_arrival_balanced(&self, shards: &[ShardModel]) -> f64 {
+        assert!(!shards.is_empty(), "a fleet has at least one shard");
+        match *self {
+            Plan::Pad { bank, .. } => shards
+                .iter()
+                .map(|s| bank as f64 * s.cyc_per_num + s.oversize as f64)
+                .fold(f64::INFINITY, f64::min),
+            Plan::ChunkMerge { bank, chunks, fanout, .. } => {
+                FleetSchedule::arrival_balanced(chunks, bank, shards, fanout).completion() as f64
             }
         }
     }
@@ -254,9 +274,10 @@ pub struct ShardModel {
 /// the arrival is `bank · cyc` rounded, plus — when the bank exceeds
 /// the shard's tallest physical bank — the merge passes that host needs
 /// to assemble an oversized chunk out of its own banks. `arrival`
-/// covers the *first* chunk; [`Plan::estimated_cycles_hetero`] charges
-/// one further `oversize` per additional dealt chunk, because the
-/// assembly shares the shard's serialized merge engine. The weight is
+/// covers the *first* chunk; the schedule layer
+/// ([`schedule::FleetSchedule`]) charges one further `oversize` per
+/// additional dealt chunk, because the assembly shares the shard's
+/// serialized merge engine. The weight is
 /// the reciprocal arrival, so [`apportion_chunks`] deals chunks in
 /// proportion to how fast each shard produces them. With one shared
 /// geometry and cost this is the uniform model's arrival exactly.
@@ -404,8 +425,9 @@ pub fn auto_tune_sharded(
 /// union of every shard's bank ladder and scored with
 /// [`Plan::estimated_cycles_hetero`] over the per-shard models
 /// ([`shard_model`]), so geometry diversity shapes both where chunks go
-/// (arrival-weighted deal) and what chunk size wins (oversize penalty
-/// on undersized hosts). When every shard shares one geometry and cost
+/// (completion-balanced deal — merge silicon is in the objective, per
+/// [`schedule::completion_balanced_deal`]) and what chunk size wins
+/// (oversize penalty on undersized hosts). When every shard shares one geometry and cost
 /// function, the candidate set, scores, iteration order and tie-breaks
 /// all coincide with the uniform tuner, so the pick is *identical* to
 /// `auto_tune_sharded(n, geo, geos.len(), …)` — pinned by
@@ -893,14 +915,16 @@ mod tests {
     #[test]
     fn hetero_fleet_scores_worse_with_a_slow_shard() {
         // Replacing one of two nominal shards with a half-speed host
-        // must never improve the streamed score. Hand-traced under the
-        // scheduler (and mirrored in python/fleet_model.py): uniform
-        // deals [25, 24]; mixed weights deal [33, 16] onto the fast
-        // host. Note mixed is allowed to score *worse* than all-slow:
-        // the reciprocal-arrival deal models chunk production rates,
-        // not the superlinear per-shard merge work, and overloading the
-        // fast host's serialized engine is exactly the behaviour the
-        // model must expose (cf. the 8-shard regression).
+        // must never improve the streamed score — and under the
+        // completion-balanced deal a mixed fleet must also beat an
+        // all-slow one (it has strictly faster silicon available). The
+        // legacy arrival-balanced deal inverted that ordering: weights
+        // model chunk production rates, not the superlinear per-shard
+        // merge work, so it overloaded the fast host's serialized
+        // engine ([33, 16] → 157,532 > all-slow's 142,008). The
+        // schedule layer's deal ([26, 23]) restores uniform < mixed <
+        // all_slow; both generations stay pinned (mirrored in
+        // python/fleet_model.py).
         let c = candidate(50_000, 1024, 4);
         let geo = Geometry::default();
         let fast = shard_model(1024, 4, &geo, 7.84);
@@ -909,33 +933,52 @@ mod tests {
         let mixed = c.estimated_cycles_hetero(&[fast, slow], true);
         let all_slow = c.estimated_cycles_hetero(&[slow, slow], true);
         assert_eq!(uniform, 133_980.0);
-        assert_eq!(mixed, 157_532.0);
+        assert_eq!(mixed, 138_076.0);
         assert_eq!(all_slow, 142_008.0);
-        assert!(uniform < mixed && uniform < all_slow);
+        assert!(uniform < mixed && mixed < all_slow);
+        // The legacy deal's inversion, pinned via the arrival-balanced
+        // path (the regression the refactor exists to fix).
+        let legacy_mixed = c.estimated_cycles_hetero_arrival_balanced(&[fast, slow]);
+        assert_eq!(legacy_mixed, 157_532.0);
+        assert!(legacy_mixed > all_slow, "the old deal lost to an all-slow fleet");
     }
 
     #[test]
     fn hetero_fleet_table_is_pinned() {
         // EXPERIMENTS.md §Heterogeneous shard scaling: n = 1M over 977
-        // banks of 1024 at fanout 4. Values cross-checked against the
-        // independent mirror in python/fleet_model.py.
-        let score = |shards: &[(&str, f64)]| -> f64 {
-            let models: Vec<ShardModel> = shards
+        // banks of 1024 at fanout 4, both deal generations. Values
+        // cross-checked against the independent mirror in
+        // python/fleet_model.py (run in CI).
+        let models = |shards: &[(&str, f64)]| -> Vec<ShardModel> {
+            shards
                 .iter()
                 .map(|&(spec, cyc)| {
                     shard_model(1024, 4, &Geometry::from_spec(spec).unwrap(), cyc)
                 })
-                .collect();
-            candidate(1_000_000, 1024, 4).estimated_cycles_hetero(&models, true)
+                .collect()
+        };
+        let score = |shards: &[(&str, f64)]| -> f64 {
+            candidate(1_000_000, 1024, 4).estimated_cycles_hetero(&models(shards), true)
+        };
+        let legacy = |shards: &[(&str, f64)]| -> f64 {
+            candidate(1_000_000, 1024, 4).estimated_cycles_hetero_arrival_balanced(&models(shards))
         };
         let nominal = ("1024x32", 7.84);
         let slow = ("1024x32", 15.68);
         let short = ("512x32", 7.84);
+        // Uniform fleets: both generations coincide (the deal guard).
         assert_eq!(score(&[nominal; 4]), 2_010_972.0, "= the PR-3 uniform 4-shard row");
-        assert_eq!(score(&[nominal, nominal, slow, slow]), 2_671_452.0);
+        assert_eq!(legacy(&[nominal; 4]), 2_010_972.0);
         assert_eq!(score(&[slow; 4]), 2_019_000.0);
-        assert_eq!(score(&[nominal, nominal, short, short]), 2_325_340.0);
-        assert_eq!(score(&[nominal, slow, slow, slow]), 3_003_228.0);
+        assert_eq!(legacy(&[slow; 4]), 2_019_000.0);
+        // Mixed fleets: completion-balanced strictly improves on every
+        // row (24.7%, 5.4% and 33.0%).
+        assert_eq!(score(&[nominal, nominal, slow, slow]), 2_011_832.0);
+        assert_eq!(legacy(&[nominal, nominal, slow, slow]), 2_671_452.0);
+        assert_eq!(score(&[nominal, nominal, short, short]), 2_200_412.0);
+        assert_eq!(legacy(&[nominal, nominal, short, short]), 2_325_340.0);
+        assert_eq!(score(&[nominal, slow, slow, slow]), 2_011_832.0);
+        assert_eq!(legacy(&[nominal, slow, slow, slow]), 3_003_228.0);
     }
 
     #[test]

@@ -78,10 +78,10 @@ use anyhow::{anyhow, Result};
 use super::frontend::JobTag;
 use super::hierarchical::{Capacity, ChunkAssembly, HierarchicalConfig, HierarchicalOutput};
 use super::metrics::{size_class, ServiceMetrics, Snapshot};
-use super::planner::{auto_tune_hetero, partition, shard_model, Geometry};
+use super::planner::{auto_tune_hetero, partition, schedule, shard_model, Geometry};
 use super::transport::{LocalTransport, ShardTransport};
 use super::{ServiceConfig, SortResponse};
-use crate::sorter::merge::{model_hedge_deadline, model_merge_cycles, model_streamed_completion};
+use crate::sorter::merge::{model_merge_cycles, model_streamed_completion};
 
 /// How the fleet routes a request (or a hierarchical chunk) to a shard.
 #[derive(Copy, Clone, Debug, PartialEq, Eq)]
@@ -583,10 +583,18 @@ impl ShardedSortService {
     }
 
     /// The cost-aware routing score for serving `len` elements on shard
-    /// `sid`: the geometry-aware modelled arrival of that chunk on this
-    /// host ([`shard_model`]: observed per-class cyc/num, plus the
-    /// oversize-assembly merge when the request exceeds the host's
-    /// tallest bank), scaled by the live queue depth. Lower is better.
+    /// `sid`: the schedule-derived *completion* of the chunk behind the
+    /// shard's live queue. The host is modelled as a lane already
+    /// owning its `q` outstanding chunks ([`shard_model`]: observed
+    /// per-class cyc/num, plus the oversize-assembly merge when the
+    /// request exceeds the host's tallest bank), and the score is when
+    /// a `q+1`-chunk lane *drains*
+    /// ([`schedule::uniform_completion`]). At an empty queue this
+    /// reduces exactly to the modelled arrival the pre-schedule score
+    /// used, and it grows strictly with queue depth, so the old score's
+    /// orderings are preserved — but a deep queue is now charged its
+    /// superlinear merge serialization instead of a linear proxy.
+    /// Lower is better.
     fn route_cost(&self, sid: usize, len: usize) -> f64 {
         let shard = &self.shards[sid];
         let n = len.max(1);
@@ -595,7 +603,8 @@ impl ShardedSortService {
             .cyc_per_num_for(n, crate::params::NOMINAL_COLSKIP_CYC_PER_NUM);
         let fanout = shard.geometry.merge_fanout.max(2);
         let m = shard_model(n, fanout, &shard.geometry, cyc);
-        (shard.outstanding.load(Ordering::Relaxed) + 1) as f64 * m.arrival.max(1) as f64
+        let q = shard.outstanding.load(Ordering::Relaxed);
+        schedule::uniform_completion(q as usize + 1, n, m.arrival + q * m.oversize, fanout) as f64
     }
 
     /// Pick a shard for a request of `len` elements under the policy,
@@ -753,18 +762,19 @@ impl ShardedSortService {
     }
 
     /// The hedge deadline for a job of `len` elements outstanding on
-    /// shard `sid`, in host time: the straggler bound in modelled
-    /// cycles ([`model_hedge_deadline`] at the shard's observed
-    /// cycles/number), converted through the observed µs-per-cycle
-    /// calibration, floored at the config's `floor_us`. `None` when
-    /// hedging is off.
+    /// shard `sid`, in host time: the schedule layer's straggler bound
+    /// in modelled cycles ([`schedule::hedge_deadline`] at the shard's
+    /// observed cycles/number — the same timeline arrival every other
+    /// completion number derives from), converted through the observed
+    /// µs-per-cycle calibration, floored at the config's `floor_us`.
+    /// `None` when hedging is off.
     fn hedge_deadline(&self, sid: usize, len: usize) -> Option<Duration> {
         let h = self.resilience.hedge.as_ref()?;
         let n = len.max(1);
         let cyc = self.shards[sid]
             .transport
             .cyc_per_num_for(n, crate::params::NOMINAL_COLSKIP_CYC_PER_NUM);
-        let cycles = model_hedge_deadline(n, cyc, h.straggler_mult, 0);
+        let cycles = schedule::hedge_deadline(n, cyc, h.straggler_mult, 0);
         let us = match *self.us_per_cycle.lock().expect("calibration poisoned") {
             Some(ratio) => (cycles as f64 * ratio) as u64,
             None => 0, // cold start: the floor carries the deadline

@@ -33,9 +33,11 @@
 //! unsupported. Every *other* frame is stamped with the **minimum**
 //! version able to carry its kind ([`Frame::wire_version`]), and a
 //! reader accepts the whole [`MIN_WIRE_VERSION`]`..=`[`WIRE_VERSION`]
-//! range — so a v1 coordinator still reads a v2 server's replies (all
-//! v1 kinds), while the v2-only [`Frame::SortJobTagged`] is rejected by
-//! a v1 peer at the header, before it can misparse the payload. A
+//! range — so a v1 coordinator still reads a newer server's replies
+//! (all v1 kinds), while the v2-only [`Frame::SortJobTagged`] and the
+//! v3-only admission verdicts ([`Frame::ErrTenantCap`],
+//! [`Frame::ErrSaturated`]) are rejected by an older peer at the
+//! header, before they can misparse the payload. A
 //! decoder that sees a wrong magic or an unknown kind fails the
 //! connection rather than resynchronising: the stream is
 //! trusted-transport framing, not a self-healing radio protocol.
@@ -70,7 +72,12 @@ use crate::sorter::SortStats;
 /// [`MIN_WIRE_VERSION`]`..=WIRE_VERSION` with an [`Frame::ErrReply`].
 /// v2 added [`Frame::SortJobTagged`] (tenant + priority riding on a
 /// sort job, for the coordinator frontend's fair-share admission).
-pub const WIRE_VERSION: u8 = 2;
+/// v3 added the typed admission verdicts [`Frame::ErrTenantCap`] and
+/// [`Frame::ErrSaturated`], so a remote caller of the frontend gets
+/// the same machine-readable refusal an in-process caller downcasts
+/// out of [`super::frontend::AdmitError`] — not a stringly
+/// [`Frame::ErrReply`].
+pub const WIRE_VERSION: u8 = 3;
 
 /// Oldest protocol version this build still speaks. Every v1 kind
 /// encodes byte-identically under v2, so v1 peers interoperate fully —
@@ -139,6 +146,19 @@ pub enum Frame {
     /// admission, not an execution parameter — but carrying it on the
     /// wire lets a remote coordinator's accounting survive the hop.
     SortJobTagged(JobTag, Vec<u32>),
+    /// v3: a delivered admission refusal — the wire form of
+    /// [`super::frontend::AdmitError::TenantCap`]. Like
+    /// [`Frame::ErrReply`] it is an *answer*, never a re-route; unlike
+    /// it, the tenant and its cap survive as typed fields, so a remote
+    /// caller sheds load programmatically (429-equivalent) exactly as
+    /// an in-process one does. Counts cross as `u64` so 32- and 64-bit
+    /// peers agree on the encoding.
+    ErrTenantCap { tenant: String, cap: u64 },
+    /// v3: the wire form of
+    /// [`super::frontend::AdmitError::Saturated`] — which priority
+    /// class was shed and the outstanding/limit pair behind the
+    /// decision.
+    ErrSaturated { priority: Priority, outstanding: u64, limit: u64 },
 }
 
 impl Frame {
@@ -157,11 +177,13 @@ impl Frame {
             Frame::Ack => 10,
             Frame::Shutdown => 11,
             Frame::SortJobTagged(..) => 12,
+            Frame::ErrTenantCap { .. } => 13,
+            Frame::ErrSaturated { .. } => 14,
         }
     }
 
     /// The version stamped into this frame's header: the *minimum*
-    /// protocol version that can carry the kind, so a v2 build's v1
+    /// protocol version that can carry the kind, so a v3 build's v1
     /// frames stay readable by v1 peers. `Hello` is the exception — it
     /// advertises the build's newest version, which is the whole point
     /// of the handshake.
@@ -169,7 +191,47 @@ impl Frame {
         match self {
             Frame::Hello => WIRE_VERSION,
             Frame::SortJobTagged(..) => 2,
+            Frame::ErrTenantCap { .. } | Frame::ErrSaturated { .. } => 3,
             _ => MIN_WIRE_VERSION,
+        }
+    }
+
+    /// The wire frame for an admission refusal: typed verdicts cross
+    /// as typed kinds, losslessly recoverable via
+    /// [`Frame::admit_error`].
+    pub fn from_admit_error(e: &super::frontend::AdmitError) -> Frame {
+        use super::frontend::AdmitError;
+        match e {
+            AdmitError::TenantCap { tenant, cap } => {
+                Frame::ErrTenantCap { tenant: tenant.clone(), cap: *cap as u64 }
+            }
+            AdmitError::Saturated { priority, outstanding, limit } => Frame::ErrSaturated {
+                priority: *priority,
+                outstanding: *outstanding as u64,
+                limit: *limit as u64,
+            },
+        }
+    }
+
+    /// Recover the typed [`super::frontend::AdmitError`] from an
+    /// admission-verdict frame; `None` for every other kind, or when a
+    /// count does not fit this host's `usize` (a 32-bit peer refusing
+    /// to truncate).
+    pub fn admit_error(&self) -> Option<super::frontend::AdmitError> {
+        use super::frontend::AdmitError;
+        match self {
+            Frame::ErrTenantCap { tenant, cap } => Some(AdmitError::TenantCap {
+                tenant: tenant.clone(),
+                cap: usize::try_from(*cap).ok()?,
+            }),
+            Frame::ErrSaturated { priority, outstanding, limit } => {
+                Some(AdmitError::Saturated {
+                    priority: *priority,
+                    outstanding: usize::try_from(*outstanding).ok()?,
+                    limit: usize::try_from(*limit).ok()?,
+                })
+            }
+            _ => None,
         }
     }
 }
@@ -281,20 +343,28 @@ impl<'a> Cursor<'a> {
     }
 }
 
-fn put_tag(buf: &mut Vec<u8>, tag: &JobTag) {
-    buf.push(match tag.priority {
+fn put_priority(buf: &mut Vec<u8>, p: Priority) {
+    buf.push(match p {
         Priority::Interactive => 0,
         Priority::Batch => 1,
     });
+}
+
+fn get_priority(c: &mut Cursor) -> Result<Priority> {
+    match c.u8()? {
+        0 => Ok(Priority::Interactive),
+        1 => Ok(Priority::Batch),
+        b => bail!("unknown priority discriminant {b}"),
+    }
+}
+
+fn put_tag(buf: &mut Vec<u8>, tag: &JobTag) {
+    put_priority(buf, tag.priority);
     put_str(buf, &tag.tenant);
 }
 
 fn get_tag(c: &mut Cursor) -> Result<JobTag> {
-    let priority = match c.u8()? {
-        0 => Priority::Interactive,
-        1 => Priority::Batch,
-        b => bail!("unknown priority discriminant {b}"),
-    };
+    let priority = get_priority(c)?;
     Ok(JobTag { tenant: c.str()?, priority })
 }
 
@@ -489,6 +559,15 @@ pub fn encode_frame(id: u64, frame: &Frame) -> Vec<u8> {
             put_tag(&mut payload, tag);
             put_u32_slice(&mut payload, data);
         }
+        Frame::ErrTenantCap { tenant, cap } => {
+            put_str(&mut payload, tenant);
+            put_u64(&mut payload, *cap);
+        }
+        Frame::ErrSaturated { priority, outstanding, limit } => {
+            put_priority(&mut payload, *priority);
+            put_u64(&mut payload, *outstanding);
+            put_u64(&mut payload, *limit);
+        }
     }
     debug_assert!(payload.len() <= MAX_PAYLOAD as usize, "oversized frame payload");
     let mut buf = Vec::with_capacity(16 + payload.len());
@@ -578,6 +657,12 @@ fn decode(id: u64, kind: u8, payload: &[u8]) -> Result<(u64, Frame)> {
             let tag = get_tag(&mut c)?;
             Frame::SortJobTagged(tag, get_u32_vec(&mut c)?)
         }
+        13 => Frame::ErrTenantCap { tenant: c.str()?, cap: c.u64()? },
+        14 => Frame::ErrSaturated {
+            priority: get_priority(&mut c)?,
+            outstanding: c.u64()?,
+            limit: c.u64()?,
+        },
         k => bail!("unknown frame kind {k}"),
     };
     c.finish()?;
@@ -749,6 +834,10 @@ mod tests {
                 JobTag { tenant: String::new(), priority: Priority::Batch },
                 Vec::new(),
             ),
+            Frame::ErrTenantCap { tenant: "acme".into(), cap: 8 },
+            Frame::ErrTenantCap { tenant: String::new(), cap: 0 },
+            Frame::ErrSaturated { priority: Priority::Batch, outstanding: 64, limit: 64 },
+            Frame::ErrSaturated { priority: Priority::Interactive, outstanding: 70, limit: 64 },
         ];
         for (i, frame) in frames.into_iter().enumerate() {
             let id = 0x1234_5678_9ABC_DEF0 ^ i as u64;
@@ -760,12 +849,16 @@ mod tests {
 
     #[test]
     fn frames_are_stamped_with_their_minimum_version() {
-        // Every v1 kind keeps the v1 stamp, so a v1 peer reads a v2
-        // build's replies; only the tagged job (and the advertising
-        // Hello) carry v2.
+        // Every v1 kind keeps the v1 stamp, so a v1 peer reads a v3
+        // build's replies; the tagged job keeps v2, the admission
+        // verdicts carry v3, and the advertising Hello carries the
+        // build's newest version.
         let tag = JobTag { tenant: "t".into(), priority: Priority::Batch };
         assert_eq!(encode_frame(1, &Frame::Hello)[2], WIRE_VERSION);
         assert_eq!(encode_frame(1, &Frame::SortJobTagged(tag, vec![1]))[2], 2);
+        assert_eq!(encode_frame(1, &Frame::ErrTenantCap { tenant: "t".into(), cap: 4 })[2], 3);
+        let sat = Frame::ErrSaturated { priority: Priority::Batch, outstanding: 9, limit: 8 };
+        assert_eq!(encode_frame(1, &sat)[2], 3);
         for frame in [
             Frame::SortJob(vec![1]),
             Frame::SortOk(sample_response()),
@@ -788,6 +881,38 @@ mod tests {
         // Version 0 (below the floor) is rejected like a future one.
         bytes[2] = 0;
         assert!(read_frame(&mut &bytes[..]).unwrap_err().to_string().contains("version"));
+    }
+
+    #[test]
+    fn admission_verdicts_convert_losslessly() {
+        // The satellite contract: a remote caller of the frontend gets
+        // the *same typed error* an in-process caller downcasts — the
+        // AdmitError → Frame → wire → Frame → AdmitError loop is the
+        // identity, for every variant and priority class.
+        use super::super::frontend::AdmitError;
+        let verdicts = [
+            AdmitError::TenantCap { tenant: "acme".into(), cap: 8 },
+            AdmitError::TenantCap { tenant: String::new(), cap: 0 },
+            AdmitError::Saturated { priority: Priority::Batch, outstanding: 64, limit: 64 },
+            AdmitError::Saturated { priority: Priority::Interactive, outstanding: 70, limit: 64 },
+        ];
+        for verdict in verdicts {
+            let frame = Frame::from_admit_error(&verdict);
+            let bytes = encode_frame(42, &frame);
+            let (id, decoded) = read_frame(&mut &bytes[..]).expect("verdict decodes");
+            assert_eq!(id, 42);
+            assert_eq!(decoded, frame);
+            assert_eq!(decoded.admit_error(), Some(verdict));
+        }
+        // Non-verdict kinds recover nothing.
+        assert_eq!(Frame::ErrReply("saturated".into()).admit_error(), None);
+        assert_eq!(Frame::Dropped.admit_error(), None);
+        // A corrupt priority discriminant fails the decode, exactly
+        // like the tagged-job path.
+        let sat = Frame::ErrSaturated { priority: Priority::Batch, outstanding: 1, limit: 1 };
+        let mut bytes = encode_frame(1, &sat);
+        bytes[16] = 9; // payload starts at 16 with the priority byte
+        assert!(read_frame(&mut &bytes[..]).unwrap_err().to_string().contains("priority"));
     }
 
     #[test]

@@ -19,7 +19,7 @@ use std::sync::Arc;
 use memsort::cli::Args;
 use memsort::coordinator::frontend::{AdmitError, Frontend, FrontendConfig, JobTag, Priority};
 use memsort::coordinator::hierarchical::{Capacity, HierarchicalConfig};
-use memsort::coordinator::planner::Geometry;
+use memsort::coordinator::planner::{schedule::FleetSchedule, shard_model, Geometry};
 use memsort::coordinator::shard::{
     HedgeConfig, ResilienceConfig, RetryBudgetConfig, RoutePolicy, ShardedConfig,
     ShardedSortService,
@@ -624,6 +624,9 @@ fn cmd_scale(args: &Args) -> Result<()> {
     };
     let services = shard_services(args, &report::sweep_service(width, k, shards_hint))?;
     let shards = services.len();
+    // Geometries survive the move of `services` into the sweep: the
+    // schedule report below models the fleet from them.
+    let geometries: Vec<Geometry> = services.iter().map(|s| s.geometry.clone()).collect();
     let mut ns = Vec::new();
     let mut n = capacity.saturating_mul(4);
     while n < max {
@@ -750,6 +753,41 @@ fn cmd_scale(args: &Args) -> Result<()> {
                     s.p50_us,
                     s.p99_us,
                     if *h { "" } else { " [DOWN]" }
+                );
+            }
+            // The modelled fleet timeline at the sweep's largest n:
+            // the completion-balanced deal the planner routes against,
+            // with each shard's merge drain (schedule layer, modelled
+            // cycles at the nominal per-element cost — not measured
+            // µs).
+            let chunks = max.div_ceil(capacity);
+            let models: Vec<_> = geometries
+                .iter()
+                .map(|g| {
+                    shard_model(
+                        capacity,
+                        fanout,
+                        g,
+                        memsort::params::NOMINAL_COLSKIP_CYC_PER_NUM,
+                    )
+                })
+                .collect();
+            let sched = FleetSchedule::completion_balanced(chunks, capacity, &models, fanout);
+            println!(
+                "  modelled schedule @ n={max}: fleet completion {} cycles \
+                 (completion-balanced deal over {chunks} chunks)",
+                sched.completion()
+            );
+            for lane in sched.lanes() {
+                println!(
+                    "    shard {}: {} chunks, colskip {}, first arrival {}, last ready {}, \
+                     merge drain {}",
+                    lane.shard,
+                    lane.chunks,
+                    lane.colskip(),
+                    lane.arrival,
+                    lane.ready,
+                    lane.drain
                 );
             }
         }

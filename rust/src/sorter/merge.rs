@@ -14,6 +14,7 @@
 //! cycle models are backed by actual sorts.
 
 use super::{InMemorySorter, SortOutput, SortStats};
+use crate::coordinator::planner::schedule;
 
 /// Sentinel for an empty loser-tree slot (pre-initialization).
 const EMPTY: usize = usize::MAX;
@@ -307,71 +308,12 @@ pub fn merge_runs(runs: Vec<Vec<(u32, usize)>>, fanout: usize) -> KWayMergeOutpu
 /// still sorting, and the tree's total stream work is at most one full
 /// stream per pass — and it beats the barrier whenever early groups
 /// complete before the slowest chunk arrives.
+///
+/// Thin wrapper over the schedule layer's
+/// [`schedule::event_completion`] — the moved body, pinned
+/// byte-identical by this module's tests.
 pub fn model_streamed_completion(leaves: &[(u64, usize)], fanout: usize) -> u64 {
-    assert!(fanout >= 2, "merge fanout must be at least 2");
-    if leaves.is_empty() {
-        return 0;
-    }
-    // Node (level, group): stream length and the cycle it is fully
-    // available (None until produced). Level 0 = the chunk runs.
-    let mut lens: Vec<Vec<usize>> = vec![leaves.iter().map(|&(_, l)| l).collect()];
-    let mut ready: Vec<Vec<Option<u64>>> = vec![leaves.iter().map(|&(a, _)| Some(a)).collect()];
-    while lens.last().expect("at least one level").len() > 1 {
-        let prev = lens.last().expect("at least one level");
-        let next: Vec<usize> = prev.chunks(fanout).map(|g| g.iter().sum()).collect();
-        ready.push(vec![None; next.len()]);
-        lens.push(next);
-    }
-    let depth = lens.len();
-    let mut engine_free = 0u64;
-    loop {
-        // Single-run groups pass through the tree for free.
-        let mut changed = true;
-        while changed {
-            changed = false;
-            for l in 1..depth {
-                for g in 0..lens[l].len() {
-                    let lo = g * fanout;
-                    let hi = (lo + fanout).min(lens[l - 1].len());
-                    if ready[l][g].is_none() && hi - lo == 1 {
-                        if let Some(r) = ready[l - 1][lo] {
-                            ready[l][g] = Some(r);
-                            changed = true;
-                        }
-                    }
-                }
-            }
-        }
-        if let Some(done) = ready[depth - 1][0] {
-            return done;
-        }
-        // Among unproduced real merges whose inputs all exist, run the
-        // earliest-ready one on the shared engine.
-        let mut pick: Option<(u64, usize, usize)> = None;
-        for l in 1..depth {
-            for g in 0..lens[l].len() {
-                if ready[l][g].is_some() {
-                    continue;
-                }
-                let lo = g * fanout;
-                let hi = (lo + fanout).min(lens[l - 1].len());
-                let inputs_ready = ready[l - 1][lo..hi]
-                    .iter()
-                    .copied()
-                    .try_fold(0u64, |m, r| r.map(|v| m.max(v)));
-                let Some(inputs_ready) = inputs_ready else { continue };
-                if pick.is_none_or(|p| (inputs_ready, l, g) < p) {
-                    pick = Some((inputs_ready, l, g));
-                }
-            }
-        }
-        let (inputs_ready, l, g) =
-            pick.expect("an op with ready inputs must exist before the root is produced");
-        let start = engine_free.max(inputs_ready);
-        let done = start + lens[l][g] as u64;
-        ready[l][g] = Some(done);
-        engine_free = done;
-    }
+    schedule::event_completion(leaves, fanout)
 }
 
 /// Streamed completion when every chunk run arrives at the same cycle
@@ -382,31 +324,18 @@ pub fn model_streamed_completion(leaves: &[(u64, usize)], fanout: usize) -> u64 
 /// groups pass through for free). O(chunks), unlike the general
 /// event-driven scheduler — this is what lets the auto-tuner score
 /// million-element candidates without simulating them.
+///
+/// Thin wrapper over [`schedule::uniform_completion`] (`arrival +
+/// W(chunks, fanout)·len`, with the per-unit work factored out as
+/// [`schedule::uniform_merge_work`]) — pinned byte-identical by
+/// `uniform_closed_form_matches_event_scheduler`.
 pub fn model_streamed_completion_uniform(
     chunks: usize,
     len: usize,
     arrival: u64,
     fanout: usize,
 ) -> u64 {
-    assert!(fanout >= 2, "merge fanout must be at least 2");
-    if chunks == 0 {
-        return 0;
-    }
-    // counts[i] = original runs under node i of the current level.
-    let mut counts: Vec<usize> = vec![1; chunks];
-    let mut work = 0u64;
-    while counts.len() > 1 {
-        let mut next = Vec::with_capacity(counts.len().div_ceil(fanout));
-        for g in counts.chunks(fanout) {
-            let c: usize = g.iter().sum();
-            if g.len() > 1 {
-                work += c as u64 * len as u64;
-            }
-            next.push(c);
-        }
-        counts = next;
-    }
-    arrival + work
+    schedule::uniform_completion(chunks, len, arrival, fanout)
 }
 
 /// Streamed completion of an `shards`-host fleet draining `chunks`
@@ -429,6 +358,9 @@ pub fn model_streamed_completion_uniform(
 /// shards shrink the per-shard merge work that a single engine would
 /// serialize; the gain is not monotone past `shards > fanout`, where
 /// the cross-shard tree grows an extra pass over the full stream.
+///
+/// Thin wrapper over [`schedule::sharded_completion`] — pinned
+/// byte-identical by `sharded_completion_strictly_decreases_to_fanout_shards`.
 pub fn model_sharded_completion(
     chunks: usize,
     len: usize,
@@ -436,16 +368,7 @@ pub fn model_sharded_completion(
     shards: usize,
     fanout: usize,
 ) -> u64 {
-    assert!(shards >= 1, "a fleet has at least one shard");
-    if chunks == 0 {
-        assert!(fanout >= 2, "merge fanout must be at least 2");
-        return 0;
-    }
-    let shards = shards.min(chunks);
-    let (base, extra) = (chunks / shards, chunks % shards);
-    let deal: Vec<(usize, u64)> =
-        (0..shards).map(|s| (base + usize::from(s < extra), arrival)).collect();
-    model_sharded_completion_hetero(len, &deal, fanout)
+    schedule::sharded_completion(chunks, len, arrival, shards, fanout)
 }
 
 /// Streamed completion of a *heterogeneous* fleet: shard `s` owns
@@ -459,18 +382,14 @@ pub fn model_sharded_completion(
 /// [`model_sharded_completion`] is exactly this model with an equal
 /// deal (round-robin counts, one shared arrival) — the uniform-fleet
 /// special case, pinned by `hetero_model_reduces_to_uniform_deal`.
+///
+/// Thin wrapper over [`schedule::hetero_completion`].
 pub fn model_sharded_completion_hetero(
     len: usize,
     deal: &[(usize, u64)],
     fanout: usize,
 ) -> u64 {
-    assert!(fanout >= 2, "merge fanout must be at least 2");
-    let leaves: Vec<(u64, usize)> = deal
-        .iter()
-        .filter(|&&(c, _)| c > 0)
-        .map(|&(c, a)| (model_streamed_completion_uniform(c, len, a, fanout), c * len))
-        .collect();
-    model_streamed_completion(&leaves, fanout)
+    schedule::hetero_completion(len, deal, fanout)
 }
 
 /// Deal `chunks` chunks over shards in proportion to `weights`
@@ -479,30 +398,13 @@ pub fn model_sharded_completion_hetero(
 /// deal of [`model_sharded_completion`]: `chunks / shards` each, the
 /// first `chunks % shards` shards taking one extra. A shard with zero
 /// (or non-finite) weight is dealt nothing unless every weight is
-/// degenerate, in which case the deal falls back to equal shares.
+/// degenerate, in which case the deal falls back to equal shares —
+/// either way every chunk is accounted for
+/// (`degenerate_weight_deals_account_for_every_chunk`).
+///
+/// Thin wrapper over [`schedule::apportion`].
 pub fn apportion_chunks(chunks: usize, weights: &[f64]) -> Vec<usize> {
-    assert!(!weights.is_empty(), "apportionment needs at least one shard");
-    let sane: Vec<f64> =
-        weights.iter().map(|&w| if w.is_finite() && w > 0.0 { w } else { 0.0 }).collect();
-    let total: f64 = sane.iter().sum();
-    let sane = if total > 0.0 { sane } else { vec![1.0; weights.len()] };
-    let total: f64 = sane.iter().sum();
-    let quotas: Vec<f64> = sane.iter().map(|w| chunks as f64 * w / total).collect();
-    let mut deal: Vec<usize> = quotas.iter().map(|q| q.floor() as usize).collect();
-    let dealt: usize = deal.iter().sum();
-    // Distribute the remainder by descending fractional part, ties to
-    // the lower shard id (sort_by is stable, so equal keys keep index
-    // order).
-    let mut order: Vec<usize> = (0..sane.len()).collect();
-    order.sort_by(|&a, &b| {
-        let (fa, fb) = (quotas[a] - quotas[a].floor(), quotas[b] - quotas[b].floor());
-        fb.partial_cmp(&fa).expect("fractional parts are finite")
-    });
-    for &s in order.iter().take(chunks.saturating_sub(dealt)) {
-        deal[s] += 1;
-    }
-    debug_assert_eq!(deal.iter().sum::<usize>(), chunks);
-    deal
+    schedule::apportion(chunks, weights)
 }
 
 /// The hedging straggler bound, in modelled cycles: a chunk of `len`
@@ -516,12 +418,10 @@ pub fn apportion_chunks(chunks: usize, weights: &[f64]) -> Vec<usize> {
 /// budget to host time with its observed µs-per-cycle calibration; the
 /// model itself is deterministic and mirrored by
 /// `python/fleet_model.py::model_hedge_deadline`.
+///
+/// Thin wrapper over [`schedule::hedge_deadline`].
 pub fn model_hedge_deadline(len: usize, cyc: f64, mult: f64, floor: u64) -> u64 {
-    assert!(
-        cyc.is_finite() && cyc >= 0.0 && mult.is_finite() && mult >= 0.0,
-        "hedge deadline inputs must be finite and non-negative (cyc={cyc}, mult={mult})"
-    );
-    ((len as f64 * cyc * mult).round() as u64).max(floor)
+    schedule::hedge_deadline(len, cyc, mult, floor)
 }
 
 /// Result of a completed [`StreamingMerge`].
@@ -1068,6 +968,38 @@ mod tests {
         for chunks in [0usize, 1, 7, 977] {
             let deal = apportion_chunks(chunks, &[5.0, 0.5, 1.0, 3.25]);
             assert_eq!(deal.iter().sum::<usize>(), chunks, "chunks={chunks}");
+        }
+    }
+
+    #[test]
+    fn degenerate_weight_deals_account_for_every_chunk() {
+        // Observed-cost feedback can hand apportionment NaN (0/0 on a
+        // fresh class), ±inf (cyc overflow), zero and negative weights
+        // — in any combination. Pinned guard behavior: a degenerate
+        // entry is clamped to zero weight while any sane weight exists;
+        // all-degenerate clamps to the uniform deal; every chunk is
+        // accounted for in all cases (never a panic, never a lost or
+        // invented chunk).
+        assert_eq!(apportion_chunks(4, &[f64::INFINITY, 2.0]), vec![0, 4]);
+        assert_eq!(apportion_chunks(4, &[-3.0, 2.0]), vec![0, 4]);
+        assert_eq!(apportion_chunks(5, &[f64::NAN, f64::INFINITY, -1.0]), vec![2, 2, 1]);
+        assert_eq!(apportion_chunks(6, &[f64::NEG_INFINITY, -0.0, 0.0]), vec![2, 2, 2]);
+        assert_eq!(apportion_chunks(0, &[f64::NAN, f64::NAN]), vec![0, 0]);
+        let shapes: [&[f64]; 4] = [
+            &[f64::NAN, f64::NAN, f64::NAN],
+            &[f64::INFINITY; 2],
+            &[1.0, f64::NAN, 3.0, -2.0],
+            &[0.0, f64::MIN_POSITIVE, 4.0],
+        ];
+        for weights in shapes {
+            for chunks in [0usize, 1, 7, 977] {
+                let deal = apportion_chunks(chunks, weights);
+                assert_eq!(
+                    deal.iter().sum::<usize>(),
+                    chunks,
+                    "weights={weights:?} chunks={chunks}"
+                );
+            }
         }
     }
 

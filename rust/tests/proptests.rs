@@ -398,6 +398,55 @@ fn prop_hetero_scoring_reduces_to_uniform() {
 }
 
 #[test]
+fn prop_fleet_schedule_reduces_to_uniform() {
+    // The schedule layer's acceptance criterion: on a fleet of identical
+    // shards, the `FleetSchedule` completion — both the arrival-balanced
+    // legacy deal and the completion-balanced search (whose identical-
+    // fleet guard must fire) — reduces *exactly* to PR 3's uniform
+    // streamed sharded model, across random plan shapes, shard counts,
+    // fanouts and costs. (The generated values only seed the shape
+    // parameters; no sorting runs here.)
+    use memsort::coordinator::planner::{schedule::FleetSchedule, shard_model, Geometry};
+    use memsort::sorter::merge::model_sharded_completion;
+    check(
+        "fleet-schedule-reduces-to-uniform",
+        PropConfig { seed: 13, cases: 192, ..Default::default() },
+        |case| {
+            let v = |i: usize| case.values.get(i).copied().unwrap_or(7) as usize;
+            let n = (v(0) % 100_000).max(1);
+            let bank = [16usize, 64, 256, 1024][v(1) % 4];
+            let fanout = [2usize, 4, 8, 16][v(2) % 4];
+            let shards = (v(3) % 8) + 1;
+            let cyc = 0.5 + (v(4) % 64) as f64 / 2.0;
+            let chunks = n.div_ceil(bank);
+            let models = vec![shard_model(bank, fanout, &Geometry::default(), cyc); shards];
+            let arrival = models[0].arrival;
+            let uniform = model_sharded_completion(chunks, bank, arrival, shards, fanout);
+            for (tag, sched) in [
+                ("arrival", FleetSchedule::arrival_balanced(chunks, bank, &models, fanout)),
+                ("completion", FleetSchedule::completion_balanced(chunks, bank, &models, fanout)),
+            ] {
+                if sched.completion() != uniform {
+                    return Err(format!(
+                        "n={n} bank={bank} fanout={fanout} shards={shards} cyc={cyc} \
+                         {tag}-balanced: schedule {} != uniform {uniform}",
+                        sched.completion()
+                    ));
+                }
+                let dealt: usize = sched.deal().iter().sum();
+                if dealt != chunks {
+                    return Err(format!(
+                        "n={n} bank={bank} fanout={fanout} shards={shards} cyc={cyc} \
+                         {tag}-balanced: deal covers {dealt} of {chunks} chunks"
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
 fn prop_wire_roundtrip_is_identity() {
     // The wire codec must be an identity for arbitrary
     // `SortRequest`/`SortResponse` payloads — values of any width and
