@@ -1,0 +1,73 @@
+"""memlint — the cross-layer invariant analyzer for the desk-checked fleet.
+
+No container this repo grows in has ever had a Rust toolchain
+(ROADMAP "Standing: run tier-1"), so every invariant the compiler or
+`cargo test` would enforce has to be enforced some other way. memlint
+is that other way: a lightweight Rust tokenizer + item walker (no
+rustc, no syn) plus five rule families that cross-check the layers
+that must agree:
+
+1. ``wire-registry``    wire.rs kind ids / min-version stamps / size
+                        formulas vs OPERATIONS.md vs fleet_model.py
+2. ``panic-path``       no unwrap/expect/panic!/raw-index on
+                        request-serving paths outside the allowlist
+3. ``lock-order``       nested lock acquisitions against the declared
+                        canonical order; no guard held across
+                        recv/socket I/O
+4. ``doc-symbol``       every symbol cited in DESIGN/OPERATIONS/
+                        EXPERIMENTS resolves to a real item
+5. ``mirror-coverage``  every schedule.rs model fn has a pinned
+                        fleet_model.py mirror
+
+Run it as ``python python/memlint`` from the repo root (or
+``python -m memlint`` from ``python/``). Exit 0 means every rule
+passed with an empty-or-justified allowlist; any drift is exit 1.
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+
+from memlint import rules_docs, rules_locks, rules_mirror, rules_panic, rules_wire
+from memlint.findings import Allowlist, Finding, apply_allowlist
+from memlint.rustlex import index_tree
+
+PKG_DIR = Path(__file__).resolve().parent
+
+__all__ = ["run_all", "Finding"]
+
+
+def run_all(root: Path, allowlist_path: Path | None = None):
+    """Run every rule family over the repo at ``root``.
+
+    Returns ``(findings, notes, summaries)``: surviving findings after
+    the allowlist, allowlist hygiene notes (stale/malformed entries —
+    failures too), and per-rule summary dicts for the report.
+    """
+    root = Path(root).resolve()
+    indexes = index_tree(root)
+
+    findings: list[Finding] = []
+    summaries: dict[str, dict] = {}
+
+    fs, summaries["wire-registry"] = rules_wire.run(root, indexes)
+    findings += fs
+    fs, summaries["panic-path"] = rules_panic.run(root, indexes)
+    findings += fs
+    fs, summaries["lock-order"] = rules_locks.run(root, indexes, root / "rust/DESIGN.md")
+    findings += fs
+    fs, summaries["doc-symbol"] = rules_docs.run(root, indexes)
+    findings += fs
+    fs, summaries["mirror-coverage"] = rules_mirror.run(
+        root, indexes, PKG_DIR / "mirror_map.json"
+    )
+    findings += fs
+
+    allow = Allowlist.load(allowlist_path or PKG_DIR / "allowlist.json")
+    kept, notes = apply_allowlist(findings, allow)
+    summaries["allowlist"] = {
+        "entries": len(allow.entries),
+        "suppressed": len(findings) - len(kept),
+    }
+    kept.sort(key=lambda f: (f.file, f.line, f.rule, f.key))
+    return kept, notes, summaries

@@ -1,0 +1,86 @@
+"""CLI for memlint. Usage, from the repo root:
+
+    python python/memlint            # full gate (rules + doc links)
+    python python/memlint -q        # findings only, no summary table
+
+Exit status 0 means clean; 1 means drift (findings, allowlist
+problems, or broken doc links). This is the single lint gate CI runs —
+it folds in ``check_links.py`` so one named step covers every
+toolchain-independent check.
+"""
+
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+PKG_DIR = Path(__file__).resolve().parent
+# `python python/memlint` puts python/memlint/ (not python/) on
+# sys.path; make the package and its python/ siblings importable.
+sys.path.insert(0, str(PKG_DIR.parent))
+
+from memlint import run_all  # noqa: E402
+
+import check_links  # noqa: E402  (python/check_links.py — folded into this gate)
+
+
+def main(argv: list[str]) -> int:
+    quiet = "-q" in argv or "--quiet" in argv
+    root = PKG_DIR.parent.parent
+
+    findings, notes, summaries = run_all(root)
+    link_errors = check_links.check(root)
+
+    for f in findings:
+        print(f.render())
+    for note in notes:
+        print(f"allowlist: {note}")
+
+    if not quiet:
+        print()
+        print("memlint summary")
+        wire = summaries.get("wire-registry", {})
+        print(
+            f"  wire-registry   : {wire.get('kinds', 0)} kinds, "
+            f"{wire.get('doc_rows', 0)} doc rows, formulas {wire.get('formulas', [])}"
+        )
+        panic = summaries.get("panic-path", {})
+        print(
+            f"  panic-path      : {panic.get('total', 0)} non-test sites across "
+            f"{panic.get('files', 0)} files, {panic.get('serving', 0)} on serving paths"
+        )
+        locks = summaries.get("lock-order", {})
+        print(
+            f"  lock-order      : {locks.get('sites', 0)} acquisition sites, "
+            f"order of {len(locks.get('order', []))} locks"
+        )
+        docs = summaries.get("doc-symbol", {})
+        print(
+            f"  doc-symbol      : {docs.get('docs', 0)} docs vs "
+            f"{docs.get('symbols', 0)} known symbols"
+        )
+        mirror = summaries.get("mirror-coverage", {})
+        print(
+            f"  mirror-coverage : {mirror.get('mapped', 0)}/{mirror.get('rust_fns', 0)} "
+            "schedule.rs fns mirrored"
+        )
+        allow = summaries.get("allowlist", {})
+        print(
+            f"  allowlist       : {allow.get('entries', 0)} entries, "
+            f"{allow.get('suppressed', 0)} findings suppressed"
+        )
+        print(f"  doc links       : {'ok' if link_errors == 0 else 'BROKEN'}")
+
+    failed = bool(findings) or bool(notes) or link_errors != 0
+    if failed:
+        print(
+            f"\nmemlint: FAIL ({len(findings)} finding(s), {len(notes)} allowlist "
+            f"problem(s), doc links {'ok' if link_errors == 0 else 'broken'})"
+        )
+    else:
+        print("\nmemlint: ok")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -1,0 +1,85 @@
+"""Finding records and the machine-readable allowlist.
+
+A finding is `(rule, file, line, key, message)`. The allowlist
+(`allowlist.json`, next to this module) is a list of entries:
+
+    {"rule": "...", "file": "...", "key": "...", "justification": "..."}
+
+An entry suppresses every finding with the same `(rule, file, key)`.
+The `key` is a *stable* identifier — for a panic site it is
+`"<fn>:<pattern>"`, for a lock edge `"<outer><inner>"` — so allowlist
+entries survive unrelated line churn. Entries must carry a non-empty
+`justification`; memlint refuses an allowlist that waves findings
+through silently, and reports entries that no longer match anything
+(stale suppressions are drift too).
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from pathlib import Path
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str
+    file: str  # repo-relative, "/" separators
+    line: int
+    key: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.file}:{self.line}: [{self.rule}] {self.message} (key: {self.key})"
+
+
+class Allowlist:
+    def __init__(self, entries: list[dict]):
+        self.entries = entries
+        self.errors: list[str] = []
+        self.used: set[int] = set()
+        for i, e in enumerate(entries):
+            for required in ("rule", "file", "key", "justification"):
+                if not str(e.get(required, "")).strip():
+                    self.errors.append(
+                        f"allowlist entry {i} is missing a non-empty {required!r}"
+                    )
+
+    @classmethod
+    def load(cls, path: Path) -> "Allowlist":
+        if not path.exists():
+            return cls([])
+        data = json.loads(path.read_text(encoding="utf-8"))
+        if not isinstance(data, list):
+            raise ValueError(f"{path}: allowlist must be a JSON list")
+        return cls(data)
+
+    def suppresses(self, f: Finding) -> bool:
+        for i, e in enumerate(self.entries):
+            if (
+                e.get("rule") == f.rule
+                and e.get("file") == f.file
+                and e.get("key") == f.key
+            ):
+                self.used.add(i)
+                return True
+        return False
+
+    def stale(self) -> list[str]:
+        return [
+            f"stale allowlist entry {i}: {e.get('rule')}/{e.get('file')}/{e.get('key')}"
+            " matches no current finding"
+            for i, e in enumerate(self.entries)
+            if i not in self.used
+        ]
+
+
+def apply_allowlist(
+    findings: list[Finding], allow: Allowlist
+) -> tuple[list[Finding], list[str]]:
+    """Split findings into surviving ones; return (kept, notes). Stale
+    allowlist entries and malformed entries are *errors*, reported as
+    synthetic notes the caller treats as failures."""
+    kept = [f for f in findings if not allow.suppresses(f)]
+    notes = list(allow.errors) + allow.stale()
+    return kept, notes

@@ -1,0 +1,166 @@
+"""Rule family 4 — doc-symbol drift.
+
+Every code symbol named in DESIGN.md / OPERATIONS.md / EXPERIMENTS.md
+must resolve to something that still exists: a Rust item (fn, struct,
+enum, variant, field, const, trait, mod, macro), a Python def/class in
+`python/`, or a file in the repo. Docs that cite `frontend::try_admit`
+or `MAX_SORT_ELEMS` keep readers honest only while those names are
+real; after a rename the stale reference is drift exactly like a wrong
+wire table.
+
+What counts as a symbol reference (inline code spans only; fenced
+blocks are stripped first):
+
+* a `::`-path (`coordinator::wire::read_frame`) — every segment must
+  resolve (std/core/alloc paths are exempt);
+* a call form `name()`;
+* a SCREAMING_CASE constant of length ≥ 4;
+* a snake_case identifier with ≥ 2 underscores (long enough to be a
+  deliberate code name, not prose);
+* a path-looking span ending in `.rs` / `.py` / `.toml` / `.md` — must
+  be the suffix of some real file path in the repo (docs cite
+  `sense.rs` or `planner/schedule.rs` from whatever tree they are
+  describing; drift means no file of that name exists anywhere).
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+
+from memlint.findings import Finding
+from memlint.rustlex import FileIndex, index_tree
+
+RULE = "doc-symbol"
+
+DOCS = ("rust/DESIGN.md", "rust/OPERATIONS.md", "rust/EXPERIMENTS.md")
+
+STD_ROOTS = {"std", "core", "alloc", "self", "super", "crate", "Self", "io", "python"}
+
+# std/core method names the docs may cite in call form without there
+# being (or needing) a local definition.
+STD_METHODS = {"unwrap", "expect", "clone", "drop", "len", "lock", "read", "write", "recv"}
+
+FENCE = re.compile(r"^```.*?^```", re.M | re.S)
+SPAN = re.compile(r"`([^`\n]+)`")
+CALL = re.compile(r"^([A-Za-z_][A-Za-z0-9_]*)\(\)$")
+CONST = re.compile(r"^[A-Z][A-Z0-9_]{3,}$")
+SNAKE = re.compile(r"^[a-z_][a-z0-9_]*$")
+FILEISH = re.compile(r"^[\w./-]+\.(rs|py|toml|md|json|yml)$")
+
+
+def rust_symbols(indexes: list[FileIndex]) -> set[str]:
+    syms: set[str] = set()
+    for idx in indexes:
+        for it in idx.items:
+            syms.add(it.name)
+        # Module path segments: src/coordinator/wire.rs -> coordinator, wire
+        for part in idx.path.parts:
+            name = part[:-3] if part.endswith(".rs") else part
+            if name and name != "mod":
+                syms.add(name)
+    return syms
+
+
+def python_symbols(py_root: Path) -> set[str]:
+    syms: set[str] = set()
+    for path in sorted(py_root.rglob("*.py")):
+        syms.add(path.stem)
+        try:
+            tree = ast.parse(path.read_text(encoding="utf-8"))
+        except SyntaxError:
+            continue
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+                syms.add(node.name)
+            elif isinstance(node, ast.Assign):
+                for tgt in node.targets:
+                    if isinstance(tgt, ast.Name):
+                        syms.add(tgt.id)
+    return syms
+
+
+def _spans(text: str):
+    """Yield (line, span_text) for inline code spans outside fences."""
+    stripped = FENCE.sub(lambda m: "\n" * m.group(0).count("\n"), text)
+    for ln, line in enumerate(stripped.splitlines(), 1):
+        for m in SPAN.finditer(line):
+            yield ln, m.group(1).strip()
+
+
+def _segments(path_span: str) -> list[str]:
+    out = []
+    for seg in path_span.split("::"):
+        seg = seg.strip()
+        seg = re.sub(r"\(.*\)$", "", seg)  # call parens / arg lists
+        seg = re.sub(r"<.*>$", "", seg)  # generics
+        seg = seg.rstrip("!?")  # macro bang, try operator
+        # `ServiceConfig::banks > 1` — the symbol is the first word;
+        # the rest is a prose comparison, not a path segment.
+        seg = seg.split()[0] if seg.split() else ""
+        if seg:
+            out.append(seg)
+    return out
+
+
+def check_doc(
+    root: Path, rel: str, symbols: set[str], repo_files: set[str]
+) -> list[Finding]:
+    doc = root / rel
+    if not doc.exists():
+        return []
+    findings: list[Finding] = []
+    seen: set[str] = set()  # report each dangling span once per doc
+    for ln, span in _spans(doc.read_text(encoding="utf-8")):
+        if span in seen:
+            continue
+        missing: str | None = None
+
+        if FILEISH.match(span) and ("/" in span or span.endswith((".rs", ".py"))):
+            if not any(p == span or p.endswith("/" + span) for p in repo_files):
+                missing = f"no file named `{span}` exists anywhere in the repo"
+        elif "::" in span and re.fullmatch(r"[\w:!<>()&,\s]+", span):
+            segs = _segments(span)
+            if segs and segs[0] in STD_ROOTS:
+                continue
+            for seg in segs:
+                if seg in STD_ROOTS or seg in symbols:
+                    continue
+                missing = f"`{span}`: segment `{seg}` resolves to no known item"
+                break
+        elif m := CALL.match(span):
+            if m.group(1) not in symbols and m.group(1) not in STD_METHODS:
+                missing = f"`{span}` names no known function"
+        elif CONST.match(span):
+            if span not in symbols:
+                missing = f"`{span}` names no known constant"
+        elif SNAKE.match(span) and span.count("_") >= 2:
+            if span not in symbols:
+                missing = f"`{span}` names no known item"
+
+        if missing:
+            seen.add(span)
+            findings.append(Finding(RULE, rel, ln, span, missing))
+    return findings
+
+
+def run(root: Path, indexes: list[FileIndex]) -> tuple[list[Finding], dict]:
+    # Docs also cite integration tests, benches and examples — index
+    # those trees here (the other rules only care about rust/src).
+    extra = index_tree(root, subdirs=("rust/tests", "rust/benches", "rust/examples"))
+    symbols = rust_symbols(indexes + extra) | python_symbols(root / "python")
+    # Workflow/CI step names and cargo targets count as citable too.
+    symbols |= {"memlint", "fleet_model", "check_links", "memsort"}
+    repo_files = {
+        p.relative_to(root).as_posix()
+        for p in root.rglob("*")
+        if p.is_file() and ".git" not in p.parts and "target" not in p.parts
+    }
+    findings: list[Finding] = []
+    checked = 0
+    for rel in DOCS:
+        fs = check_doc(root, rel, symbols, repo_files)
+        findings.extend(fs)
+        checked += 1
+    return findings, {"docs": checked, "symbols": len(symbols)}

@@ -1,0 +1,318 @@
+"""Rule family 3 — lock discipline across the coordinator.
+
+Extracts every lock acquisition in `rust/src/coordinator/` — native
+`.lock()` / `.read()` / `.write()` calls (empty argument lists, so
+`io::Read::read(buf)` never matches) and the poison-recovering helpers
+`lock_recover(&x)` / `read_recover(&x)` / `write_recover(&x)` — and
+checks, per function:
+
+* **Ordering** — a nested acquisition `A` held while taking `B` must
+  respect the canonical order declared in DESIGN.md's
+  `<!-- memlint:lock-order -->` block (outermost first). A reversed
+  pair in one thread plus the straight pair in another is the classic
+  ABBA deadlock; a same-lock nested pair is a self-deadlock.
+* **Blocking under a guard** — a guard held across a channel `recv` /
+  `recv_timeout` or socket I/O (`read_frame`, `write_frame`,
+  `read_exact`, `write_all`, `accept`, `connect`, `join`) stalls every
+  thread queued on that lock for as long as the peer takes.
+  Intentional cases (the writer mutex that exists precisely to
+  serialize whole-frame writes) carry allowlist entries.
+
+Guard lifetimes are tracked heuristically: a `let`-bound acquisition
+lives to the end of its block (or an explicit `drop(name)`); an
+acquisition whose method chain continues past the guard (e.g.
+`x.lock()?.remove(..)`) is statement-scoped; a scrutinee acquisition
+(`match *x.lock() {`, `if let Some(g) = x.read() {`) lives through the
+braced body, matching Rust's temporary-lifetime rules.
+"""
+
+from __future__ import annotations
+
+import re
+from pathlib import Path
+
+from memlint.findings import Finding
+from memlint.rustlex import FileIndex, FnSpan
+
+RULE = "lock-order"
+
+NATIVE = {"lock", "read", "write"}
+HELPERS = {"lock_recover", "read_recover", "write_recover"}
+GUARD_SUFFIX = {"expect", "unwrap", "unwrap_or_else"}
+BLOCKING = {
+    "recv",
+    "recv_timeout",
+    "read_frame",
+    "read_hello",
+    "write_frame",
+    "read_exact",
+    "write_all",
+    "accept",
+    "connect",
+    "join",
+}
+
+ANCHOR = re.compile(r"<!--\s*memlint:lock-order\s*\n(.*?)-->", re.S)
+
+
+def parse_order(design_md: Path) -> tuple[list[str], str | None]:
+    """The canonical order: one lock name per line, outermost first,
+    inside the DESIGN.md anchor block. `#`-prefixed lines are comments."""
+    if not design_md.exists():
+        return [], f"{design_md} does not exist — no canonical lock order to check against"
+    m = ANCHOR.search(design_md.read_text(encoding="utf-8"))
+    if not m:
+        return [], (
+            "DESIGN.md has no `<!-- memlint:lock-order -->` block — "
+            "declare the canonical order (outermost first)"
+        )
+    names = []
+    for raw in m.group(1).splitlines():
+        name = raw.strip()
+        if name and not name.startswith("#"):
+            names.append(name)
+    return names, None
+
+
+class _Acq:
+    __slots__ = ("name", "line", "depth", "bound", "let_name")
+
+    def __init__(self, name, line, depth, bound, let_name):
+        self.name = name
+        self.line = line
+        self.depth = depth  # brace depth the guard lives at
+        self.bound = bound  # False: dies at the next `;` at this depth
+        self.let_name = let_name
+
+
+def _recv_name(toks, i) -> str | None:
+    """Receiver of `recv.method()`: the ident right before the `.`."""
+    if i >= 2 and toks[i - 1].text == "." and toks[i - 2].kind == "ident":
+        return toks[i - 2].text
+    return None
+
+
+def _helper_arg_name(toks, i) -> str | None:
+    """Last ident inside `helper(&a.b.c)` — the lock's field name."""
+    j = i + 1
+    if j >= len(toks) or toks[j].text != "(":
+        return None
+    depth, name = 0, None
+    while j < len(toks):
+        t = toks[j]
+        if t.text == "(":
+            depth += 1
+        elif t.text == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        elif t.kind == "ident" and t.text not in ("mut", "self"):
+            name = t.text
+        j += 1
+    return name
+
+
+def _acquisitions(fn: FnSpan):
+    """Yield (token_index, lock_name, line, suffix_end) for each
+    acquisition site. `suffix_end` is the index just past the guard
+    expression (past `.expect(..)` etc.) used for lifetime guessing."""
+    toks = fn.tokens
+    n = len(toks)
+    for i, t in enumerate(toks):
+        if t.kind != "ident":
+            continue
+        name = None
+        if t.text in NATIVE:
+            # `.lock()` / `.read()` / `.write()` with NO arguments.
+            if (
+                i + 2 < n
+                and toks[i + 1].text == "("
+                and toks[i + 2].text == ")"
+                and i >= 1
+                and toks[i - 1].text == "."
+            ):
+                name = _recv_name(toks, i)
+                end = i + 3
+            else:
+                continue
+        elif t.text in HELPERS:
+            name = _helper_arg_name(toks, i)
+            end = i + 1
+            depth = 0
+            while end < n:
+                if toks[end].text == "(":
+                    depth += 1
+                elif toks[end].text == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end += 1
+                        break
+                end += 1
+        else:
+            continue
+        if name is None:
+            continue
+        # Swallow a poison-handling suffix: `.expect("..")`, `.unwrap()`,
+        # `.unwrap_or_else(..)` — still the same guard expression.
+        while end + 1 < n and toks[end].text == "." and toks[end + 1].text in GUARD_SUFFIX:
+            end += 2
+            depth = 0
+            while end < n:
+                if toks[end].text == "(":
+                    depth += 1
+                elif toks[end].text == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end += 1
+                        break
+                end += 1
+        yield i, name, t.line, end
+
+
+def _stmt_has_let(toks, i) -> str | None:
+    """If the statement containing token `i` starts with `let`, return
+    the bound name (last ident before `=`, skipping `mut`)."""
+    j = i
+    while j >= 0 and toks[j].text not in (";", "{", "}"):
+        j -= 1
+    j += 1
+    if j < len(toks) and toks[j].kind == "ident" and toks[j].text == "let":
+        name = None
+        k = j + 1
+        while k < i and toks[k].text != "=":
+            if toks[k].kind == "ident" and toks[k].text != "mut":
+                name = toks[k].text
+            k += 1
+        return name or "_"
+    return None
+
+
+def check_fn(fn: FnSpan, order: list[str], rel: str) -> list[Finding]:
+    toks = fn.tokens
+    n = len(toks)
+    rank = {name: i for i, name in enumerate(order)}
+    acq_at: dict[int, tuple[str, int, int]] = {}
+    for i, name, line, end in _acquisitions(fn):
+        acq_at[i] = (name, line, end)
+    findings: list[Finding] = []
+    live: list[_Acq] = []
+    depth = 0
+    i = 0
+    while i < n:
+        t = toks[i]
+        if t.text == "{":
+            depth += 1
+        elif t.text == "}":
+            depth -= 1
+            live = [g for g in live if g.depth <= depth]
+        elif t.text == ";":
+            live = [g for g in live if g.bound or g.depth < depth or g.depth > depth]
+            live = [g for g in live if not (not g.bound and g.depth == depth)]
+        elif i in acq_at:
+            name, line, end = acq_at[i]
+            if name not in rank:
+                findings.append(
+                    Finding(
+                        RULE,
+                        rel,
+                        line,
+                        f"undeclared:{name}",
+                        f"lock `{name}` (fn `{fn.name}`) is not in DESIGN.md's "
+                        "canonical lock order declaration",
+                    )
+                )
+            for g in live:
+                if g.name == name:
+                    findings.append(
+                        Finding(
+                            RULE,
+                            rel,
+                            line,
+                            f"{fn.name}:{name}->{name}",
+                            f"`{name}` acquired while already held in fn `{fn.name}` "
+                            "— self-deadlock",
+                        )
+                    )
+                elif g.name in rank and name in rank and rank[g.name] > rank[name]:
+                    findings.append(
+                        Finding(
+                            RULE,
+                            rel,
+                            line,
+                            f"{fn.name}:{g.name}->{name}",
+                            f"`{name}` acquired while `{g.name}` is held in fn "
+                            f"`{fn.name}`, but the canonical order is "
+                            f"`{name}` before `{g.name}` — ABBA deadlock shape",
+                        )
+                    )
+            # Lifetime: chain continues -> statement temp; `{` before `;`
+            # -> scrutinee/if-let guard living through the braced body;
+            # plain `let` -> block-bound.
+            let_name = _stmt_has_let(toks, i)
+            chained = end < n and toks[end].text == "."
+            j = end
+            d = 0
+            brace_first = False
+            while j < n:
+                tj = toks[j]
+                if tj.text in "([":
+                    d += 1
+                elif tj.text in ")]":
+                    d -= 1
+                elif d == 0 and tj.text == "{":
+                    brace_first = True
+                    break
+                elif d == 0 and tj.text == ";":
+                    break
+                j += 1
+            if brace_first:
+                live.append(_Acq(name, line, depth + 1, True, let_name))
+            elif chained or let_name is None:
+                live.append(_Acq(name, line, depth, False, let_name))
+            else:
+                live.append(_Acq(name, line, depth, True, let_name))
+        elif t.kind == "ident" and t.text == "drop" and i + 1 < n and toks[i + 1].text == "(":
+            if i + 2 < n and toks[i + 2].kind == "ident":
+                victim = toks[i + 2].text
+                live = [g for g in live if g.let_name != victim]
+        elif t.kind == "ident" and t.text in BLOCKING:
+            if i + 1 < n and toks[i + 1].text == "(" and not (i > 0 and toks[i - 1].text == "fn"):
+                for g in live:
+                    findings.append(
+                        Finding(
+                            RULE,
+                            rel,
+                            t.line,
+                            f"{fn.name}:{g.name}->{t.text}",
+                            f"guard `{g.name}` held across blocking `{t.text}(..)` in "
+                            f"fn `{fn.name}` — every thread queued on the lock stalls "
+                            "for as long as the peer takes",
+                        )
+                    )
+        i += 1
+    return findings
+
+
+def run(
+    root: Path, indexes: list[FileIndex], design_md: Path
+) -> tuple[list[Finding], dict]:
+    order, err = parse_order(design_md)
+    findings: list[Finding] = []
+    if err:
+        findings.append(Finding(RULE, "rust/DESIGN.md", 1, "missing-order", err))
+    sites = 0
+    for idx in indexes:
+        rel = idx.path.relative_to(root).as_posix()
+        if "coordinator" not in rel:
+            continue
+        # locks.rs *is* the acquisition primitive: its helpers lock
+        # generic parameters, which by construction have no place in a
+        # canonical order over named shared fields.
+        if rel.endswith("/locks.rs"):
+            continue
+        for fn in idx.fns:
+            if fn.in_test:
+                continue
+            sites += sum(1 for _ in _acquisitions(fn))
+            findings.extend(check_fn(fn, order, rel))
+    return findings, {"sites": sites, "order": order}

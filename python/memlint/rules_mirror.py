@@ -1,0 +1,159 @@
+"""Rule family 5 — mirror coverage.
+
+Every top-level model function in `planner/schedule.rs` must have a
+`fleet_model.py` mirror that is exercised under a hard `pin()`. The
+mapping lives in `mirror_map.json` next to this module:
+
+    {
+      "sharded_completion": {
+        "python": "model_sharded_completion",
+        "pins": ["hetero uniform"]
+      },
+      "helper_fn": {"skip": "pure plumbing, no closed-form model"}
+    }
+
+Checks:
+
+* every top-level non-test fn in schedule.rs appears in the map
+  (mapped or explicitly skipped with a reason);
+* every mapped `python` function is defined in fleet_model.py AND
+  called there (a mirror that exists but never runs pins nothing);
+* every listed pin tag appears verbatim in fleet_model.py — tags are
+  the third argument of `pin(got, want, tag)`, so a missing tag means
+  the pin was deleted or renamed;
+* stale map entries (schedule.rs fn gone) are findings too — the map
+  must shrink with the code.
+"""
+
+from __future__ import annotations
+
+import ast
+import json
+from pathlib import Path
+
+from memlint.findings import Finding
+from memlint.rustlex import FileIndex
+
+RULE = "mirror-coverage"
+
+SCHED_REL = "rust/src/coordinator/planner/schedule.rs"
+MODEL_REL = "python/fleet_model.py"
+
+
+def schedule_fns(idx: FileIndex) -> dict[str, int]:
+    """Top-level (not impl-method, not test) fns in schedule.rs."""
+    return {
+        fn.name: fn.start_line
+        for fn in idx.fns
+        if fn.depth == 0 and fn.context == "" and not fn.in_test
+    }
+
+
+def model_defs_and_calls(model_py: Path) -> tuple[set[str], set[str], str]:
+    src = model_py.read_text(encoding="utf-8")
+    tree = ast.parse(src)
+    defs = {
+        n.name for n in ast.walk(tree) if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+    }
+    calls = {
+        n.func.id
+        for n in ast.walk(tree)
+        if isinstance(n, ast.Call) and isinstance(n.func, ast.Name)
+    }
+    return defs, calls, src
+
+
+def run(root: Path, indexes: list[FileIndex], map_path: Path) -> tuple[list[Finding], dict]:
+    findings: list[Finding] = []
+
+    def flag(file, line, key, msg):
+        findings.append(Finding(RULE, file, line, key, msg))
+
+    sched_idx = next(
+        (i for i in indexes if i.path.relative_to(root).as_posix() == SCHED_REL), None
+    )
+    if sched_idx is None:
+        return [Finding(RULE, SCHED_REL, 1, "missing", "schedule.rs not found")], {}
+    fns = schedule_fns(sched_idx)
+
+    if not map_path.exists():
+        return (
+            [Finding(RULE, "python/memlint/mirror_map.json", 1, "missing", "mirror_map.json not found")],
+            {"rust_fns": len(fns)},
+        )
+    mapping: dict[str, dict] = json.loads(map_path.read_text(encoding="utf-8"))
+
+    model_py = root / MODEL_REL
+    if not model_py.exists():
+        return [Finding(RULE, MODEL_REL, 1, "missing", "fleet_model.py not found")], {}
+    defs, calls, model_src = model_defs_and_calls(model_py)
+
+    mapped = 0
+    for name, line in sorted(fns.items()):
+        entry = mapping.get(name)
+        if entry is None:
+            flag(
+                SCHED_REL,
+                line,
+                f"unmapped:{name}",
+                f"schedule.rs model fn `{name}` has no fleet_model.py mirror entry "
+                "in mirror_map.json (map it, or skip it with a reason)",
+            )
+            continue
+        if "skip" in entry:
+            if not str(entry["skip"]).strip():
+                flag(
+                    SCHED_REL,
+                    line,
+                    f"skip-empty:{name}",
+                    f"mirror_map.json skips `{name}` without a reason",
+                )
+            continue
+        mapped += 1
+        py = entry.get("python", "")
+        pins = entry.get("pins", [])
+        if py not in defs:
+            flag(
+                MODEL_REL,
+                1,
+                f"no-def:{name}",
+                f"mirror_map.json maps `{name}` to `{py}`, which is not defined in "
+                "fleet_model.py",
+            )
+            continue
+        if py not in calls:
+            flag(
+                MODEL_REL,
+                1,
+                f"no-call:{name}",
+                f"mirror `{py}` (for `{name}`) is defined but never called in "
+                "fleet_model.py — a mirror that never runs pins nothing",
+            )
+        if not pins:
+            flag(
+                SCHED_REL,
+                line,
+                f"no-pins:{name}",
+                f"mirror_map.json entry for `{name}` lists no pin tags",
+            )
+        for tag in pins:
+            if tag not in model_src:
+                flag(
+                    MODEL_REL,
+                    1,
+                    f"pin-gone:{name}:{tag}",
+                    f"pin tag {tag!r} (for `{name}` -> `{py}`) no longer appears in "
+                    "fleet_model.py",
+                )
+
+    for name in sorted(mapping):
+        if name not in fns:
+            flag(
+                SCHED_REL,
+                1,
+                f"stale-map:{name}",
+                f"mirror_map.json maps `{name}`, but schedule.rs has no such "
+                "top-level fn — prune the entry",
+            )
+
+    return findings, {"rust_fns": len(fns), "mapped": mapped}

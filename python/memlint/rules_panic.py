@@ -1,0 +1,157 @@
+"""Rule family 2 — panic-path audit.
+
+Inventories every `unwrap()` / `expect(...)` / `panic!` /
+`unreachable!` / `todo!` / `unimplemented!` / raw-index site in the
+Rust tree, and *forbids* them on the request-serving paths: the shard
+server's session loops, the frontend's admission, the remote
+transport's reader threads, and the wire decode path. A panic on any
+of those threads either kills a session another tenant shares or
+poisons a lock every sibling session needs — the multi-connection
+server's whole contract is that one bad frame degrades one session,
+not the process.
+
+Sites in `#[cfg(test)]` / `#[test]` code never count. Sites outside
+the serving scope are inventory only (reported in the summary, never
+findings). A serving-path site survives only through the allowlist,
+keyed `"<fn>:<pattern>@<occurrence>"` so entries pin one proven-safe
+site each and go stale when the code around them moves.
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+
+from memlint.findings import Finding
+from memlint.rustlex import FileIndex, FnSpan
+
+RULE = "panic-path"
+
+# The serving scope: file suffix -> enforced function names, or "*" for
+# every non-test function in the file. These are the loops and helpers
+# that run on session, collector, reader or admission threads.
+SERVING_SCOPE: dict[str, set[str] | str] = {
+    "rust/src/coordinator/shard_server.rs": {
+        "serve_conn",
+        "dispatch_job",
+        "serve_tcp",
+        "reject_over_cap",
+    },
+    "rust/src/coordinator/transport.rs": "*",
+    "rust/src/coordinator/frontend.rs": {
+        "try_admit",
+        "release",
+        "saturated",
+        "sort",
+        "sort_batch",
+        "admission",
+        "fleet_metrics",
+    },
+    # The wire decode path: a malformed or hostile frame must surface as
+    # an Err, never a panic, because the reader that hits it is shared.
+    "rust/src/coordinator/wire.rs": {
+        "read_frame",
+        "read_hello",
+        "read_raw",
+        "decode",
+        "take",
+        "u8",
+        "bool",
+        "u32",
+        "u64",
+        "usize",
+        "f64",
+        "len_prefix",
+        "str",
+        "finish",
+        "get_priority",
+        "get_tag",
+        "get_u32_vec",
+        "get_stats",
+        "get_response",
+        "get_config",
+        "get_snapshot",
+    },
+}
+
+PANIC_MACROS = {"panic", "unreachable", "todo", "unimplemented"}
+PANIC_METHODS = {"unwrap", "expect"}
+
+
+def _relpath(path: Path, root: Path) -> str:
+    return path.relative_to(root).as_posix()
+
+
+def _in_scope(rel: str, fn: FnSpan) -> bool:
+    scope = SERVING_SCOPE.get(rel)
+    if scope is None or fn.in_test:
+        return False
+    return scope == "*" or fn.name in scope
+
+
+def _sites(fn: FnSpan):
+    """Yield (line, pattern) for every panic-capable site in a body."""
+    toks = fn.tokens
+    n = len(toks)
+    for i, t in enumerate(toks):
+        if t.kind != "ident" and not (t.kind == "punct" and t.text == "["):
+            continue
+        prev = toks[i - 1] if i > 0 else None
+        nxt = toks[i + 1] if i + 1 < n else None
+        if t.kind == "ident" and t.text in PANIC_METHODS:
+            if prev is not None and prev.text == "." and nxt is not None and nxt.text == "(":
+                if t.text == "unwrap":
+                    # `.unwrap()` exactly — unwrap_or etc. are distinct idents.
+                    close = toks[i + 2] if i + 2 < n else None
+                    if close is None or close.text != ")":
+                        continue
+                yield t.line, t.text
+        elif t.kind == "ident" and t.text in PANIC_MACROS:
+            if nxt is not None and nxt.text == "!":
+                # debug_assert-style call sites don't route here; the
+                # macro ident itself is the site.
+                yield t.line, f"{t.text}!"
+        elif t.text == "[" and t.kind == "punct":
+            # Raw index: `expr[...]` where expr ends in an ident, `)`,
+            # `]` or `?`. Excludes attributes (`#[`), macro brackets
+            # (`vec![`) and array/slice type or literal positions.
+            if prev is None or prev.text in ("#", "!"):
+                continue
+            if prev.kind in ("ident", "num") or prev.text in (")", "]", "?"):
+                if prev.kind == "ident" and prev.text in ("mut", "ref", "dyn", "as", "return"):
+                    continue
+                yield t.line, "raw-index"
+
+
+def run(root: Path, indexes: list[FileIndex]) -> tuple[list[Finding], dict]:
+    findings: list[Finding] = []
+    inventory = {"total": 0, "serving": 0, "files": 0}
+    for idx in indexes:
+        rel = _relpath(idx.path, root)
+        file_count = 0
+        per_fn_seen: dict[tuple[str, str], int] = {}
+        for fn in idx.fns:
+            for line, pattern in _sites(fn):
+                file_count += 1
+                if fn.in_test:
+                    continue
+                inventory["total"] += 1
+                if not _in_scope(rel, fn):
+                    continue
+                inventory["serving"] += 1
+                occ = per_fn_seen.get((fn.name, pattern), 0)
+                per_fn_seen[(fn.name, pattern)] = occ + 1
+                findings.append(
+                    Finding(
+                        RULE,
+                        rel,
+                        line,
+                        f"{fn.name}:{pattern}@{occ}",
+                        f"`{pattern}` on the request-serving path in fn `{fn.name}` "
+                        "— a panic here kills a shared session thread or poisons a "
+                        "lock every sibling needs; return an Err / Frame::Dropped "
+                        "instead, or allowlist with a proof of infallibility",
+                    )
+                )
+        if file_count:
+            inventory["files"] += 1
+    return findings, inventory

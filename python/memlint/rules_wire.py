@@ -1,0 +1,393 @@
+"""Rule family 1 — wire-registry consistency.
+
+The wire protocol is specified three times: in `coordinator/wire.rs`
+(the `kind()` / `decode()` / `wire_version()` match arms plus the
+pinned size-formula test), in OPERATIONS.md's wire table, and in
+`python/fleet_model.py`'s `frame_bytes_*` formulas. Nothing compiles
+the three against each other, so this rule does:
+
+* every `Frame` variant has exactly one kind id, `kind()` and
+  `decode()` agree on it, and the OPERATIONS.md table (under the
+  `<!-- memlint:wire-table -->` anchor) lists the same id for the same
+  frame name — no extras, no omissions on either side;
+* the per-kind minimum-version stamps from `wire_version()` match the
+  table's `min ver` column (`cur` meaning `WIRE_VERSION`, for the
+  handshake frame that always advertises the build's version);
+* the `Version N (minimum accepted: M)` doc line matches
+  `WIRE_VERSION` / `MIN_WIRE_VERSION`;
+* the three size formulas — job `24 + 4n`, tagged job `33 + t + 4n`,
+  full response `112 + 12n` — agree numerically between the wire.rs
+  pinned test, the OPERATIONS.md prose, and
+  `fleet_model.frame_bytes_job/_job_tagged/_ok`, evaluated at several
+  (n, t) sample points.
+"""
+
+from __future__ import annotations
+
+import re
+from pathlib import Path
+
+from memlint.findings import Finding
+from memlint.rustlex import FileIndex, Token
+
+RULE = "wire-registry"
+
+DOC_REL = "rust/OPERATIONS.md"
+WIRE_REL = "rust/src/coordinator/wire.rs"
+
+TABLE_ANCHOR = "<!-- memlint:wire-table -->"
+VERSION_LINE = re.compile(r"Version `(\d+)` \(minimum accepted: `(\d+)`\)")
+TABLE_ROW = re.compile(r"^\|\s*(\d+)\s*\|\s*(\w+)\s*\|\s*(cur|\d+)\s*\|")
+
+# OPERATIONS.md prose formulas, anchored by their role words.
+DOC_JOB = re.compile(r"`([0-9tn +*]+)` per job frame")
+DOC_TAGGED = re.compile(r"`([0-9tn +*]+)` for a tagged job")
+DOC_RESP = re.compile(r"`([0-9tn +*]+)` per full response frame")
+
+SAMPLES = [(0, 0), (1, 1), (1024, 7), (100_000, 32)]
+
+
+def _eval_formula(expr: str, n: int, t: int) -> int | None:
+    """Evaluate a doc formula like `33 + t + 4n` at (n, t)."""
+    py = re.sub(r"(\d)\s*([nt])\b", r"\1*\2", expr)
+    if not re.fullmatch(r"[0-9nt +*()]+", py):
+        return None
+    try:
+        return int(eval(py, {"__builtins__": {}}, {"n": n, "t": t}))  # noqa: S307
+    except Exception:
+        return None
+
+
+def _fn_tokens(idx: FileIndex, name: str) -> list[Token]:
+    for fn in idx.fns:
+        if fn.name == name:
+            return fn.tokens
+    return []
+
+
+def _consts(idx: FileIndex) -> dict[str, int]:
+    """`pub const NAME: ty = <int>;` bindings, by token scan."""
+    toks = idx.tokens
+    out: dict[str, int] = {}
+    for i, t in enumerate(toks):
+        if t.kind == "ident" and t.text == "const" and i + 1 < len(toks):
+            name_tok = toks[i + 1]
+            j = i + 2
+            while j < len(toks) and toks[j].text != "=" and toks[j].text != ";":
+                j += 1
+            if j + 1 < len(toks) and toks[j].text == "=" and toks[j + 1].kind == "num":
+                try:
+                    out[name_tok.text] = int(toks[j + 1].text.replace("_", ""), 0)
+                except ValueError:
+                    pass
+    return out
+
+
+def parse_kind_map(idx: FileIndex) -> dict[str, int]:
+    """`Frame::Name ... => <num>` arms inside fn kind()."""
+    toks = _fn_tokens(idx, "kind")
+    out: dict[str, int] = {}
+    i = 0
+    while i < len(toks):
+        if toks[i].text == "Frame" and i + 2 < len(toks) and toks[i + 1].text == "::":
+            name = toks[i + 2].text
+            j = i + 3
+            while j < len(toks) and toks[j].text != "=>":
+                j += 1
+            if j + 1 < len(toks) and toks[j + 1].kind == "num":
+                out[name] = int(toks[j + 1].text)
+            i = j
+        i += 1
+    return out
+
+
+def parse_decode_map(idx: FileIndex) -> dict[str, int]:
+    """`<num> => ... Frame::Name` arms inside fn decode()."""
+    toks = _fn_tokens(idx, "decode")
+    out: dict[str, int] = {}
+    pending: int | None = None
+    i = 0
+    while i < len(toks):
+        t = toks[i]
+        if t.kind == "num" and i + 1 < len(toks) and toks[i + 1].text == "=>":
+            pending = int(t.text)
+        elif (
+            pending is not None
+            and t.text == "Frame"
+            and i + 2 < len(toks)
+            and toks[i + 1].text == "::"
+        ):
+            out[toks[i + 2].text] = pending
+            pending = None
+        i += 1
+    return out
+
+
+def parse_version_map(idx: FileIndex, consts: dict[str, int]) -> dict[str, int | str]:
+    """`Frame::A | Frame::B => <num|CONST>` arms inside wire_version().
+    Returns per-variant stamps; the `_ =>` arm's value under key `"_"`."""
+    toks = _fn_tokens(idx, "wire_version")
+    out: dict[str, int | str] = {}
+    i = 0
+    names: list[str] = []
+    while i < len(toks):
+        t = toks[i]
+        if t.text == "Frame" and i + 2 < len(toks) and toks[i + 1].text == "::":
+            names.append(toks[i + 2].text)
+        elif t.text == "_" and t.kind == "ident":
+            names.append("_")
+        elif t.text == "=>":
+            j = i + 1
+            val: int | str | None = None
+            if j < len(toks):
+                if toks[j].kind == "num":
+                    val = int(toks[j].text)
+                elif toks[j].kind == "ident" and toks[j].text in consts:
+                    val = consts[toks[j].text]
+                elif toks[j].kind == "ident":
+                    val = toks[j].text
+            if val is not None:
+                for name in names:
+                    out[name] = val
+            names = []
+        i += 1
+    return out
+
+
+def parse_rust_formulas(idx: FileIndex) -> dict[str, tuple[int, ...]]:
+    """Extract (base, per_elem[, tagged]) coefficient tuples from the
+    pinned `frame_sizes_match_the_documented_overhead_model` test, by
+    token shape: `A + B * n` -> job (B==4) or resp (B==12);
+    `A + t + B * n` -> tagged."""
+    toks = _fn_tokens(idx, "frame_sizes_match_the_documented_overhead_model")
+    out: dict[str, tuple[int, ...]] = {}
+    n = len(toks)
+    for i in range(n - 4):
+        a, p1, b = toks[i], toks[i + 1], toks[i + 2]
+        if a.kind == "num" and p1.text == "+":
+            # `A + t + B * n` (tagged job)
+            if (
+                b.kind == "ident"
+                and b.text == "t"
+                and i + 6 < n
+                and toks[i + 3].text == "+"
+                and toks[i + 4].kind == "num"
+                and toks[i + 5].text == "*"
+                and toks[i + 6].text == "n"
+            ):
+                out.setdefault("tagged", (int(a.text), int(toks[i + 4].text)))
+            # `A + B * n`
+            elif (
+                b.kind == "num"
+                and i + 4 < n
+                and toks[i + 3].text == "*"
+                and toks[i + 4].text == "n"
+            ):
+                base, per = int(a.text), int(b.text)
+                role = {4: "job", 12: "resp"}.get(per)
+                if role:
+                    out.setdefault(role, (base, per))
+    return out
+
+
+def parse_doc(ops_md: Path):
+    """Returns (version_pair, rows, formulas, anchor_line, problems)."""
+    problems: list[str] = []
+    if not ops_md.exists():
+        return None, {}, {}, 0, [f"{ops_md} does not exist"]
+    text = ops_md.read_text(encoding="utf-8")
+    lines = text.splitlines()
+
+    vm = VERSION_LINE.search(text)
+    version_pair = (int(vm.group(1)), int(vm.group(2))) if vm else None
+    if not vm:
+        problems.append("no `Version `N` (minimum accepted: `M`)` line found")
+
+    anchor_line = 0
+    rows: dict[str, tuple[int, int | str, int]] = {}  # name -> (id, minver, line)
+    for ln, line in enumerate(lines, 1):
+        if TABLE_ANCHOR in line:
+            anchor_line = ln
+        elif anchor_line and ln > anchor_line:
+            m = TABLE_ROW.match(line.strip())
+            if m:
+                minv: int | str = m.group(3) if m.group(3) == "cur" else int(m.group(3))
+                rows[m.group(2)] = (int(m.group(1)), minv, ln)
+            elif rows and not line.strip().startswith("|"):
+                break  # table ended
+    if not anchor_line:
+        problems.append(
+            f"no `{TABLE_ANCHOR}` anchor — the kind table must stay machine-parseable"
+        )
+
+    formulas: dict[str, str] = {}
+    for role, rx in (("job", DOC_JOB), ("tagged", DOC_TAGGED), ("resp", DOC_RESP)):
+        m = rx.search(text)
+        if m:
+            formulas[role] = m.group(1)
+        else:
+            problems.append(f"no `{role}` size formula found in the prose")
+    return version_pair, rows, formulas, anchor_line, problems
+
+
+def run(root: Path, indexes: list[FileIndex]) -> tuple[list[Finding], dict]:
+    findings: list[Finding] = []
+    wire_idx = next(
+        (i for i in indexes if i.path.relative_to(root).as_posix() == WIRE_REL), None
+    )
+    if wire_idx is None:
+        return [Finding(RULE, WIRE_REL, 1, "missing", "wire.rs not found")], {}
+
+    consts = _consts(wire_idx)
+    wire_version = consts.get("WIRE_VERSION")
+    min_version = consts.get("MIN_WIRE_VERSION")
+    kind_map = parse_kind_map(wire_idx)
+    decode_map = parse_decode_map(wire_idx)
+    version_map = parse_version_map(wire_idx, consts)
+    rust_formulas = parse_rust_formulas(wire_idx)
+    variants = {
+        it.name for it in wire_idx.items if it.kind == "variant" and not it.in_test
+    }
+
+    def flag(file, line, key, msg):
+        findings.append(Finding(RULE, file, line, key, msg))
+
+    # -- internal wire.rs consistency ---------------------------------
+    for name in sorted(variants):
+        if name not in kind_map:
+            flag(WIRE_REL, 1, f"kind-missing:{name}", f"Frame::{name} has no kind() arm")
+        if name not in decode_map:
+            flag(
+                WIRE_REL, 1, f"decode-missing:{name}", f"Frame::{name} has no decode() arm"
+            )
+    for name, kid in sorted(kind_map.items()):
+        if name in decode_map and decode_map[name] != kid:
+            flag(
+                WIRE_REL,
+                1,
+                f"kind-decode:{name}",
+                f"Frame::{name}: kind() says {kid} but decode() maps {decode_map[name]}",
+            )
+    ids = sorted(kind_map.values())
+    if len(set(ids)) != len(ids):
+        flag(WIRE_REL, 1, "kind-dup", f"duplicate kind ids in kind(): {ids}")
+
+    # -- doc table vs wire.rs -----------------------------------------
+    version_pair, rows, doc_formulas, anchor_line, problems = parse_doc(
+        root / DOC_REL
+    )
+    for p in problems:
+        flag(DOC_REL, anchor_line or 1, f"doc:{p[:40]}", p)
+
+    if version_pair and wire_version is not None and min_version is not None:
+        if version_pair != (wire_version, min_version):
+            flag(
+                DOC_REL,
+                1,
+                "version-line",
+                f"doc says version {version_pair[0]} (min {version_pair[1]}) but "
+                f"wire.rs has WIRE_VERSION={wire_version}, "
+                f"MIN_WIRE_VERSION={min_version}",
+            )
+
+    default_stamp = version_map.get("_", min_version)
+    for name, kid in sorted(kind_map.items()):
+        if name not in rows:
+            flag(
+                DOC_REL,
+                anchor_line or 1,
+                f"table-missing:{name}",
+                f"frame {name} (kind {kid}) is absent from the OPERATIONS.md kind table",
+            )
+            continue
+        doc_id, doc_min, ln = rows[name]
+        if doc_id != kid:
+            flag(
+                DOC_REL,
+                ln,
+                f"table-id:{name}",
+                f"table says {name} is kind {doc_id}; kind() says {kid}",
+            )
+        rust_min = version_map.get(name, default_stamp)
+        doc_min_val = wire_version if doc_min == "cur" else doc_min
+        if rust_min is not None and doc_min_val != rust_min:
+            flag(
+                DOC_REL,
+                ln,
+                f"table-minver:{name}",
+                f"table stamps {name} at min version {doc_min}; wire_version() "
+                f"says {rust_min}",
+            )
+    for name, (doc_id, _, ln) in sorted(rows.items()):
+        if name not in kind_map:
+            flag(
+                DOC_REL,
+                ln,
+                f"table-extra:{name}",
+                f"table lists frame {name} (kind {doc_id}) but wire.rs has no such "
+                "variant",
+            )
+
+    # -- size formulas: rust test pin vs doc prose vs fleet_model -----
+    try:
+        import fleet_model  # noqa: PLC0415  (lives in python/, sys.path[0])
+
+        model = {
+            "job": lambda n, t: fleet_model.frame_bytes_job(n),
+            "tagged": lambda n, t: fleet_model.frame_bytes_job_tagged(n, t),
+            "resp": lambda n, t: fleet_model.frame_bytes_ok(n),
+        }
+    except Exception as exc:  # pragma: no cover — model must import
+        model = {}
+        flag("python/fleet_model.py", 1, "model-import", f"cannot import fleet_model: {exc}")
+
+    for role in ("job", "tagged", "resp"):
+        coeffs = rust_formulas.get(role)
+        if coeffs is None:
+            flag(
+                WIRE_REL,
+                1,
+                f"formula-missing:{role}",
+                f"no pinned `{role}` size formula found in "
+                "frame_sizes_match_the_documented_overhead_model",
+            )
+            continue
+
+        def rust_eval(n, t, coeffs=coeffs, role=role):
+            base, per = coeffs
+            return base + per * n + (t if role == "tagged" else 0)
+
+        for n, t in SAMPLES:
+            want = rust_eval(n, t)
+            if role in doc_formulas:
+                got = _eval_formula(doc_formulas[role], n, t)
+                if got != want:
+                    flag(
+                        DOC_REL,
+                        1,
+                        f"formula-doc:{role}",
+                        f"doc formula `{doc_formulas[role]}` gives {got} at "
+                        f"(n={n}, t={t}); wire.rs pins {want}",
+                    )
+                    break
+        for n, t in SAMPLES:
+            want = rust_eval(n, t)
+            if role in model:
+                got = model[role](n, t)
+                if got != want:
+                    flag(
+                        "python/fleet_model.py",
+                        1,
+                        f"formula-model:{role}",
+                        f"fleet_model frame_bytes for `{role}` gives {got} at "
+                        f"(n={n}, t={t}); wire.rs pins {want}",
+                    )
+                    break
+
+    summary = {
+        "variants": len(variants),
+        "kinds": len(kind_map),
+        "doc_rows": len(rows),
+        "formulas": sorted(rust_formulas),
+    }
+    return findings, summary

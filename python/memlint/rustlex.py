@@ -1,0 +1,435 @@
+"""Lightweight Rust lexer and item walker for memlint.
+
+No rustc, no syn: a hand-rolled scanner good enough to answer the
+questions the lint rules ask — where the comments and strings are (so
+pattern rules never fire inside them), where each `fn` body starts and
+ends, which items exist (functions, types, enum variants, struct
+fields, consts, modules), and which regions are `#[cfg(test)]` /
+`#[test]` code.
+
+The contract is *deliberately* shallow: memlint's rules only need
+token streams with line numbers and a per-function attribution, and a
+shallow lexer survives language evolution far better than a grammar.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from pathlib import Path
+
+IDENT_START = set("abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ_")
+IDENT_CONT = IDENT_START | set("0123456789")
+
+# Keywords that introduce a named item; the next identifier is its name.
+ITEM_KEYWORDS = {"fn", "struct", "enum", "trait", "mod", "const", "static", "type", "union"}
+
+
+@dataclass
+class Token:
+    kind: str  # "ident" | "punct" | "num" | "str" | "char" | "lifetime"
+    text: str
+    line: int
+
+
+@dataclass
+class Item:
+    kind: str  # "fn" | "struct" | "enum" | ... | "variant" | "field"
+    name: str
+    line: int
+    in_test: bool
+
+
+@dataclass
+class FnSpan:
+    """One function body: its name, impl/mod context and token slice."""
+
+    name: str
+    context: str  # enclosing impl type or module chain, "" at top level
+    start_line: int
+    end_line: int
+    tokens: list  # the body tokens (between the braces, exclusive)
+    in_test: bool
+    depth: int  # brace depth the `fn` keyword appeared at
+
+
+def tokenize(src: str) -> list[Token]:
+    """Tokenize Rust source, dropping comments and string *contents*
+    (strings become a single `str` token so rules cannot fire inside
+    them). Handles nested block comments, raw strings and the
+    char-vs-lifetime ambiguity."""
+    toks: list[Token] = []
+    i, n, line = 0, len(src), 1
+    while i < n:
+        c = src[i]
+        if c == "\n":
+            line += 1
+            i += 1
+            continue
+        if c in " \t\r":
+            i += 1
+            continue
+        # Line comment.
+        if src.startswith("//", i):
+            j = src.find("\n", i)
+            i = n if j == -1 else j
+            continue
+        # Block comment (nested).
+        if src.startswith("/*", i):
+            depth, i = 1, i + 2
+            while i < n and depth:
+                if src.startswith("/*", i):
+                    depth, i = depth + 1, i + 2
+                elif src.startswith("*/", i):
+                    depth, i = depth - 1, i + 2
+                else:
+                    if src[i] == "\n":
+                        line += 1
+                    i += 1
+            continue
+        # Raw string r"..." / r#"..."# (any # depth).
+        if c == "r" and i + 1 < n and src[i + 1] in "\"#":
+            j = i + 1
+            hashes = 0
+            while j < n and src[j] == "#":
+                hashes, j = hashes + 1, j + 1
+            if j < n and src[j] == '"':
+                close = '"' + "#" * hashes
+                k = src.find(close, j + 1)
+                k = n if k == -1 else k + len(close)
+                start = line
+                line += src.count("\n", i, k)
+                toks.append(Token("str", "", start))
+                i = k
+                continue
+        # Plain string.
+        if c == '"':
+            j = i + 1
+            while j < n:
+                if src[j] == "\\":
+                    j += 2
+                    continue
+                if src[j] == '"':
+                    break
+                j += 1
+            start = line
+            line += src.count("\n", i, j)
+            toks.append(Token("str", "", start))
+            i = j + 1
+            continue
+        # Char literal vs lifetime.
+        if c == "'":
+            if i + 1 < n and (src[i + 1] in IDENT_START) and not (
+                i + 2 < n and src[i + 2] == "'"
+            ):
+                j = i + 1
+                while j < n and src[j] in IDENT_CONT:
+                    j += 1
+                toks.append(Token("lifetime", src[i:j], line))
+                i = j
+                continue
+            # Char literal: 'x', '\n', '\u{..}'.
+            j = i + 1
+            if j < n and src[j] == "\\":
+                j += 2
+                while j < n and src[j] != "'":
+                    j += 1
+            else:
+                j += 1
+            toks.append(Token("char", "", line))
+            i = j + 1
+            continue
+        if c in IDENT_START:
+            j = i
+            while j < n and src[j] in IDENT_CONT:
+                j += 1
+            toks.append(Token("ident", src[i:j], line))
+            i = j
+            continue
+        if c.isdigit():
+            j = i
+            while j < n and (src[j] in IDENT_CONT or src[j] == "."):
+                # Stop a range `0..n` from being eaten as one number.
+                if src.startswith("..", j):
+                    break
+                j += 1
+            toks.append(Token("num", src[i:j], line))
+            i = j
+            continue
+        # `::` / `=>` / `->` as one token — rules key on paths and
+        # match arms, and a lone `>` from an arrow would unbalance
+        # angle-bracket depth tracking.
+        if src.startswith(("::", "=>", "->"), i):
+            toks.append(Token("punct", src[i : i + 2], line))
+            i += 2
+            continue
+        toks.append(Token("punct", c, line))
+        i += 1
+    return toks
+
+
+def _attr_is_test(toks: list[Token], close: int) -> bool:
+    """Whether the attribute ending at `]` index `close` marks test code
+    (`#[test]` or `#[cfg(test)]` / `#[cfg(all(test, ...))]`)."""
+    j = close
+    depth = 0
+    while j >= 0:
+        t = toks[j]
+        if t.text == "]":
+            depth += 1
+        elif t.text == "[":
+            depth -= 1
+            if depth == 0:
+                break
+        j -= 1
+    inner = [t.text for t in toks[j + 1 : close] if t.kind == "ident"]
+    if inner == ["test"]:
+        return True
+    return bool(inner) and inner[0] == "cfg" and "test" in inner
+
+
+@dataclass
+class FileIndex:
+    """Everything memlint knows about one Rust file."""
+
+    path: Path
+    tokens: list = field(default_factory=list)
+    items: list = field(default_factory=list)  # Item
+    fns: list = field(default_factory=list)  # FnSpan
+
+
+def index_file(path: Path, src: str | None = None) -> FileIndex:
+    """Walk one file: collect named items (with test attribution) and
+    function spans with their impl/mod context."""
+    text = src if src is not None else path.read_text(encoding="utf-8")
+    toks = tokenize(text)
+    idx = FileIndex(path=path, tokens=toks)
+    # Stack of (kind, name, depth, is_test) for blocks that carry
+    # context: mod / impl / enum / struct / trait / fn.
+    stack: list[tuple[str, str, int, bool]] = []
+    depth = 0
+    pending: tuple[str, str, bool] | None = None  # block waiting for its `{`
+    test_attr = False  # a #[test]/#[cfg(test)] attribute is pending
+    i = 0
+    n = len(toks)
+    while i < n:
+        t = toks[i]
+        if t.text == "{" and t.kind == "punct":
+            depth += 1
+            if pending:
+                stack.append((pending[0], pending[1], depth, pending[2]))
+                pending = None
+            i += 1
+            continue
+        if t.text == "}" and t.kind == "punct":
+            while stack and stack[-1][2] == depth:
+                closed = stack.pop()
+                if closed[0] == "fn":
+                    # Find the matching FnSpan (the last unclosed one).
+                    for fs in reversed(idx.fns):
+                        if fs.end_line == -1 and fs.name == closed[1]:
+                            fs.end_line = t.line
+                            break
+            depth -= 1
+            i += 1
+            continue
+        if t.text == ";" and pending:
+            pending = None  # e.g. `mod foo;`, `struct Unit;`
+            i += 1
+            continue
+        # Attributes: scan to the matching `]`, note test markers.
+        if t.text == "#" and i + 1 < n and toks[i + 1].text == "[":
+            j = i + 1
+            d = 0
+            while j < n:
+                if toks[j].text == "[":
+                    d += 1
+                elif toks[j].text == "]":
+                    d -= 1
+                    if d == 0:
+                        break
+                j += 1
+            if _attr_is_test(toks, j):
+                test_attr = True
+            i = j + 1
+            continue
+        in_test = test_attr or any(s[3] for s in stack)
+        if t.kind == "ident" and t.text in ITEM_KEYWORDS and not _is_path_member(toks, i):
+            kw = t.text
+            # Name = next ident (skipping generics is unnecessary: the
+            # name comes first).
+            j = i + 1
+            while j < n and toks[j].kind != "ident":
+                # `impl<T> Foo` style never hits here (impl handled below)
+                if toks[j].text in "({;":
+                    break
+                j += 1
+            if j < n and toks[j].kind == "ident":
+                name = toks[j].text
+                idx.items.append(Item(kw, name, toks[j].line, in_test))
+                if kw == "fn":
+                    context = "::".join(s[1] for s in stack if s[0] in ("mod", "impl"))
+                    idx.fns.append(
+                        FnSpan(name, context, toks[j].line, -1, [], in_test, depth)
+                    )
+                    pending = ("fn", name, in_test)
+                elif kw in ("mod", "enum", "struct", "trait", "union"):
+                    pending = (kw, name, in_test or (kw == "mod" and test_attr))
+            test_attr = False
+            i = j + 1 if j < n else n
+            continue
+        if t.kind == "ident" and t.text == "impl" and _is_stmt_start(toks, i):
+            # impl [<...>] Type [for Trait] { ... } — take the last path
+            # ident before `{` or `for` as the context name. The
+            # statement-context guard keeps `impl Trait` in argument or
+            # return position (`fn new(t: impl Into<String>)`) from
+            # being taken for an impl block.
+            j = i + 1
+            name = ""
+            d = 0
+            while j < n:
+                tj = toks[j]
+                if tj.text in "<([" :
+                    d += 1
+                elif tj.text in ">)]":
+                    d -= 1
+                elif d == 0 and tj.text == "{":
+                    break
+                elif d == 0 and tj.kind == "ident" and tj.text != "for":
+                    name = tj.text
+                j += 1
+            pending = ("impl", name, test_attr)
+            test_attr = False
+            i = j
+            continue
+        if t.kind == "ident":
+            test_attr = False
+        i += 1
+    # Second pass: enum variants and struct fields, plus fn body slices.
+    _collect_members(idx)
+    _slice_fn_bodies(idx)
+    return idx
+
+
+def _is_path_member(toks: list[Token], i: int) -> bool:
+    """`x.fn_like` or `a::type` — keyword-looking idents after `.`/`::`
+    are member accesses, not item starts."""
+    return i > 0 and toks[i - 1].text in (".", "::")
+
+
+def _is_stmt_start(toks: list[Token], i: int) -> bool:
+    """True when token i sits where an item can begin: file start, after
+    a block/statement boundary, after an attribute's `]`, or after an
+    `unsafe` qualifier."""
+    if i == 0:
+        return True
+    prev = toks[i - 1]
+    return prev.text in ("{", "}", ";", "]") or (
+        prev.kind == "ident" and prev.text == "unsafe"
+    )
+
+
+def _collect_members(idx: FileIndex) -> None:
+    """Enum variants and struct fields: idents at depth+1 of an
+    enum/struct body (variants start a segment; fields precede `:`)."""
+    toks = idx.tokens
+    n = len(toks)
+    i = 0
+    depth = 0
+    paren = 0  # tuple-variant payloads: `SortJobTagged(JobTag, Vec<u32>)`
+    pending: tuple[str, bool] | None = None
+    bodies: list[tuple[str, int, bool]] = []  # (kind, body_depth, in_test)
+    test_depths: list[int] = []
+    while i < n:
+        t = toks[i]
+        if t.text == "#" and i + 1 < n and toks[i + 1].text == "[":
+            j, d = i + 1, 0
+            while j < n:
+                if toks[j].text == "[":
+                    d += 1
+                elif toks[j].text == "]":
+                    d -= 1
+                    if d == 0:
+                        break
+                j += 1
+            if _attr_is_test(toks, j) and j + 1 < n and toks[j + 1].text in ("mod",):
+                pass  # handled through stack below
+            i = j + 1
+            continue
+        if t.kind == "ident" and t.text in ("enum", "struct") and not _is_path_member(toks, i):
+            pending = (t.text, False)
+        elif t.text == "{":
+            depth += 1
+            if pending:
+                bodies.append((pending[0], depth, pending[1]))
+                pending = None
+        elif t.text == "}":
+            if bodies and bodies[-1][1] == depth:
+                bodies.pop()
+            depth -= 1
+        elif t.text == ";":
+            pending = None
+        elif t.text == "(":
+            paren += 1
+        elif t.text == ")":
+            paren -= 1
+        elif t.kind == "ident" and bodies and depth == bodies[-1][1] and paren == 0:
+            kind = bodies[-1][0]
+            prev = toks[i - 1].text if i > 0 else "{"
+            nxt = toks[i + 1].text if i + 1 < n else ""
+            if kind == "enum" and prev in ("{", ","):
+                idx.items.append(Item("variant", t.text, t.line, False))
+            elif kind == "struct" and nxt == ":" and prev in ("{", ",", "pub", ")"):
+                idx.items.append(Item("field", t.text, t.line, False))
+        i += 1
+
+
+def _slice_fn_bodies(idx: FileIndex) -> None:
+    """Attach to every FnSpan the token slice of its body (between the
+    opening brace after the signature and the matching close)."""
+    toks = idx.tokens
+    n = len(toks)
+    for fs in idx.fns:
+        # Find the `fn` name token at fs.start_line, then its body `{`.
+        i = 0
+        while i < n and not (
+            toks[i].kind == "ident" and toks[i].text == fs.name and toks[i].line == fs.start_line
+        ):
+            i += 1
+        d = 0
+        while i < n:
+            if toks[i].text == "{":
+                break
+            if toks[i].text == ";" and d == 0:
+                break  # trait method without body
+            if toks[i].text in "<([":
+                d += 1
+            elif toks[i].text in ">)]":
+                d -= 1
+            i += 1
+        if i >= n or toks[i].text != "{":
+            continue
+        start = i
+        d = 0
+        while i < n:
+            if toks[i].text == "{":
+                d += 1
+            elif toks[i].text == "}":
+                d -= 1
+                if d == 0:
+                    break
+            i += 1
+        fs.tokens = toks[start + 1 : i]
+        if fs.end_line == -1:
+            fs.end_line = toks[i].line if i < n else toks[-1].line
+
+
+def index_tree(root: Path, subdirs: tuple[str, ...] = ("rust/src",)) -> list[FileIndex]:
+    """Index every `*.rs` file under the given subdirectories."""
+    out = []
+    for sub in subdirs:
+        base = root / sub
+        if not base.exists():
+            continue
+        for path in sorted(base.rglob("*.rs")):
+            out.append(index_file(path))
+    return out

@@ -1,0 +1,249 @@
+"""memlint fixture corpus: one deliberately broken snippet per rule
+family proves each rule actually fires (a linter whose rules can't fail
+is decoration), and the clean-repo test proves the gate is green on the
+tree as committed — the same invocation CI runs.
+
+Runnable standalone (`python3 python/tests/test_memlint.py`) or under
+pytest; no jax/hypothesis needed.
+"""
+
+import sys
+import tempfile
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[2]
+sys.path.insert(0, str(REPO / "python"))
+
+from memlint import (  # noqa: E402
+    run_all,
+    rules_docs,
+    rules_locks,
+    rules_mirror,
+    rules_panic,
+    rules_wire,
+)
+from memlint.findings import Allowlist, Finding, apply_allowlist  # noqa: E402
+from memlint.rustlex import index_tree  # noqa: E402
+
+
+def write(root: Path, rel: str, text: str) -> None:
+    p = root / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(text, encoding="utf-8")
+
+
+def keys(findings):
+    return {f.key for f in findings}
+
+
+# -- rule family 2: a forbidden unwrap on a serving path ---------------
+
+PANICKY_SERVER = """
+impl ShardServer {
+    fn serve_conn(&self) {
+        let job = self.queue.pop().unwrap();
+    }
+
+    fn helper_off_path(&self) {
+        let fine = self.queue.pop().unwrap();
+    }
+}
+"""
+
+
+def test_panic_rule_fires_on_a_serving_path_unwrap(tmp_path):
+    write(tmp_path, "rust/src/coordinator/shard_server.rs", PANICKY_SERVER)
+    findings, inventory = rules_panic.run(tmp_path, index_tree(tmp_path))
+    assert "serve_conn:unwrap@0" in keys(findings)
+    # The off-path helper is inventory, never a finding.
+    assert not any(f.key.startswith("helper_off_path") for f in findings)
+    assert inventory["total"] == 2 and inventory["serving"] == 1
+
+
+# -- rule family 3: an out-of-order nested lock pair -------------------
+
+LOCK_DESIGN = """# fixture
+
+<!-- memlint:lock-order
+alpha
+beta
+-->
+"""
+
+TANGLED = """
+fn tangle(s: &S) {
+    let gb = s.beta.lock().unwrap();
+    let ga = s.alpha.lock().unwrap();
+    drop(ga);
+    drop(gb);
+}
+"""
+
+
+def test_lock_rule_fires_on_an_out_of_order_pair(tmp_path):
+    write(tmp_path, "rust/DESIGN.md", LOCK_DESIGN)
+    write(tmp_path, "rust/src/coordinator/tangle.rs", TANGLED)
+    findings, _ = rules_locks.run(
+        tmp_path, index_tree(tmp_path), tmp_path / "rust/DESIGN.md"
+    )
+    assert "tangle:beta->alpha" in keys(findings)
+
+
+# -- rule family 1: a min-version stamp that drifted from the doc ------
+
+FIXTURE_WIRE = """
+pub const WIRE_VERSION: u8 = 2;
+pub const MIN_WIRE_VERSION: u8 = 1;
+
+pub enum Frame {
+    Hello,
+    SortJob(Vec<u32>),
+    SortJobTagged(JobTag, Vec<u32>),
+}
+
+impl Frame {
+    pub fn kind(&self) -> u8 {
+        match self {
+            Frame::Hello => 0,
+            Frame::SortJob(_) => 1,
+            Frame::SortJobTagged(..) => 2,
+        }
+    }
+
+    pub fn wire_version(&self) -> u8 {
+        match self {
+            Frame::Hello => WIRE_VERSION,
+            Frame::SortJobTagged(..) => 2,
+            _ => MIN_WIRE_VERSION,
+        }
+    }
+}
+
+fn decode(k: u8) -> Frame {
+    match k {
+        0 => Frame::Hello,
+        1 => Frame::SortJob(v),
+        2 => Frame::SortJobTagged(t, v),
+        _ => unknown,
+    }
+}
+"""
+
+# SortJobTagged is stamped min ver 1 here, but wire_version() above
+# says 2 — the exact drift the rule exists to catch.
+FIXTURE_OPS = """# fixture wire doc
+
+Version `2` (minimum accepted: `1`).
+
+<!-- memlint:wire-table -->
+
+| kind | frame | min ver |
+|------|-------|---------|
+| 0 | Hello | cur |
+| 1 | SortJob | 1 |
+| 2 | SortJobTagged | 1 |
+"""
+
+
+def test_wire_rule_fires_on_a_wrong_min_version_stamp(tmp_path):
+    write(tmp_path, "rust/src/coordinator/wire.rs", FIXTURE_WIRE)
+    write(tmp_path, "rust/OPERATIONS.md", FIXTURE_OPS)
+    findings, _ = rules_wire.run(tmp_path, index_tree(tmp_path))
+    assert "table-minver:SortJobTagged" in keys(findings)
+    # The correctly-stamped rows don't fire.
+    assert "table-minver:Hello" not in keys(findings)
+    assert "table-minver:SortJob" not in keys(findings)
+
+
+# -- rule family 4: a doc citing a symbol that doesn't exist -----------
+
+
+def test_doc_rule_fires_on_a_dangling_symbol(tmp_path):
+    write(
+        tmp_path,
+        "rust/DESIGN.md",
+        "The loop calls `definitely_not_a_fn()`, then `real_fn()`.\n",
+    )
+    write(tmp_path, "rust/src/lib.rs", "pub fn real_fn() {}\n")
+    write(tmp_path, "python/placeholder.py", "")
+    findings, _ = rules_docs.run(tmp_path, index_tree(tmp_path))
+    assert "definitely_not_a_fn()" in keys(findings)
+    assert "real_fn()" not in keys(findings)
+
+
+# -- rule family 5: a model fn with no pinned python mirror ------------
+
+
+def test_mirror_rule_fires_on_an_unmapped_model_fn(tmp_path):
+    write(
+        tmp_path,
+        "rust/src/coordinator/planner/schedule.rs",
+        "pub fn stray_model(x: f64) -> f64 {\n    x * 2.0\n}\n",
+    )
+    write(tmp_path, "python/fleet_model.py", "def pin(g, w, t):\n    pass\n")
+    map_path = tmp_path / "mirror_map.json"
+    map_path.write_text("{}", encoding="utf-8")
+    findings, _ = rules_mirror.run(tmp_path, index_tree(tmp_path), map_path)
+    assert "unmapped:stray_model" in keys(findings)
+
+
+# -- allowlist hygiene: stale entries are failures, not silence --------
+
+
+def test_stale_allowlist_entry_is_a_note(tmp_path):
+    allow_path = tmp_path / "allow.json"
+    allow_path.write_text(
+        '[{"rule": "panic-path", "file": "gone.rs", "key": "x:unwrap@0",'
+        ' "justification": "used to matter"}]',
+        encoding="utf-8",
+    )
+    allow = Allowlist.load(allow_path)
+    kept, notes = apply_allowlist([], allow)
+    assert kept == []
+    assert notes, "an entry that suppresses nothing must surface as stale"
+
+
+def test_allowlist_suppresses_exactly_its_key(tmp_path):
+    allow_path = tmp_path / "allow.json"
+    allow_path.write_text(
+        '[{"rule": "panic-path", "file": "a.rs", "key": "f:unwrap@0",'
+        ' "justification": "proven"}]',
+        encoding="utf-8",
+    )
+    allow = Allowlist.load(allow_path)
+    hit = Finding("panic-path", "a.rs", 3, "f:unwrap@0", "m")
+    miss = Finding("panic-path", "a.rs", 9, "f:unwrap@1", "m")
+    kept, notes = apply_allowlist([hit, miss], allow)
+    assert kept == [miss] and notes == []
+
+
+# -- the repo itself: the gate is green as committed -------------------
+
+
+def test_clean_repo_has_zero_findings():
+    findings, notes, summaries = run_all(REPO)
+    assert findings == [], [f.render() for f in findings]
+    assert notes == [], notes
+    # The rules did real work, not vacuous passes.
+    assert summaries["wire-registry"]["kinds"] >= 15
+    assert summaries["panic-path"]["total"] > 0
+    assert summaries["lock-order"]["sites"] > 0
+    assert summaries["mirror-coverage"]["rust_fns"] >= 10
+
+
+if __name__ == "__main__":
+    failures = 0
+    for name, fn in sorted(globals().items()):
+        if not name.startswith("test_") or not callable(fn):
+            continue
+        try:
+            if fn.__code__.co_argcount:
+                with tempfile.TemporaryDirectory() as td:
+                    fn(Path(td))
+            else:
+                fn()
+            print(f"ok   {name}")
+        except AssertionError as exc:
+            failures += 1
+            print(f"FAIL {name}: {exc}")
+    sys.exit(1 if failures else 0)

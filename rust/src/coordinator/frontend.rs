@@ -46,6 +46,7 @@ use std::sync::Mutex;
 
 use anyhow::{anyhow, Result};
 
+use super::locks::lock_recover;
 use super::shard::{FleetSnapshot, RetryBudgetConfig, ShardedSortService};
 use super::SortResponse;
 
@@ -341,7 +342,7 @@ impl Frontend {
     /// frontend is idle — then saturation, where `Batch` sheds
     /// outright and `Interactive` spends the overdraft while it lasts.
     pub fn try_admit(&self, tag: &JobTag) -> std::result::Result<Permit<'_>, AdmitError> {
-        let mut st = self.state.lock().expect("admission poisoned");
+        let mut st = lock_recover(&self.state);
         let used = st.per_tenant.get(&tag.tenant).copied().unwrap_or(0);
         if used >= self.cfg.tenant_cap {
             self.shed_tenant_cap.fetch_add(1, Ordering::Relaxed);
@@ -383,7 +384,7 @@ impl Frontend {
 
     /// Release one admission (the [`Permit`] drop path).
     fn release(&self, tenant: &str) {
-        let mut st = self.state.lock().expect("admission poisoned");
+        let mut st = lock_recover(&self.state);
         st.outstanding = st.outstanding.saturating_sub(1);
         if let Some(n) = st.per_tenant.get_mut(tenant) {
             *n = n.saturating_sub(1);
@@ -494,9 +495,12 @@ impl Frontend {
                 drop(riders);
             }
         }
+        // Every slot was filled above (solo paths and both coalesced
+        // arms); a hole would be a frontend bug, and a serving path
+        // answers bugs with a delivered error, not a panic.
         results
             .into_iter()
-            .map(|r| r.expect("every job got exactly one outcome"))
+            .map(|r| r.unwrap_or_else(|| Err(anyhow!("internal error: job got no outcome"))))
             .collect()
     }
 
@@ -563,7 +567,7 @@ impl Frontend {
 
     /// The frontend's own counters.
     pub fn admission(&self) -> AdmissionSnapshot {
-        let st = self.state.lock().expect("admission poisoned");
+        let st = lock_recover(&self.state);
         AdmissionSnapshot {
             admitted: self.admitted.load(Ordering::Relaxed),
             shed_batch: self.shed_batch.load(Ordering::Relaxed),

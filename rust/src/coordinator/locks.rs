@@ -1,0 +1,78 @@
+//! Poison-recovering lock acquisition for request-serving threads.
+//!
+//! `Mutex::lock()` returns `Err` only when another thread panicked
+//! while holding the guard. On the coordinator's serving paths —
+//! session loops, reader threads, admission — propagating that poison
+//! with `expect` turns *one* thread's panic into a process-wide
+//! cascade: every sibling session that touches the same lock dies
+//! too, which is exactly the failure mode the multi-connection server
+//! exists to prevent (one bad frame degrades one session, never the
+//! process).
+//!
+//! These helpers recover the guard instead. That is sound here
+//! because every structure the coordinator shares behind a lock is
+//! *panic-consistent*: writers either make a single atomic assignment
+//! (`*slot = None`, `*cfg = config`) or use std collections, whose
+//! operations leave the collection valid (if possibly missing the
+//! in-flight element) when they unwind. The worst post-panic outcome
+//! is a dropped in-flight entry, which the wire protocol already
+//! treats as a dropped reply.
+//!
+//! memlint (`python/memlint`, rule family `lock-order`) recognises
+//! these helpers as lock acquisitions, so sites converted to them
+//! stay inside the ordering and guard-across-I/O analysis.
+
+use std::sync::{Mutex, MutexGuard, PoisonError, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+/// `m.lock()`, recovering the guard from a poisoned mutex.
+pub(crate) fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// `l.read()`, recovering the guard from a poisoned rwlock.
+pub(crate) fn read_recover<T>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// `l.write()`, recovering the guard from a poisoned rwlock.
+pub(crate) fn write_recover<T>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn recovers_a_mutex_poisoned_by_a_panicking_thread() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _guard = m2.lock().unwrap();
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(m.is_poisoned(), "the panicking holder must poison the mutex");
+        // A plain lock() would Err here; the recovering helper returns
+        // the guard and the data is still the last consistent value.
+        assert_eq!(*lock_recover(&m), 7);
+        *lock_recover(&m) = 8;
+        assert_eq!(*lock_recover(&m), 8);
+    }
+
+    #[test]
+    fn recovers_both_halves_of_a_poisoned_rwlock() {
+        let l = Arc::new(RwLock::new(vec![1, 2, 3]));
+        let l2 = Arc::clone(&l);
+        let _ = std::thread::spawn(move || {
+            let _guard = l2.write().unwrap();
+            panic!("poison the rwlock");
+        })
+        .join();
+        assert!(l.is_poisoned());
+        assert_eq!(read_recover(&l).len(), 3);
+        write_recover(&l).push(4);
+        assert_eq!(read_recover(&l).len(), 4);
+    }
+}

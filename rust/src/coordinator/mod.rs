@@ -21,6 +21,7 @@
 
 pub mod frontend;
 pub mod hierarchical;
+pub(crate) mod locks;
 pub mod metrics;
 pub mod planner;
 pub mod shard;
@@ -290,7 +291,9 @@ fn worker_loop(
 
     loop {
         let job = {
-            let guard = rx.lock().expect("rx poisoned");
+            // A sibling worker that panicked mid-recv poisons the
+            // shared receiver; the pool must keep draining jobs.
+            let guard = locks::lock_recover(&rx);
             guard.recv()
         };
         let Ok(job) = job else { return };

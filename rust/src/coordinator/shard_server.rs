@@ -42,9 +42,15 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::Result;
 
+use super::locks::lock_recover;
 use super::transport::{LocalTransport, ShardTransport};
 use super::wire::{read_frame, read_hello, write_frame, Frame, MIN_WIRE_VERSION, WIRE_VERSION};
 use super::ServiceConfig;
+
+/// The shared write half of one session: every frame goes out as one
+/// locked `write_frame`, so concurrent collector threads never
+/// interleave bytes.
+type SharedWriter = Arc<Mutex<Box<dyn Write + Send>>>;
 
 /// One shard host behind the wire: a restartable in-process service
 /// plus the connection loop that exposes it.
@@ -91,10 +97,11 @@ impl ShardServer {
     ) -> Result<bool> {
         // The write half is shared with the per-job collector threads;
         // every frame goes out as one locked write_all, so frames never
-        // interleave.
-        let w: Arc<Mutex<Box<dyn Write + Send>>> = Arc::new(Mutex::new(w));
+        // interleave. A collector that panicked mid-write must not take
+        // its siblings down with it, hence the recovering lock.
+        let w: SharedWriter = Arc::new(Mutex::new(w));
         let write = |id: u64, frame: &Frame| {
-            let mut g = w.lock().expect("writer poisoned");
+            let mut g = lock_recover(&w);
             write_frame(g.as_mut(), id, frame)
         };
 
@@ -117,59 +124,8 @@ impl ShardServer {
             // stays up for the next one.
             let Ok((id, frame)) = read_frame(r.as_mut()) else { return Ok(false) };
             match frame {
-                frame @ (Frame::SortJob(_) | Frame::SortJobTagged(..)) => {
-                    let (tag, data) = match frame {
-                        Frame::SortJob(data) => (None, data),
-                        Frame::SortJobTagged(tag, data) => (Some(tag), data),
-                        _ => unreachable!("guarded by the arm pattern"),
-                    };
-                    // A job whose *reply* would exceed the frame cap is
-                    // answered with a delivered error — never with an
-                    // over-cap SortOk that would kill the connection
-                    // (and every other job in flight on it).
-                    if data.len() > super::wire::MAX_SORT_ELEMS {
-                        let msg = format!(
-                            "sort job of {} elements exceeds the wire cap of {}",
-                            data.len(),
-                            super::wire::MAX_SORT_ELEMS
-                        );
-                        let _ = write(id, &Frame::ErrReply(msg));
-                        continue;
-                    }
-                    let submitted = match &tag {
-                        Some(t) => self.host.submit_tagged(t, data),
-                        None => self.host.submit(data),
-                    };
-                    match submitted {
-                        Ok(rx) => {
-                            // Collector: one thread per in-flight job,
-                            // so replies pipeline in completion order
-                            // while the read loop keeps accepting jobs.
-                            let w = Arc::clone(&w);
-                            std::thread::spawn(move || {
-                                let frame = match rx.recv() {
-                                    Ok(Ok(resp)) => Frame::SortOk(resp),
-                                    Ok(Err(e)) => Frame::ErrReply(format!("{e:#}")),
-                                    // The worker vanished under the job
-                                    // — the wire form of a dropped
-                                    // reply.
-                                    Err(_) => Frame::Dropped,
-                                };
-                                let mut g = w.lock().expect("writer poisoned");
-                                // The connection may already be gone;
-                                // the coordinator then sees the drop
-                                // anyway.
-                                let _ = write_frame(g.as_mut(), id, &frame);
-                            });
-                        }
-                        // Submit rejected: the host is down. Fail
-                        // "fast" the only way a reply channel can — by
-                        // dropping.
-                        Err(_) => {
-                            let _ = write(id, &Frame::Dropped);
-                        }
-                    }
-                }
+                Frame::SortJob(data) => self.dispatch_job(id, None, data, &w),
+                Frame::SortJobTagged(tag, data) => self.dispatch_job(id, Some(tag), data, &w),
                 Frame::GetMetrics => write(id, &Frame::MetricsReply(self.host.metrics()))?,
                 Frame::Halt => self.host.halt(),
                 Frame::Restart => {
@@ -187,6 +143,64 @@ impl ShardServer {
                 // coordinator that sends one is broken — drop the link.
                 other => anyhow::bail!("unexpected frame {other:?} on a shard server"),
             }
+        }
+    }
+
+    /// Submit one pipelined sort job and arrange its reply.
+    ///
+    /// A job whose *reply* would exceed the frame cap is answered with
+    /// a delivered error — never with an over-cap `SortOk` that would
+    /// kill the connection (and every other job in flight on it). A
+    /// rejected submit (the host is down) answers [`Frame::Dropped`],
+    /// the wire form of a dropped reply channel; so does a worker that
+    /// vanishes under the job after submission.
+    fn dispatch_job(
+        &self,
+        id: u64,
+        tag: Option<super::frontend::JobTag>,
+        data: Vec<u32>,
+        w: &SharedWriter,
+    ) {
+        let write_one = |frame: &Frame| {
+            let mut g = lock_recover(w);
+            let _ = write_frame(g.as_mut(), id, frame);
+        };
+        if data.len() > super::wire::MAX_SORT_ELEMS {
+            let msg = format!(
+                "sort job of {} elements exceeds the wire cap of {}",
+                data.len(),
+                super::wire::MAX_SORT_ELEMS
+            );
+            write_one(&Frame::ErrReply(msg));
+            return;
+        }
+        let submitted = match &tag {
+            Some(t) => self.host.submit_tagged(t, data),
+            None => self.host.submit(data),
+        };
+        match submitted {
+            Ok(rx) => {
+                // Collector: one thread per in-flight job, so replies
+                // pipeline in completion order while the read loop
+                // keeps accepting jobs.
+                let w = Arc::clone(w);
+                std::thread::spawn(move || {
+                    let frame = match rx.recv() {
+                        Ok(Ok(resp)) => Frame::SortOk(resp),
+                        Ok(Err(e)) => Frame::ErrReply(format!("{e:#}")),
+                        // The worker vanished under the job — the wire
+                        // form of a dropped reply.
+                        Err(_) => Frame::Dropped,
+                    };
+                    // The connection may already be gone; the
+                    // coordinator then sees the drop anyway.
+                    let mut g = lock_recover(&w);
+                    let _ = write_frame(g.as_mut(), id, &frame);
+                });
+            }
+            // Submit rejected: the host is down. Fail "fast" the only
+            // way a reply channel can — by dropping.
+            Err(_) => write_one(&Frame::Dropped),
         }
     }
 }
@@ -279,7 +293,7 @@ pub fn serve_tcp(listener: TcpListener, config: ServiceConfig, max_conns: usize)
         let sid = next_session;
         next_session += 1;
         active.fetch_add(1, Ordering::SeqCst);
-        peers.lock().expect("peers poisoned").insert(sid, stream.try_clone()?);
+        lock_recover(&peers).insert(sid, stream.try_clone()?);
         let srv = Arc::clone(&server);
         let stop = Arc::clone(&stop);
         let active = Arc::clone(&active);
@@ -290,14 +304,14 @@ pub fn serve_tcp(listener: TcpListener, config: ServiceConfig, max_conns: usize)
                 Ok(read) => srv.serve_conn(read, Box::new(stream)),
                 Err(e) => Err(e.into()),
             };
-            peers.lock().expect("peers poisoned").remove(&sid);
+            lock_recover(&peers).remove(&sid);
             active.fetch_sub(1, Ordering::SeqCst);
             match outcome {
                 Ok(true) => {
                     // Orderly shutdown: close the siblings, then dial
                     // ourselves so the accept loop re-checks the flag.
                     stop.store(true, Ordering::SeqCst);
-                    for (_, peer) in peers.lock().expect("peers poisoned").drain() {
+                    for (_, peer) in lock_recover(&peers).drain() {
                         let _ = peer.shutdown(std::net::Shutdown::Both);
                     }
                     let _ = TcpStream::connect(addr);
@@ -365,6 +379,33 @@ mod tests {
         assert_eq!(got[&11], vec![7, 9]);
         write_frame(w.as_mut(), 12, &Frame::Shutdown).unwrap();
         assert!(t.join().unwrap().unwrap(), "Shutdown ends the accept contract");
+    }
+
+    #[test]
+    fn malformed_frame_ends_the_session_but_not_the_host() {
+        let (server, t, (mut r, mut w)) = start();
+        write_frame(w.as_mut(), 1, &Frame::Hello).unwrap();
+        let _ = read_frame(r.as_mut()).unwrap();
+        // Garbage after the handshake: a header that fails the magic
+        // check. The session must end as a plain disconnect (Ok(false),
+        // never a panic), leaving the shared host serving.
+        w.write_all(&[0xDEu8; 16]).unwrap();
+        drop(w);
+        assert_eq!(t.join().unwrap().unwrap(), false, "framing error = disconnect");
+        // A fresh session against the same host works end to end.
+        let (client, (sr, sw)) = duplex();
+        let (mut r2, mut w2) = client;
+        let srv = Arc::clone(&server);
+        let t2 = std::thread::spawn(move || srv.serve_conn(sr, sw));
+        write_frame(w2.as_mut(), 1, &Frame::Hello).unwrap();
+        let _ = read_frame(r2.as_mut()).unwrap();
+        write_frame(w2.as_mut(), 2, &Frame::SortJob(vec![5, 2, 9])).unwrap();
+        let (id, frame) = read_frame(r2.as_mut()).unwrap();
+        assert_eq!(id, 2);
+        let Frame::SortOk(resp) = frame else { panic!("expected SortOk, got {frame:?}") };
+        assert_eq!(resp.sorted, vec![2, 5, 9]);
+        write_frame(w2.as_mut(), 3, &Frame::Shutdown).unwrap();
+        assert!(t2.join().unwrap().unwrap());
     }
 
     #[test]

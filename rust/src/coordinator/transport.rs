@@ -37,6 +37,7 @@ use std::sync::{mpsc, Arc, Mutex, RwLock};
 use anyhow::{anyhow, Result};
 
 use super::frontend::JobTag;
+use super::locks::{lock_recover, read_recover, write_recover};
 use super::metrics::{ServiceMetrics, Snapshot};
 use super::wire::{self, Frame};
 use super::{ServiceConfig, SortResponse, SortService};
@@ -154,7 +155,7 @@ impl LocalTransport {
     }
 
     fn with_service<T>(&self, f: impl FnOnce(&SortService) -> T) -> Result<T> {
-        let guard = self.service.read().expect("transport poisoned");
+        let guard = read_recover(&self.service);
         guard.as_ref().map(f).ok_or_else(|| anyhow!("shard host is shut down"))
     }
 }
@@ -188,11 +189,7 @@ impl ShardTransport for LocalTransport {
         // Build the replacement before taking the write lock so a
         // failed start leaves the old (halted) host in place.
         let fresh = SortService::start(self.config.clone())?;
-        let old = self
-            .service
-            .write()
-            .expect("transport poisoned")
-            .replace(fresh);
+        let old = write_recover(&self.service).replace(fresh);
         if let Some(old) = old {
             // The halted workers exit on their own; join them off the
             // routing path so the restart does not leak threads.
@@ -202,7 +199,7 @@ impl ShardTransport for LocalTransport {
     }
 
     fn shutdown(&self) {
-        let old = self.service.write().expect("transport poisoned").take();
+        let old = write_recover(&self.service).take();
         if let Some(svc) = old {
             svc.shutdown();
         }
@@ -339,33 +336,33 @@ impl RemoteTransport {
     /// — and a write error tears that same link down, never a fresh
     /// one a concurrent restart just installed.
     fn send(&self, frame: &Frame, reply: PendingReply) -> Result<u64> {
-        let guard = self.link.read().expect("transport poisoned");
+        let guard = read_recover(&self.link);
         let Some(link) = guard.as_ref() else {
             return Err(anyhow!("remote shard link is down"));
         };
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        link.pending.lock().expect("pending poisoned").insert(id, reply);
+        lock_recover(&link.pending).insert(id, reply);
         // Check liveness *after* inserting: the reader flips `alive`
         // before its final drain, so either the drain removes this
         // entry (a dropped reply) or this check observes the death —
         // an entry can never outlive its reader unnoticed.
         if !link.alive.load(Ordering::Acquire) {
-            link.pending.lock().expect("pending poisoned").remove(&id);
+            lock_recover(&link.pending).remove(&id);
             return Err(anyhow!("remote shard link is down (reader exited)"));
         }
         let wrote = {
-            let mut w = link.writer.lock().expect("writer poisoned");
+            let mut w = lock_recover(&link.writer);
             wire::write_frame(w.as_mut(), id, frame)
         };
         if let Err(e) = wrote {
-            link.pending.lock().expect("pending poisoned").remove(&id);
+            lock_recover(&link.pending).remove(&id);
             let failed = Arc::clone(&link.writer);
             drop(guard);
             // Tear down the link that failed — and only that one: a
             // concurrent restart may already have installed a fresh,
             // healthy link, which this write failure says nothing
             // about.
-            let mut slot = self.link.write().expect("transport poisoned");
+            let mut slot = write_recover(&self.link);
             if slot.as_ref().is_some_and(|l| Arc::ptr_eq(&l.writer, &failed)) {
                 *slot = None;
             }
@@ -378,9 +375,9 @@ impl RemoteTransport {
     /// link errors are swallowed — the host is unreachable, which for
     /// these frames is indistinguishable from already-dead.
     fn send_control(&self, frame: &Frame) {
-        if let Some(link) = self.link.read().expect("transport poisoned").as_ref() {
+        if let Some(link) = read_recover(&self.link).as_ref() {
             let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-            let mut w = link.writer.lock().expect("writer poisoned");
+            let mut w = lock_recover(&link.writer);
             let _ = wire::write_frame(w.as_mut(), id, frame);
         }
     }
@@ -420,7 +417,7 @@ fn reader_loop(
 ) {
     loop {
         let Ok((id, frame)) = wire::read_frame(read.as_mut()) else { break };
-        let slot = pending.lock().expect("pending poisoned").remove(&id);
+        let slot = lock_recover(&pending).remove(&id);
         match (slot, frame) {
             (Some(PendingReply::Sort(tx)), Frame::SortOk(resp)) => {
                 // The coordinator-side mirror of the host's cost
@@ -461,7 +458,7 @@ fn reader_loop(
     alive.store(false, Ordering::Release);
     // Every still-pending request observes a dropped reply (senders
     // drop with the map entries).
-    pending.lock().expect("pending poisoned").clear();
+    lock_recover(&pending).clear();
 }
 
 /// Enforce the wire's job cap before writing anything: the *response*
@@ -511,11 +508,11 @@ impl ShardTransport for RemoteTransport {
     }
 
     fn cyc_per_num_for(&self, n: usize, fallback: f64) -> f64 {
-        self.mirror.read().expect("mirror poisoned").cyc_per_num_for(n, fallback)
+        read_recover(&self.mirror).cyc_per_num_for(n, fallback)
     }
 
     fn config(&self) -> ServiceConfig {
-        self.config.read().expect("transport poisoned").clone()
+        read_recover(&self.config).clone()
     }
 
     fn halt(&self) {
@@ -531,7 +528,7 @@ impl ShardTransport for RemoteTransport {
         // late replies race the fresh ones, and a failed re-dial must
         // leave the shard down and known-down, which routing already
         // handles.
-        *self.link.write().expect("transport poisoned") = None;
+        *write_recover(&self.link) = None;
         // Dial a fresh connection and restart the host through it;
         // only a fully-acknowledged restart installs the new link (and
         // the cost mirror — the host's history is gone, so is ours).
@@ -539,21 +536,21 @@ impl ShardTransport for RemoteTransport {
         let (link, config) = Self::dial(&self.connector, Arc::clone(&mirror))?;
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (tx, rx) = mpsc::channel();
-        link.pending.lock().expect("pending poisoned").insert(id, PendingReply::Control(tx));
+        lock_recover(&link.pending).insert(id, PendingReply::Control(tx));
         {
-            let mut w = link.writer.lock().expect("writer poisoned");
+            let mut w = lock_recover(&link.writer);
             wire::write_frame(w.as_mut(), id, &Frame::Restart)?;
         }
         rx.recv().map_err(|_| anyhow!("shard link dropped during restart"))??;
-        *self.config.write().expect("transport poisoned") = config;
-        *self.mirror.write().expect("mirror poisoned") = mirror;
-        *self.link.write().expect("transport poisoned") = Some(link);
+        *write_recover(&self.config) = config;
+        *write_recover(&self.mirror) = mirror;
+        *write_recover(&self.link) = Some(link);
         Ok(())
     }
 
     fn shutdown(&self) {
         self.send_control(&Frame::Shutdown);
-        *self.link.write().expect("transport poisoned") = None;
+        *write_recover(&self.link) = None;
     }
 }
 
@@ -617,7 +614,7 @@ impl ShardTransport for FlakyTransport {
             // Accept the job and never answer: park the sender so the
             // receiver blocks like a hung host's caller would.
             let (tx, rx) = mpsc::channel();
-            self.parked.lock().expect("parked poisoned").push(tx);
+            lock_recover(&self.parked).push(tx);
             return Ok(rx);
         }
         self.inner.submit(data)
@@ -639,7 +636,7 @@ impl ShardTransport for FlakyTransport {
         self.inner.halt();
         // Halt's contract: in-flight jobs surface as dropped replies —
         // including the ones the straggler fault was sitting on.
-        self.parked.lock().expect("parked poisoned").clear();
+        lock_recover(&self.parked).clear();
     }
 
     fn restart(&self) -> Result<()> {
@@ -648,7 +645,7 @@ impl ShardTransport for FlakyTransport {
         self.stalled.store(false, Ordering::Relaxed);
         // The replaced host drops the jobs it was sitting on: their
         // receivers observe dropped replies and the fleet re-routes.
-        self.parked.lock().expect("parked poisoned").clear();
+        lock_recover(&self.parked).clear();
         Ok(())
     }
 

@@ -303,11 +303,13 @@ impl<'a> Cursor<'a> {
     }
 
     fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+        let b = self.take(4)?.try_into().map_err(|_| anyhow!("short u32 read"))?;
+        Ok(u32::from_le_bytes(b))
     }
 
     fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+        let b = self.take(8)?.try_into().map_err(|_| anyhow!("short u64 read"))?;
+        Ok(u64::from_le_bytes(b))
     }
 
     fn usize(&mut self) -> Result<usize> {
@@ -628,8 +630,8 @@ fn read_raw(r: &mut dyn Read) -> Result<(u64, u8, u8, Vec<u8>)> {
     }
     let version = header[2];
     let kind = header[3];
-    let id = u64::from_le_bytes(header[4..12].try_into().expect("8 bytes"));
-    let len = u32::from_le_bytes(header[12..16].try_into().expect("4 bytes"));
+    let id = u64::from_le_bytes(header[4..12].try_into().map_err(|_| anyhow!("short id"))?);
+    let len = u32::from_le_bytes(header[12..16].try_into().map_err(|_| anyhow!("short len"))?);
     if len > MAX_PAYLOAD {
         bail!("frame payload of {len} bytes exceeds the {MAX_PAYLOAD}-byte cap");
     }
