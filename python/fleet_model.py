@@ -16,7 +16,14 @@ source), the closed forms and the event scheduler behind:
   and the completion-balanced steepest-descent search),
 * ``planner::shard_model`` + ``Plan::estimated_cycles_hetero``
   (completion-balanced streaming side) and its arrival-balanced legacy
-  form.
+  form,
+* ``traffic`` (the hot-path word-traffic accounting: mask words per
+  column step for the reference vs fused colskip kernels, and bytes
+  copied per SortJob→SortOk round trip for the owned vs reusable-buffer
+  wire paths) — backed by a bit-exact colskip simulator over the same
+  dataset generators as ``datasets``, so the per-kind reductions in
+  EXPERIMENTS.md §Hot-path word traffic are *recomputed* here, not
+  transcribed.
 
 Running this file prints the pinned numbers used by the Rust tests and
 the EXPERIMENTS.md §Heterogeneous shard scaling table, and hard-asserts
@@ -26,6 +33,7 @@ the models — and CI fails on any Rust-vs-mirror drift:
     python3 python/fleet_model.py
 """
 
+import math
 from fractions import Fraction
 from math import floor, isfinite
 
@@ -392,6 +400,256 @@ def hetero_completion(n: int, bank: int, fanout: int, shards, cyc_ignored=None):
     return deal, fleet_completion(bank, deal, models, fanout, {})
 
 
+# --- traffic mirror -------------------------------------------------------
+#
+# Mirrors `rust/src/traffic.rs`: the closed-form word/byte costs of the
+# hot paths. The per-kind operation counts they are applied to are NOT
+# transcribed from Rust output — `colskip_sim` below re-derives them
+# from scratch (same RNG, same dataset generators, same column-skipping
+# control flow), so a drifted kernel fails these pins even without a
+# Rust toolchain.
+
+
+def mask_words(n: int) -> int:
+    """Words per row mask: ceil(n / 64) (traffic::mask_words)."""
+    return -(-n // 64)
+
+
+def reference_traversal_words(n: int, crs: int, res: int, srs: int) -> int:
+    """Mask words the pre-fusion kernel scans: 2W judge per CR, 3W
+    exclude per informative column (RE), 2W snapshot per SR
+    (traffic::reference_traversal_words)."""
+    return mask_words(n) * (2 * crs + 3 * res + 2 * srs)
+
+
+def fused_traversal_words(n: int, executed_crs: int) -> int:
+    """Mask words the fused single-pass kernel scans: 3W per *executed*
+    CR — plane, active, scratch — and zero for singleton-skipped
+    columns (traffic::fused_traversal_words)."""
+    return 3 * mask_words(n) * executed_crs
+
+
+def roundtrip_bytes_before(n: int) -> int:
+    """Bytes copied per SortJob→SortOk round trip on the owned wire
+    path (traffic::roundtrip_bytes_before): each leg builds a payload
+    vec, copies it into a fresh frame vec, copies the received payload
+    into a fresh scratch, then copies the arrays out in decode."""
+    job, ok = frame_bytes_job(n), frame_bytes_ok(n)
+    return (3 * job - 32 + 4 * n) + (3 * ok - 32 + 12 * n)
+
+
+def roundtrip_bytes_after(n: int) -> int:
+    """Bytes copied per warm round trip on the reusable-buffer path
+    (traffic::roundtrip_bytes_after): one encode into a warm buffer and
+    one borrowed-view copy-out per leg; warm scratches zero-fill
+    nothing."""
+    return frame_bytes_job(n) + 4 * n + frame_bytes_ok(n) + 12 * n
+
+
+# --- bit-exact colskip simulator (datasets:: + sorter::colskip) -----------
+
+M64 = (1 << 64) - 1
+U32_MAX = 4294967295
+DATASET_KINDS = ["uniform", "normal", "clustered", "kruskal", "mapreduce"]
+
+
+class _SplitMix64:
+    """datasets::rng::SplitMix64 — seeds the xoshiro state."""
+
+    def __init__(self, seed):
+        self.state = seed & M64
+
+    def next_u64(self):
+        self.state = (self.state + 0x9E3779B97F4A7C15) & M64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & M64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & M64
+        return z ^ (z >> 31)
+
+
+def _rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & M64
+
+
+class _Rng:
+    """datasets::rng::Rng — xoshiro256** plus the Box-Muller normal,
+    Lemire bounded draw and truncated-exponential helpers."""
+
+    def __init__(self, seed):
+        sm = _SplitMix64(seed)
+        self.s = [sm.next_u64() for _ in range(4)]
+        self.spare_normal = None
+
+    def next_u64(self):
+        s = self.s
+        result = (_rotl((s[1] * 5) & M64, 7) * 9) & M64
+        t = (s[1] << 17) & M64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def next_u32(self):
+        return self.next_u64() >> 32
+
+    def f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def normal(self):
+        if self.spare_normal is not None:
+            z, self.spare_normal = self.spare_normal, None
+            return z
+        u1 = self.f64()
+        while u1 <= 0.0:
+            u1 = self.f64()
+        u2 = self.f64()
+        r = math.sqrt(-2.0 * math.log(u1))
+        theta = 2.0 * math.pi * u2
+        self.spare_normal = r * math.sin(theta)
+        return r * math.cos(theta)
+
+    def exp_small(self, scale, maxv):
+        u = self.f64()
+        while u <= 0.0:
+            u = self.f64()
+        return min(int(-math.log(u) * scale), maxv)
+
+
+def _clamp_u32(x: float) -> int:
+    if x <= 0.0:
+        return 0
+    if x >= float(U32_MAX):
+        return U32_MAX
+    return int(x)  # trunc toward zero == Rust `as u32` for in-range
+
+
+def _mapreduce_keys(n, rng):
+    groups, spread, zipf_s = 8, 1100.0, 1.1
+    hi, lo = math.log(float(1 << 20)), math.log(256.0)
+    centers = [int(math.exp(lo + ((g + rng.f64()) / groups) * (hi - lo)))
+               for g in range(groups)]
+    weights = [1.0 / (r ** zipf_s) for r in range(1, groups + 1)]
+    total = sum(weights)
+    cdf, acc = [], 0.0
+    for w in weights:
+        acc += w / total
+        cdf.append(acc)
+    out = []
+    for _ in range(n):
+        u = rng.f64()
+        g = next((i for i, c in enumerate(cdf) if u <= c), groups - 1)
+        v = round((float(centers[g]) + spread * rng.normal()) / 8.0) * 8.0
+        out.append(_clamp_u32(v))
+    return out
+
+
+def generate_dataset(kind: str, n: int, width: int, seed: int) -> list:
+    """datasets::Dataset::generate32 truncated to `width` bits."""
+    ki = DATASET_KINDS.index(kind)
+    rng = _Rng((seed ^ ((ki * 0x9E3779B97F4A7C15) & M64)) & M64)
+    if kind == "uniform":
+        raw = [rng.next_u32() for _ in range(n)]
+    elif kind == "normal":
+        mean, std = 2.0 ** 31, 2.0 ** 31 / 3.0
+        raw = [_clamp_u32(mean + std * rng.normal()) for _ in range(n)]
+    elif kind == "clustered":
+        std = 2.0 ** 13
+        raw = [_clamp_u32((2.0 ** 15 if rng.f64() < 0.5 else 2.0 ** 25)
+                          + std * rng.normal()) for _ in range(n)]
+    elif kind == "kruskal":
+        raw = [min(7 * rng.exp_small(1600.0, 1 << 22), U32_MAX) for _ in range(n)]
+    else:
+        raw = _mapreduce_keys(n, rng)
+    shift = 32 - width
+    return raw if shift == 0 else [v >> shift for v in raw]
+
+
+def colskip_sim(values, width: int, k: int):
+    """Bit-exact mirror of sorter::colskip with the k-entry state table,
+    leading-zero skip, stall drain and the singleton fast path. Row
+    masks are Python ints (bit r == row r active). Returns (sorted,
+    order, stats) where stats carries the wire-visible counts plus the
+    executed/skipped CR split the fused kernel's traffic depends on."""
+    n = len(values)
+    full = (1 << n) - 1
+    planes = [0] * width
+    for r, v in enumerate(values):
+        for j in range(width):
+            if (v >> j) & 1:
+                planes[j] |= 1 << r
+    stats = dict(crs=0, res=0, srs=0, sls=0, invalidations=0, drains=0,
+                 iterations=0, executed=0, skipped=0)
+    alive = full
+    lead = None
+    entries = []  # state table, oldest first: [snapshot, col]
+    sorted_out, order = [], []
+
+    def first_row(active):
+        return (active & -active).bit_length() - 1
+
+    while len(sorted_out) < n:
+        stats["iterations"] += 1
+        entry = None
+        while entries:  # SL: discard dead entries, newest first
+            if entries[-1][0] & alive:
+                entry = entries[-1]
+                break
+            entries.pop()
+            stats["invalidations"] += 1
+        if entry is not None:
+            stats["sls"] += 1
+            active, start_col, from_msb = entry[0] & alive, entry[1], False
+        else:
+            active = alive
+            start_col = lead if lead is not None else width - 1
+            from_msb = True
+        active_count = bin(active).count("1")
+
+        first_informative = None
+        col = start_col
+        while col >= 0:
+            if active_count == 1:
+                # Singleton fast path: no remaining column can split a
+                # one-row active set; charge the CRs, scan nothing.
+                stats["crs"] += col + 1
+                stats["skipped"] += col + 1
+                break
+            stats["crs"] += 1
+            stats["executed"] += 1
+            ones = active & planes[col]
+            zeros = active & ~planes[col] & full
+            if ones and zeros:
+                if from_msb:
+                    if first_informative is None:
+                        first_informative = col
+                    if k > 0:
+                        if len(entries) == k:
+                            entries.pop(0)
+                        entries.append([active, col])
+                    stats["srs"] += 1
+                active = zeros
+                active_count = bin(active).count("1")
+                stats["res"] += 1
+            col -= 1
+        if from_msb and first_informative is not None:
+            lead = first_informative
+
+        row = first_row(active)
+        while True:
+            sorted_out.append(values[row])
+            order.append(row)
+            active &= ~(1 << row)
+            alive &= ~(1 << row)
+            if not active or len(sorted_out) == n:
+                break
+            stats["drains"] += 1
+            row = first_row(active)
+    return sorted_out, order, stats
+
+
 def pin(got, want, tag):
     """Hard pin: any drift between this mirror and the Rust models is a
     CI failure, not a warning."""
@@ -534,6 +792,67 @@ def main():
         print(f"  C={c}: makespan {m:>7d} cycles, aggregate {agg:.3f} elem/cyc, "
               f"per-client {agg / c:.3f}")
     pin(concurrent_makespan(1, 3, 1024, 2, 7.84), 16_056, "makespan 3-job/2-worker")
+
+    print()
+    print("== EXPERIMENTS.md §Hot-path word traffic ==")
+    # Named CI step: recompute the counted reductions from scratch and
+    # hard-pin them. The operation counts come from `colskip_sim`, not
+    # from transcribed Rust output; the Rust side pins the same numbers
+    # through SortStats + KernelCounters, so kernel drift on EITHER side
+    # breaks the build.
+    print("colskip sanity (pinned against sorter::colskip unit tests):")
+    s, _, st = colskip_sim([8, 9, 10], 4, 2)
+    pin(s, [8, 9, 10], "fig3 sorted")
+    pin((st["crs"], st["srs"], st["sls"], st["invalidations"], st["iterations"]),
+        (7, 2, 2, 1, 3), "fig3 stats")
+    pin(st["executed"], 4, "fig3 executed CRs")
+    pin(reference_traversal_words(3, st["crs"], st["res"], st["srs"]), 24,
+        "fig3 reference words")
+    pin(fused_traversal_words(3, st["executed"]), 12, "fig3 fused words")
+    print(f"  fig3 {{8,9,10}} w=4 k=2: ref 24 words -> fused 12 words (2.00x)")
+    s, _, st = colskip_sim([7] * 64, 8, 2)
+    pin((st["iterations"], st["drains"], st["crs"]), (1, 63, 8), "dup64 stats")
+    print("  64 duplicates w=8: 1 iteration, 8 CRs, 63 drains")
+
+    print("ref vs fused traversal words (n=1024, w=32, k=2, seed=42):")
+    word_pins = {
+        # kind: (crs, res, srs, executed)
+        "uniform": (28_224, 2_731, 503, 5_621),
+        "normal": (27_613, 2_714, 510, 5_608),
+        "clustered": (15_739, 3_094, 490, 9_593),
+        "kruskal": (9_336, 2_514, 723, 5_272),
+        "mapreduce": (7_189, 1_878, 836, 4_324),
+    }
+    n = 1024
+    tot_ref = tot_fused = 0
+    for kind in DATASET_KINDS:
+        vals = generate_dataset(kind, n, 32, 42)
+        s, _, st = colskip_sim(vals, 32, 2)
+        assert s == sorted(vals), f"{kind}: simulator failed to sort"
+        pin((st["crs"], st["res"], st["srs"], st["executed"]), word_pins[kind],
+            f"word traffic {kind}")
+        ref = reference_traversal_words(n, st["crs"], st["res"], st["srs"])
+        fused = fused_traversal_words(n, st["executed"])
+        tot_ref += ref
+        tot_fused += fused
+        print(f"  {kind:10s}: crs={st['crs']:6d} exec={st['executed']:6d} "
+              f"ref={ref:9d} fused={fused:9d} words ({ref / fused:.3f}x)")
+    pin((tot_ref, tot_fused), (3_537_904, 1_460_064), "word traffic aggregate")
+    assert tot_ref >= 2 * tot_fused, "aggregate traversal reduction fell below 2x"
+    print(f"  {'aggregate':10s}: ref={tot_ref} fused={tot_fused} "
+          f"({tot_ref / tot_fused:.3f}x, pinned >= 2x)")
+
+    print("wire bytes copied per SortJob->SortOk round trip "
+          "(traffic::roundtrip_bytes_*):")
+    for rn in [1024, 512]:
+        before, after = roundtrip_bytes_before(rn), roundtrip_bytes_after(rn)
+        assert before == 344 + 64 * rn and after == 136 + 32 * rn, rn
+        print(f"  n={rn:4d}: owned {before:6d} B -> reusable {after:6d} B "
+              f"({before / after:.3f}x)")
+    pin((roundtrip_bytes_before(1024), roundtrip_bytes_after(1024)),
+        (65_880, 32_904), "roundtrip n=1024")
+    assert roundtrip_bytes_before(1024) >= 2 * roundtrip_bytes_after(1024), \
+        "round-trip byte reduction fell below 2x"
 
 
 if __name__ == "__main__":

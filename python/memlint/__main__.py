@@ -62,7 +62,7 @@ def main(argv: list[str]) -> int:
         mirror = summaries.get("mirror-coverage", {})
         print(
             f"  mirror-coverage : {mirror.get('mapped', 0)}/{mirror.get('rust_fns', 0)} "
-            "schedule.rs fns mirrored"
+            f"model fns mirrored across {mirror.get('files', 0)} files"
         )
         allow = summaries.get("allowlist", {})
         print(

@@ -43,6 +43,7 @@ BLOCKING = {
     "recv",
     "recv_timeout",
     "read_frame",
+    "read_frame_view",
     "read_hello",
     "write_frame",
     "read_exact",

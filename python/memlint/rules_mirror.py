@@ -1,28 +1,33 @@
 """Rule family 5 — mirror coverage.
 
-Every top-level model function in `planner/schedule.rs` must have a
+Every top-level model function in the Rust model files (the planner's
+`schedule.rs` and the hot-path accounting in `traffic.rs`) must have a
 `fleet_model.py` mirror that is exercised under a hard `pin()`. The
-mapping lives in `mirror_map.json` next to this module:
+mapping lives in `mirror_map.json` next to this module, keyed by the
+Rust file's repo-relative path:
 
     {
-      "sharded_completion": {
-        "python": "model_sharded_completion",
-        "pins": ["hetero uniform"]
+      "rust/src/coordinator/planner/schedule.rs": {
+        "sharded_completion": {
+          "python": "model_sharded_completion",
+          "pins": ["hetero uniform"]
+        },
+        "helper_fn": {"skip": "pure plumbing, no closed-form model"}
       },
-      "helper_fn": {"skip": "pure plumbing, no closed-form model"}
+      "rust/src/traffic.rs": { ... }
     }
 
 Checks:
 
-* every top-level non-test fn in schedule.rs appears in the map
+* every top-level non-test fn in each model file appears in its map
   (mapped or explicitly skipped with a reason);
 * every mapped `python` function is defined in fleet_model.py AND
   called there (a mirror that exists but never runs pins nothing);
 * every listed pin tag appears verbatim in fleet_model.py — tags are
   the third argument of `pin(got, want, tag)`, so a missing tag means
   the pin was deleted or renamed;
-* stale map entries (schedule.rs fn gone) are findings too — the map
-  must shrink with the code.
+* stale map entries (Rust fn gone, or a mapped file the rule no longer
+  tracks) are findings too — the map must shrink with the code.
 """
 
 from __future__ import annotations
@@ -36,12 +41,16 @@ from memlint.rustlex import FileIndex
 
 RULE = "mirror-coverage"
 
-SCHED_REL = "rust/src/coordinator/planner/schedule.rs"
+# The Rust files whose top-level fns ARE the latency/traffic models.
+MODEL_RELS = [
+    "rust/src/coordinator/planner/schedule.rs",
+    "rust/src/traffic.rs",
+]
 MODEL_REL = "python/fleet_model.py"
 
 
-def schedule_fns(idx: FileIndex) -> dict[str, int]:
-    """Top-level (not impl-method, not test) fns in schedule.rs."""
+def model_fns(idx: FileIndex) -> dict[str, int]:
+    """Top-level (not impl-method, not test) fns in one model file."""
     return {
         fn.name: fn.start_line
         for fn in idx.fns
@@ -69,17 +78,10 @@ def run(root: Path, indexes: list[FileIndex], map_path: Path) -> tuple[list[Find
     def flag(file, line, key, msg):
         findings.append(Finding(RULE, file, line, key, msg))
 
-    sched_idx = next(
-        (i for i in indexes if i.path.relative_to(root).as_posix() == SCHED_REL), None
-    )
-    if sched_idx is None:
-        return [Finding(RULE, SCHED_REL, 1, "missing", "schedule.rs not found")], {}
-    fns = schedule_fns(sched_idx)
-
     if not map_path.exists():
         return (
             [Finding(RULE, "python/memlint/mirror_map.json", 1, "missing", "mirror_map.json not found")],
-            {"rust_fns": len(fns)},
+            {},
         )
     mapping: dict[str, dict] = json.loads(map_path.read_text(encoding="utf-8"))
 
@@ -88,72 +90,100 @@ def run(root: Path, indexes: list[FileIndex], map_path: Path) -> tuple[list[Find
         return [Finding(RULE, MODEL_REL, 1, "missing", "fleet_model.py not found")], {}
     defs, calls, model_src = model_defs_and_calls(model_py)
 
+    by_rel = {i.path.relative_to(root).as_posix(): i for i in indexes}
+    total_fns = 0
     mapped = 0
-    for name, line in sorted(fns.items()):
-        entry = mapping.get(name)
-        if entry is None:
+    for rel in MODEL_RELS:
+        idx = by_rel.get(rel)
+        if idx is None:
+            flag(rel, 1, f"missing:{rel}", f"model file {rel} not found")
+            continue
+        fns = model_fns(idx)
+        total_fns += len(fns)
+        file_map = mapping.get(rel, {})
+        if not isinstance(file_map, dict):
             flag(
-                SCHED_REL,
-                line,
-                f"unmapped:{name}",
-                f"schedule.rs model fn `{name}` has no fleet_model.py mirror entry "
-                "in mirror_map.json (map it, or skip it with a reason)",
+                "python/memlint/mirror_map.json",
+                1,
+                f"bad-map:{rel}",
+                f"mirror_map.json entry for {rel} must be an object of "
+                "fn-name -> mirror entries",
             )
             continue
-        if "skip" in entry:
-            if not str(entry["skip"]).strip():
+        for name, line in sorted(fns.items()):
+            entry = file_map.get(name)
+            if entry is None:
                 flag(
-                    SCHED_REL,
+                    rel,
                     line,
-                    f"skip-empty:{name}",
-                    f"mirror_map.json skips `{name}` without a reason",
+                    f"unmapped:{name}",
+                    f"{rel} model fn `{name}` has no fleet_model.py mirror entry "
+                    "in mirror_map.json (map it, or skip it with a reason)",
                 )
-            continue
-        mapped += 1
-        py = entry.get("python", "")
-        pins = entry.get("pins", [])
-        if py not in defs:
-            flag(
-                MODEL_REL,
-                1,
-                f"no-def:{name}",
-                f"mirror_map.json maps `{name}` to `{py}`, which is not defined in "
-                "fleet_model.py",
-            )
-            continue
-        if py not in calls:
-            flag(
-                MODEL_REL,
-                1,
-                f"no-call:{name}",
-                f"mirror `{py}` (for `{name}`) is defined but never called in "
-                "fleet_model.py — a mirror that never runs pins nothing",
-            )
-        if not pins:
-            flag(
-                SCHED_REL,
-                line,
-                f"no-pins:{name}",
-                f"mirror_map.json entry for `{name}` lists no pin tags",
-            )
-        for tag in pins:
-            if tag not in model_src:
+                continue
+            if "skip" in entry:
+                if not str(entry["skip"]).strip():
+                    flag(
+                        rel,
+                        line,
+                        f"skip-empty:{name}",
+                        f"mirror_map.json skips `{name}` without a reason",
+                    )
+                continue
+            mapped += 1
+            py = entry.get("python", "")
+            pins = entry.get("pins", [])
+            if py not in defs:
                 flag(
                     MODEL_REL,
                     1,
-                    f"pin-gone:{name}:{tag}",
-                    f"pin tag {tag!r} (for `{name}` -> `{py}`) no longer appears in "
+                    f"no-def:{name}",
+                    f"mirror_map.json maps `{name}` to `{py}`, which is not defined in "
                     "fleet_model.py",
                 )
+                continue
+            if py not in calls:
+                flag(
+                    MODEL_REL,
+                    1,
+                    f"no-call:{name}",
+                    f"mirror `{py}` (for `{name}`) is defined but never called in "
+                    "fleet_model.py — a mirror that never runs pins nothing",
+                )
+            if not pins:
+                flag(
+                    rel,
+                    line,
+                    f"no-pins:{name}",
+                    f"mirror_map.json entry for `{name}` lists no pin tags",
+                )
+            for tag in pins:
+                if tag not in model_src:
+                    flag(
+                        MODEL_REL,
+                        1,
+                        f"pin-gone:{name}:{tag}",
+                        f"pin tag {tag!r} (for `{name}` -> `{py}`) no longer appears in "
+                        "fleet_model.py",
+                    )
+        for name in sorted(file_map):
+            if name not in fns:
+                flag(
+                    rel,
+                    1,
+                    f"stale-map:{name}",
+                    f"mirror_map.json maps `{name}`, but {rel} has no such "
+                    "top-level fn — prune the entry",
+                )
 
-    for name in sorted(mapping):
-        if name not in fns:
+    for rel in sorted(mapping):
+        if rel not in MODEL_RELS:
             flag(
-                SCHED_REL,
+                "python/memlint/mirror_map.json",
                 1,
-                f"stale-map:{name}",
-                f"mirror_map.json maps `{name}`, but schedule.rs has no such "
-                "top-level fn — prune the entry",
+                f"stale-file:{rel}",
+                f"mirror_map.json has a section for {rel}, which this rule does "
+                "not track — prune it or add the file to MODEL_RELS",
             )
 
-    return findings, {"rust_fns": len(fns), "mapped": mapped}
+    return findings, {"rust_fns": total_fns, "mapped": mapped, "files": len(MODEL_RELS)}

@@ -48,11 +48,18 @@ SERVING_SCOPE: dict[str, set[str] | str] = {
     },
     # The wire decode path: a malformed or hostile frame must surface as
     # an Err, never a panic, because the reader that hits it is shared.
+    # The borrowed-view layer (read_raw_into / decode_view / the *Le
+    # views) and the reusable encoders (encode_frame_into / FrameSink)
+    # run on the same session and reader threads, so they are held to
+    # the same zero-panic contract.
     "rust/src/coordinator/wire.rs": {
         "read_frame",
         "read_hello",
         "read_raw",
+        "read_raw_into",
+        "read_frame_view",
         "decode",
+        "decode_view",
         "take",
         "u8",
         "bool",
@@ -70,6 +77,16 @@ SERVING_SCOPE: dict[str, set[str] | str] = {
         "get_response",
         "get_config",
         "get_snapshot",
+        "take_u32s",
+        "take_u64s",
+        "take_response_view",
+        "to_vec",
+        "to_usize_vec",
+        "into_response",
+        "into_frame",
+        "encode_frame",
+        "encode_frame_into",
+        "write_frame",
     },
 }
 

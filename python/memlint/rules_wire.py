@@ -245,8 +245,12 @@ def run(root: Path, indexes: list[FileIndex]) -> tuple[list[Finding], dict]:
     decode_map = parse_decode_map(wire_idx)
     version_map = parse_version_map(wire_idx, consts)
     rust_formulas = parse_rust_formulas(wire_idx)
+    # Scope to the `Frame` enum: wire.rs also defines borrowed view enums
+    # (`FrameView` et al.) whose variants are not wire kinds.
     variants = {
-        it.name for it in wire_idx.items if it.kind == "variant" and not it.in_test
+        it.name
+        for it in wire_idx.items
+        if it.kind == "variant" and not it.in_test and it.context == "Frame"
     }
 
     def flag(file, line, key, msg):

@@ -37,6 +37,7 @@ class Item:
     name: str
     line: int
     in_test: bool
+    context: str = ""  # owning enum/struct name for "variant"/"field" items
 
 
 @dataclass
@@ -274,8 +275,15 @@ def index_file(path: Path, src: str | None = None) -> FileIndex:
                     pending = ("fn", name, in_test)
                 elif kw in ("mod", "enum", "struct", "trait", "union"):
                     pending = (kw, name, in_test or (kw == "mod" and test_attr))
+                test_attr = False
+                i = j + 1
+                continue
+            # Nameless form (the `const { ... }` block expression): leave
+            # the stopping token for the main loop so brace depth stays
+            # balanced — consuming a `{` here skews depth for the whole
+            # rest of the file.
             test_attr = False
-            i = j + 1 if j < n else n
+            i = j if j < n else n
             continue
         if t.kind == "ident" and t.text == "impl" and _is_stmt_start(toks, i):
             # impl [<...>] Type [for Trait] { ... } — take the last path
@@ -356,7 +364,8 @@ def _collect_members(idx: FileIndex) -> None:
             i = j + 1
             continue
         if t.kind == "ident" and t.text in ("enum", "struct") and not _is_path_member(toks, i):
-            pending = (t.text, False)
+            owner = toks[i + 1].text if i + 1 < n and toks[i + 1].kind == "ident" else ""
+            pending = (t.text, owner)
         elif t.text == "{":
             depth += 1
             if pending:
@@ -377,9 +386,9 @@ def _collect_members(idx: FileIndex) -> None:
             prev = toks[i - 1].text if i > 0 else "{"
             nxt = toks[i + 1].text if i + 1 < n else ""
             if kind == "enum" and prev in ("{", ","):
-                idx.items.append(Item("variant", t.text, t.line, False))
+                idx.items.append(Item("variant", t.text, t.line, False, bodies[-1][2]))
             elif kind == "struct" and nxt == ":" and prev in ("{", ",", "pub", ")"):
-                idx.items.append(Item("field", t.text, t.line, False))
+                idx.items.append(Item("field", t.text, t.line, False, bodies[-1][2]))
         i += 1
 
 

@@ -5,7 +5,7 @@
 //! Run: `cargo bench --bench hotpath`
 
 use memsort::bench::run;
-use memsort::bits::RowMask;
+use memsort::bits::{transpose, BitPlanes, RowMask};
 use memsort::coordinator::{ServiceConfig, SortService};
 use memsort::datasets::{Dataset, DatasetKind};
 use memsort::memory::Bank;
@@ -18,6 +18,21 @@ fn main() {
     let n = 1024;
     let d = Dataset::generate32(DatasetKind::MapReduce, n, 42);
 
+    println!("--- L4 word kernel: 64x64 bit-matrix transpose ---");
+    let mut block = [0u64; 64];
+    for (i, w) in block.iter_mut().enumerate() {
+        *w = (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    }
+    let r = run("bits_transpose/64x64", 200, || {
+        transpose(&mut block);
+        block[0]
+    });
+    println!("    -> {:.1} M blocks/s (4096 bits per block)", 1e9 / r.median_ns / 1e6);
+
+    println!("--- L4 word kernel: blocked bit-plane build (n={n}, w=32) ---");
+    let r = run("bitplanes_build/n1024_w32", 200, || BitPlanes::new(&d.values, 32).rows());
+    println!("    -> {:.2} Melem/s transpose-blocked build", r.throughput(n) / 1e6);
+
     println!("--- L3 primitive: column read (n={n}) ---");
     let mut bank = Bank::load(&d.values, 32);
     let active = RowMask::new_full(n);
@@ -27,22 +42,41 @@ fn main() {
     });
     println!("    -> {:.1} M column-reads/s", 1e9 / r.median_ns / 1e6);
 
+    println!("--- L3 primitive: fused column step (n={n}) ---");
+    let full = RowMask::new_full(n);
+    let mut step_active = RowMask::new_full(n);
+    let r = run("bank_column_step/n1024", 200, || {
+        step_active.copy_from(&full);
+        bank.column_step(17, &mut step_active).0
+    });
+    println!("    -> {:.1} M column-steps/s (judge+exclude+snapshot)", 1e9 / r.median_ns / 1e6);
+
     println!("--- L3 sorter: colskip across k (MapReduce n={n}) ---");
     for k in [0usize, 1, 2, 4, 8] {
+        let mut words_per_elem = 0.0;
         let r = run(&format!("colskip_sort/k{k}/n{n}"), 250, || {
             let mut s = ColSkipSorter::with_k(k);
-            s.sort_with_stats(&d.values).stats.crs
+            let out = s.sort_with_stats(&d.values);
+            words_per_elem = out.counters.words_per_element(n);
+            out.stats.crs
         });
-        println!("    -> {:.2} Melem/s", r.throughput(n) / 1e6);
+        println!(
+            "    -> {:.2} Melem/s, {words_per_elem:.4} mask-words/elem",
+            r.throughput(n) / 1e6
+        );
     }
 
     println!("--- L3 sorter: colskip k=2 across datasets (n={n}) ---");
     for kind in DatasetKind::ALL {
         let dd = Dataset::generate32(kind, n, 42);
+        let mut words_per_elem = 0.0;
         run(&format!("colskip_sort/{}/k2", kind.name()), 250, || {
             let mut s = ColSkipSorter::with_k(2);
-            s.sort_with_stats(&dd.values).stats.crs
+            let out = s.sort_with_stats(&dd.values);
+            words_per_elem = out.counters.words_per_element(n);
+            out.stats.crs
         });
+        println!("       {:>10}: {words_per_elem:.4} mask-words/elem", kind.name());
     }
 
     println!("--- L3 multibank overhead (n={n}, k=2) ---");

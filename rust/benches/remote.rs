@@ -12,9 +12,14 @@ use memsort::coordinator::hierarchical::HierarchicalConfig;
 use memsort::coordinator::shard::{RoutePolicy, ShardedSortService};
 use memsort::coordinator::shard_server::ShardServer;
 use memsort::coordinator::transport::{LocalTransport, RemoteTransport, ShardTransport};
-use memsort::coordinator::wire::{encode_frame, read_frame, Frame};
+use memsort::coordinator::wire::{
+    encode_frame, encode_frame_into, read_frame, read_frame_view, Frame, FrameView,
+};
 use memsort::coordinator::ServiceConfig;
 use memsort::datasets::{Dataset, DatasetKind};
+use memsort::traffic::{
+    roundtrip_bytes_after, roundtrip_bytes_before, wire_counters, wire_counters_reset,
+};
 
 fn main() {
     let bank = 1024usize;
@@ -30,10 +35,21 @@ fn main() {
     );
     let r = run("wire/encode/job1k", 800, || encode_frame(7, &job).len());
     println!("    -> {:.1} Melem/s encode", r.throughput(bank) / 1e6);
+    let mut enc_buf = Vec::new();
+    let r = run("wire/encode_into/job1k", 800, || {
+        encode_frame_into(&mut enc_buf, 7, &job);
+        enc_buf.len()
+    });
+    println!("    -> {:.1} Melem/s encode into a reused buffer", r.throughput(bank) / 1e6);
     let r = run("wire/decode/job1k", 800, || {
         read_frame(&mut &job_bytes[..]).expect("decodes").0
     });
     println!("    -> {:.1} Melem/s decode", r.throughput(bank) / 1e6);
+    let mut scratch = Vec::new();
+    let r = run("wire/decode_view/job1k", 800, || {
+        read_frame_view(&mut &job_bytes[..], &mut scratch).expect("decodes").0
+    });
+    println!("    -> {:.1} Melem/s decode into a borrowed view", r.throughput(bank) / 1e6);
 
     // A realistic response: sort the chunk on a host once, then bench
     // the codec on the reply it produced (values + argsort + stats).
@@ -50,10 +66,57 @@ fn main() {
     );
     let r = run("wire/encode/ok1k", 800, || encode_frame(9, &ok).len());
     println!("    -> {:.1} Melem/s encode", r.throughput(bank) / 1e6);
+    let r = run("wire/encode_into/ok1k", 800, || {
+        encode_frame_into(&mut enc_buf, 9, &ok);
+        enc_buf.len()
+    });
+    println!("    -> {:.1} Melem/s encode into a reused buffer", r.throughput(bank) / 1e6);
     let r = run("wire/decode/ok1k", 800, || {
         read_frame(&mut &ok_bytes[..]).expect("decodes").0
     });
     println!("    -> {:.1} Melem/s decode", r.throughput(bank) / 1e6);
+    let r = run("wire/decode_view/ok1k", 800, || {
+        read_frame_view(&mut &ok_bytes[..], &mut scratch).expect("decodes").0
+    });
+    println!("    -> {:.1} Melem/s decode into a borrowed view", r.throughput(bank) / 1e6);
+
+    // The counted story behind the rows above: one warm SortJob->SortOk
+    // round trip through the reused buffers, measured by the wire's own
+    // byte/alloc counters and compared against the owned-path model.
+    let mut job_scratch = Vec::new();
+    let mut ok_scratch = Vec::new();
+    let mut lap = || {
+        encode_frame_into(&mut enc_buf, 7, &job);
+        let (_, view) = read_frame_view(&mut &enc_buf[..], &mut job_scratch).expect("job decodes");
+        let payload = match view {
+            FrameView::SortJob(data) => data.to_vec(),
+            other => panic!("expected a SortJob view, got {other:?}"),
+        };
+        encode_frame_into(&mut enc_buf, 9, &ok);
+        let (_, view) = read_frame_view(&mut &enc_buf[..], &mut ok_scratch).expect("ok decodes");
+        let resp = match view {
+            FrameView::SortOk(v) => v.into_response().expect("materializes"),
+            other => panic!("expected a SortOk view, got {other:?}"),
+        };
+        payload.len() + resp.sorted.len()
+    };
+    lap(); // warm the four buffers
+    wire_counters_reset();
+    lap();
+    let c = wire_counters();
+    println!(
+        "    warm round trip (n={bank}): {} bytes copied, {} allocs \
+         ({} owned-path model bytes, {:.2}x fewer)",
+        c.bytes_copied,
+        c.allocs,
+        roundtrip_bytes_before(bank),
+        roundtrip_bytes_before(bank) as f64 / c.bytes_copied.max(1) as f64
+    );
+    assert_eq!(
+        c.bytes_copied,
+        roundtrip_bytes_after(bank),
+        "the counted round trip must land exactly on the after model"
+    );
 
     println!("--- end-to-end: 100k hierarchical sort, local vs duplex-remote fleet ---");
     let n = 100_000usize;

@@ -10,6 +10,36 @@
 //!   array: `plane[j]` is the [`RowMask`] of rows whose j-th bit is 1.
 //!   A column read is then two `AND`s against the active mask.
 
+/// Transpose a 64×64 bit matrix in place.
+///
+/// `a[i]` is row `i` of the matrix with bit `j` (LSB-first) holding
+/// cell `(i, j)`; on return, cell `(i, j)` has moved to `(63-j, 63-i)`
+/// — a transpose along the anti-diagonal. That orientation is free
+/// (the classic mask-and-shift network — Hacker's Delight §7-3 —
+/// produces it without any extra bit-reversal passes) and is what
+/// [`BitPlanes::new`] wants: loading value `i` of a 64-row block into
+/// `a[63-i]` makes bit-plane `j` of the block come out in `a[63-j]`.
+/// The recurrence swaps progressively smaller off-diagonal sub-blocks
+/// (32×32 down to 1×1), so the whole transpose is `6·64` word
+/// operations instead of the 4096 single-bit scatters of a per-bit
+/// build. Applying it twice is the identity (each sub-block swap is an
+/// involution), which the round-trip tests pin.
+pub fn transpose(a: &mut [u64; 64]) {
+    let mut j: u32 = 32;
+    let mut m: u64 = 0x0000_0000_FFFF_FFFF;
+    while j != 0 {
+        let mut k: usize = 0;
+        while k < 64 {
+            let t = (a[k] ^ (a[k + j as usize] >> j)) & m;
+            a[k] ^= t;
+            a[k + j as usize] ^= t << j;
+            k = (k + j as usize + 1) & !(j as usize);
+        }
+        j >>= 1;
+        m ^= m << j;
+    }
+}
+
 /// Dense bitset over the rows of a memory bank.
 ///
 /// Used for wordline (row-exclusion) state, sense-amp column images and
@@ -140,14 +170,22 @@ impl RowMask {
         }
     }
 
-    /// Write `a & b` into `self` without allocating.
+    /// Write `a & b` into `self` without allocating, returning the
+    /// popcount of the result. The count is free (the limbs are already
+    /// in hand) and lets `RowProcessor::begin_from_snapshot` report the
+    /// resumed candidate count without a second pass — the singleton
+    /// fast path in `sorter/colskip.rs` keys off it.
     #[inline]
-    pub fn assign_and(&mut self, a: &RowMask, b: &RowMask) {
+    pub fn assign_and(&mut self, a: &RowMask, b: &RowMask) -> usize {
         debug_assert_eq!(a.n, b.n);
         debug_assert_eq!(self.n, a.n);
+        let mut count = 0usize;
         for ((d, x), y) in self.words.iter_mut().zip(&a.words).zip(&b.words) {
-            *d = x & y;
+            let v = x & y;
+            *d = v;
+            count += v.count_ones() as usize;
         }
+        count
     }
 
     /// Clear every row.
@@ -233,6 +271,40 @@ impl BitPlanes {
     /// would silently truncate; truncation here would mis-sort, so we fail
     /// loudly instead).
     pub fn new(values: &[u32], width: u32) -> Self {
+        assert!((1..=32).contains(&width), "width must be in 1..=32");
+        if width < 32 {
+            if let Some(&v) = values.iter().find(|&&v| v >> width != 0) {
+                panic!("value {v:#x} does not fit in {width} bits");
+            }
+        }
+        let n = values.len();
+        let mut planes = vec![RowMask::new_empty(n); width as usize];
+        // Word-blocked build: each 64-row chunk is a 64×64 bit matrix
+        // with value `i` loaded into block row `63-i`; one [`transpose`]
+        // then yields bit-plane `j` of the whole chunk in `block[63-j]`,
+        // which lands directly in limb `b` of plane `j`. Rows past the
+        // end of a short tail chunk stay zero, preserving the `RowMask`
+        // trimmed-tail invariant. Equivalence with the one-bit-at-a-time
+        // scatter build is pinned by `blocked_build_matches_scatter_*`.
+        let mut block = [0u64; 64];
+        for (b, chunk) in values.chunks(64).enumerate() {
+            block.fill(0);
+            for (i, &v) in chunk.iter().enumerate() {
+                block[63 - i] = v as u64;
+            }
+            transpose(&mut block);
+            for (j, plane) in planes.iter_mut().enumerate() {
+                plane.words_mut()[b] = block[63 - j];
+            }
+        }
+        BitPlanes { planes, n, width }
+    }
+
+    /// Pre-blocking reference build: scatter each set bit individually.
+    /// Kept only as the equivalence oracle for the transpose-based
+    /// [`BitPlanes::new`].
+    #[cfg(test)]
+    pub(crate) fn new_scatter_reference(values: &[u32], width: u32) -> Self {
         assert!((1..=32).contains(&width), "width must be in 1..=32");
         if width < 32 {
             if let Some(&v) = values.iter().find(|&&v| v >> width != 0) {
@@ -369,10 +441,78 @@ mod tests {
         let a = RowMask::from_rows(64, [0, 1, 2]);
         let b = RowMask::from_rows(64, [1, 2, 3]);
         let mut d = RowMask::new_empty(64);
-        d.assign_and(&a, &b);
+        assert_eq!(d.assign_and(&a, &b), 2);
         assert_eq!(d.iter_set().collect::<Vec<_>>(), vec![1, 2]);
         d.copy_from(&a);
         assert_eq!(d, a);
+    }
+
+    #[test]
+    fn rowmask_assign_and_counts_across_words() {
+        let a = RowMask::from_rows(200, [0, 63, 64, 130, 199]);
+        let b = RowMask::from_rows(200, [63, 64, 130, 131]);
+        let mut d = RowMask::new_empty(200);
+        assert_eq!(d.assign_and(&a, &b), 3);
+        assert_eq!(d.iter_set().collect::<Vec<_>>(), vec![63, 64, 130]);
+        let empty = RowMask::new_empty(200);
+        assert_eq!(d.assign_and(&a, &empty), 0);
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn transpose_maps_cells_to_the_anti_diagonal() {
+        // A single set bit at (r, c) must land at (63-c, 63-r).
+        for (r, c) in [(0, 0), (0, 63), (63, 0), (17, 42), (42, 17), (31, 31)] {
+            let mut a = [0u64; 64];
+            a[r] = 1u64 << c;
+            transpose(&mut a);
+            for (i, &w) in a.iter().enumerate() {
+                let want = if i == 63 - c { 1u64 << (63 - r) } else { 0 };
+                assert_eq!(w, want, "bit ({r},{c}) row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_twice_is_identity_on_random_blocks() {
+        let mut rng = crate::datasets::rng::Rng::new(0xB17_B10C);
+        for _ in 0..32 {
+            let mut a = [0u64; 64];
+            for w in a.iter_mut() {
+                *w = rng.next_u64();
+            }
+            let orig = a;
+            transpose(&mut a);
+            transpose(&mut a);
+            assert_eq!(a, orig);
+        }
+    }
+
+    #[test]
+    fn blocked_build_matches_scatter_on_random_inputs() {
+        // n deliberately spans <64, ==64, non-multiples of 64, and >128
+        // so tail chunks and multi-limb planes are all exercised.
+        let mut rng = crate::datasets::rng::Rng::new(0x5CA7_7E12);
+        for &n in &[0usize, 1, 3, 63, 64, 65, 100, 128, 129, 200, 321] {
+            for &width in &[1u32, 4, 13, 32] {
+                let values: Vec<u32> = (0..n)
+                    .map(|_| {
+                        let v = rng.next_u32();
+                        if width < 32 { v >> (32 - width) } else { v }
+                    })
+                    .collect();
+                let blocked = BitPlanes::new(&values, width);
+                let reference = BitPlanes::new_scatter_reference(&values, width);
+                assert_eq!(blocked.rows(), reference.rows());
+                for j in 0..width {
+                    assert_eq!(
+                        blocked.plane(j),
+                        reference.plane(j),
+                        "n={n} width={width} plane {j}"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

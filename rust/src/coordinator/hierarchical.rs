@@ -344,7 +344,7 @@ impl ChunkAssembly {
         };
 
         HierarchicalOutput {
-            output: SortOutput { sorted, order, stats: self.total },
+            output: SortOutput { sorted, order, stats: self.total, counters: Default::default() },
             chunk_stats: self.chunk_stats,
             capacity,
             merge: metrics,

@@ -338,7 +338,12 @@ fn serve_one(
             // per iteration; iterations with no informative column are
             // duplicate drains (1 cycle).
             let stats = estimate_stats_from_traces(&pass.top_cols, &pass.infos);
-            Ok(SortOutput { sorted: pass.sorted, order: Vec::new(), stats })
+            Ok(SortOutput {
+                sorted: pass.sorted,
+                order: Vec::new(),
+                stats,
+                counters: Default::default(),
+            })
         }
         (EngineKind::Hybrid, Some(engine)) => {
             let pass = engine.rank(&req.data)?;

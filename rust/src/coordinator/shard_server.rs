@@ -44,13 +44,18 @@ use anyhow::Result;
 
 use super::locks::lock_recover;
 use super::transport::{LocalTransport, ShardTransport};
-use super::wire::{read_frame, read_hello, write_frame, Frame, MIN_WIRE_VERSION, WIRE_VERSION};
+use super::wire::{
+    read_frame_view, read_hello, write_frame, Frame, FrameSink, FrameView, MIN_WIRE_VERSION,
+    WIRE_VERSION,
+};
 use super::ServiceConfig;
 
 /// The shared write half of one session: every frame goes out as one
 /// locked `write_frame`, so concurrent collector threads never
-/// interleave bytes.
-type SharedWriter = Arc<Mutex<Box<dyn Write + Send>>>;
+/// interleave bytes. The [`FrameSink`] owns the session's encode
+/// buffer, so steady-state replies reuse one allocation instead of
+/// building a fresh `Vec` per frame.
+type SharedWriter = Arc<Mutex<FrameSink>>;
 
 /// One shard host behind the wire: a restartable in-process service
 /// plus the connection loop that exposes it.
@@ -99,10 +104,10 @@ impl ShardServer {
         // every frame goes out as one locked write_all, so frames never
         // interleave. A collector that panicked mid-write must not take
         // its siblings down with it, hence the recovering lock.
-        let w: SharedWriter = Arc::new(Mutex::new(w));
+        let w: SharedWriter = Arc::new(Mutex::new(FrameSink::new(w)));
         let write = |id: u64, frame: &Frame| {
             let mut g = lock_recover(&w);
-            write_frame(g.as_mut(), id, frame)
+            g.write_frame(id, frame)
         };
 
         // Version negotiation: the connection must open with Hello. Any
@@ -119,29 +124,43 @@ impl ShardServer {
         }
         write(hid, &Frame::HelloAck(self.host.config()))?;
 
+        // One payload scratch for the whole session: every frame is
+        // read into it (zero steady-state allocation), and the hot job
+        // kinds are decoded as borrowed views so the only copy of the
+        // element data is the one `to_vec` below hands to the service.
+        let mut scratch = Vec::new();
         loop {
             // EOF or a framing error ends the connection; the host
             // stays up for the next one.
-            let Ok((id, frame)) = read_frame(r.as_mut()) else { return Ok(false) };
-            match frame {
-                Frame::SortJob(data) => self.dispatch_job(id, None, data, &w),
-                Frame::SortJobTagged(tag, data) => self.dispatch_job(id, Some(tag), data, &w),
-                Frame::GetMetrics => write(id, &Frame::MetricsReply(self.host.metrics()))?,
-                Frame::Halt => self.host.halt(),
-                Frame::Restart => {
-                    let reply = match self.host.restart() {
-                        Ok(()) => Frame::Ack,
-                        Err(e) => Frame::ErrReply(format!("restart failed: {e:#}")),
-                    };
-                    write(id, &reply)?;
-                }
-                Frame::Shutdown => {
-                    self.host.shutdown();
-                    return Ok(true);
+            let Ok((id, view)) = read_frame_view(r.as_mut(), &mut scratch) else {
+                return Ok(false);
+            };
+            match view {
+                FrameView::SortJob(data) => self.dispatch_job(id, None, data.to_vec(), &w),
+                FrameView::SortJobTagged(tag, data) => {
+                    self.dispatch_job(id, Some(tag), data.to_vec(), &w)
                 }
                 // Server-bound streams never carry reply kinds; a
                 // coordinator that sends one is broken — drop the link.
-                other => anyhow::bail!("unexpected frame {other:?} on a shard server"),
+                FrameView::SortOk(_) => {
+                    anyhow::bail!("unexpected frame SortOk on a shard server")
+                }
+                FrameView::Owned(frame) => match frame {
+                    Frame::GetMetrics => write(id, &Frame::MetricsReply(self.host.metrics()))?,
+                    Frame::Halt => self.host.halt(),
+                    Frame::Restart => {
+                        let reply = match self.host.restart() {
+                            Ok(()) => Frame::Ack,
+                            Err(e) => Frame::ErrReply(format!("restart failed: {e:#}")),
+                        };
+                        write(id, &reply)?;
+                    }
+                    Frame::Shutdown => {
+                        self.host.shutdown();
+                        return Ok(true);
+                    }
+                    other => anyhow::bail!("unexpected frame {other:?} on a shard server"),
+                },
             }
         }
     }
@@ -163,7 +182,7 @@ impl ShardServer {
     ) {
         let write_one = |frame: &Frame| {
             let mut g = lock_recover(w);
-            let _ = write_frame(g.as_mut(), id, frame);
+            let _ = g.write_frame(id, frame);
         };
         if data.len() > super::wire::MAX_SORT_ELEMS {
             let msg = format!(
@@ -195,7 +214,7 @@ impl ShardServer {
                     // The connection may already be gone; the
                     // coordinator then sees the drop anyway.
                     let mut g = lock_recover(&w);
-                    let _ = write_frame(g.as_mut(), id, &frame);
+                    let _ = g.write_frame(id, &frame);
                 });
             }
             // Submit rejected: the host is down. Fail "fast" the only

@@ -237,7 +237,7 @@ type PendingMap = Arc<Mutex<HashMap<u64, PendingReply>>>;
 /// will ever drain again (a TCP write into a dead peer's socket buffer
 /// can succeed long before the OS reports the connection gone).
 struct Link {
-    writer: Arc<Mutex<Box<dyn Write + Send>>>,
+    writer: Arc<Mutex<wire::FrameSink>>,
     pending: PendingMap,
     alive: Arc<AtomicBool>,
 }
@@ -314,8 +314,11 @@ impl RemoteTransport {
     /// hand the read half to a reader thread that routes replies into
     /// `mirror` and the link's pending map until the connection dies.
     fn dial(connector: &Connector, mirror: Arc<ServiceMetrics>) -> Result<(Link, ServiceConfig)> {
-        let (mut read, mut write) = connector()?;
-        wire::write_frame(write.as_mut(), 0, &Frame::Hello)?;
+        let (mut read, write) = connector()?;
+        // The link's sink owns the encode buffer every outgoing frame
+        // reuses; the handshake warms it.
+        let mut write = wire::FrameSink::new(write);
+        write.write_frame(0, &Frame::Hello)?;
         let (_, frame) = wire::read_frame(read.as_mut())?;
         let config = match frame {
             Frame::HelloAck(cfg) => cfg,
@@ -352,7 +355,7 @@ impl RemoteTransport {
         }
         let wrote = {
             let mut w = lock_recover(&link.writer);
-            wire::write_frame(w.as_mut(), id, frame)
+            w.write_frame(id, frame)
         };
         if let Err(e) = wrote {
             lock_recover(&link.pending).remove(&id);
@@ -378,7 +381,7 @@ impl RemoteTransport {
         if let Some(link) = read_recover(&self.link).as_ref() {
             let id = self.next_id.fetch_add(1, Ordering::Relaxed);
             let mut w = lock_recover(&link.writer);
-            let _ = wire::write_frame(w.as_mut(), id, frame);
+            let _ = w.write_frame(id, frame);
         }
     }
 }
@@ -415,31 +418,42 @@ fn reader_loop(
     alive: Arc<AtomicBool>,
     mirror: Arc<ServiceMetrics>,
 ) {
+    // One payload scratch for the link's lifetime: every reply frame
+    // is read into it, and the fat `SortOk` arrays are decoded as
+    // borrowed views so their only copy is the one handed to the
+    // waiting receiver below.
+    let mut scratch = Vec::new();
     loop {
-        let Ok((id, frame)) = wire::read_frame(read.as_mut()) else { break };
+        let Ok((id, view)) = wire::read_frame_view(read.as_mut(), &mut scratch) else { break };
         let slot = lock_recover(&pending).remove(&id);
-        match (slot, frame) {
-            (Some(PendingReply::Sort(tx)), Frame::SortOk(resp)) => {
+        match (slot, view) {
+            (Some(PendingReply::Sort(tx)), wire::FrameView::SortOk(ok)) => {
+                // The single copy out of the scratch happens here, at
+                // the consumer. A view whose arrays cannot materialize
+                // (an order index beyond this host's usize) is a
+                // broken peer: fail the connection; the drain below
+                // turns the removed sender into a dropped reply.
+                let Ok(resp) = ok.into_response() else { break };
                 // The coordinator-side mirror of the host's cost
                 // observations: same stats, same element count, so the
                 // per-class cycles/number agrees with the host's own.
                 mirror.record(resp.latency_us, &resp.stats, resp.sorted.len());
                 let _ = tx.send(Ok(resp));
             }
-            (Some(PendingReply::Sort(tx)), Frame::ErrReply(msg)) => {
+            (Some(PendingReply::Sort(tx)), wire::FrameView::Owned(Frame::ErrReply(msg))) => {
                 let _ = tx.send(Err(anyhow!(msg)));
             }
             // A dropped reply crosses the wire as Frame::Dropped: drop
             // the sender without sending, and the receiver's recv()
             // errors exactly like a vanished in-process worker.
-            (Some(PendingReply::Sort(_)), Frame::Dropped) => {}
-            (Some(PendingReply::Metrics(tx)), Frame::MetricsReply(snap)) => {
+            (Some(PendingReply::Sort(_)), wire::FrameView::Owned(Frame::Dropped)) => {}
+            (Some(PendingReply::Metrics(tx)), wire::FrameView::Owned(Frame::MetricsReply(snap))) => {
                 let _ = tx.send(snap);
             }
-            (Some(PendingReply::Control(tx)), Frame::Ack) => {
+            (Some(PendingReply::Control(tx)), wire::FrameView::Owned(Frame::Ack)) => {
                 let _ = tx.send(Ok(()));
             }
-            (Some(PendingReply::Control(tx)), Frame::ErrReply(msg)) => {
+            (Some(PendingReply::Control(tx)), wire::FrameView::Owned(Frame::ErrReply(msg))) => {
                 let _ = tx.send(Err(anyhow!(msg)));
             }
             // A reply for an id nobody is waiting on: an abandoned
@@ -539,7 +553,7 @@ impl ShardTransport for RemoteTransport {
         lock_recover(&link.pending).insert(id, PendingReply::Control(tx));
         {
             let mut w = lock_recover(&link.writer);
-            wire::write_frame(w.as_mut(), id, &Frame::Restart)?;
+            w.write_frame(id, &Frame::Restart)?;
         }
         rx.recv().map_err(|_| anyhow!("shard link dropped during restart"))??;
         *write_recover(&self.config) = config;

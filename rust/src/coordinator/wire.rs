@@ -334,7 +334,9 @@ impl<'a> Cursor<'a> {
 
     fn str(&mut self) -> Result<String> {
         let n = self.len_prefix(1)?;
-        Ok(String::from_utf8(self.take(n)?.to_vec())?)
+        // Validate on the borrowed slice, then copy exactly once into
+        // the owned String (`from_utf8` on a `to_vec` would copy twice).
+        Ok(std::str::from_utf8(self.take(n)?)?.to_owned())
     }
 
     fn finish(self) -> Result<()> {
@@ -372,14 +374,93 @@ fn get_tag(c: &mut Cursor) -> Result<JobTag> {
 
 fn put_u32_slice(buf: &mut Vec<u8>, v: &[u32]) {
     put_usize(buf, v.len());
-    for &x in v {
-        put_u32(buf, x);
+    // One resize + chunked stores instead of n element-wise
+    // `extend_from_slice` calls; byte-identical little-endian layout.
+    let at = buf.len();
+    buf.resize(at + 4 * v.len(), 0);
+    if let Some(dst) = buf.get_mut(at..) {
+        for (d, &x) in dst.chunks_exact_mut(4).zip(v) {
+            d.copy_from_slice(&x.to_le_bytes());
+        }
     }
 }
 
-fn get_u32_vec(c: &mut Cursor) -> Result<Vec<u32>> {
+/// Borrowed view of a length-prefixed `u32` array still sitting in the
+/// receive buffer: decode defers the copy to the consumer, so a payload
+/// that is routed (not read) never materialises a `Vec`.
+#[derive(Clone, Copy, Debug)]
+pub struct U32sLe<'a>(&'a [u8]);
+
+impl U32sLe<'_> {
+    /// Element count.
+    pub fn len(&self) -> usize {
+        self.0.len() / 4
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    /// Copy the elements out — the single copy the borrowed decode
+    /// path performs, counted against the wire traffic model.
+    pub fn to_vec(&self) -> Vec<u32> {
+        crate::traffic::wire_count_alloc();
+        crate::traffic::wire_count_copy(self.0.len() as u64);
+        let mut out = Vec::with_capacity(self.0.len() / 4);
+        for chunk in self.0.chunks_exact(4) {
+            let mut b = [0u8; 4];
+            b.copy_from_slice(chunk);
+            out.push(u32::from_le_bytes(b));
+        }
+        out
+    }
+}
+
+/// Borrowed view of a length-prefixed `u64` array (usize-on-the-wire)
+/// still sitting in the receive buffer.
+#[derive(Clone, Copy, Debug)]
+pub struct U64sLe<'a>(&'a [u8]);
+
+impl U64sLe<'_> {
+    /// Element count.
+    pub fn len(&self) -> usize {
+        self.0.len() / 8
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    /// Copy the elements out as host `usize`s, refusing values that do
+    /// not fit (the same 32-bit-peer contract as [`Cursor::usize`]).
+    pub fn to_usize_vec(&self) -> Result<Vec<usize>> {
+        crate::traffic::wire_count_alloc();
+        crate::traffic::wire_count_copy(self.0.len() as u64);
+        let mut out = Vec::with_capacity(self.0.len() / 8);
+        for chunk in self.0.chunks_exact(8) {
+            let mut b = [0u8; 8];
+            b.copy_from_slice(chunk);
+            let v = u64::from_le_bytes(b);
+            out.push(
+                usize::try_from(v).map_err(|_| anyhow!("value exceeds this host's usize"))?,
+            );
+        }
+        Ok(out)
+    }
+}
+
+fn take_u32s<'a>(c: &mut Cursor<'a>) -> Result<U32sLe<'a>> {
     let n = c.len_prefix(4)?;
-    (0..n).map(|_| c.u32()).collect()
+    Ok(U32sLe(c.take(4 * n)?))
+}
+
+fn take_u64s<'a>(c: &mut Cursor<'a>) -> Result<U64sLe<'a>> {
+    let n = c.len_prefix(8)?;
+    Ok(U64sLe(c.take(8 * n)?))
+}
+
+fn get_u32_vec(c: &mut Cursor) -> Result<Vec<u32>> {
+    Ok(take_u32s(c)?.to_vec())
 }
 
 fn put_stats(buf: &mut Vec<u8>, s: &SortStats) {
@@ -412,12 +493,45 @@ fn put_response(buf: &mut Vec<u8>, r: &SortResponse) {
     put_usize(buf, r.worker);
 }
 
-fn get_response(c: &mut Cursor) -> Result<SortResponse> {
+/// Borrowed decode of a [`Frame::SortOk`] payload: the two fat arrays
+/// (`sorted`, `order`) stay in the receive buffer until
+/// [`SortOkView::into_response`] copies them out, once, at the
+/// consumer.
+#[derive(Clone, Debug)]
+pub struct SortOkView<'a> {
+    /// Request id echoed inside the payload (same as the header id).
+    pub id: u64,
+    /// Sorted values, still wire-resident.
+    pub sorted: U32sLe<'a>,
+    /// Argsort rows, still wire-resident.
+    pub order: U64sLe<'a>,
+    /// Itemized operation counts.
+    pub stats: SortStats,
+    /// Host-measured latency in microseconds.
+    pub latency_us: u64,
+    /// Worker index that ran the job.
+    pub worker: usize,
+}
+
+impl SortOkView<'_> {
+    /// Materialise the owned [`SortResponse`] — one copy per array.
+    pub fn into_response(self) -> Result<SortResponse> {
+        Ok(SortResponse {
+            id: self.id,
+            sorted: self.sorted.to_vec(),
+            order: self.order.to_usize_vec()?,
+            stats: self.stats,
+            latency_us: self.latency_us,
+            worker: self.worker,
+        })
+    }
+}
+
+fn take_response_view<'a>(c: &mut Cursor<'a>) -> Result<SortOkView<'a>> {
     let id = c.u64()?;
-    let sorted = get_u32_vec(c)?;
-    let order_len = c.len_prefix(8)?;
-    let order = (0..order_len).map(|_| c.usize()).collect::<Result<Vec<_>>>()?;
-    Ok(SortResponse {
+    let sorted = take_u32s(c)?;
+    let order = take_u64s(c)?;
+    Ok(SortOkView {
         id,
         sorted,
         order,
@@ -425,6 +539,10 @@ fn get_response(c: &mut Cursor) -> Result<SortResponse> {
         latency_us: c.u64()?,
         worker: c.usize()?,
     })
+}
+
+fn get_response(c: &mut Cursor) -> Result<SortResponse> {
+    take_response_view(c)?.into_response()
 }
 
 fn put_config(buf: &mut Vec<u8>, cfg: &ServiceConfig) {
@@ -539,11 +657,18 @@ fn get_snapshot(c: &mut Cursor) -> Result<Snapshot> {
 // Frame I/O
 // ---------------------------------------------------------------------
 
-/// Encode `frame` (correlated by `id`) into a single buffer. Kept
-/// separate from [`write_frame`] so a shared writer can hold its lock
-/// for exactly one `write_all`.
-pub fn encode_frame(id: u64, frame: &Frame) -> Vec<u8> {
-    let mut payload = Vec::new();
+/// Encode `frame` (correlated by `id`) into the caller's reusable
+/// buffer: header first (with a length placeholder), payload in place
+/// behind it, then the length patched in. One buffer, one pass — no
+/// intermediate payload `Vec` and, with a warm `buf`, no allocation.
+/// Byte-identical to [`encode_frame`].
+pub fn encode_frame_into(buf: &mut Vec<u8>, id: u64, frame: &Frame) {
+    buf.clear();
+    buf.extend_from_slice(&WIRE_MAGIC.to_le_bytes());
+    buf.push(frame.wire_version());
+    buf.push(frame.kind());
+    buf.extend_from_slice(&id.to_le_bytes());
+    buf.extend_from_slice(&0u32.to_le_bytes()); // len, patched below
     match frame {
         Frame::Hello
         | Frame::Dropped
@@ -552,33 +677,41 @@ pub fn encode_frame(id: u64, frame: &Frame) -> Vec<u8> {
         | Frame::Restart
         | Frame::Ack
         | Frame::Shutdown => {}
-        Frame::HelloAck(cfg) => put_config(&mut payload, cfg),
-        Frame::SortJob(data) => put_u32_slice(&mut payload, data),
-        Frame::SortOk(resp) => put_response(&mut payload, resp),
-        Frame::ErrReply(msg) => put_str(&mut payload, msg),
-        Frame::MetricsReply(snap) => put_snapshot(&mut payload, snap),
+        Frame::HelloAck(cfg) => put_config(buf, cfg),
+        Frame::SortJob(data) => put_u32_slice(buf, data),
+        Frame::SortOk(resp) => put_response(buf, resp),
+        Frame::ErrReply(msg) => put_str(buf, msg),
+        Frame::MetricsReply(snap) => put_snapshot(buf, snap),
         Frame::SortJobTagged(tag, data) => {
-            put_tag(&mut payload, tag);
-            put_u32_slice(&mut payload, data);
+            put_tag(buf, tag);
+            put_u32_slice(buf, data);
         }
         Frame::ErrTenantCap { tenant, cap } => {
-            put_str(&mut payload, tenant);
-            put_u64(&mut payload, *cap);
+            put_str(buf, tenant);
+            put_u64(buf, *cap);
         }
         Frame::ErrSaturated { priority, outstanding, limit } => {
-            put_priority(&mut payload, *priority);
-            put_u64(&mut payload, *outstanding);
-            put_u64(&mut payload, *limit);
+            put_priority(buf, *priority);
+            put_u64(buf, *outstanding);
+            put_u64(buf, *limit);
         }
     }
-    debug_assert!(payload.len() <= MAX_PAYLOAD as usize, "oversized frame payload");
-    let mut buf = Vec::with_capacity(16 + payload.len());
-    buf.extend_from_slice(&WIRE_MAGIC.to_le_bytes());
-    buf.push(frame.wire_version());
-    buf.push(frame.kind());
-    buf.extend_from_slice(&id.to_le_bytes());
-    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
-    buf.extend_from_slice(&payload);
+    let payload_len = buf.len() - 16;
+    debug_assert!(payload_len <= MAX_PAYLOAD as usize, "oversized frame payload");
+    if let Some(slot) = buf.get_mut(12..16) {
+        slot.copy_from_slice(&(payload_len as u32).to_le_bytes());
+    }
+    crate::traffic::wire_count_copy(buf.len() as u64);
+}
+
+/// Encode `frame` into a fresh buffer. Kept separate from
+/// [`write_frame`] so a shared writer can hold its lock for exactly
+/// one `write_all`; hot paths reuse a buffer via [`encode_frame_into`]
+/// (or [`FrameSink`]) instead.
+pub fn encode_frame(id: u64, frame: &Frame) -> Vec<u8> {
+    let mut buf = Vec::new();
+    encode_frame_into(&mut buf, id, frame);
+    crate::traffic::wire_count_alloc();
     buf
 }
 
@@ -587,6 +720,33 @@ pub fn encode_frame(id: u64, frame: &Frame) -> Vec<u8> {
 pub fn write_frame(w: &mut dyn Write, id: u64, frame: &Frame) -> io::Result<()> {
     w.write_all(&encode_frame(id, frame))?;
     w.flush()
+}
+
+/// A write half paired with its reusable encode buffer: every
+/// [`FrameSink::write_frame`] encodes in place and goes out in one
+/// `write_all`, so a warm sink writes frames with zero allocations.
+/// This is what the shard server's shared writer and the remote
+/// transport's per-link writer hold behind their mutexes — the guard
+/// scopes exactly one frame write, same as the free [`write_frame`].
+pub struct FrameSink {
+    w: Box<dyn Write + Send>,
+    buf: Vec<u8>,
+}
+
+impl FrameSink {
+    /// Wrap a write half; the encode buffer starts empty and warms up
+    /// to the largest frame this sink has carried.
+    pub fn new(w: Box<dyn Write + Send>) -> Self {
+        FrameSink { w, buf: Vec::new() }
+    }
+
+    /// Encode into the reusable buffer and write the whole frame in a
+    /// single `write_all`.
+    pub fn write_frame(&mut self, id: u64, frame: &Frame) -> io::Result<()> {
+        encode_frame_into(&mut self.buf, id, frame);
+        self.w.write_all(&self.buf)?;
+        self.w.flush()
+    }
 }
 
 /// Read one frame (blocking). `Err` means the connection is unusable —
@@ -621,22 +781,41 @@ pub fn read_hello(r: &mut dyn Read) -> Result<(u64, u8)> {
     Ok((id, version))
 }
 
-fn read_raw(r: &mut dyn Read) -> Result<(u64, u8, u8, Vec<u8>)> {
+/// Read one raw frame into the caller's reusable scratch buffer,
+/// returning `(id, version, kind)` with the payload left in `scratch`.
+/// A warm scratch (capacity ≥ the payload) is neither reallocated nor
+/// zero-filled — the two hidden copies the fresh-`Vec` path pays on
+/// every frame. The header is parsed through the bounds-checked
+/// [`Cursor`], so a malformed frame is an `Err`, never a panic.
+fn read_raw_into(r: &mut dyn Read, scratch: &mut Vec<u8>) -> Result<(u64, u8, u8)> {
     let mut header = [0u8; 16];
     r.read_exact(&mut header)?;
-    let magic = u16::from_le_bytes([header[0], header[1]]);
+    let mut h = Cursor::new(&header);
+    let magic = u16::from_le_bytes([h.u8()?, h.u8()?]);
     if magic != WIRE_MAGIC {
         bail!("bad frame magic {magic:#06x}");
     }
-    let version = header[2];
-    let kind = header[3];
-    let id = u64::from_le_bytes(header[4..12].try_into().map_err(|_| anyhow!("short id"))?);
-    let len = u32::from_le_bytes(header[12..16].try_into().map_err(|_| anyhow!("short len"))?);
+    let version = h.u8()?;
+    let kind = h.u8()?;
+    let id = h.u64()?;
+    let len = h.u32()?;
     if len > MAX_PAYLOAD {
         bail!("frame payload of {len} bytes exceeds the {MAX_PAYLOAD}-byte cap");
     }
-    let mut payload = vec![0u8; len as usize];
-    r.read_exact(&mut payload)?;
+    let len = len as usize;
+    if len > scratch.capacity() {
+        crate::traffic::wire_count_alloc();
+    }
+    // `resize` zero-fills only the grown tail; count exactly that.
+    crate::traffic::wire_count_copy(len.saturating_sub(scratch.len()) as u64);
+    scratch.resize(len, 0);
+    r.read_exact(scratch.as_mut_slice())?;
+    Ok((id, version, kind))
+}
+
+fn read_raw(r: &mut dyn Read) -> Result<(u64, u8, u8, Vec<u8>)> {
+    let mut payload = Vec::new();
+    let (id, version, kind) = read_raw_into(r, &mut payload)?;
     Ok((id, version, kind, payload))
 }
 
@@ -669,6 +848,71 @@ fn decode(id: u64, kind: u8, payload: &[u8]) -> Result<(u64, Frame)> {
     };
     c.finish()?;
     Ok((id, frame))
+}
+
+/// Borrowed decode of one frame: the hot kinds ([`Frame::SortJob`],
+/// [`Frame::SortJobTagged`], [`Frame::SortOk`]) keep their fat arrays
+/// in the receive buffer, everything else decodes owned exactly as
+/// [`read_frame`] would. The session loops decode through this so the
+/// values cross from wire bytes to working memory exactly once.
+#[derive(Debug)]
+pub enum FrameView<'a> {
+    /// A sort job whose data is still wire-resident.
+    SortJob(U32sLe<'a>),
+    /// A tagged sort job; the small tag is owned, the data borrowed.
+    SortJobTagged(JobTag, U32sLe<'a>),
+    /// A completed sort whose arrays are still wire-resident.
+    SortOk(SortOkView<'a>),
+    /// Any other kind, decoded owned (all cold / fixed-size).
+    Owned(Frame),
+}
+
+impl FrameView<'_> {
+    /// Materialise the owned [`Frame`] (one copy per borrowed array) —
+    /// the compatibility path for consumers that need ownership.
+    pub fn into_frame(self) -> Result<Frame> {
+        Ok(match self {
+            FrameView::SortJob(data) => Frame::SortJob(data.to_vec()),
+            FrameView::SortJobTagged(tag, data) => Frame::SortJobTagged(tag, data.to_vec()),
+            FrameView::SortOk(view) => Frame::SortOk(view.into_response()?),
+            FrameView::Owned(frame) => frame,
+        })
+    }
+}
+
+/// Decode one payload as a [`FrameView`]; same validation (including
+/// the trailing-bytes check) as [`decode`].
+pub fn decode_view(id: u64, kind: u8, payload: &[u8]) -> Result<(u64, FrameView<'_>)> {
+    let mut c = Cursor::new(payload);
+    let view = match kind {
+        2 => FrameView::SortJob(take_u32s(&mut c)?),
+        3 => FrameView::SortOk(take_response_view(&mut c)?),
+        12 => {
+            let tag = get_tag(&mut c)?;
+            FrameView::SortJobTagged(tag, take_u32s(&mut c)?)
+        }
+        k => return decode(id, k, payload).map(|(id, f)| (id, FrameView::Owned(f))),
+    };
+    c.finish()?;
+    Ok((id, view))
+}
+
+/// Read one frame as a borrowed [`FrameView`] over the caller's
+/// reusable scratch buffer. Same version window and error contract as
+/// [`read_frame`]; a warm scratch makes the receive path
+/// allocation-free for every kind.
+pub fn read_frame_view<'a>(
+    r: &mut dyn Read,
+    scratch: &'a mut Vec<u8>,
+) -> Result<(u64, FrameView<'a>)> {
+    let (id, version, kind) = read_raw_into(r, scratch)?;
+    if !(MIN_WIRE_VERSION..=WIRE_VERSION).contains(&version) {
+        bail!(
+            "unsupported wire version {version} (this build speaks \
+             {MIN_WIRE_VERSION}..={WIRE_VERSION})"
+        );
+    }
+    decode_view(id, kind, scratch)
 }
 
 // ---------------------------------------------------------------------
@@ -1055,6 +1299,167 @@ mod tests {
         assert_eq!(read_frame(&mut r).unwrap(), (2, Frame::SortJob(vec![9, 8])));
         assert_eq!(read_frame(&mut r).unwrap(), (3, Frame::Shutdown));
         assert!(read_frame(&mut r).is_err(), "EOF after the last frame");
+    }
+
+    fn sample_frames() -> Vec<Frame> {
+        vec![
+            Frame::Hello,
+            Frame::HelloAck(ServiceConfig::default()),
+            Frame::SortJob(vec![3, 1, 2, u32::MAX, 0]),
+            Frame::SortJob(Vec::new()),
+            Frame::SortOk(sample_response()),
+            Frame::ErrReply("engine mismatch".into()),
+            Frame::Dropped,
+            Frame::GetMetrics,
+            Frame::MetricsReply(super::super::metrics::ServiceMetrics::new().snapshot()),
+            Frame::Halt,
+            Frame::Restart,
+            Frame::Ack,
+            Frame::Shutdown,
+            Frame::SortJobTagged(
+                JobTag { tenant: "acme".into(), priority: Priority::Interactive },
+                vec![9, 9, 1],
+            ),
+            Frame::ErrTenantCap { tenant: "acme".into(), cap: 8 },
+            Frame::ErrSaturated { priority: Priority::Batch, outstanding: 64, limit: 64 },
+        ]
+    }
+
+    #[test]
+    fn encode_into_a_reused_buffer_is_byte_identical_to_encode() {
+        // One buffer across every kind, fat frames before small ones,
+        // so a stale longer payload would surface as trailing bytes.
+        let mut buf = Vec::new();
+        for (i, frame) in sample_frames().into_iter().enumerate() {
+            let id = 0xA5A5_0000 ^ i as u64;
+            encode_frame_into(&mut buf, id, &frame);
+            assert_eq!(buf, encode_frame(id, &frame), "{frame:?}");
+        }
+    }
+
+    #[test]
+    fn borrowed_views_decode_identically_to_owned_frames() {
+        // Same scratch across every kind: the view decode must agree
+        // with the owned decode frame-for-frame, and a previous (fatter)
+        // payload must never bleed into the next.
+        let mut scratch = Vec::new();
+        for (i, frame) in sample_frames().into_iter().enumerate() {
+            let id = 0x77 ^ i as u64;
+            let bytes = encode_frame(id, &frame);
+            let (vid, view) = read_frame_view(&mut &bytes[..], &mut scratch).expect("view");
+            assert_eq!(vid, id);
+            assert_eq!(view.into_frame().expect("materialise"), frame, "kind {i}");
+        }
+    }
+
+    #[test]
+    fn sort_ok_view_exposes_the_arrays_without_copying() {
+        let resp = sample_response();
+        let bytes = encode_frame(5, &Frame::SortOk(resp.clone()));
+        let mut scratch = Vec::new();
+        let (_, view) = read_frame_view(&mut &bytes[..], &mut scratch).expect("view");
+        match view {
+            FrameView::SortOk(v) => {
+                assert_eq!(v.id, resp.id);
+                assert_eq!(v.sorted.len(), resp.sorted.len());
+                assert_eq!(v.order.len(), resp.order.len());
+                assert!(!v.sorted.is_empty() && !v.order.is_empty());
+                assert_eq!(v.stats, resp.stats);
+                let owned = v.into_response().expect("materialise");
+                assert_eq!(owned, resp);
+            }
+            other => panic!("expected SortOk view, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn view_reader_rejects_what_the_owned_reader_rejects() {
+        let mut scratch = Vec::new();
+        // Unsupported version.
+        let mut bytes = encode_frame(1, &Frame::SortJob(vec![1]));
+        bytes[2] = WIRE_VERSION + 1;
+        let err = read_frame_view(&mut &bytes[..], &mut scratch).unwrap_err();
+        assert!(err.to_string().contains("version"));
+        // Trailing bytes inside a hot-kind payload.
+        let mut bytes = encode_frame(1, &Frame::SortJob(vec![1]));
+        let len = (bytes.len() - 16 + 1) as u32;
+        bytes[12..16].copy_from_slice(&len.to_le_bytes());
+        bytes.push(0);
+        let err = read_frame_view(&mut &bytes[..], &mut scratch).unwrap_err();
+        assert!(err.to_string().contains("trailing"), "{err}");
+        // Oversized order values refuse to materialise only where usize
+        // is too small; the length caps still hold on every host.
+        let mut bad = encode_frame(1, &Frame::SortJob(vec![1, 2, 3]));
+        bad[16..24].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(read_frame_view(&mut &bad[..], &mut scratch).is_err());
+    }
+
+    #[test]
+    fn warm_buffers_land_exactly_on_the_after_model() {
+        use crate::traffic::{roundtrip_bytes_after, wire_counters, wire_counters_reset};
+        let n = 1024usize;
+        let job = Frame::SortJob((0..n as u32).rev().collect());
+        let ok = Frame::SortOk(SortResponse {
+            id: 9,
+            sorted: (0..n as u32).collect(),
+            order: (0..n).rev().collect(),
+            stats: SortStats::default(),
+            latency_us: 3,
+            worker: 0,
+        });
+        let mut wire_buf = Vec::new();
+        // One scratch per reader thread, as deployed: the server's
+        // session loop reads jobs, the client's reply reader reads oks.
+        let mut server_scratch = Vec::new();
+        let mut client_scratch = Vec::new();
+        // First lap warms the buffers; second lap is the measured
+        // steady state and must land on roundtrip_bytes_after to the
+        // byte, with exactly the three consumer-side copies allocating.
+        for measured in [false, true] {
+            wire_counters_reset();
+            encode_frame_into(&mut wire_buf, 9, &job);
+            {
+                let (_, view) =
+                    read_frame_view(&mut &wire_buf[..], &mut server_scratch).expect("job");
+                match view {
+                    FrameView::SortJob(data) => assert_eq!(data.to_vec().len(), n),
+                    other => panic!("expected SortJob view, got {other:?}"),
+                }
+            }
+            encode_frame_into(&mut wire_buf, 9, &ok);
+            {
+                let (_, view) =
+                    read_frame_view(&mut &wire_buf[..], &mut client_scratch).expect("ok");
+                match view {
+                    FrameView::SortOk(v) => {
+                        assert_eq!(v.into_response().expect("resp").sorted.len(), n)
+                    }
+                    other => panic!("expected SortOk view, got {other:?}"),
+                }
+            }
+            if measured {
+                let c = wire_counters();
+                assert_eq!(c.bytes_copied, roundtrip_bytes_after(n));
+                assert_eq!(c.allocs, 3); // job data, sorted, order
+            }
+        }
+    }
+
+    #[test]
+    fn frame_sink_writes_decodable_frames_through_a_pipe() {
+        let (mut reader, writer) = pipe();
+        let mut sink = FrameSink::new(Box::new(writer));
+        sink.write_frame(1, &Frame::SortJob(vec![4, 4, 1])).expect("write");
+        sink.write_frame(2, &Frame::Ack).expect("write");
+        let mut scratch = Vec::new();
+        let (id, view) = read_frame_view(&mut reader, &mut scratch).expect("read");
+        assert_eq!(id, 1);
+        assert_eq!(view.into_frame().expect("own"), Frame::SortJob(vec![4, 4, 1]));
+        let (id, view) = read_frame_view(&mut reader, &mut scratch).expect("read");
+        assert_eq!(id, 2);
+        assert!(matches!(view, FrameView::Owned(Frame::Ack)));
+        drop(sink);
+        assert!(read_frame_view(&mut reader, &mut scratch).is_err(), "EOF after drop");
     }
 
     #[test]

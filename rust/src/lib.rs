@@ -59,6 +59,7 @@ pub mod runtime;
 pub mod sim;
 pub mod sorter;
 pub mod testing;
+pub mod traffic;
 
 /// Convenience re-exports for the common entry points.
 pub mod prelude {
@@ -84,6 +85,7 @@ pub mod prelude {
         merge::{merge_runs, LoserTree, MergeSorter},
         InMemorySorter, SortOutput, SortStats,
     };
+    pub use crate::traffic::KernelCounters;
 }
 
 /// Paper-level constants shared across the stack.

@@ -19,9 +19,16 @@ pub enum FaultKind {
 }
 
 /// A set of faulty cells, addressed by (row, bit column).
+///
+/// Faults are kept both in insertion order (`faults`, the authority for
+/// [`FaultMap::apply`]/[`FaultMap::iter`] semantics — a later fault at
+/// the same cell wins) and indexed by row (`by_row`, same per-row
+/// insertion order), so [`FaultMap::corrupt_value`] is O(faults in that
+/// row) instead of a scan of the whole list per row.
 #[derive(Clone, Debug, Default)]
 pub struct FaultMap {
     faults: Vec<(usize, u32, FaultKind)>,
+    by_row: std::collections::HashMap<usize, Vec<(u32, FaultKind)>>,
 }
 
 impl FaultMap {
@@ -32,6 +39,7 @@ impl FaultMap {
     /// Record a fault at (`row`, `col`).
     pub fn add(&mut self, row: usize, col: u32, kind: FaultKind) {
         self.faults.push((row, col, kind));
+        self.by_row.entry(row).or_default().push((col, kind));
     }
 
     /// Draw a random fault map with per-cell Bernoulli rate `ber`
@@ -67,10 +75,11 @@ impl FaultMap {
     }
 
     /// The corrupted value a given pristine value would read back as.
+    /// Row-indexed: touches only this row's faults, in insertion order.
     pub fn corrupt_value(&self, row: usize, value: u32) -> u32 {
         let mut v = value;
-        for &(r, c, kind) in &self.faults {
-            if r == row {
+        if let Some(row_faults) = self.by_row.get(&row) {
+            for &(c, kind) in row_faults {
                 match kind {
                     FaultKind::StuckAt0 => v &= !(1 << c),
                     FaultKind::StuckAt1 => v |= 1 << c,
@@ -110,6 +119,32 @@ mod tests {
         fm.apply(&mut planes);
         assert_eq!(planes.read_row(0), fm.corrupt_value(0, vals[0]));
         assert_eq!(planes.read_row(1), fm.corrupt_value(1, vals[1]));
+    }
+
+    #[test]
+    fn row_index_matches_full_scan_reference() {
+        // Behavior identity for the row-indexed corrupt_value against a
+        // brute-force scan of the insertion-ordered list, including a
+        // conflicting double fault on one cell (last write wins).
+        let mut rng = Rng::new(77);
+        let mut fm = FaultMap::random(300, 16, 0.02, &mut rng);
+        fm.add(5, 3, FaultKind::StuckAt0);
+        fm.add(5, 3, FaultKind::StuckAt1);
+        for row in 0..300 {
+            for value in [0u32, 0xFFFF, 0xA5A5, rng.next_u32() & 0xFFFF] {
+                let mut want = value;
+                for &(r, c, kind) in fm.iter() {
+                    if r == row {
+                        match kind {
+                            FaultKind::StuckAt0 => want &= !(1 << c),
+                            FaultKind::StuckAt1 => want |= 1 << c,
+                        }
+                    }
+                }
+                assert_eq!(fm.corrupt_value(row, value), want, "row {row}");
+            }
+        }
+        assert_eq!(fm.corrupt_value(5, 0) >> 3 & 1, 1, "later StuckAt1 wins");
     }
 
     #[test]

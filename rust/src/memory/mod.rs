@@ -16,6 +16,7 @@ pub mod fault;
 pub mod sense;
 
 use crate::bits::{BitPlanes, RowMask};
+use crate::traffic::KernelCounters;
 use fault::FaultMap;
 
 /// Static configuration of a bank.
@@ -71,6 +72,14 @@ pub struct Bank {
     values: Vec<u32>,
     meter: OpMeter,
     faults: Option<FaultMap>,
+    /// Scratch mask for [`Bank::column_step`]. After an informative step
+    /// it holds the *pre-exclusion* active set (the state-record
+    /// snapshot); after an uninformative step it holds garbage.
+    step: RowMask,
+    /// Surviving-candidate popcount left by the last [`Bank::column_step`].
+    step_remaining: usize,
+    /// Word-traffic counters for the fused per-column kernels.
+    counters: KernelCounters,
 }
 
 impl Bank {
@@ -87,6 +96,9 @@ impl Bank {
             values: values.to_vec(),
             meter,
             faults: None,
+            step: RowMask::new_empty(values.len()),
+            step_remaining: 0,
+            counters: KernelCounters::default(),
         }
     }
 
@@ -181,6 +193,88 @@ impl Bank {
         self.planes.plane(col)
     }
 
+    /// Fused column step: judge, exclude, and stage the state-record
+    /// snapshot in a **single** pass over the mask limbs.
+    ///
+    /// Per limb, one pass computes the sensed-1 pattern (`a & p`, for
+    /// the all-1s judgement), the surviving candidates (`a & !p`,
+    /// written into the internal scratch mask), the sensed-row
+    /// popcount, and the survivor popcount. If the column is
+    /// *informative* (both judgements true), `active` and the scratch
+    /// are pointer-swapped: `active` becomes the post-exclusion set and
+    /// the scratch retains the pre-exclusion set — exactly the snapshot
+    /// `StateTable::record` wants — readable via
+    /// [`Bank::step_snapshot`] until the next step. An uninformative
+    /// column leaves `active` untouched (all-0s exclusion is the
+    /// identity; all-1s must not exclude), matching the reference
+    /// judge-then-exclude path bit for bit.
+    ///
+    /// Word traffic: `3W` (read plane, read active, write scratch) per
+    /// call, vs the reference path's `2W` judge + `3W` exclusion + `2W`
+    /// snapshot copy — see `crate::traffic` for the full model.
+    pub fn column_step(&mut self, col: u32, active: &mut RowMask) -> (bool, bool) {
+        debug_assert!(col < self.config.width);
+        debug_assert_eq!(active.len(), self.config.rows);
+        self.meter.column_reads += 1;
+        let mut any_one = 0u64;
+        let mut any_zero = 0u64;
+        let mut sensed = 0u64;
+        let mut remaining = 0usize;
+        // `planes` (shared) and `step` (mut) are disjoint fields.
+        let plane = self.planes.plane(col);
+        for ((&p, &a), s) in plane
+            .words()
+            .iter()
+            .zip(active.words())
+            .zip(self.step.words_mut())
+        {
+            let keep = a & !p;
+            *s = keep;
+            any_one |= a & p;
+            any_zero |= keep;
+            sensed += a.count_ones() as u64;
+            remaining += keep.count_ones() as usize;
+        }
+        self.meter.rows_sensed += sensed;
+        self.counters.mask_words += 3 * plane.words().len() as u64;
+        self.step_remaining = remaining;
+        let informative = any_one != 0 && any_zero != 0;
+        if informative {
+            std::mem::swap(active, &mut self.step);
+        }
+        (any_one != 0, any_zero != 0)
+    }
+
+    /// The pre-exclusion active set staged by the last *informative*
+    /// [`Bank::column_step`] — the state-record snapshot. Handed out
+    /// mutably so `StateTable::record_swapped` can take it by pointer
+    /// swap; whatever lands back here is overwritten by the next step.
+    pub fn step_snapshot(&mut self) -> &mut RowMask {
+        &mut self.step
+    }
+
+    /// Post-exclusion candidate count left by the last
+    /// [`Bank::column_step`]. Meaningful only after an *informative*
+    /// step (an all-1s column leaves `active` untouched, so its
+    /// would-be survivor count of zero is not the active count).
+    pub fn step_remaining(&self) -> usize {
+        self.step_remaining
+    }
+
+    /// Meter `cols` column reads retired arithmetically by the
+    /// singleton fast path: the CRs and row senses are architecturally
+    /// real (the paper's controller still issues them), but the
+    /// simulator scans zero mask words for them.
+    pub fn charge_skipped_columns(&mut self, cols: u64, active_rows: u64) {
+        self.meter.column_reads += cols;
+        self.meter.rows_sensed += cols * active_rows;
+    }
+
+    /// Word-traffic counters accumulated by the fused kernels.
+    pub fn counters(&self) -> KernelCounters {
+        self.counters
+    }
+
     /// Column read returning an owned [`ColumnRead`] (test/API convenience;
     /// the sorter hot path uses [`Bank::column_read_judge`]).
     pub fn column_read(&mut self, col: u32, active: &RowMask) -> ColumnRead {
@@ -259,6 +353,53 @@ mod tests {
         assert_eq!(bank.meter().rows_sensed, 4 + 4 + 2);
         bank.read_row(0);
         assert_eq!(bank.meter().row_reads, 1);
+    }
+
+    #[test]
+    fn column_step_matches_judge_then_exclude() {
+        // Full-traversal equivalence: same judgements, same active mask
+        // after every column, snapshot == pre-exclusion set, identical
+        // meter. n spans word boundaries and non-multiples of 64.
+        let mut rng = crate::datasets::rng::Rng::new(0xFEED_C0DE);
+        for &n in &[3usize, 63, 64, 65, 130, 200] {
+            let width = 13u32;
+            let values: Vec<u32> =
+                (0..n).map(|_| rng.next_u32() >> (32 - width)).collect();
+            let mut fused = Bank::load(&values, width);
+            let mut reference = Bank::load(&values, width);
+            let mut active_f = RowMask::new_full(n);
+            let mut active_r = RowMask::new_full(n);
+            for col in (0..width).rev() {
+                let judged = reference.column_read_judge(col, &active_r);
+                let pre_exclusion = active_r.clone();
+                if judged.0 && judged.1 {
+                    active_r.and_not_assign(reference.plane_for_exclusion(col));
+                }
+                let stepped = fused.column_step(col, &mut active_f);
+                assert_eq!(stepped, judged, "n={n} col={col}");
+                assert_eq!(active_f, active_r, "n={n} col={col}");
+                if stepped.0 && stepped.1 {
+                    assert_eq!(*fused.step_snapshot(), pre_exclusion);
+                    assert_eq!(fused.step_remaining(), active_f.count());
+                }
+            }
+            assert_eq!(fused.meter().column_reads, reference.meter().column_reads);
+            assert_eq!(fused.meter().rows_sensed, reference.meter().rows_sensed);
+            assert_eq!(
+                fused.counters().mask_words,
+                3 * crate::traffic::mask_words(n) * width as u64
+            );
+        }
+    }
+
+    #[test]
+    fn charge_skipped_columns_meters_without_scanning() {
+        let mut bank = Bank::load(&[1, 2, 3], 4);
+        let words_before = bank.counters().mask_words;
+        bank.charge_skipped_columns(3, 1);
+        assert_eq!(bank.meter().column_reads, 3);
+        assert_eq!(bank.meter().rows_sensed, 3);
+        assert_eq!(bank.counters().mask_words, words_before);
     }
 
     #[test]

@@ -233,7 +233,7 @@ impl MultiBankSorter {
             }
         }
 
-        SortOutput { sorted, order, stats }
+        SortOutput { sorted, order, stats, counters: Default::default() }
     }
 }
 
@@ -244,7 +244,7 @@ impl SubSorter {
         match self.table.entries().last() {
             Some(e) if e.col == col => {
                 // Disjoint field borrows: `table` (shared) vs `active` (mut).
-                self.active.assign_and(&e.snapshot, &self.alive)
+                self.active.assign_and(&e.snapshot, &self.alive);
             }
             _ => self.active.clear_all(),
         }
@@ -261,7 +261,12 @@ impl SubSorter {
 impl InMemorySorter for MultiBankSorter {
     fn sort_with_stats(&mut self, data: &[u32]) -> SortOutput {
         if data.is_empty() {
-            return SortOutput { sorted: vec![], order: vec![], stats: SortStats::default() };
+            return SortOutput {
+                sorted: vec![],
+                order: vec![],
+                stats: SortStats::default(),
+                counters: Default::default(),
+            };
         }
         let c = self.config.banks;
         if data.len().is_multiple_of(c) {
@@ -284,7 +289,7 @@ impl InMemorySorter for MultiBankSorter {
                 order.push(r);
             }
         }
-        SortOutput { sorted, order, stats: out.stats }
+        SortOutput { sorted, order, stats: out.stats, counters: out.counters }
     }
 
     fn name(&self) -> &'static str {

@@ -98,7 +98,7 @@ pub fn trace_sort(data: &[u32], config: &ColSkipConfig) -> (SortOutput, TracedRu
             }
         }
     }
-    (SortOutput { sorted, order, stats }, run)
+    (SortOutput { sorted, order, stats, counters: Default::default() }, run)
 }
 
 #[cfg(test)]

@@ -76,14 +76,19 @@ impl BaselineSorter {
             order.push(row);
             alive.clear(row);
         }
-        SortOutput { sorted, order, stats }
+        SortOutput { sorted, order, stats, counters: Default::default() }
     }
 }
 
 impl InMemorySorter for BaselineSorter {
     fn sort_with_stats(&mut self, data: &[u32]) -> SortOutput {
         if data.is_empty() {
-            return SortOutput { sorted: vec![], order: vec![], stats: SortStats::default() };
+            return SortOutput {
+                sorted: vec![],
+                order: vec![],
+                stats: SortStats::default(),
+                counters: Default::default(),
+            };
         }
         let mut bank = Bank::load(data, self.config.width);
         self.sort_bank(&mut bank)

@@ -78,7 +78,107 @@ impl ColSkipSorter {
     }
 
     /// Sort the contents of an already-loaded bank.
+    ///
+    /// Hot path: every executed column runs through the fused
+    /// [`Bank::column_step`] (judgement + exclusion + snapshot staging
+    /// in one word pass, with the SR landing in the state table by
+    /// pointer swap), and once a min search is down to a single
+    /// candidate the **singleton fast path** retires the remaining
+    /// columns arithmetically — a lone candidate can never split, so
+    /// every remaining column is provably uninformative: no exclusions,
+    /// no recordings, no lead-register update, just `col + 1` CRs of
+    /// architectural latency charged at zero word scans. Stats, output,
+    /// argsort and the op meter are byte-identical to the pre-fusion
+    /// reference path (`sort_bank_reference`, pinned by the equivalence
+    /// tests below and `prop_fused_colskip_identical_to_reference`).
     pub fn sort_bank(&self, bank: &mut Bank) -> SortOutput {
+        let n = bank.rows();
+        let w = bank.width();
+        debug_assert_eq!(w, self.config.width);
+        let mut stats = SortStats::default();
+        let mut cp = ColumnProcessor::new(w, self.config.skip_leading);
+        let mut rp = RowProcessor::new(n);
+        let mut table = StateTable::new(self.config.k);
+        let mut sorted = Vec::with_capacity(n);
+        let mut order = Vec::with_capacity(n);
+
+        while sorted.len() < n {
+            stats.iterations += 1;
+
+            // --- Iteration start: SL if a recorded state is live. ---
+            let (entry, invalidated) = table.load_most_recent(rp.alive());
+            stats.invalidations += invalidated;
+            let (start_col, from_msb, mut active_count) = match entry {
+                Some(e) => {
+                    stats.sls += 1;
+                    let col = e.col;
+                    let count = rp.begin_from_snapshot(&e.snapshot);
+                    (col, false, count)
+                }
+                None => {
+                    rp.begin_full();
+                    (cp.full_start(), true, n - sorted.len())
+                }
+            };
+
+            // --- Bit traversal (CRs from start_col down to the LSB). ---
+            let mut first_informative: Option<u32> = None;
+            for col in (0..=start_col).rev() {
+                if active_count == 1 {
+                    // Singleton fast path: the remaining columns can
+                    // only read all-0s or all-1s over one row, so none
+                    // is informative. Charge their CR/sense latency
+                    // without scanning a single mask word.
+                    let skipped = col as u64 + 1;
+                    stats.crs += skipped;
+                    bank.charge_skipped_columns(skipped, 1);
+                    break;
+                }
+                stats.crs += 1;
+                let (any_one, any_zero) = bank.column_step(col, rp.active_mut());
+                if any_one && any_zero {
+                    if from_msb {
+                        if first_informative.is_none() {
+                            first_informative = Some(col);
+                        }
+                        // SR: the pre-exclusion set staged by the step
+                        // becomes the snapshot by pointer swap.
+                        table.record_swapped(bank.step_snapshot(), col);
+                        stats.srs += 1;
+                    }
+                    bank.note_wordline_update();
+                    stats.res += 1;
+                    active_count = bank.step_remaining();
+                }
+            }
+            if from_msb {
+                if let Some(col) = first_informative {
+                    cp.observe_first_informative(col);
+                }
+            }
+
+            // --- Emit the minimum; drain duplicates under stall. ---
+            let row = rp.emit_first();
+            sorted.push(bank.read_row(row));
+            order.push(row);
+            if self.config.stall_on_duplicates {
+                while rp.has_pending_duplicates() && sorted.len() < n {
+                    stats.drains += 1;
+                    let row = rp.emit_first();
+                    sorted.push(bank.read_row(row));
+                    order.push(row);
+                }
+            }
+        }
+        let counters = bank.counters();
+        SortOutput { sorted, order, stats, counters }
+    }
+
+    /// Pre-fusion reference path: separate judge, exclude and
+    /// snapshot-copy passes, no singleton fast path. Kept solely as the
+    /// byte-identity oracle for [`ColSkipSorter::sort_bank`].
+    #[cfg(test)]
+    pub(crate) fn sort_bank_reference(&self, bank: &mut Bank) -> SortOutput {
         let n = bank.rows();
         let w = bank.width();
         debug_assert_eq!(w, self.config.width);
@@ -147,14 +247,20 @@ impl ColSkipSorter {
                 }
             }
         }
-        SortOutput { sorted, order, stats }
+        let counters = bank.counters();
+        SortOutput { sorted, order, stats, counters }
     }
 }
 
 impl InMemorySorter for ColSkipSorter {
     fn sort_with_stats(&mut self, data: &[u32]) -> SortOutput {
         if data.is_empty() {
-            return SortOutput { sorted: vec![], order: vec![], stats: SortStats::default() };
+            return SortOutput {
+                sorted: vec![],
+                order: vec![],
+                stats: SortStats::default(),
+                counters: Default::default(),
+            };
         }
         let mut bank = Bank::load(data, self.config.width);
         self.sort_bank(&mut bank)
@@ -352,6 +458,132 @@ mod tests {
         let data = vec![u32::MAX, 0, u32::MAX, 1, 0x8000_0000, 0x7FFF_FFFF];
         let mut cs = ColSkipSorter::with_k(3);
         assert_eq!(cs.sort(&data), sort_ref(&data));
+    }
+
+    /// Full identity of the fused hot path against the pre-fusion
+    /// reference: sorted output, argsort, every `SortStats` field and
+    /// the op meter, across every dataset kind and k, at an n that is
+    /// not a multiple of 64 (tail-limb handling).
+    #[test]
+    fn fused_path_matches_reference_on_dataset_kinds() {
+        use crate::datasets::{Dataset, DatasetKind};
+        use crate::memory::Bank;
+        for kind in DatasetKind::ALL {
+            let d = Dataset::generate32(kind, 257, 7);
+            for k in [0usize, 1, 2, 4, 8] {
+                let cs = ColSkipSorter::with_k(k);
+                let mut fused_bank = Bank::load(&d.values, 32);
+                let mut ref_bank = Bank::load(&d.values, 32);
+                let fused = cs.sort_bank(&mut fused_bank);
+                let reference = cs.sort_bank_reference(&mut ref_bank);
+                assert_eq!(fused.sorted, reference.sorted, "{kind:?} k={k}");
+                assert_eq!(fused.order, reference.order, "{kind:?} k={k}");
+                assert_eq!(fused.stats, reference.stats, "{kind:?} k={k}");
+                assert_eq!(fused_bank.meter(), ref_bank.meter(), "{kind:?} k={k}");
+            }
+        }
+    }
+
+    /// Property form of the identity, over the harness's adversarial
+    /// shapes (duplicates, runs, extremes, widths 1..=32, short and
+    /// word-straddling lengths) and every k in the acceptance grid.
+    #[test]
+    fn prop_fused_colskip_identical_to_reference() {
+        use crate::memory::Bank;
+        use crate::testing::{check, PropConfig};
+        check(
+            "fused colskip == reference",
+            PropConfig { seed: 14, cases: 128, max_len: 150, ..Default::default() },
+            |case| {
+                if case.values.is_empty() {
+                    return Ok(());
+                }
+                for k in [0usize, 1, 2, 4, 8] {
+                    let cs = ColSkipSorter::new(ColSkipConfig {
+                        width: case.width,
+                        k,
+                        ..Default::default()
+                    });
+                    let mut fused_bank = Bank::load(&case.values, case.width);
+                    let mut ref_bank = Bank::load(&case.values, case.width);
+                    let fused = cs.sort_bank(&mut fused_bank);
+                    let reference = cs.sort_bank_reference(&mut ref_bank);
+                    if fused.sorted != reference.sorted {
+                        return Err(format!("k={k}: sorted diverged"));
+                    }
+                    if fused.order != reference.order {
+                        return Err(format!("k={k}: argsort diverged"));
+                    }
+                    if fused.stats != reference.stats {
+                        return Err(format!(
+                            "k={k}: stats diverged: {:?} vs {:?}",
+                            fused.stats, reference.stats
+                        ));
+                    }
+                    if fused_bank.meter() != ref_bank.meter() {
+                        return Err(format!("k={k}: op meter diverged"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// The ablation flags must not disturb the identity either.
+    #[test]
+    fn prop_fused_identity_holds_under_ablations() {
+        use crate::memory::Bank;
+        use crate::testing::{check, PropConfig};
+        check(
+            "fused colskip == reference (ablations)",
+            PropConfig { seed: 15, cases: 64, max_len: 120, ..Default::default() },
+            |case| {
+                if case.values.is_empty() {
+                    return Ok(());
+                }
+                for (skip_leading, stall) in
+                    [(false, true), (true, false), (false, false)]
+                {
+                    let cs = ColSkipSorter::new(ColSkipConfig {
+                        width: case.width,
+                        k: 2,
+                        skip_leading,
+                        stall_on_duplicates: stall,
+                    });
+                    let mut fused_bank = Bank::load(&case.values, case.width);
+                    let mut ref_bank = Bank::load(&case.values, case.width);
+                    let fused = cs.sort_bank(&mut fused_bank);
+                    let reference = cs.sort_bank_reference(&mut ref_bank);
+                    if fused.sorted != reference.sorted
+                        || fused.order != reference.order
+                        || fused.stats != reference.stats
+                    {
+                        return Err(format!(
+                            "skip_leading={skip_leading} stall={stall}: diverged"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// Fig. 3 word traffic: the fused path executes 4 of the 7 CRs
+    /// (iterations 2 and 3 resume as singletons) at 3 limb-words each;
+    /// the reference model costs 24 — exactly 2×. Pinned here and by
+    /// the `fleet_model.py` mirror in CI.
+    #[test]
+    fn fig3_word_traffic_is_counted_and_halved() {
+        use crate::memory::Bank;
+        use crate::traffic;
+        let cs = ColSkipSorter::new(ColSkipConfig { width: 4, k: 2, ..Default::default() });
+        let mut bank = Bank::load(&[8, 9, 10], 4);
+        let out = cs.sort_bank(&mut bank);
+        assert_eq!(out.counters.mask_words, 12, "4 executed CRs × 3W, W=1");
+        let reference =
+            traffic::reference_traversal_words(3, out.stats.crs, out.stats.res, out.stats.srs);
+        assert_eq!(reference, 24);
+        assert!(reference as f64 / out.counters.mask_words as f64 >= 2.0);
     }
 
     #[test]

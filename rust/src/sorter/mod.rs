@@ -93,6 +93,12 @@ pub struct SortOutput {
     pub order: Vec<usize>,
     /// Itemized operation counts.
     pub stats: SortStats,
+    /// Word-traffic counters from the fused per-column kernels.
+    /// Implementation cost, not architecture: deliberately outside
+    /// [`SortStats`] (which crosses wire frames and is compared for
+    /// byte-identity across sorter paths). Sorters that don't run the
+    /// fused kernels report zeros.
+    pub counters: crate::traffic::KernelCounters,
 }
 
 /// Common interface over all sorter implementations.

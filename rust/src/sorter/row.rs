@@ -33,6 +33,12 @@ impl RowProcessor {
         &self.active
     }
 
+    /// Mutable wordline register, for the fused `Bank::column_step`
+    /// kernel (judgement + exclusion swap in one pass).
+    pub(crate) fn active_mut(&mut self) -> &mut RowMask {
+        &mut self.active
+    }
+
     /// Number of rows not yet emitted.
     pub fn remaining(&self) -> usize {
         self.alive.count()
@@ -44,9 +50,11 @@ impl RowProcessor {
     }
 
     /// Begin an iteration from a recorded snapshot: candidates are the
-    /// snapshot rows still alive (the SL path).
-    pub fn begin_from_snapshot(&mut self, snapshot: &RowMask) {
-        self.active.assign_and(snapshot, &self.alive);
+    /// snapshot rows still alive (the SL path). Returns the candidate
+    /// count — free from the same pass, and what the singleton fast
+    /// path in `sorter/colskip.rs` keys off.
+    pub fn begin_from_snapshot(&mut self, snapshot: &RowMask) -> usize {
+        self.active.assign_and(snapshot, &self.alive)
     }
 
     /// Apply a row exclusion: candidates that sensed 1 drop out.

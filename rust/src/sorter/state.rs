@@ -74,6 +74,27 @@ impl StateTable {
         self.entries.push(StateEntry { snapshot, col });
     }
 
+    /// [`StateTable::record`], but *swap* the snapshot in instead of
+    /// copying it: `src` (the pre-exclusion active set staged by
+    /// `Bank::column_step`) becomes the stored snapshot by pointer
+    /// exchange, and `src` is left holding a recycled buffer of the
+    /// same length — stale content, about to be overwritten by the next
+    /// column step. Zero mask words move. Falls back to the same
+    /// eviction/pool discipline as `record`, so table contents are
+    /// identical to the copying path.
+    pub fn record_swapped(&mut self, src: &mut RowMask, col: u32) {
+        if self.k == 0 {
+            return;
+        }
+        let mut snapshot = if self.entries.len() == self.k {
+            self.entries.remove(0).snapshot
+        } else {
+            self.pool.pop().unwrap_or_else(|| RowMask::new_empty(src.len()))
+        };
+        std::mem::swap(&mut snapshot, src);
+        self.entries.push(StateEntry { snapshot, col });
+    }
+
     /// The SL operation: discard dead entries (snapshot disjoint from
     /// `alive`), then return the most recent live one. Returns the number
     /// of entries invalidated alongside the entry.
@@ -191,6 +212,33 @@ mod tests {
         m.clear(0);
         m.clear(1);
         assert_eq!(t.entries()[0].snapshot.count(), 2);
+    }
+
+    #[test]
+    fn record_swapped_builds_the_same_table_as_record() {
+        let mut copied = StateTable::new(2);
+        let mut swapped = StateTable::new(2);
+        for (rows, col) in
+            [(vec![0usize, 1, 2], 5u32), (vec![1, 2], 4), (vec![2], 3)]
+        {
+            let m = mask(8, &rows);
+            copied.record(&m, col);
+            let mut src = m.clone();
+            swapped.record_swapped(&mut src, col);
+            // A same-geometry buffer is handed back for reuse.
+            assert_eq!(src.len(), 8);
+        }
+        assert_eq!(copied.len(), swapped.len());
+        for (a, b) in copied.entries().iter().zip(swapped.entries()) {
+            assert_eq!(a.col, b.col);
+            assert_eq!(a.snapshot, b.snapshot);
+        }
+        // k = 0 is still a no-op and must not disturb the source mask.
+        let mut t0 = StateTable::new(0);
+        let mut src = mask(8, &[3]);
+        t0.record_swapped(&mut src, 1);
+        assert!(t0.is_empty());
+        assert_eq!(src, mask(8, &[3]));
     }
 
     #[test]

@@ -1,0 +1,212 @@
+//! Word- and byte-traffic accounting for the hot-path kernels.
+//!
+//! The paper's figure of merit is avoided *column reads*; this
+//! simulator's equivalent cost is avoided **word traffic** — every
+//! `u64` limb of a row mask read or written by the per-column kernels,
+//! and every byte copied between in-memory buffers by the wire codec.
+//! This module holds the always-on counters the kernels feed
+//! ([`KernelCounters`]) and the closed-form models the counted numbers
+//! are pinned against, both here (unit tests) and by the
+//! `python/fleet_model.py` mirror in CI (see EXPERIMENTS.md §Hot-path
+//! word traffic). The models are exact, not estimates: the counters
+//! must land on them to the word, or the drift gate fails.
+//!
+//! ## Traversal model (per-column kernels only)
+//!
+//! With `W = ceil(n / 64)` mask words, the pre-fusion reference path
+//! costs, per column read:
+//!
+//! * judge (`column_read_judge`): read plane + read active = `2W`;
+//! * exclusion (`and_not_assign`, informative columns only): read
+//!   plane + read/write active = `3W`;
+//! * state recording (`copy_from`, recorded columns only): read active
+//!   + write snapshot = `2W`.
+//!
+//! Total: `W * (2*crs + 3*res + 2*srs)`. The fused
+//! `Bank::column_step` replaces all three with one pass — read plane +
+//! read active + write scratch = `3W` — per *executed* column, and the
+//! singleton fast path retires the rest arithmetically at zero words.
+//! Begin/emit traffic (snapshot reload, first-set scans) is identical
+//! on both paths and outside the counted scope.
+//!
+//! ## Wire model (SortJob → SortOk round trip, n elements, argsort)
+//!
+//! Bytes *copied between in-memory buffers*: payload building, frame
+//! assembly, receive-buffer zero-fill and decode copies — not the
+//! socket I/O itself, which both paths pay identically. The pre-fusion
+//! codec cost `344 + 64n` bytes per round trip; the reusable-scratch
+//! codec costs `136 + 32n` (each side writes the frame once and copies
+//! payload vectors once, at the consumer). See
+//! [`roundtrip_bytes_before`]/[`roundtrip_bytes_after`] for the
+//! term-by-term decomposition.
+
+/// Always-on counters for the hot-path kernels. Deliberately *not*
+/// part of [`crate::sorter::SortStats`]: stats are the paper's
+/// architectural counts, cross wire frames and are compared for
+/// byte-identity across paths; counters are implementation traffic and
+/// differ by design between the reference and fused kernels.
+#[derive(Copy, Clone, Debug, Default)]
+pub struct KernelCounters {
+    /// `u64` mask limbs read or written by the per-column kernels.
+    pub mask_words: u64,
+    /// Bytes copied between in-memory buffers by the wire codec.
+    pub bytes_copied: u64,
+    /// Buffer allocations on the counted paths.
+    pub allocs: u64,
+}
+
+impl KernelCounters {
+    /// Accumulate another counter set (used by bench aggregation).
+    pub fn add(&mut self, other: &KernelCounters) {
+        self.mask_words += other.mask_words;
+        self.bytes_copied += other.bytes_copied;
+        self.allocs += other.allocs;
+    }
+
+    /// Mask words scanned per element — the bench's headline figure.
+    pub fn words_per_element(&self, n: usize) -> f64 {
+        if n == 0 {
+            0.0
+        } else {
+            self.mask_words as f64 / n as f64
+        }
+    }
+}
+
+/// Row-mask words per full pass over `n` rows.
+pub fn mask_words(n: usize) -> u64 {
+    n.div_ceil(64) as u64
+}
+
+/// Traversal words of the pre-fusion reference path: `2W` judge per
+/// CR, `+3W` exclusion per RE, `+2W` snapshot copy per SR.
+pub fn reference_traversal_words(n: usize, crs: u64, res: u64, srs: u64) -> u64 {
+    mask_words(n) * (2 * crs + 3 * res + 2 * srs)
+}
+
+/// Traversal words of the fused kernel: `3W` per *executed* CR (read
+/// plane, read active, write scratch — exclusion and snapshot are
+/// pointer swaps); singleton-skipped CRs scan nothing.
+pub fn fused_traversal_words(n: usize, executed_crs: u64) -> u64 {
+    mask_words(n) * 3 * executed_crs
+}
+
+/// Bytes copied per SortJob → SortOk round trip by the pre-fusion
+/// codec (fresh buffers everywhere). Per direction: build the payload
+/// (`8+4n` job / `96+12n` response), assemble header + payload copy
+/// into the frame buffer (`24+4n` / `112+12n`), zero-fill the
+/// receiver's payload buffer (`8+4n` / `96+12n`), and copy the
+/// decoded vectors out (`4n` / `12n`).
+pub fn roundtrip_bytes_before(n: usize) -> u64 {
+    let n = n as u64;
+    let job = (8 + 4 * n) + (24 + 4 * n) + (8 + 4 * n) + 4 * n;
+    let ok = (96 + 12 * n) + (112 + 12 * n) + (96 + 12 * n) + 12 * n;
+    job + ok
+}
+
+/// Bytes copied per steady-state round trip by the reusable-scratch
+/// codec: `encode_frame_into` writes each frame once (`24+4n` job,
+/// `112+12n` response), receive scratch is reused (no zero-fill), and
+/// the borrowed views copy payload vectors once at the consumer
+/// (`4n` job data; `4n` sorted + `8n` order on the response).
+pub fn roundtrip_bytes_after(n: usize) -> u64 {
+    let n = n as u64;
+    let job = (24 + 4 * n) + 4 * n;
+    let ok = (112 + 12 * n) + 12 * n;
+    job + ok
+}
+
+// ---------------------------------------------------------------------
+// Wire-codec counters. Thread-local (not global atomics) so parallel
+// `cargo test` threads cannot race each other's measurements; each
+// bench/test reads its own session's traffic.
+// ---------------------------------------------------------------------
+
+use std::cell::Cell;
+
+thread_local! {
+    static WIRE_BYTES: Cell<u64> = const { Cell::new(0) };
+    static WIRE_ALLOCS: Cell<u64> = const { Cell::new(0) };
+}
+
+/// Record `bytes` copied between in-memory buffers on the wire path.
+#[inline]
+pub fn wire_count_copy(bytes: u64) {
+    WIRE_BYTES.with(|c| c.set(c.get() + bytes));
+}
+
+/// Record one buffer allocation on the wire path.
+#[inline]
+pub fn wire_count_alloc() {
+    WIRE_ALLOCS.with(|c| c.set(c.get() + 1));
+}
+
+/// This thread's accumulated wire traffic (mask words always zero).
+pub fn wire_counters() -> KernelCounters {
+    KernelCounters {
+        mask_words: 0,
+        bytes_copied: WIRE_BYTES.with(Cell::get),
+        allocs: WIRE_ALLOCS.with(Cell::get),
+    }
+}
+
+/// Reset this thread's wire counters (bench/test setup).
+pub fn wire_counters_reset() {
+    WIRE_BYTES.with(|c| c.set(0));
+    WIRE_ALLOCS.with(|c| c.set(0));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mask_words_rounds_up() {
+        assert_eq!(mask_words(0), 0);
+        assert_eq!(mask_words(1), 1);
+        assert_eq!(mask_words(64), 1);
+        assert_eq!(mask_words(65), 2);
+        assert_eq!(mask_words(1024), 16);
+    }
+
+    #[test]
+    fn fig3_traversal_is_exactly_two_x() {
+        // Paper Fig. 3 ({8,9,10}, w=4, k=2): 7 CRs, 2 REs, 2 SRs; the
+        // fused path executes 4 CRs (iterations 2 and 3 resume as
+        // singletons and skip all 3 of their CRs arithmetically).
+        let reference = reference_traversal_words(3, 7, 2, 2);
+        let fused = fused_traversal_words(3, 4);
+        assert_eq!(reference, 24);
+        assert_eq!(fused, 12);
+    }
+
+    #[test]
+    fn roundtrip_model_at_n1024_is_at_least_two_x() {
+        let before = roundtrip_bytes_before(1024);
+        let after = roundtrip_bytes_after(1024);
+        assert_eq!(before, 344 + 64 * 1024);
+        assert_eq!(after, 136 + 32 * 1024);
+        assert!(before as f64 / after as f64 >= 2.0);
+    }
+
+    #[test]
+    fn wire_counters_accumulate_and_reset() {
+        wire_counters_reset();
+        wire_count_copy(100);
+        wire_count_copy(28);
+        wire_count_alloc();
+        let c = wire_counters();
+        assert_eq!((c.bytes_copied, c.allocs, c.mask_words), (128, 1, 0));
+        wire_counters_reset();
+        assert_eq!(wire_counters().bytes_copied, 0);
+    }
+
+    #[test]
+    fn counters_add_and_per_element() {
+        let mut a = KernelCounters { mask_words: 48, bytes_copied: 10, allocs: 1 };
+        a.add(&KernelCounters { mask_words: 16, bytes_copied: 0, allocs: 2 });
+        assert_eq!((a.mask_words, a.bytes_copied, a.allocs), (64, 10, 3));
+        assert!((a.words_per_element(16) - 4.0).abs() < 1e-12);
+        assert_eq!(KernelCounters::default().words_per_element(0), 0.0);
+    }
+}
