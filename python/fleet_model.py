@@ -17,6 +17,10 @@ source), the closed forms and the event scheduler behind:
 * ``planner::shard_model`` + ``Plan::estimated_cycles_hetero``
   (completion-balanced streaming side) and its arrival-balanced legacy
   form,
+* ``schedule::spill_io_cycles`` / ``schedule::spill_completion`` (the
+  out-of-core spill tier's I/O surcharge — 12 B/elem over an
+  8 B/cycle device, 2·passes crossings — and the spilled completion it
+  prices into the budgeted auto-tuner),
 * ``traffic`` (the hot-path word-traffic accounting: mask words per
   column step for the reference vs fused colskip kernels, and bytes
   copied per SortJob→SortOk round trip for the owned vs reusable-buffer
@@ -130,6 +134,42 @@ def model_sharded_completion(chunks: int, length: int, arrival: int, shards: int
     base, extra = divmod(chunks, shards)
     deal = [(base + (1 if s < extra else 0), arrival) for s in range(shards)]
     return model_sharded_completion_hetero(length, deal, fanout)
+
+
+SPILL_BYTES_PER_ELEM = 12   # schedule::SPILL_BYTES_PER_ELEM (u32 value + u64 row)
+SPILL_BYTES_PER_CYC = 8     # schedule::SPILL_BYTES_PER_CYC (64-bit channel @500MHz)
+
+
+def spill_io_cycles(n: int, chunks: int, fanout: int) -> int:
+    """Mirror of ``schedule::spill_io_cycles``: extra device I/O cycles
+    the out-of-core merge pays over the resident merge. Every element
+    crosses the spill device ``2*passes`` times (write + read per merge
+    pass; ``2`` for the degenerate single-run case), at 12 B/elem over
+    an 8 B/cycle device, ceil-divided so the cost never rounds to 0."""
+    assert fanout >= 2
+    if n == 0:
+        return 0
+    passes, r = 0, chunks
+    while r > 1:
+        passes += 1
+        r = -(-r // fanout)
+    crossings = 2 * max(passes, 1)
+    return -(-(n * SPILL_BYTES_PER_ELEM * crossings) // SPILL_BYTES_PER_CYC)
+
+
+def model_spill_completion(chunks: int, length: int, arrival: int,
+                           fanout: int) -> int:
+    """Mirror of ``schedule::spill_completion`` (surfaced in Rust as
+    ``planner::model_spill_completion``): the resident uniform streamed
+    completion plus the spill I/O surcharge. Strictly above the
+    resident completion for any non-empty input, which is why the
+    budgeted auto-tuner picks spill only when the memory budget forces
+    it."""
+    if chunks == 0:
+        assert fanout >= 2
+        return 0
+    return (model_streamed_completion_uniform(chunks, length, arrival, fanout)
+            + spill_io_cycles(chunks * length, chunks, fanout))
 
 
 def apportion_chunks(chunks: int, weights) -> list:
@@ -792,6 +832,50 @@ def main():
         print(f"  C={c}: makespan {m:>7d} cycles, aggregate {agg:.3f} elem/cyc, "
               f"per-client {agg / c:.3f}")
     pin(concurrent_makespan(1, 3, 1024, 2, 7.84), 16_056, "makespan 3-job/2-worker")
+
+    print()
+    print("== EXPERIMENTS.md §Out-of-core spill (bank=1024, fanout=4, "
+          "arrival=8028) ==")
+    # Named CI step: the spill cost model behind the budgeted
+    # auto-tuner, pinned against schedule::spill_io_cycles /
+    # spill_completion (the Rust tests pin the same numbers). The
+    # surcharge is strictly positive, so spill is never the tuner's
+    # free choice — only the memory budget forces it; the crossover
+    # table below is what EXPERIMENTS.md reprints.
+    print("surcharge unit pins (schedule::spill_io_surcharge_matches_"
+          "the_experiments_table):")
+    pin(spill_io_cycles(1024, 1, 4), 3_072, "spill io 1chunk")
+    pin(spill_io_cycles(1, 1, 2), 3, "spill io single elem")
+    pin(spill_io_cycles(0, 0, 4), 0, "spill io empty")
+    pin(model_spill_completion(1, 1024, 8028, 4), 11_100,
+        "spill 1chunk completion")
+    pin(model_spill_completion(0, 1024, 8028, 4), 0, "spill empty completion")
+    print("  1 chunk of 1024: +3072 cycles (write + read back); "
+          "1 elem: +3; empty: 0")
+    print("spill-vs-resident crossover (resident footprint is 16 B/elem "
+          "of merge working set):")
+    rows = [
+        # chunks, resident completion, io surcharge, spilled completion
+        (1, 8_028, 3_072, 11_100),
+        (4, 12_124, 12_288, 24_412),
+        (16, 40_796, 98_304, 139_100),
+        (64, 204_636, 589_824, 794_460),
+        (977, 5_008_220, 15_006_720, 20_014_940),   # the 1M-element run
+    ]
+    for chunks, want_res, want_io, want_tot in rows:
+        res = pin(model_streamed_completion_uniform(chunks, 1024, 8028, 4),
+                  want_res, f"spill crossover resident c={chunks}")
+        io = pin(spill_io_cycles(chunks * 1024, chunks, 4), want_io,
+                 f"spill crossover io c={chunks}")
+        tot = pin(model_spill_completion(chunks, 1024, 8028, 4), want_tot,
+                  f"spill crossover total c={chunks}")
+        assert tot == res + io and tot > res, (chunks, res, io, tot)
+        footprint = chunks * 1024 * 16
+        print(f"  chunks={chunks:4d} (n={chunks * 1024:>8d}): resident "
+              f"{res:>10d} cyc ({footprint:>9d} B working set) -> spilled "
+              f"{tot:>10d} cyc (+{io} I/O, {tot / res:.2f}x)")
+    print("  tuner contract: spilled > resident at every size -> "
+          "auto_tune_budgeted spills only when the budget forces it")
 
     print()
     print("== EXPERIMENTS.md §Hot-path word traffic ==")

@@ -304,7 +304,10 @@ def run(
     sites = 0
     for idx in indexes:
         rel = idx.path.relative_to(root).as_posix()
-        if "coordinator" not in rel:
+        # The spill tier's run stores guard shared run maps the same way
+        # the coordinator guards its scoreboards — and their readers run
+        # on serving threads — so they are held to the same discipline.
+        if "coordinator" not in rel and rel != "rust/src/sorter/spill.rs":
             continue
         # locks.rs *is* the acquisition primitive: its helpers lock
         # generic parameters, which by construction have no place in a

@@ -39,13 +39,23 @@ SERVING_SCOPE: dict[str, set[str] | str] = {
     "rust/src/coordinator/transport.rs": "*",
     "rust/src/coordinator/frontend.rs": {
         "try_admit",
+        "try_admit_sized",
         "release",
         "saturated",
         "sort",
         "sort_batch",
+        "sort_hierarchical",
+        "hierarchical_admission_bytes",
         "admission",
         "fleet_metrics",
     },
+    # The spill tier: every run-store append/read, the run codec and the
+    # external merge run while a request is being served (and, on the
+    # fleet path, while shard collection holds the assembly) — a panic
+    # there loses the caller's sort and any spilled state with it. The
+    # whole module is serving scope; its error contract is typed
+    # `SpillError`s, never panics or silent resident fallback.
+    "rust/src/sorter/spill.rs": "*",
     # The wire decode path: a malformed or hostile frame must surface as
     # an Err, never a panic, because the reader that hits it is shared.
     # The borrowed-view layer (read_raw_into / decode_view / the *Le

@@ -60,6 +60,30 @@ def test_panic_rule_fires_on_a_serving_path_unwrap(tmp_path):
     assert inventory["total"] == 2 and inventory["serving"] == 1
 
 
+# -- rule family 2, spill scope: the whole spill tier is serving path --
+
+PANICKY_SPILL = """
+impl RunReader {
+    fn advance(&mut self) {
+        let block = self.blocks.pop().unwrap();
+    }
+}
+
+fn write_run(store: &dyn RunStore) {
+    let total = store.run_len(0).expect("run exists");
+}
+"""
+
+
+def test_panic_rule_covers_the_whole_spill_module(tmp_path):
+    write(tmp_path, "rust/src/sorter/spill.rs", PANICKY_SPILL)
+    findings, inventory = rules_panic.run(tmp_path, index_tree(tmp_path))
+    # "*" scope: every non-test fn in spill.rs is a serving path.
+    assert "advance:unwrap@0" in keys(findings)
+    assert "write_run:expect@0" in keys(findings)
+    assert inventory["serving"] == 2
+
+
 # -- rule family 3: an out-of-order nested lock pair -------------------
 
 LOCK_DESIGN = """# fixture
@@ -87,6 +111,53 @@ def test_lock_rule_fires_on_an_out_of_order_pair(tmp_path):
         tmp_path, index_tree(tmp_path), tmp_path / "rust/DESIGN.md"
     )
     assert "tangle:beta->alpha" in keys(findings)
+
+
+# -- rule family 3, spill scope: the run-store lock is in scope too ----
+
+SPILL_LOCK_DESIGN = """# fixture
+
+<!-- memlint:lock-order
+spill_runs
+-->
+"""
+
+GUARDED_SPILL_IO = """
+impl TempDirRunStore {
+    fn append(&self, bytes: &[u8]) {
+        let runs = self.spill_runs.lock().unwrap();
+        self.file.write_all(bytes);
+    }
+
+    fn rotate(&self) {
+        let g = self.undeclared_map.lock().unwrap();
+        drop(g);
+    }
+}
+"""
+
+
+def test_lock_rule_scans_the_spill_tier(tmp_path):
+    write(tmp_path, "rust/DESIGN.md", SPILL_LOCK_DESIGN)
+    write(tmp_path, "rust/src/sorter/spill.rs", GUARDED_SPILL_IO)
+    findings, summary = rules_locks.run(
+        tmp_path, index_tree(tmp_path), tmp_path / "rust/DESIGN.md"
+    )
+    # A run-map guard held across file I/O stalls every spilling sort.
+    assert "append:spill_runs->write_all" in keys(findings)
+    # And spill locks must be declared in the canonical order.
+    assert "undeclared:undeclared_map" in keys(findings)
+    assert summary["sites"] == 2
+
+
+def test_lock_rule_still_skips_non_coordinator_non_spill_files(tmp_path):
+    write(tmp_path, "rust/DESIGN.md", SPILL_LOCK_DESIGN)
+    write(tmp_path, "rust/src/sorter/merge.rs", GUARDED_SPILL_IO)
+    findings, summary = rules_locks.run(
+        tmp_path, index_tree(tmp_path), tmp_path / "rust/DESIGN.md"
+    )
+    assert findings == []
+    assert summary["sites"] == 0
 
 
 # -- rule family 1: a min-version stamp that drifted from the doc ------

@@ -46,9 +46,11 @@ use std::sync::Mutex;
 
 use anyhow::{anyhow, Result};
 
+use super::hierarchical::HierarchicalConfig;
 use super::locks::lock_recover;
-use super::shard::{FleetSnapshot, RetryBudgetConfig, ShardedSortService};
+use super::shard::{FleetSnapshot, RetryBudgetConfig, ShardedOutput, ShardedSortService};
 use super::SortResponse;
+use crate::sorter::spill::{resident_merge_bytes, spill_working_bytes};
 
 /// Request priority class. Two classes are deliberate: the admission
 /// contract is "who sheds first", and a total order over many levels
@@ -214,6 +216,12 @@ impl FrontendConfig {
 struct AdmitState {
     /// Admitted and not yet released, across all tenants.
     outstanding: usize,
+    /// Coordinator-memory bytes charged by admitted-and-unreleased
+    /// requests ([`Frontend::try_admit_sized`]). A spilling
+    /// hierarchical sort charges its bounded spill working set, not
+    /// its resident merge footprint — see
+    /// [`hierarchical_admission_bytes`].
+    outstanding_bytes: u64,
     /// Admitted and not yet released, per tenant. Entries are removed
     /// at zero so an idle tenant costs nothing.
     per_tenant: HashMap<String, usize>,
@@ -222,16 +230,37 @@ struct AdmitState {
 }
 
 /// An admitted request's slot. Dropping it releases the admission —
-/// decrements the scoreboard and deposits the overdraft refill — so
-/// release happens exactly once on every exit path.
+/// decrements the scoreboard (count and bytes) and deposits the
+/// overdraft refill — so release happens exactly once on every exit
+/// path.
 pub struct Permit<'a> {
     frontend: &'a Frontend,
     tenant: String,
+    /// Bytes charged at admission, returned on release.
+    bytes: u64,
 }
 
 impl Drop for Permit<'_> {
     fn drop(&mut self) {
-        self.frontend.release(&self.tenant);
+        self.frontend.release(&self.tenant, self.bytes);
+    }
+}
+
+/// The coordinator-memory bytes one hierarchical sort of `n` elements
+/// holds while it runs — the quantity admission accounts. A request
+/// the budget keeps resident holds the full merge working set
+/// ([`resident_merge_bytes`]); a request the budget forces to spill
+/// holds only the bounded reader/writer blocks of the external merge
+/// ([`spill_working_bytes`]), *not* the resident footprint — spilled
+/// bytes live in the run store, not in coordinator memory, and
+/// charging them as resident would let one over-budget sort falsely
+/// saturate the plane.
+pub fn hierarchical_admission_bytes(n: usize, cfg: &HierarchicalConfig) -> u64 {
+    let resident = resident_merge_bytes(n);
+    if cfg.budget.fits(resident) {
+        resident as u64
+    } else {
+        spill_working_bytes(cfg.fanout.max(2)) as u64
     }
 }
 
@@ -256,6 +285,10 @@ pub struct AdmissionSnapshot {
     pub coalesced_requests: u64,
     /// Currently admitted and unreleased.
     pub outstanding: usize,
+    /// Coordinator-memory bytes currently charged by admitted work
+    /// ([`hierarchical_admission_bytes`]: spill working set for
+    /// spilling sorts, resident merge footprint otherwise).
+    pub outstanding_bytes: u64,
     /// Current overdraft balance, in tokens.
     pub overdraft_tokens: f64,
 }
@@ -293,6 +326,7 @@ impl Frontend {
             coalesce_elems,
             state: Mutex::new(AdmitState {
                 outstanding: 0,
+                outstanding_bytes: 0,
                 per_tenant: HashMap::new(),
                 overdraft_tokens: cfg.overdraft.capacity,
             }),
@@ -342,6 +376,21 @@ impl Frontend {
     /// frontend is idle — then saturation, where `Batch` sheds
     /// outright and `Interactive` spends the overdraft while it lasts.
     pub fn try_admit(&self, tag: &JobTag) -> std::result::Result<Permit<'_>, AdmitError> {
+        self.try_admit_sized(tag, 0)
+    }
+
+    /// [`Frontend::try_admit`] with a coordinator-memory byte charge
+    /// riding the permit: the bytes are added to the scoreboard's
+    /// [`AdmissionSnapshot::outstanding_bytes`] on admission and
+    /// returned when the permit drops. The byte charge is accounting
+    /// (operator visibility of the plane's memory pressure), not a
+    /// shed signal — the count caps and the overdraft stay the
+    /// admission contract.
+    pub fn try_admit_sized(
+        &self,
+        tag: &JobTag,
+        bytes: u64,
+    ) -> std::result::Result<Permit<'_>, AdmitError> {
         let mut st = lock_recover(&self.state);
         let used = st.per_tenant.get(&tag.tenant).copied().unwrap_or(0);
         if used >= self.cfg.tenant_cap {
@@ -377,15 +426,17 @@ impl Frontend {
             }
         }
         st.outstanding += 1;
+        st.outstanding_bytes = st.outstanding_bytes.saturating_add(bytes);
         *st.per_tenant.entry(tag.tenant.clone()).or_insert(0) += 1;
         self.admitted.fetch_add(1, Ordering::Relaxed);
-        Ok(Permit { frontend: self, tenant: tag.tenant.clone() })
+        Ok(Permit { frontend: self, tenant: tag.tenant.clone(), bytes })
     }
 
     /// Release one admission (the [`Permit`] drop path).
-    fn release(&self, tenant: &str) {
+    fn release(&self, tenant: &str, bytes: u64) {
         let mut st = lock_recover(&self.state);
         st.outstanding = st.outstanding.saturating_sub(1);
+        st.outstanding_bytes = st.outstanding_bytes.saturating_sub(bytes);
         if let Some(n) = st.per_tenant.get_mut(tenant) {
             *n = n.saturating_sub(1);
             if *n == 0 {
@@ -404,6 +455,25 @@ impl Frontend {
     pub fn sort(&self, tag: &JobTag, data: Vec<u32>) -> Result<SortResponse> {
         let _permit = self.try_admit(tag).map_err(anyhow::Error::new)?;
         self.fleet.submit_wait_tagged(tag, data)
+    }
+
+    /// Admit and run one hierarchical (out-of-bank) sort through the
+    /// fleet, charging the admission scoreboard the bytes the request
+    /// actually holds on this coordinator
+    /// ([`hierarchical_admission_bytes`]): the resident merge working
+    /// set when the [`HierarchicalConfig::budget`] keeps it in memory,
+    /// the bounded spill working set when the budget forces the
+    /// external merge — spilled bytes, not resident bytes. The charge
+    /// releases with the permit on every exit path.
+    pub fn sort_hierarchical(
+        &self,
+        tag: &JobTag,
+        data: &[u32],
+        cfg: &HierarchicalConfig,
+    ) -> Result<ShardedOutput> {
+        let bytes = hierarchical_admission_bytes(data.len(), cfg);
+        let _permit = self.try_admit_sized(tag, bytes).map_err(anyhow::Error::new)?;
+        self.fleet.sort_hierarchical(data, cfg)
     }
 
     /// Admit and sort a batch of requests, coalescing small same-class
@@ -577,6 +647,7 @@ impl Frontend {
             coalesced_batches: self.coalesced_batches.load(Ordering::Relaxed),
             coalesced_requests: self.coalesced_requests.load(Ordering::Relaxed),
             outstanding: st.outstanding,
+            outstanding_bytes: st.outstanding_bytes,
             overdraft_tokens: st.overdraft_tokens,
         }
     }
@@ -672,6 +743,66 @@ mod tests {
         .unwrap();
         let bad = FrontendConfig { max_outstanding: 0, ..Default::default() };
         assert!(Frontend::new(fleet, bad).is_err());
+    }
+
+    #[test]
+    fn sized_admission_charges_and_releases_bytes() {
+        let fe = frontend(FrontendConfig::default());
+        let t = tag("acme", Priority::Batch);
+        {
+            let _a = fe.try_admit_sized(&t, 4096).unwrap();
+            assert_eq!(fe.admission().outstanding_bytes, 4096);
+            let _b = fe.try_admit_sized(&t, 1000).unwrap();
+            assert_eq!(fe.admission().outstanding_bytes, 5096);
+            // Plain admission charges nothing.
+            let _c = fe.try_admit(&t).unwrap();
+            assert_eq!(fe.admission().outstanding_bytes, 5096);
+        }
+        let adm = fe.admission();
+        assert_eq!((adm.outstanding, adm.outstanding_bytes), (0, 0));
+        fe.shutdown();
+    }
+
+    #[test]
+    fn hierarchical_admission_accounts_spill_not_resident_bytes() {
+        use crate::sorter::spill::{resident_merge_bytes, spill_working_bytes, MemoryBudget};
+        let n = 100_000;
+        let resident = HierarchicalConfig::fixed(256, 4);
+        assert_eq!(hierarchical_admission_bytes(n, &resident), resident_merge_bytes(n) as u64);
+        // A budget at exactly the resident footprint stays resident.
+        let exact = resident.clone().with_budget(MemoryBudget::Bytes(resident_merge_bytes(n)));
+        assert_eq!(hierarchical_admission_bytes(n, &exact), resident_merge_bytes(n) as u64);
+        // One byte under: the sort spills, and admission charges the
+        // bounded working set of the external merge, not the resident
+        // footprint it no longer holds.
+        let spilling =
+            resident.clone().with_budget(MemoryBudget::Bytes(resident_merge_bytes(n) - 1));
+        let charged = hierarchical_admission_bytes(n, &spilling);
+        assert_eq!(charged, spill_working_bytes(4) as u64);
+        assert!(charged < resident_merge_bytes(n) as u64);
+    }
+
+    #[test]
+    fn hierarchical_sorts_through_admission_and_releases() {
+        use crate::sorter::spill::MemoryBudget;
+        let fe = frontend(FrontendConfig::default());
+        let data: Vec<u32> = (0..2000u32).rev().collect();
+        let mut want = data.clone();
+        want.sort_unstable();
+        let resident = fe
+            .sort_hierarchical(&tag("acme", Priority::Batch), &data, &HierarchicalConfig::fixed(128, 4))
+            .unwrap();
+        assert_eq!(resident.hier.output.sorted, want);
+        assert!(!resident.hier.spilled);
+        let cfg = HierarchicalConfig::fixed(128, 4).with_budget(MemoryBudget::Bytes(4 << 10));
+        let spilled = fe.sort_hierarchical(&tag("acme", Priority::Batch), &data, &cfg).unwrap();
+        assert_eq!(spilled.hier.output.sorted, want);
+        assert!(spilled.hier.spilled);
+        assert!(spilled.hier.spilled_bytes > 0);
+        let adm = fe.admission();
+        assert_eq!(adm.admitted, 2);
+        assert_eq!((adm.outstanding, adm.outstanding_bytes), (0, 0), "permits released");
+        fe.shutdown();
     }
 
     #[test]

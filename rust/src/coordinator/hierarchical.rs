@@ -51,10 +51,13 @@ use std::ops::Range;
 
 use anyhow::{anyhow, Result};
 
-use super::planner::{auto_tune, partition};
+use super::planner::{auto_tune_budgeted, partition, schedule};
 use super::{ServiceConfig, SortResponse, SortService};
 use crate::cost::{Activity, CostModel, SorterArch};
 use crate::sorter::merge::{merge_runs, model_streamed_completion, StreamingMerge};
+use crate::sorter::spill::{
+    resident_merge_bytes, spill_merge, write_run, MemoryBudget, RunStore, TempDirRunStore,
+};
 use crate::sorter::{SortOutput, SortStats};
 
 /// How the partitioner picks the bank capacity (rows per chunk).
@@ -90,23 +93,53 @@ pub struct HierarchicalConfig {
     /// output; they differ in the latency model and in when the host
     /// does the merge work.
     pub streaming: bool,
+    /// Byte budget for the merge working set. When the resident
+    /// footprint ([`resident_merge_bytes`]) exceeds it, chunk runs
+    /// spill to a temp-dir [`RunStore`] and the merge runs out of core
+    /// — byte-identical output (values, argsort, stats; pinned by
+    /// `tests/spill.rs`), with the spill I/O priced into
+    /// `latency_cycles`. Defaults to [`MemoryBudget::Unbounded`]: never
+    /// spill.
+    pub budget: MemoryBudget,
 }
 
 impl HierarchicalConfig {
     /// Streaming pipeline at a fixed bank capacity.
     pub fn fixed(capacity: usize, fanout: usize) -> Self {
-        HierarchicalConfig { capacity: Capacity::Fixed(capacity), fanout, streaming: true }
+        HierarchicalConfig {
+            capacity: Capacity::Fixed(capacity),
+            fanout,
+            streaming: true,
+            budget: MemoryBudget::Unbounded,
+        }
     }
 
     /// The PR-1 barrier pipeline at a fixed bank capacity: collect all
     /// chunk responses, then merge.
     pub fn barrier(capacity: usize, fanout: usize) -> Self {
-        HierarchicalConfig { capacity: Capacity::Fixed(capacity), fanout, streaming: false }
+        HierarchicalConfig {
+            capacity: Capacity::Fixed(capacity),
+            fanout,
+            streaming: false,
+            budget: MemoryBudget::Unbounded,
+        }
     }
 
     /// Streaming pipeline with auto-tuned chunking.
     pub fn auto() -> Self {
-        HierarchicalConfig { capacity: Capacity::Auto, fanout: 4, streaming: true }
+        HierarchicalConfig {
+            capacity: Capacity::Auto,
+            fanout: 4,
+            streaming: true,
+            budget: MemoryBudget::Unbounded,
+        }
+    }
+
+    /// Same config under a [`MemoryBudget`] (builder style, used by the
+    /// CLI's `--memory-budget` flag and the spill tests).
+    pub fn with_budget(mut self, budget: MemoryBudget) -> Self {
+        self.budget = budget;
+        self
     }
 }
 
@@ -143,8 +176,18 @@ pub struct HierarchicalOutput {
     pub merge: MergeMetrics,
     /// Whether this sort ran the streaming pipeline.
     pub streaming: bool,
+    /// Whether the merge ran out of core (chunk runs spilled to a
+    /// [`RunStore`] under the config's [`MemoryBudget`]).
+    pub spilled: bool,
+    /// Total bytes written to the spill store (header + block framing
+    /// included, intermediate merge passes too); 0 when resident. This
+    /// — not the resident working set — is what frontend admission
+    /// accounts for a spilled sort.
+    pub spilled_bytes: u64,
     /// Critical-path latency of the mode that ran: the streamed
-    /// completion under streaming, `max_chunk + merge` under barrier.
+    /// completion under streaming, `max_chunk + merge` under barrier —
+    /// plus the modelled spill I/O surcharge
+    /// ([`schedule::spill_io_cycles`]) when the sort spilled.
     pub latency_cycles: u64,
     /// Barrier-model latency (`max_chunk_cycles + merge.cycles`),
     /// reported in both modes for comparison.
@@ -216,12 +259,16 @@ impl HierarchicalOutput {
 /// same whether it crossed a thread boundary or the
 /// [`super::wire`] protocol — pinned by the remote-vs-local
 /// integration sweep).
-pub(crate) struct ChunkAssembly {
+pub(crate) struct ChunkAssembly<'s> {
     spans: Vec<Range<usize>>,
     streaming: bool,
     fanout: usize,
     frontier: StreamingMerge<(u32, usize)>,
     parked: Vec<Vec<(u32, usize)>>,
+    /// Out-of-core mode: absorbed runs are written to this store (run
+    /// id = chunk index) instead of the frontier/park, and `finish`
+    /// merges them externally ([`spill_merge`]).
+    spill: Option<&'s dyn RunStore>,
     chunk_stats: Vec<SortStats>,
     total: SortStats,
     max_chunk_cycles: u64,
@@ -229,8 +276,29 @@ pub(crate) struct ChunkAssembly {
     arrivals: Vec<(u64, usize)>,
 }
 
-impl ChunkAssembly {
+impl<'s> ChunkAssembly<'s> {
     pub(crate) fn new(spans: Vec<Range<usize>>, fanout: usize, streaming: bool) -> Self {
+        Self::build(spans, fanout, streaming, None)
+    }
+
+    /// Out-of-core assembly: every absorbed run spills to `store`, the
+    /// merge runs externally. Output stays byte-identical to [`new`]'s
+    /// resident pipeline (`Self::new`).
+    pub(crate) fn new_spilling(
+        spans: Vec<Range<usize>>,
+        fanout: usize,
+        streaming: bool,
+        store: &'s dyn RunStore,
+    ) -> Self {
+        Self::build(spans, fanout, streaming, Some(store))
+    }
+
+    fn build(
+        spans: Vec<Range<usize>>,
+        fanout: usize,
+        streaming: bool,
+        spill: Option<&'s dyn RunStore>,
+    ) -> Self {
         let chunks = spans.len();
         ChunkAssembly {
             spans,
@@ -244,9 +312,14 @@ impl ChunkAssembly {
             // parks every run and merges after all of them. The
             // *modelled* latency is unaffected either way: it is
             // computed from the recorded per-chunk arrival cycles, not
-            // from host timing.
-            frontier: StreamingMerge::new(if streaming { chunks } else { 0 }, fanout),
+            // from host timing. Spill mode bypasses the frontier
+            // entirely (runs go to the store), so it gets an empty one.
+            frontier: StreamingMerge::new(
+                if streaming && spill.is_none() { chunks } else { 0 },
+                fanout,
+            ),
             parked: Vec::new(),
+            spill,
             chunk_stats: Vec::with_capacity(chunks),
             total: SortStats::default(),
             max_chunk_cycles: 0,
@@ -288,7 +361,13 @@ impl ChunkAssembly {
             self.have_order = false;
             resp.sorted.iter().map(|&v| (v, 0)).collect()
         };
-        if self.streaming {
+        if let Some(store) = self.spill {
+            // Out of core: the run leaves memory now; the budget's
+            // whole point is that at most one chunk run is resident at
+            // a time on this path. Any store failure propagates — never
+            // a silent fall-back to the resident merge.
+            write_run(store, i, &run)?;
+        } else if self.streaming {
             self.frontier.push(i, run, resp.stats.cycles());
         } else {
             self.parked.push(run);
@@ -298,14 +377,21 @@ impl ChunkAssembly {
 
     /// Close the pipeline: run (or finish) the merge stage and assemble
     /// the output, costing the ensemble with `svc`'s engine geometry.
-    pub(crate) fn finish(self, svc: &ServiceConfig, capacity: usize) -> HierarchicalOutput {
+    /// Errors only on the spill path (store I/O / decode faults) —
+    /// resident merges are infallible.
+    pub(crate) fn finish(self, svc: &ServiceConfig, capacity: usize) -> Result<HierarchicalOutput> {
         let n = self.spans.last().map_or(0, |s| s.end);
         let chunks = self.spans.len();
         debug_assert_eq!(self.chunk_stats.len(), chunks, "every chunk must be absorbed");
-        // Merge-stage result: identical output either way (same tree,
-        // same tie-breaking); only the schedule differs.
+        // Merge-stage result: identical output in all three modes (the
+        // external merge ports the loser tree and pass grouping
+        // verbatim — see `spill.rs`); only the schedule differs.
         let (merged, comparisons, passes, merge_cycles, streamed_latency_cycles) =
-            if self.streaming {
+            if let Some(store) = self.spill {
+                let m = spill_merge(store, chunks, self.fanout)?;
+                let streamed = model_streamed_completion(&self.arrivals, self.fanout);
+                (m.merged, m.comparisons, m.passes, m.cycles, streamed)
+            } else if self.streaming {
                 let s = self.frontier.finish();
                 (s.merged, s.comparisons, s.passes, s.cycles, s.completion_cycles)
             } else {
@@ -321,8 +407,16 @@ impl ChunkAssembly {
         let barrier_latency_cycles = self.max_chunk_cycles + merge_cycles;
         debug_assert!(streamed_latency_cycles <= barrier_latency_cycles);
         debug_assert!(streamed_latency_cycles >= self.max_chunk_cycles);
-        let latency_cycles =
-            if self.streaming { streamed_latency_cycles } else { barrier_latency_cycles };
+        // The barrier/streamed fields stay pure in-memory models (so
+        // spill-vs-resident comparisons read them directly); the
+        // critical path of a spilled sort adds the device crossings.
+        let spill_io_cycles = if self.spill.is_some() {
+            schedule::spill_io_cycles(n, chunks, self.fanout)
+        } else {
+            0
+        };
+        let latency_cycles = spill_io_cycles
+            + if self.streaming { streamed_latency_cycles } else { barrier_latency_cycles };
         let metrics =
             MergeMetrics { comparisons, passes, cycles: merge_cycles, fanout: self.fanout };
 
@@ -343,19 +437,21 @@ impl ChunkAssembly {
             Activity::nominal_colskip()
         };
 
-        HierarchicalOutput {
+        Ok(HierarchicalOutput {
             output: SortOutput { sorted, order, stats: self.total, counters: Default::default() },
             chunk_stats: self.chunk_stats,
             capacity,
             merge: metrics,
             streaming: self.streaming,
+            spilled: self.spill.is_some(),
+            spilled_bytes: self.spill.map_or(0, |s| s.spilled_bytes()),
             latency_cycles,
             barrier_latency_cycles,
             streamed_latency_cycles,
             max_chunk_cycles: self.max_chunk_cycles,
             area_kum2: model.area_kum2(arch),
             power_mw: model.power_mw(arch, act),
-        }
+        })
     }
 
     /// The recorded `(arrival_cycles, len)` leaves, in chunk order —
@@ -382,11 +478,57 @@ impl SortService {
             return Err(anyhow!("merge fanout must be at least 2, got {}", cfg.fanout));
         }
         let n = data.len();
-        let (capacity, fanout) = self.resolve_chunking(n, cfg);
+        let (capacity, fanout, spilling) = self.resolve_chunking_budgeted(n, cfg);
         if capacity < 1 {
             return Err(anyhow!("bank capacity must be positive"));
         }
-        let mut asm = ChunkAssembly::new(partition(n, capacity), fanout, cfg.streaming);
+        let store = if spilling { Some(TempDirRunStore::new()?) } else { None };
+        self.run_hierarchical(
+            data,
+            cfg.streaming,
+            capacity,
+            fanout,
+            store.as_ref().map(|s| s as &dyn RunStore),
+        )
+    }
+
+    /// [`Self::sort_hierarchical`] forced through the given spill
+    /// store, regardless of the budget — the deterministic, disk-free
+    /// test entry (an in-memory [`crate::sorter::spill::MemoryRunStore`]
+    /// makes the whole spill path reproducible and fault-injectable).
+    pub fn sort_hierarchical_with_store(
+        &self,
+        data: &[u32],
+        cfg: &HierarchicalConfig,
+        store: &dyn RunStore,
+    ) -> Result<HierarchicalOutput> {
+        if cfg.fanout < 2 {
+            return Err(anyhow!("merge fanout must be at least 2, got {}", cfg.fanout));
+        }
+        let n = data.len();
+        let (capacity, fanout, _) = self.resolve_chunking_budgeted(n, cfg);
+        if capacity < 1 {
+            return Err(anyhow!("bank capacity must be positive"));
+        }
+        self.run_hierarchical(data, cfg.streaming, capacity, fanout, Some(store))
+    }
+
+    /// The shared pipeline body: fan out, absorb, finish. `store` picks
+    /// resident vs out-of-core assembly.
+    fn run_hierarchical(
+        &self,
+        data: &[u32],
+        streaming: bool,
+        capacity: usize,
+        fanout: usize,
+        store: Option<&dyn RunStore>,
+    ) -> Result<HierarchicalOutput> {
+        let n = data.len();
+        let spans = partition(n, capacity);
+        let mut asm = match store {
+            Some(s) => ChunkAssembly::new_spilling(spans, fanout, streaming, s),
+            None => ChunkAssembly::new(spans, fanout, streaming),
+        };
         let chunks = asm.spans().len();
 
         // Fan the chunks out to the worker pool (parallel banks).
@@ -402,7 +544,7 @@ impl SortService {
             asm.absorb(i, &resp)?;
         }
 
-        let out = asm.finish(self.config(), capacity);
+        let out = asm.finish(self.config(), capacity)?;
         self.metrics.record_hierarchical(n, chunks, out.merge.cycles, out.merge.comparisons);
         Ok(out)
     }
@@ -410,13 +552,29 @@ impl SortService {
     /// Resolve the `(bank capacity, merge fanout)` a hierarchical sort
     /// will use: fixed from the config, or auto-tuned over the service
     /// geometry with the per-size-class cycles/number observed on
-    /// served traffic ([`super::planner::auto_tune`]).
+    /// served traffic ([`super::planner::auto_tune`]). Ignores the
+    /// spill decision — [`Self::resolve_chunking_budgeted`] adds it.
     pub fn resolve_chunking(&self, n: usize, cfg: &HierarchicalConfig) -> (usize, usize) {
+        let (capacity, fanout, _) = self.resolve_chunking_budgeted(n, cfg);
+        (capacity, fanout)
+    }
+
+    /// [`Self::resolve_chunking`] plus the spill decision: `(capacity,
+    /// fanout, spill)`. One rule everywhere — spill iff the resident
+    /// merge working set exceeds `cfg.budget` — and under
+    /// [`Capacity::Auto`] the tuner re-scores candidates with the spill
+    /// I/O surcharge ([`auto_tune_budgeted`]), since the surcharge
+    /// shifts the bank/fanout trade-off.
+    pub fn resolve_chunking_budgeted(
+        &self,
+        n: usize,
+        cfg: &HierarchicalConfig,
+    ) -> (usize, usize, bool) {
         match cfg.capacity {
-            Capacity::Fixed(c) => (c, cfg.fanout),
+            Capacity::Fixed(c) => (c, cfg.fanout, !cfg.budget.fits(resident_merge_bytes(n))),
             Capacity::Auto => {
                 let snap = self.metrics.snapshot();
-                auto_tune(n, &self.config().geometry, cfg.streaming, |bank| {
+                auto_tune_budgeted(n, &self.config().geometry, cfg.streaming, cfg.budget, |bank| {
                     snap.cyc_per_num_for(bank, crate::params::NOMINAL_COLSKIP_CYC_PER_NUM)
                 })
             }
@@ -625,7 +783,12 @@ mod tests {
         let n = 3000usize;
         let d = Dataset::generate32(DatasetKind::MapReduce, n, 9);
         for streaming in [true, false] {
-            let cfg = HierarchicalConfig { capacity: Capacity::Auto, fanout: 4, streaming };
+            let cfg = HierarchicalConfig {
+                capacity: Capacity::Auto,
+                fanout: 4,
+                streaming,
+                budget: MemoryBudget::Unbounded,
+            };
             // A fresh service has served no traffic, so the tuner runs
             // on the nominal cycles/number — fully deterministic.
             let fresh = service(2);
@@ -683,7 +846,12 @@ mod tests {
             (observed - crate::params::NOMINAL_COLSKIP_CYC_PER_NUM).abs() > 1.0,
             "{observed}"
         );
-        let cfg = HierarchicalConfig { capacity: Capacity::Auto, fanout: 4, streaming: true };
+        let cfg = HierarchicalConfig {
+            capacity: Capacity::Auto,
+            fanout: 4,
+            streaming: true,
+            budget: MemoryBudget::Unbounded,
+        };
         let (bank, fanout) = svc.resolve_chunking(3000, &cfg);
         let expect = crate::coordinator::planner::auto_tune(
             3000,
@@ -692,6 +860,53 @@ mod tests {
             |b| snap.cyc_per_num_for(b, crate::params::NOMINAL_COLSKIP_CYC_PER_NUM),
         );
         assert_eq!((bank, fanout), expect);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn bounded_budget_spills_with_identical_output() {
+        // A 5000-element sort needs 80 kB of resident merge working
+        // set; a 4 KiB budget forces it out of core. Output must be
+        // byte-identical to the unbounded run, with the spill visible
+        // in the flags, the accounted bytes and the latency surcharge.
+        // (The full DatasetKind × budget × fanout sweep lives in
+        // tests/spill.rs.)
+        let svc = service(2);
+        let d = Dataset::generate32(DatasetKind::MapReduce, 5000, 17);
+        let resident =
+            svc.sort_hierarchical(&d.values, &HierarchicalConfig::fixed(256, 4)).unwrap();
+        let spilled = svc
+            .sort_hierarchical(
+                &d.values,
+                &HierarchicalConfig::fixed(256, 4).with_budget(MemoryBudget::Bytes(4 << 10)),
+            )
+            .unwrap();
+        assert!(!resident.spilled && spilled.spilled);
+        assert_eq!(resident.spilled_bytes, 0);
+        assert!(spilled.spilled_bytes > 0);
+        assert_eq!(spilled.output.sorted, resident.output.sorted);
+        assert_eq!(spilled.output.order, resident.output.order);
+        assert_eq!(spilled.output.stats, resident.output.stats);
+        assert_eq!(spilled.chunk_stats, resident.chunk_stats);
+        assert_eq!(spilled.merge.comparisons, resident.merge.comparisons);
+        assert_eq!(spilled.merge.passes, resident.merge.passes);
+        assert_eq!(spilled.merge.cycles, resident.merge.cycles);
+        // The resident latency models agree; only the critical path
+        // carries the I/O surcharge.
+        assert_eq!(spilled.streamed_latency_cycles, resident.streamed_latency_cycles);
+        assert_eq!(spilled.barrier_latency_cycles, resident.barrier_latency_cycles);
+        assert!(spilled.latency_cycles > resident.latency_cycles);
+        // A budget the working set fits must stay resident.
+        let roomy = svc
+            .sort_hierarchical(
+                &d.values,
+                &HierarchicalConfig::fixed(256, 4)
+                    .with_budget(MemoryBudget::Bytes(crate::sorter::spill::resident_merge_bytes(
+                        5000,
+                    ))),
+            )
+            .unwrap();
+        assert!(!roomy.spilled);
         svc.shutdown();
     }
 

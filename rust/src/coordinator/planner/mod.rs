@@ -32,6 +32,7 @@ use crate::sorter::merge::{
     apportion_chunks, merge_sorted_runs, model_merge_cycles, model_sharded_completion,
     model_streamed_completion_uniform,
 };
+use crate::sorter::spill::{resident_merge_bytes, MemoryBudget};
 use crate::sorter::{InMemorySorter, SortStats};
 
 use schedule::FleetSchedule;
@@ -141,6 +142,29 @@ impl Plan {
                 model_streamed_completion_uniform(chunks, bank, arrival, fanout) as f64
             }
         }
+    }
+
+    /// Estimated latency of this plan executed *out of core*: the
+    /// resident score (overlap or barrier per `streaming`) plus the
+    /// spill I/O surcharge ([`schedule::spill_io_cycles`]) for pushing
+    /// the padded stream through the spill device on every merge pass.
+    /// A pad has one run (write + read-back, no merge passes). Always
+    /// exceeds the resident score, so the budgeted tuner
+    /// ([`auto_tune_budgeted`]) selects spill only when the memory
+    /// budget forces it — never on merit.
+    pub fn estimated_cycles_spill(&self, cyc_per_num: f64, streaming: bool) -> f64 {
+        let resident = if streaming {
+            self.estimated_cycles_overlap(cyc_per_num)
+        } else {
+            self.estimated_cycles(cyc_per_num)
+        };
+        let io = match *self {
+            Plan::Pad { bank, .. } => schedule::spill_io_cycles(bank, 1, 2),
+            Plan::ChunkMerge { bank, chunks, fanout, .. } => {
+                schedule::spill_io_cycles(bank * chunks, chunks, fanout)
+            }
+        };
+        resident + io as f64
     }
 
     /// Estimated latency on an `shards`-host fleet under the streaming
@@ -417,6 +441,65 @@ pub fn auto_tune_sharded(
     }
     let (bank, fanout, _) = best.expect("geometry has banks");
     (bank, fanout)
+}
+
+/// Streamed completion of the *spilled* uniform merge — the planner's
+/// public face of [`schedule::spill_completion`]: the resident uniform
+/// closed form plus the serialize/deserialize surcharge of pushing
+/// every run through the spill device on each pass. Mirrored with hard
+/// pins by `fleet_model.model_spill_completion` (the EXPERIMENTS
+/// §Out-of-core spill crossover table).
+pub fn model_spill_completion(chunks: usize, bank: usize, arrival: u64, fanout: usize) -> u64 {
+    schedule::spill_completion(chunks, bank, arrival, fanout)
+}
+
+/// [`auto_tune`] under a [`MemoryBudget`]: returns `(bank, fanout,
+/// spill)`. The spill decision is the one rule used everywhere — spill
+/// iff the resident merge working set ([`resident_merge_bytes`])
+/// exceeds the budget — and is *not* part of the enumeration: spill
+/// always costs extra I/O ([`Plan::estimated_cycles_spill`] > the
+/// resident score), so enumerating it would never pick it and a
+/// bounded budget must force it instead. Within the forced-spill
+/// regime the usual `(bank, fanout)` enumeration re-runs against the
+/// spilled scores, because the surcharge shifts the trade-off (higher
+/// fanout ⇒ fewer passes ⇒ fewer device crossings).
+pub fn auto_tune_budgeted(
+    n: usize,
+    geo: &Geometry,
+    streaming: bool,
+    budget: MemoryBudget,
+    mut cyc_for: impl FnMut(usize) -> f64,
+) -> (usize, usize, bool) {
+    if budget.fits(resident_merge_bytes(n)) {
+        let (bank, fanout) = auto_tune(n, geo, streaming, cyc_for);
+        return (bank, fanout, false);
+    }
+    // Forced spill: same candidate set, iteration order and tie-breaks
+    // as auto_tune, scored with the spill surcharge.
+    let fallback_fanout = geo.merge_fanout.max(2);
+    let mut fanouts: Vec<usize> = FANOUT_CANDIDATES.to_vec();
+    if !fanouts.contains(&fallback_fanout) {
+        fanouts.push(fallback_fanout);
+    }
+    let mut best: Option<(usize, usize, f64)> = None;
+    for &bank in geo.bank_sizes.iter().rev() {
+        let cyc = cyc_for(bank);
+        assert!(
+            cyc.is_finite() && cyc >= 0.0,
+            "cyc_for({bank}) must be finite and non-negative, got {cyc}"
+        );
+        for &fanout in &fanouts {
+            let cost = candidate(n, bank, fanout).estimated_cycles_spill(cyc, streaming);
+            if best.is_none_or(|(.., c)| cost < c) {
+                best = Some((bank, fanout, cost));
+            }
+            if bank >= n {
+                break; // a pad has no merge stage: fanout is irrelevant
+            }
+        }
+    }
+    let (bank, fanout, _) = best.expect("geometry has banks");
+    (bank, fanout, true)
 }
 
 /// [`auto_tune_sharded`] for a *heterogeneous* fleet: one [`Geometry`]
@@ -857,6 +940,93 @@ mod tests {
         assert_eq!(
             auto_tune_sharded(3000, &geo, 1, true, |_| 7.84),
             auto_tune(3000, &geo, true, |_| 7.84)
+        );
+    }
+
+    #[test]
+    fn budgeted_tuner_spills_only_when_the_budget_is_exceeded() {
+        // The acceptance criterion: auto_tune selects spill only when
+        // the modelled budget is exceeded. The working set is 16 B per
+        // element, so the threshold is exact.
+        let geo = Geometry::default();
+        let n = 3000usize;
+        let threshold = resident_merge_bytes(n); // 48_000
+        assert_eq!(threshold, 48_000);
+        for streaming in [true, false] {
+            // Unbounded and at-threshold budgets stay resident and pick
+            // exactly what auto_tune picks.
+            for budget in [MemoryBudget::Unbounded, MemoryBudget::Bytes(threshold)] {
+                let (bank, fanout, spill) = auto_tune_budgeted(n, &geo, streaming, budget, |_| 7.84);
+                assert!(!spill, "budget {budget} fits: must not spill");
+                assert_eq!((bank, fanout), auto_tune(n, &geo, streaming, |_| 7.84));
+            }
+            // One byte under the working set forces spill.
+            let (.., spill) = auto_tune_budgeted(
+                n,
+                &geo,
+                streaming,
+                MemoryBudget::Bytes(threshold - 1),
+                |_| 7.84,
+            );
+            assert!(spill, "budget below the working set must spill");
+        }
+    }
+
+    #[test]
+    fn budgeted_tuner_matches_brute_force_under_spill() {
+        let geo = Geometry::default();
+        for streaming in [true, false] {
+            for n in [1025usize, 3000, 50_000] {
+                let (bank, fanout, spill) =
+                    auto_tune_budgeted(n, &geo, streaming, MemoryBudget::Bytes(64 << 10), |_| 7.84);
+                if !spill {
+                    assert!(resident_merge_bytes(n) <= 64 << 10);
+                    continue;
+                }
+                let picked = candidate(n, bank, fanout).estimated_cycles_spill(7.84, streaming);
+                for &b in &geo.bank_sizes {
+                    for f in FANOUT_CANDIDATES {
+                        assert!(
+                            picked <= candidate(n, b, f).estimated_cycles_spill(7.84, streaming),
+                            "n={n} streaming={streaming}: ({bank},{fanout}) lost to ({b},{f})"
+                        );
+                    }
+                }
+            }
+        }
+        // Degenerate n: resident (an empty working set fits any budget).
+        let (bank, fanout, spill) =
+            auto_tune_budgeted(0, &geo, true, MemoryBudget::Bytes(0), |_| 7.84);
+        assert_eq!((bank, fanout, spill), (1024, 4, false));
+    }
+
+    #[test]
+    fn spill_scoring_always_exceeds_resident_scoring() {
+        // Spill is never selected on merit: its score strictly exceeds
+        // the matching resident score for every candidate shape.
+        for n in [10usize, 1025, 3000, 50_000] {
+            for bank in [16usize, 256, 1024] {
+                for fanout in [2usize, 4, 16] {
+                    let c = candidate(n, bank, fanout);
+                    for streaming in [true, false] {
+                        let resident = if streaming {
+                            c.estimated_cycles_overlap(7.84)
+                        } else {
+                            c.estimated_cycles(7.84)
+                        };
+                        assert!(
+                            c.estimated_cycles_spill(7.84, streaming) > resident,
+                            "n={n} bank={bank} fanout={fanout} streaming={streaming}"
+                        );
+                    }
+                }
+            }
+        }
+        // The wrapper is the schedule-layer model, verbatim.
+        assert_eq!(model_spill_completion(977, 1024, 8028, 4), 20_014_940);
+        assert_eq!(
+            model_spill_completion(977, 1024, 8028, 4),
+            schedule::spill_completion(977, 1024, 8028, 4)
         );
     }
 

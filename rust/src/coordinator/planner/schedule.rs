@@ -165,6 +165,53 @@ pub fn uniform_completion(chunks: usize, len: usize, arrival: u64, fanout: usize
     arrival + uniform_merge_work(chunks, fanout) * len as u64
 }
 
+/// Serialized bytes per spilled element: a `u32` value plus a `u64`
+/// row (the spill run format's chunked-LE payload, header and block
+/// framing amortized away). Mirrored by `fleet_model.SPILL_BYTES_PER_ELEM`.
+pub const SPILL_BYTES_PER_ELEM: u64 = 12;
+
+/// Spill-device bandwidth in bytes per modelled cycle: a 64-bit
+/// channel at the paper's 500 MHz clock (4 GB/s — commodity NVMe
+/// territory, deliberately conservative so the tuner never
+/// underestimates spill cost). Mirrored by
+/// `fleet_model.SPILL_BYTES_PER_CYC`.
+pub const SPILL_BYTES_PER_CYC: u64 = 8;
+
+/// Extra I/O cycles the out-of-core merge pays over the resident merge
+/// for `n` total elements arriving as `chunks` runs at fanout `fanout`:
+/// every element crosses the spill device once on the initial chunk
+/// spill, once per merge-pass read, and once per non-final-pass write —
+/// `2·passes` crossings for `passes ≥ 1`, and `2` (write + read-back)
+/// for the degenerate single-run case. Ceil-divided by the device
+/// bandwidth, so the model never rounds the cost to zero.
+pub fn spill_io_cycles(n: usize, chunks: usize, fanout: usize) -> u64 {
+    assert!(fanout >= 2, "merge fanout must be at least 2");
+    if n == 0 {
+        return 0;
+    }
+    let mut passes = 0u64;
+    let mut r = chunks;
+    while r > 1 {
+        passes += 1;
+        r = r.div_ceil(fanout);
+    }
+    let crossings = 2 * passes.max(1);
+    (n as u64 * SPILL_BYTES_PER_ELEM * crossings).div_ceil(SPILL_BYTES_PER_CYC)
+}
+
+/// Streamed completion of the *spilled* merge: the resident uniform
+/// closed form ([`uniform_completion`]) plus the spill I/O surcharge
+/// ([`spill_io_cycles`]) for pushing every run through the spill device
+/// on each pass. Always ≥ the resident completion, so the budgeted
+/// auto-tuner picks spill only when the memory budget forces it.
+pub fn spill_completion(chunks: usize, len: usize, arrival: u64, fanout: usize) -> u64 {
+    if chunks == 0 {
+        assert!(fanout >= 2, "merge fanout must be at least 2");
+        return 0;
+    }
+    uniform_completion(chunks, len, arrival, fanout) + spill_io_cycles(chunks * len, chunks, fanout)
+}
+
 /// Streamed completion of a `shards`-host fleet draining `chunks`
 /// uniform runs dealt round-robin — the uniform-fleet special case of
 /// [`hetero_completion`]. See `merge::model_sharded_completion` (the
@@ -679,6 +726,41 @@ mod tests {
         }
         // Work that doesn't divide the pool rounds up to a whole round.
         assert_eq!(concurrent_makespan(1, 3, 1024, 2, 7.84), 2 * 8028);
+    }
+
+    #[test]
+    fn spill_io_surcharge_matches_the_experiments_table() {
+        // EXPERIMENTS §Out-of-core spill (mirrored and pinned by
+        // python/fleet_model.py): 12 B/elem over an 8 B/cycle device,
+        // 2·passes crossings (write + read-back for a single run).
+        assert_eq!(spill_io_cycles(0, 0, 4), 0);
+        assert_eq!(spill_io_cycles(1024, 1, 4), 3_072, "single run: write + read back");
+        assert_eq!(spill_io_cycles(4 * 1024, 4, 4), 12_288, "one pass");
+        assert_eq!(spill_io_cycles(16 * 1024, 16, 4), 98_304, "two passes");
+        // The 1M-element fleet shape: 977 chunks of 1024, 5 passes.
+        assert_eq!(spill_io_cycles(977 * 1024, 977, 4), 15_006_720);
+        // Rounds up, never to zero.
+        assert_eq!(spill_io_cycles(1, 1, 2), 3);
+    }
+
+    #[test]
+    fn spill_completion_is_resident_plus_io_and_never_cheaper() {
+        // Pinned crossover points for the budgeted tuner (bank 1024,
+        // nominal arrival 8028 = round(1024·7.84), fanout 4).
+        assert_eq!(spill_completion(0, 1024, 8028, 4), 0);
+        assert_eq!(spill_completion(1, 1024, 8028, 4), 8_028 + 3_072);
+        assert_eq!(spill_completion(4, 1024, 8028, 4), 12_124 + 12_288);
+        assert_eq!(spill_completion(977, 1024, 8028, 4), 5_008_220 + 15_006_720);
+        for chunks in [1usize, 3, 16, 200, 977] {
+            for fanout in [2usize, 4, 8] {
+                let resident = uniform_completion(chunks, 1024, 8028, fanout);
+                let spilled = spill_completion(chunks, 1024, 8028, fanout);
+                assert!(
+                    spilled > resident,
+                    "spill must always cost extra (chunks={chunks} fanout={fanout})"
+                );
+            }
+        }
     }
 
     #[test]

@@ -82,6 +82,7 @@ use super::planner::{auto_tune_hetero, partition, schedule, shard_model, Geometr
 use super::transport::{LocalTransport, ShardTransport};
 use super::{ServiceConfig, SortResponse};
 use crate::sorter::merge::{model_merge_cycles, model_streamed_completion};
+use crate::sorter::spill::{resident_merge_bytes, RunStore, TempDirRunStore};
 
 /// How the fleet routes a request (or a hierarchical chunk) to a shard.
 #[derive(Copy, Clone, Debug, PartialEq, Eq)]
@@ -981,7 +982,24 @@ impl ShardedSortService {
         if capacity < 1 {
             return Err(anyhow!("bank capacity must be positive"));
         }
-        let mut asm = ChunkAssembly::new(partition(n, capacity), fanout, cfg.streaming);
+        // Same spill rule as the single-service path: the hierarchical
+        // assembly (and its merge working set) lives on this
+        // coordinator regardless of where the chunks sort, so the
+        // budget governs it identically.
+        let store = if cfg.budget.fits(resident_merge_bytes(n)) {
+            None
+        } else {
+            Some(TempDirRunStore::new()?)
+        };
+        let mut asm = match &store {
+            Some(s) => ChunkAssembly::new_spilling(
+                partition(n, capacity),
+                fanout,
+                cfg.streaming,
+                s as &dyn RunStore,
+            ),
+            None => ChunkAssembly::new(partition(n, capacity), fanout, cfg.streaming),
+        };
         let chunks = asm.spans().len();
 
         // Fan every chunk out across the fleet up front (parallel
@@ -1059,7 +1077,7 @@ impl ShardedSortService {
         // Cost totals are referenced to shard 0's engine configuration;
         // a heterogeneous fleet's silicon differs per host, but the
         // pipeline output needs one deterministic reference ensemble.
-        let out = asm.finish(&self.config.services[0], capacity);
+        let out = asm.finish(&self.config.services[0], capacity)?;
         self.fleet.record_hierarchical(n, chunks, out.merge.cycles, out.merge.comparisons);
 
         Ok(ShardedOutput {

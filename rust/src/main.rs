@@ -33,6 +33,7 @@ use memsort::report::{self, json::Json};
 use memsort::sorter::baseline::BaselineSorter;
 use memsort::sorter::colskip::{ColSkipConfig, ColSkipSorter};
 use memsort::sorter::merge::MergeSorter;
+use memsort::sorter::spill::MemoryBudget;
 use memsort::sorter::InMemorySorter;
 
 fn main() {
@@ -86,6 +87,9 @@ fn usage() {
                     --fanout 4 --workers 4; sizes accept k/m/g;\n\
                     --capacity auto picks the cheapest bank/fanout,\n\
                     --barrier disables the streaming merge overlap,\n\
+                    --memory-budget BYTES caps the coordinator merge\n\
+                    working set — an over-budget sort spills runs to\n\
+                    temp files and merges externally, byte-identical;\n\
                     --shards N --route <round|least|class|cost> runs\n\
                     the pipeline across a fleet of N service hosts;\n\
                     --shard-geometry 1024x32,512x32 makes the fleet\n\
@@ -331,7 +335,14 @@ fn cmd_sort_hierarchical(
     }
     let shards = remote.as_ref().map_or(services.len(), Vec::len);
     let auto = capacity == Capacity::Auto;
-    let cfg = HierarchicalConfig { capacity, fanout, streaming };
+    // `--memory-budget BYTES` caps the coordinator's merge working set;
+    // an over-budget sort spills sorted runs to temp files and merges
+    // them externally (byte-identical output, modelled I/O surcharge).
+    let budget = match args.get("memory-budget") {
+        Some(_) => MemoryBudget::Bytes(args.parse_size("memory-budget", 0)?),
+        None => MemoryBudget::Unbounded,
+    };
+    let cfg = HierarchicalConfig { capacity, fanout, streaming, budget };
     // One host below, a routed fleet of hosts above one shard (always a
     // fleet when remote); the pipeline output is byte-identical either
     // way (pinned by tests) — the fleet adds routing, failure
@@ -424,6 +435,14 @@ fn cmd_sort_hierarchical(
         out.barrier_latency_cycles,
         out.overlap_saving() * 100.0
     );
+    if cfg.budget.is_bounded() {
+        println!(
+            "spill         : {} (budget {}, {} B written to runs)",
+            if out.spilled { "external merge" } else { "resident" },
+            cfg.budget,
+            out.spilled_bytes
+        );
+    }
     if let Some((sharded_cycles, shard_chunks, snap)) = &fleet_view {
         println!(
             "fleet         : {} cycles with per-shard merge engines \

@@ -329,7 +329,12 @@ pub fn scaling_sharded(
     let fleet =
         ShardedSortService::start(ShardedConfig { route, services, ..Default::default() })
             .expect("fleet start");
-    let cfg = HierarchicalConfig { capacity: Capacity::Fixed(capacity), fanout, streaming };
+    let cfg = HierarchicalConfig {
+        capacity: Capacity::Fixed(capacity),
+        fanout,
+        streaming,
+        ..Default::default()
+    };
     let pts = ns
         .iter()
         .map(|&n| {

@@ -15,6 +15,7 @@ pub mod column;
 pub mod keys;
 pub mod merge;
 pub mod row;
+pub mod spill;
 pub mod state;
 
 /// Operation counts accumulated while sorting one array.

@@ -1,0 +1,1136 @@
+//! Out-of-core spill tier: budgeted file-backed runs and a k-way
+//! external merge over bounded-buffer run readers.
+//!
+//! Every other path in the repo keeps all chunk results resident, so
+//! the largest sortable dataset is bounded by coordinator memory. This
+//! module removes that bound: when a request's merge working set
+//! exceeds the configured [`MemoryBudget`], the hierarchical assembly
+//! writes each sorted chunk run to a [`RunStore`] instead of parking it
+//! in memory, and [`spill_merge`] reduces the stored runs through the
+//! same fixed fanout-`f` merge tree as the resident path — reading each
+//! run back one bounded block at a time, writing intermediate passes
+//! back to the store, and streaming only the final pass into memory.
+//!
+//! ## Byte-identity with the resident path
+//!
+//! The merge items are `(value, global_row)` pairs with globally unique
+//! rows, totally ordered with ties broken by within-group run index —
+//! exactly the key order of [`super::merge::LoserTree`]. The internal
+//! [`SourceTree`] ports that loser tree verbatim (same construction
+//! replay order, same Some/Some-only comparison metering) and
+//! [`spill_merge`] reproduces `merge_sorted_runs`' pass structure (same
+//! fanout grouping in run order, singleton groups pass through free,
+//! empty runs dropped up front, `cycles = total · passes`), so the
+//! merged values, the argsort, the comparison count and the modelled
+//! merge cycles are byte-identical to the resident pipeline — pinned by
+//! `tests/spill.rs` across datasets, budgets and fanouts.
+//!
+//! ## Run format
+//!
+//! Length-prefixed and checksummed, using the wire codec's chunked-LE
+//! slice encoding (`coordinator::wire` idiom), framed in bounded blocks
+//! so a reader never holds more than one block per run in memory:
+//!
+//! ```text
+//! header : magic u32 LE | version u32 LE | total elements u64 LE
+//! block  : count u32 LE (1..=SPILL_BLOCK_ELEMS)
+//!          count × value u32 LE
+//!          count × row   u64 LE
+//!          fnv1a-64 checksum u64 LE  (over count + values + rows bytes)
+//! ```
+//!
+//! Every decode failure — short file, bad magic, bad count, checksum
+//! mismatch, trailing bytes — surfaces as a typed [`SpillError`]
+//! (downcastable through `anyhow`), never as partial output: the merge
+//! either returns the complete byte-identical result or an `Err`.
+
+use std::collections::HashMap;
+use std::fmt;
+use std::fs::{self, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, PoisonError};
+
+use anyhow::{anyhow, Result};
+
+/// Sentinel for an empty loser-tree slot (pre-initialization) — the
+/// same convention as [`super::merge::LoserTree`].
+const EMPTY: usize = usize::MAX;
+
+/// Elements per run-format block. Bounds every reader/writer buffer:
+/// a fanout-`f` merge holds at most `f + 1` blocks resident
+/// ([`spill_working_bytes`]), ~64 KiB of tuples at fanout 4.
+pub const SPILL_BLOCK_ELEMS: usize = 1024;
+
+/// Run-format magic (`b"MSRN"`, memsort run) and version.
+const RUN_MAGIC: u32 = 0x4e52_534d;
+const RUN_VERSION: u32 = 1;
+
+/// Header bytes: magic + version + total.
+const HEADER_BYTES: u64 = 16;
+
+/// Serialized bytes per element: a `u32` value plus a `u64` row.
+const ELEM_BYTES: usize = 12;
+
+// --- budget ---------------------------------------------------------------
+
+/// Byte budget for a sort's merge working set. `Unbounded` (the
+/// default) keeps every run resident — the pre-spill behaviour,
+/// byte-for-byte. A bounded budget spills the runs to a [`RunStore`]
+/// whenever the resident merge footprint ([`resident_merge_bytes`])
+/// would exceed it.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum MemoryBudget {
+    /// No limit: never spill.
+    #[default]
+    Unbounded,
+    /// Spill when the resident merge working set exceeds this many
+    /// bytes.
+    Bytes(usize),
+}
+
+impl MemoryBudget {
+    /// Does a working set of `bytes` fit without spilling?
+    pub fn fits(self, bytes: usize) -> bool {
+        match self {
+            MemoryBudget::Unbounded => true,
+            MemoryBudget::Bytes(limit) => bytes <= limit,
+        }
+    }
+
+    /// Is this a real (finite) budget?
+    pub fn is_bounded(self) -> bool {
+        matches!(self, MemoryBudget::Bytes(_))
+    }
+}
+
+impl fmt::Display for MemoryBudget {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MemoryBudget::Unbounded => write!(f, "unbounded"),
+            MemoryBudget::Bytes(b) => write!(f, "{b} B"),
+        }
+    }
+}
+
+/// Resident merge working set of an `n`-element hierarchical sort: one
+/// `(u32, usize)` tuple per element held across the merge stage. This
+/// is the number a [`MemoryBudget`] is compared against — both here and
+/// in the planner's budgeted tuner, so the spill decision is one rule
+/// everywhere.
+pub fn resident_merge_bytes(n: usize) -> usize {
+    n.saturating_mul(std::mem::size_of::<(u32, usize)>())
+}
+
+/// Peak resident footprint of the *spilling* merge at fanout `fanout`:
+/// one decoded block per open reader plus one encode buffer on the
+/// writer. This is what frontend admission charges for a spilled sort
+/// instead of [`resident_merge_bytes`].
+pub fn spill_working_bytes(fanout: usize) -> usize {
+    (fanout + 1) * SPILL_BLOCK_ELEMS * std::mem::size_of::<(u32, usize)>()
+}
+
+// --- typed errors ---------------------------------------------------------
+
+/// Typed spill-tier failure. Carried inside [`anyhow::Error`] so
+/// callers can `downcast_ref::<SpillError>()` (the `AdmitError`
+/// convention): a fault anywhere in the spill path surfaces as one of
+/// these, never as partial or silently-resident output.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SpillError {
+    /// The backing device failed (write quota exhausted, reader died,
+    /// filesystem error).
+    Io {
+        /// Run id the operation targeted.
+        run: usize,
+        /// Backend-specific description.
+        detail: String,
+    },
+    /// The run ended before the declared payload (`need` bytes wanted
+    /// at a point where only `have` existed).
+    Truncated {
+        /// Run id.
+        run: usize,
+        /// Bytes the decoder needed.
+        need: u64,
+        /// Bytes the run actually holds.
+        have: u64,
+    },
+    /// A block's FNV-1a checksum did not match its payload.
+    Checksum {
+        /// Run id.
+        run: usize,
+        /// Checksum stored in the run.
+        want: u64,
+        /// Checksum recomputed from the payload.
+        got: u64,
+    },
+    /// The run violates the format contract (bad magic/version/count,
+    /// trailing bytes, element-count mismatch).
+    Malformed {
+        /// Run id.
+        run: usize,
+        /// What was wrong.
+        detail: String,
+    },
+}
+
+impl fmt::Display for SpillError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SpillError::Io { run, detail } => write!(f, "spill run {run}: I/O failure: {detail}"),
+            SpillError::Truncated { run, need, have } => {
+                write!(f, "spill run {run}: truncated: need {need} bytes, have {have}")
+            }
+            SpillError::Checksum { run, want, got } => write!(
+                f,
+                "spill run {run}: checksum mismatch: stored {want:#018x}, computed {got:#018x}"
+            ),
+            SpillError::Malformed { run, detail } => {
+                write!(f, "spill run {run}: malformed: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SpillError {}
+
+fn spill_err(e: SpillError) -> anyhow::Error {
+    anyhow::Error::new(e)
+}
+
+// --- RunStore -------------------------------------------------------------
+
+/// Backend for spilled runs: an append-only byte store addressed by run
+/// id, with random-access reads. `&self` methods (interior mutability)
+/// so one store serves a writer and several block readers at once;
+/// `Send + Sync` so the fleet path can share it across shard
+/// collection.
+pub trait RunStore: Send + Sync {
+    /// Append `bytes` to run `id`, creating the run on first append.
+    fn append(&self, id: usize, bytes: &[u8]) -> Result<()>;
+
+    /// Read exactly `buf.len()` bytes of run `id` starting at `offset`.
+    /// Reading past the end of the run is a typed
+    /// [`SpillError::Truncated`].
+    fn read_at(&self, id: usize, offset: u64, buf: &mut [u8]) -> Result<()>;
+
+    /// Current byte length of run `id` (0 for a run never appended to).
+    fn run_len(&self, id: usize) -> Result<u64>;
+
+    /// Total bytes ever appended across all runs — what frontend
+    /// admission and the CLI report as the spilled footprint.
+    fn spilled_bytes(&self) -> u64;
+}
+
+/// In-memory [`RunStore`] for deterministic, disk-free tests, with
+/// `FlakyTransport`-style fault hooks: a write quota (ENOSPC
+/// mid-spill), a read fuse (reader death mid-merge), and direct
+/// truncate/corrupt mutators for format-fault tests.
+#[derive(Default)]
+pub struct MemoryRunStore {
+    spill_runs: Mutex<HashMap<usize, Vec<u8>>>,
+    total: AtomicU64,
+    /// Bytes of append the store still accepts; `u64::MAX` = no quota.
+    write_quota: AtomicU64,
+    /// `read_at` calls before the injected reader death; `u64::MAX` =
+    /// no fuse.
+    read_fuse: AtomicU64,
+}
+
+impl MemoryRunStore {
+    pub fn new() -> Self {
+        MemoryRunStore {
+            spill_runs: Mutex::new(HashMap::new()),
+            total: AtomicU64::new(0),
+            write_quota: AtomicU64::new(u64::MAX),
+            read_fuse: AtomicU64::new(u64::MAX),
+        }
+    }
+
+    /// Arm the ENOSPC fault: appends beyond `bytes` further bytes fail
+    /// with a typed [`SpillError::Io`].
+    pub fn set_write_quota(&self, bytes: u64) {
+        self.write_quota.store(bytes, Ordering::SeqCst);
+    }
+
+    /// Arm the reader-death fault: the `calls + 1`-th `read_at` from
+    /// now fails with a typed [`SpillError::Io`].
+    pub fn fail_reads_after(&self, calls: u64) {
+        self.read_fuse.store(calls, Ordering::SeqCst);
+    }
+
+    /// Truncate run `id` to `len` bytes (format-fault injection).
+    pub fn truncate_run(&self, id: usize, len: usize) {
+        let mut runs = self.spill_runs.lock().unwrap_or_else(PoisonError::into_inner);
+        if let Some(run) = runs.get_mut(&id) {
+            run.truncate(len);
+        }
+    }
+
+    /// Flip one byte of run `id` at `at` (checksum-fault injection).
+    pub fn corrupt_run(&self, id: usize, at: usize) {
+        let mut runs = self.spill_runs.lock().unwrap_or_else(PoisonError::into_inner);
+        if let Some(b) = runs.get_mut(&id).and_then(|run| run.get_mut(at)) {
+            *b ^= 0xFF;
+        }
+    }
+}
+
+impl RunStore for MemoryRunStore {
+    fn append(&self, id: usize, bytes: &[u8]) -> Result<()> {
+        let want = bytes.len() as u64;
+        // Quota check-and-debit; single fetch_update keeps concurrent
+        // writers from double-spending the last bytes.
+        let debited = self
+            .write_quota
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |q| {
+                if q == u64::MAX {
+                    Some(q) // no quota armed
+                } else {
+                    q.checked_sub(want)
+                }
+            })
+            .is_ok();
+        if !debited {
+            return Err(spill_err(SpillError::Io {
+                run: id,
+                detail: "injected fault: spill device full (ENOSPC)".into(),
+            }));
+        }
+        let mut runs = self.spill_runs.lock().unwrap_or_else(PoisonError::into_inner);
+        runs.entry(id).or_default().extend_from_slice(bytes);
+        drop(runs);
+        self.total.fetch_add(want, Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn read_at(&self, id: usize, offset: u64, buf: &mut [u8]) -> Result<()> {
+        let blown = self
+            .read_fuse
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |f| {
+                if f == u64::MAX {
+                    Some(f)
+                } else {
+                    f.checked_sub(1)
+                }
+            })
+            .is_err();
+        if blown {
+            return Err(spill_err(SpillError::Io {
+                run: id,
+                detail: "injected fault: spill reader died mid-merge".into(),
+            }));
+        }
+        let runs = self.spill_runs.lock().unwrap_or_else(PoisonError::into_inner);
+        let run = runs.get(&id).map(Vec::as_slice).unwrap_or(&[]);
+        let end = offset.saturating_add(buf.len() as u64);
+        let src = usize::try_from(offset)
+            .ok()
+            .and_then(|start| run.get(start..start + buf.len()))
+            .ok_or_else(|| {
+                spill_err(SpillError::Truncated { run: id, need: end, have: run.len() as u64 })
+            })?;
+        buf.copy_from_slice(src);
+        Ok(())
+    }
+
+    fn run_len(&self, id: usize) -> Result<u64> {
+        let runs = self.spill_runs.lock().unwrap_or_else(PoisonError::into_inner);
+        Ok(runs.get(&id).map_or(0, |r| r.len() as u64))
+    }
+
+    fn spilled_bytes(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+}
+
+/// Monotone suffix so two stores in one process never share a
+/// directory (no clock or RNG involved: deterministic under test).
+static SPILL_DIR_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Temp-directory [`RunStore`]: one `run-<id>` file per run under a
+/// process-unique directory in [`std::env::temp_dir`], removed on drop.
+/// Appends open in append mode and reads open/seek/read per call, so no
+/// file handle (and no lock) is held across calls — several readers and
+/// a writer can interleave freely.
+pub struct TempDirRunStore {
+    dir: PathBuf,
+    total: AtomicU64,
+}
+
+impl TempDirRunStore {
+    /// Create the backing directory
+    /// (`memsort-spill-<pid>-<seq>` under the OS temp dir).
+    pub fn new() -> Result<Self> {
+        let seq = SPILL_DIR_SEQ.fetch_add(1, Ordering::Relaxed);
+        let dir = std::env::temp_dir().join(format!("memsort-spill-{}-{seq}", std::process::id()));
+        fs::create_dir_all(&dir)
+            .map_err(|e| anyhow!("creating spill dir {}: {e}", dir.display()))?;
+        Ok(TempDirRunStore { dir, total: AtomicU64::new(0) })
+    }
+
+    fn run_path(&self, id: usize) -> PathBuf {
+        self.dir.join(format!("run-{id}"))
+    }
+
+    /// Where the runs live (surfaced by the CLI's spill report).
+    pub fn dir(&self) -> &std::path::Path {
+        &self.dir
+    }
+}
+
+impl RunStore for TempDirRunStore {
+    fn append(&self, id: usize, bytes: &[u8]) -> Result<()> {
+        let path = self.run_path(id);
+        let mut f = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .map_err(|e| spill_err(SpillError::Io { run: id, detail: format!("open: {e}") }))?;
+        f.write_all(bytes)
+            .map_err(|e| spill_err(SpillError::Io { run: id, detail: format!("append: {e}") }))?;
+        self.total.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+        Ok(())
+    }
+
+    fn read_at(&self, id: usize, offset: u64, buf: &mut [u8]) -> Result<()> {
+        let path = self.run_path(id);
+        let mut f = std::fs::File::open(&path)
+            .map_err(|e| spill_err(SpillError::Io { run: id, detail: format!("open: {e}") }))?;
+        let have = f
+            .metadata()
+            .map_err(|e| spill_err(SpillError::Io { run: id, detail: format!("stat: {e}") }))?
+            .len();
+        f.seek(SeekFrom::Start(offset))
+            .map_err(|e| spill_err(SpillError::Io { run: id, detail: format!("seek: {e}") }))?;
+        f.read_exact(buf).map_err(|e| {
+            if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                spill_err(SpillError::Truncated {
+                    run: id,
+                    need: offset.saturating_add(buf.len() as u64),
+                    have,
+                })
+            } else {
+                spill_err(SpillError::Io { run: id, detail: format!("read: {e}") })
+            }
+        })
+    }
+
+    fn run_len(&self, id: usize) -> Result<u64> {
+        match fs::metadata(self.run_path(id)) {
+            Ok(m) => Ok(m.len()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(0),
+            Err(e) => Err(spill_err(SpillError::Io { run: id, detail: format!("stat: {e}") })),
+        }
+    }
+
+    fn spilled_bytes(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+}
+
+impl Drop for TempDirRunStore {
+    fn drop(&mut self) {
+        // Best-effort cleanup; a leaked temp dir must not fail a sort.
+        let _ = fs::remove_dir_all(&self.dir);
+    }
+}
+
+// --- codec (the wire chunked-LE idiom, local to the run format) -----------
+
+fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Chunked-LE slice encode (the `wire::put_u32_slice` shape): resize
+/// once, then blit each element into its 4-byte window.
+fn put_u32_slice(buf: &mut Vec<u8>, v: &[u32]) {
+    let at = buf.len();
+    buf.resize(at + 4 * v.len(), 0);
+    if let Some(dst) = buf.get_mut(at..) {
+        for (d, &x) in dst.chunks_exact_mut(4).zip(v) {
+            d.copy_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+/// Chunked-LE encode of rows as `u64` (lossless from `usize`).
+fn put_u64_slice(buf: &mut Vec<u8>, v: &[u64]) {
+    let at = buf.len();
+    buf.resize(at + 8 * v.len(), 0);
+    if let Some(dst) = buf.get_mut(at..) {
+        for (d, &x) in dst.chunks_exact_mut(8).zip(v) {
+            d.copy_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+fn read_u32_le(bytes: &[u8]) -> u32 {
+    let mut arr = [0u8; 4];
+    if let Some(src) = bytes.get(..4) {
+        arr.copy_from_slice(src);
+    }
+    u32::from_le_bytes(arr)
+}
+
+fn read_u64_le(bytes: &[u8]) -> u64 {
+    let mut arr = [0u8; 8];
+    if let Some(src) = bytes.get(..8) {
+        arr.copy_from_slice(src);
+    }
+    u64::from_le_bytes(arr)
+}
+
+/// FNV-1a 64-bit over `bytes` — the run format's block checksum.
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+// --- RunWriter ------------------------------------------------------------
+
+/// Streaming encoder for one run: buffers at most one block
+/// ([`SPILL_BLOCK_ELEMS`] elements), appending each completed block —
+/// count, chunked-LE values, chunked-LE rows, FNV-1a checksum — to the
+/// store. [`RunWriter::finish`] flushes the tail block and enforces the
+/// header's declared element count.
+pub struct RunWriter<'s> {
+    store: &'s dyn RunStore,
+    id: usize,
+    declared: u64,
+    written: u64,
+    vals: Vec<u32>,
+    rows: Vec<u64>,
+}
+
+impl<'s> RunWriter<'s> {
+    /// Start run `id`, writing the header that declares `total`
+    /// elements.
+    pub fn create(store: &'s dyn RunStore, id: usize, total: u64) -> Result<Self> {
+        let mut header = Vec::with_capacity(HEADER_BYTES as usize);
+        put_u32(&mut header, RUN_MAGIC);
+        put_u32(&mut header, RUN_VERSION);
+        put_u64(&mut header, total);
+        store.append(id, &header)?;
+        Ok(RunWriter {
+            store,
+            id,
+            declared: total,
+            written: 0,
+            vals: Vec::with_capacity(SPILL_BLOCK_ELEMS),
+            rows: Vec::with_capacity(SPILL_BLOCK_ELEMS),
+        })
+    }
+
+    /// Append one `(value, row)` element, flushing a block when full.
+    pub fn push(&mut self, item: (u32, usize)) -> Result<()> {
+        self.vals.push(item.0);
+        self.rows.push(item.1 as u64);
+        self.written += 1;
+        if self.vals.len() == SPILL_BLOCK_ELEMS {
+            self.flush_block()?;
+        }
+        Ok(())
+    }
+
+    fn flush_block(&mut self) -> Result<()> {
+        if self.vals.is_empty() {
+            return Ok(());
+        }
+        let count = self.vals.len();
+        let mut block = Vec::with_capacity(4 + count * ELEM_BYTES + 8);
+        put_u32(&mut block, count as u32);
+        put_u32_slice(&mut block, &self.vals);
+        put_u64_slice(&mut block, &self.rows);
+        let sum = fnv1a64(&block);
+        put_u64(&mut block, sum);
+        self.store.append(self.id, &block)?;
+        self.vals.clear();
+        self.rows.clear();
+        Ok(())
+    }
+
+    /// Flush the tail block and close the run, returning the element
+    /// count. Writing a different count than the header declared is a
+    /// typed [`SpillError::Malformed`].
+    pub fn finish(mut self) -> Result<u64> {
+        self.flush_block()?;
+        if self.written != self.declared {
+            return Err(spill_err(SpillError::Malformed {
+                run: self.id,
+                detail: format!("header declared {} elements, wrote {}", self.declared, self.written),
+            }));
+        }
+        Ok(self.written)
+    }
+}
+
+/// Encode a whole in-memory run into the store (the chunk-spill path of
+/// the hierarchical assembly).
+pub fn write_run(store: &dyn RunStore, id: usize, items: &[(u32, usize)]) -> Result<u64> {
+    let mut w = RunWriter::create(store, id, items.len() as u64)?;
+    for &item in items {
+        w.push(item)?;
+    }
+    w.finish()
+}
+
+// --- RunReader ------------------------------------------------------------
+
+/// Read and validate run `id`'s header, returning the declared element
+/// count. Shared by [`RunReader::open`] and the merge's run census.
+fn read_header(store: &dyn RunStore, id: usize) -> Result<u64> {
+    let len = store.run_len(id)?;
+    if len < HEADER_BYTES {
+        return Err(spill_err(SpillError::Truncated { run: id, need: HEADER_BYTES, have: len }));
+    }
+    let mut header = [0u8; HEADER_BYTES as usize];
+    store.read_at(id, 0, &mut header)?;
+    let magic = read_u32_le(&header);
+    if magic != RUN_MAGIC {
+        return Err(spill_err(SpillError::Malformed {
+            run: id,
+            detail: format!("bad magic {magic:#010x}"),
+        }));
+    }
+    let version = read_u32_le(header.get(4..).unwrap_or(&[]));
+    if version != RUN_VERSION {
+        return Err(spill_err(SpillError::Malformed {
+            run: id,
+            detail: format!("unsupported version {version}"),
+        }));
+    }
+    Ok(read_u64_le(header.get(8..).unwrap_or(&[])))
+}
+
+/// Bounded-buffer decoder for one run: holds exactly one decoded block
+/// in memory, verifying each block's checksum as it is refilled and the
+/// absence of trailing bytes at exhaustion.
+pub struct RunReader<'s> {
+    store: &'s dyn RunStore,
+    id: usize,
+    total: u64,
+    consumed: u64,
+    offset: u64,
+    len: u64,
+    block: Vec<(u32, usize)>,
+    at: usize,
+}
+
+impl<'s> RunReader<'s> {
+    /// Open run `id`: validate the header and decode the first block.
+    pub fn open(store: &'s dyn RunStore, id: usize) -> Result<Self> {
+        let total = read_header(store, id)?;
+        let len = store.run_len(id)?;
+        let mut r = RunReader {
+            store,
+            id,
+            total,
+            consumed: 0,
+            offset: HEADER_BYTES,
+            len,
+            block: Vec::new(),
+            at: 0,
+        };
+        r.refill()?;
+        Ok(r)
+    }
+
+    /// Elements the header declared.
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// The current head element, or `None` when the run is exhausted.
+    pub fn head(&self) -> Option<(u32, usize)> {
+        self.block.get(self.at).copied()
+    }
+
+    /// Consume the current head, decoding the next block when this one
+    /// drains. A no-op on an exhausted run.
+    pub fn advance(&mut self) -> Result<()> {
+        if self.at < self.block.len() {
+            self.at += 1;
+            self.consumed += 1;
+        }
+        if self.at >= self.block.len() {
+            self.refill()?;
+        }
+        Ok(())
+    }
+
+    /// Decode the next block into the buffer (empty at exhaustion,
+    /// after checking for trailing bytes).
+    fn refill(&mut self) -> Result<()> {
+        self.block.clear();
+        self.at = 0;
+        let remaining = self.total - self.consumed;
+        if remaining == 0 {
+            if self.offset != self.len {
+                return Err(spill_err(SpillError::Malformed {
+                    run: self.id,
+                    detail: format!("{} trailing bytes after payload", self.len - self.offset),
+                }));
+            }
+            return Ok(());
+        }
+        let need_count = self.offset.saturating_add(4);
+        if need_count > self.len {
+            return Err(spill_err(SpillError::Truncated {
+                run: self.id,
+                need: need_count,
+                have: self.len,
+            }));
+        }
+        let mut count_bytes = [0u8; 4];
+        self.store.read_at(self.id, self.offset, &mut count_bytes)?;
+        let count = read_u32_le(&count_bytes) as usize;
+        if count == 0 || count > SPILL_BLOCK_ELEMS || count as u64 > remaining {
+            return Err(spill_err(SpillError::Malformed {
+                run: self.id,
+                detail: format!("block count {count} (remaining {remaining})"),
+            }));
+        }
+        let payload_len = count * ELEM_BYTES + 8;
+        let need = need_count.saturating_add(payload_len as u64);
+        if need > self.len {
+            return Err(spill_err(SpillError::Truncated {
+                run: self.id,
+                need,
+                have: self.len,
+            }));
+        }
+        let mut payload = vec![0u8; payload_len];
+        self.store.read_at(self.id, self.offset + 4, &mut payload)?;
+        let body_len = count * ELEM_BYTES;
+        let mut sum_input = Vec::with_capacity(4 + body_len);
+        sum_input.extend_from_slice(&count_bytes);
+        sum_input.extend_from_slice(payload.get(..body_len).unwrap_or(&[]));
+        let got = fnv1a64(&sum_input);
+        let want = read_u64_le(payload.get(body_len..).unwrap_or(&[]));
+        if got != want {
+            return Err(spill_err(SpillError::Checksum { run: self.id, want, got }));
+        }
+        let vals = payload.get(..count * 4).unwrap_or(&[]);
+        let rows = payload.get(count * 4..body_len).unwrap_or(&[]);
+        for (v, r) in vals.chunks_exact(4).zip(rows.chunks_exact(8)) {
+            let value = read_u32_le(v);
+            let row64 = read_u64_le(r);
+            let row = usize::try_from(row64).map_err(|_| {
+                spill_err(SpillError::Malformed {
+                    run: self.id,
+                    detail: format!("row {row64} exceeds this host's usize"),
+                })
+            })?;
+            self.block.push((value, row));
+        }
+        self.offset = need;
+        Ok(())
+    }
+}
+
+// --- SourceTree: the loser tree over run readers --------------------------
+
+/// [`super::merge::LoserTree`] ported verbatim over [`RunReader`]
+/// sources: same construction replay order (`(0..k).rev()`), same
+/// first-empty-slot parking, same Some/Some-only comparison metering,
+/// same `(item, run_index)` tie-break — so the emitted sequence AND the
+/// comparison count match the resident tree exactly. The only
+/// difference is that advancing a source performs block I/O, so
+/// [`SourceTree::pop`] is fallible.
+struct SourceTree<'a, 's> {
+    readers: &'a mut [RunReader<'s>],
+    tree: Vec<usize>,
+    comparisons: u64,
+}
+
+impl<'a, 's> SourceTree<'a, 's> {
+    fn new(readers: &'a mut [RunReader<'s>]) -> Self {
+        let k = readers.len();
+        let mut st = SourceTree { readers, tree: vec![EMPTY; k.max(1)], comparisons: 0 };
+        for leaf in (0..k).rev() {
+            st.replay(leaf);
+        }
+        st
+    }
+
+    fn comparisons(&self) -> u64 {
+        self.comparisons
+    }
+
+    /// Emit the next element of the merged order, or `Ok(None)` when
+    /// every source is exhausted.
+    fn pop(&mut self) -> Result<Option<(u32, usize)>> {
+        let w = self.tree.first().copied().unwrap_or(EMPTY);
+        let Some(reader) = self.readers.get_mut(w) else {
+            return Ok(None);
+        };
+        let Some(item) = reader.head() else {
+            return Ok(None);
+        };
+        reader.advance()?;
+        self.replay(w);
+        Ok(Some(item))
+    }
+
+    /// Head of source `i` as a tie-broken key; `None` = exhausted.
+    fn key(&self, i: usize) -> Option<((u32, usize), usize)> {
+        self.readers.get(i).and_then(RunReader::head).map(|v| (v, i))
+    }
+
+    fn beats(&mut self, a: usize, b: usize) -> bool {
+        match (self.key(a), self.key(b)) {
+            (None, _) => false,
+            (Some(_), None) => true,
+            (Some(x), Some(y)) => {
+                self.comparisons += 1;
+                x < y
+            }
+        }
+    }
+
+    fn replay(&mut self, leaf: usize) {
+        let k = self.readers.len();
+        let mut winner = leaf;
+        let mut node = (leaf + k) / 2;
+        while node > 0 {
+            let held = self.tree.get(node).copied().unwrap_or(EMPTY);
+            if held == EMPTY {
+                if let Some(slot) = self.tree.get_mut(node) {
+                    *slot = winner;
+                }
+                return;
+            }
+            if self.beats(held, winner) {
+                if let Some(slot) = self.tree.get_mut(node) {
+                    *slot = winner;
+                }
+                winner = held;
+            }
+            node /= 2;
+        }
+        if let Some(slot) = self.tree.first_mut() {
+            *slot = winner;
+        }
+    }
+}
+
+// --- SpillMerge -----------------------------------------------------------
+
+/// Result of the external k-way merge — the spill tier's counterpart of
+/// `merge::KWayMerged`, with identical semantics for every field.
+#[derive(Clone, Debug)]
+pub struct SpillMerged {
+    /// Globally merged `(value, row)` stream.
+    pub merged: Vec<(u32, usize)>,
+    /// Comparator operations actually performed (all passes) — equal to
+    /// the resident tree's count by construction.
+    pub comparisons: u64,
+    /// Merge passes executed (`ceil(log_fanout(runs))` over non-empty
+    /// runs).
+    pub passes: u32,
+    /// Modelled merge-network latency: one element per cycle per pass
+    /// (`total · passes`, the resident model).
+    pub cycles: u64,
+}
+
+/// Merge runs `0..runs` of `store` through the fixed fanout-`fanout`
+/// tree, multi-pass and out of core: every non-final pass streams each
+/// group through a [`RunWriter`] into a fresh run id (`runs`,
+/// `runs + 1`, …), the final pass streams into memory. Grouping, pass
+/// structure, tie-breaks and comparison metering replicate
+/// `merge::merge_sorted_runs` exactly (empty runs dropped up front,
+/// singleton groups pass through free), so the output is byte-identical
+/// to the resident merge of the same runs.
+pub fn spill_merge(store: &dyn RunStore, runs: usize, fanout: usize) -> Result<SpillMerged> {
+    if fanout < 2 {
+        return Err(anyhow!("merge fanout must be at least 2, got {fanout}"));
+    }
+    let mut ids: Vec<usize> = Vec::with_capacity(runs);
+    let mut total: u64 = 0;
+    for id in 0..runs {
+        let t = read_header(store, id)?;
+        total += t;
+        if t > 0 {
+            ids.push(id);
+        }
+    }
+    let mut merged: Vec<(u32, usize)> = Vec::new();
+    let mut comparisons = 0u64;
+    let mut passes = 0u32;
+    let mut next_id = runs;
+    while ids.len() > 1 {
+        passes += 1;
+        if ids.len() <= fanout {
+            // Final pass: one group, streamed straight into memory.
+            let mut readers = open_group(store, &ids)?;
+            let mut tree = SourceTree::new(&mut readers);
+            merged.reserve(total as usize);
+            while let Some(item) = tree.pop()? {
+                merged.push(item);
+            }
+            comparisons += tree.comparisons();
+            ids.clear();
+            break;
+        }
+        let mut next_ids = Vec::with_capacity(ids.len().div_ceil(fanout));
+        for group in ids.chunks(fanout) {
+            if group.len() == 1 {
+                // Singleton groups pass through for free (no I/O),
+                // exactly like the resident pass structure.
+                next_ids.extend_from_slice(group);
+                continue;
+            }
+            let mut readers = open_group(store, group)?;
+            let group_total: u64 = readers.iter().map(RunReader::total).sum();
+            let mut writer = RunWriter::create(store, next_id, group_total)?;
+            let mut tree = SourceTree::new(&mut readers);
+            while let Some(item) = tree.pop()? {
+                writer.push(item)?;
+            }
+            comparisons += tree.comparisons();
+            writer.finish()?;
+            next_ids.push(next_id);
+            next_id += 1;
+        }
+        ids = next_ids;
+    }
+    if let Some(&last) = ids.first() {
+        // Zero passes (a single non-empty run): read it back verbatim.
+        let mut r = RunReader::open(store, last)?;
+        merged.reserve(total as usize);
+        while let Some(item) = r.head() {
+            merged.push(item);
+            r.advance()?;
+        }
+    }
+    if merged.len() as u64 != total {
+        return Err(spill_err(SpillError::Malformed {
+            run: next_id.saturating_sub(1),
+            detail: format!("merged {} elements, expected {total}", merged.len()),
+        }));
+    }
+    Ok(SpillMerged { merged, comparisons, passes, cycles: total * passes as u64 })
+}
+
+fn open_group<'s>(store: &'s dyn RunStore, ids: &[usize]) -> Result<Vec<RunReader<'s>>> {
+    ids.iter().map(|&id| RunReader::open(store, id)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sorter::merge::merge_sorted_runs;
+
+    /// Deterministic pseudo-random runs: a tiny LCG, no RNG dependency.
+    fn gen_runs(seed: u64, runs: usize, max_len: usize) -> Vec<Vec<(u32, usize)>> {
+        let mut x = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1;
+        let mut next = move || {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            x >> 33
+        };
+        let mut row = 0usize;
+        (0..runs)
+            .map(|_| {
+                let len = (next() as usize) % (max_len + 1);
+                let mut run: Vec<(u32, usize)> = (0..len)
+                    .map(|_| {
+                        row += 1;
+                        (next() as u32, row - 1)
+                    })
+                    .collect();
+                run.sort_unstable();
+                run
+            })
+            .collect()
+    }
+
+    fn store_with(runs: &[Vec<(u32, usize)>]) -> MemoryRunStore {
+        let store = MemoryRunStore::new();
+        for (id, run) in runs.iter().enumerate() {
+            write_run(&store, id, run).unwrap();
+        }
+        store
+    }
+
+    #[test]
+    fn roundtrip_preserves_every_element() {
+        let store = MemoryRunStore::new();
+        for (id, len) in [(0usize, 0usize), (1, 1), (2, SPILL_BLOCK_ELEMS), (3, 2500)] {
+            let run: Vec<(u32, usize)> = (0..len).map(|i| (i as u32, 7 * i + 1)).collect();
+            assert_eq!(write_run(&store, id, &run).unwrap(), len as u64);
+            let mut r = RunReader::open(&store, id).unwrap();
+            assert_eq!(r.total(), len as u64);
+            let mut back = Vec::new();
+            while let Some(item) = r.head() {
+                back.push(item);
+                r.advance().unwrap();
+            }
+            assert_eq!(back, run, "len={len}");
+        }
+        assert!(store.spilled_bytes() > 0);
+    }
+
+    #[test]
+    fn tempdir_backend_roundtrips_and_cleans_up() {
+        let dir;
+        {
+            let store = TempDirRunStore::new().unwrap();
+            dir = store.dir().to_path_buf();
+            assert!(dir.exists());
+            let run: Vec<(u32, usize)> = (0..3000).map(|i| (i as u32 / 3, i)).collect();
+            write_run(&store, 0, &run).unwrap();
+            assert_eq!(store.run_len(0).unwrap(), store.spilled_bytes());
+            let mut r = RunReader::open(&store, 0).unwrap();
+            let mut back = Vec::new();
+            while let Some(item) = r.head() {
+                back.push(item);
+                r.advance().unwrap();
+            }
+            assert_eq!(back, run);
+        }
+        assert!(!dir.exists(), "drop removes the spill dir");
+    }
+
+    #[test]
+    fn spill_merge_is_byte_identical_to_resident_merge() {
+        for seed in 1..6u64 {
+            for fanout in [2usize, 4, 8] {
+                let runs = gen_runs(seed, 11, 300);
+                let store = store_with(&runs);
+                let resident = merge_sorted_runs(runs.clone(), fanout);
+                let spilled = spill_merge(&store, runs.len(), fanout).unwrap();
+                assert_eq!(spilled.merged, resident.merged, "seed={seed} fanout={fanout}");
+                assert_eq!(spilled.comparisons, resident.comparisons, "seed={seed} f={fanout}");
+                assert_eq!(spilled.passes, resident.passes);
+                assert_eq!(spilled.cycles, resident.cycles);
+            }
+        }
+    }
+
+    #[test]
+    fn degenerate_merges_are_exact() {
+        // No runs at all.
+        let store = MemoryRunStore::new();
+        let out = spill_merge(&store, 0, 4).unwrap();
+        assert!(out.merged.is_empty());
+        assert_eq!((out.comparisons, out.passes, out.cycles), (0, 0, 0));
+        // One run: zero passes, read back verbatim.
+        let run: Vec<(u32, usize)> = (0..10).map(|i| (i as u32, i)).collect();
+        let store = store_with(std::slice::from_ref(&run));
+        let out = spill_merge(&store, 1, 4).unwrap();
+        assert_eq!(out.merged, run);
+        assert_eq!((out.passes, out.cycles), (0, 0));
+        // All-empty runs.
+        let store = store_with(&[Vec::new(), Vec::new()]);
+        let out = spill_merge(&store, 2, 2).unwrap();
+        assert!(out.merged.is_empty());
+        assert_eq!(out.passes, 0);
+        // Bad fanout is an error, not a panic.
+        assert!(spill_merge(&store, 2, 1).is_err());
+    }
+
+    #[test]
+    fn truncated_run_is_a_typed_error() {
+        let run: Vec<(u32, usize)> = (0..100).map(|i| (i as u32, i)).collect();
+        let store = store_with(std::slice::from_ref(&run));
+        let full = store.run_len(0).unwrap() as usize;
+        store.truncate_run(0, full - 5);
+        let err = spill_merge(&store, 1, 2).unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<SpillError>(), Some(SpillError::Truncated { .. })),
+            "{err}"
+        );
+        // Header-level truncation too.
+        store.truncate_run(0, 7);
+        let err = RunReader::open(&store, 0).unwrap_err();
+        assert!(matches!(err.downcast_ref::<SpillError>(), Some(SpillError::Truncated { .. })));
+    }
+
+    #[test]
+    fn corrupted_block_is_a_checksum_error() {
+        let run: Vec<(u32, usize)> = (0..100).map(|i| (i as u32, i)).collect();
+        let store = store_with(std::slice::from_ref(&run));
+        store.corrupt_run(0, HEADER_BYTES as usize + 10);
+        let err = spill_merge(&store, 1, 2).unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<SpillError>(), Some(SpillError::Checksum { .. })),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn enospc_mid_spill_is_a_typed_error() {
+        let store = MemoryRunStore::new();
+        store.set_write_quota(100);
+        let run: Vec<(u32, usize)> = (0..2000).map(|i| (i as u32, i)).collect();
+        let err = write_run(&store, 0, &run).unwrap_err();
+        match err.downcast_ref::<SpillError>() {
+            Some(SpillError::Io { detail, .. }) => assert!(detail.contains("ENOSPC"), "{detail}"),
+            other => panic!("expected Io, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn reader_death_mid_merge_is_a_typed_error() {
+        let runs = gen_runs(3, 6, 200);
+        let store = store_with(&runs);
+        store.fail_reads_after(4);
+        let err = spill_merge(&store, runs.len(), 2).unwrap_err();
+        match err.downcast_ref::<SpillError>() {
+            Some(SpillError::Io { detail, .. }) => {
+                assert!(detail.contains("reader died"), "{detail}")
+            }
+            other => panic!("expected Io, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn trailing_bytes_are_rejected() {
+        let run: Vec<(u32, usize)> = (0..5).map(|i| (i as u32, i)).collect();
+        let store = store_with(std::slice::from_ref(&run));
+        store.append(0, &[0xAB, 0xCD]).unwrap();
+        let mut r = RunReader::open(&store, 0).unwrap();
+        let err = loop {
+            match r.advance() {
+                Ok(()) if r.head().is_none() => panic!("trailing bytes accepted"),
+                Ok(()) => {}
+                Err(e) => break e,
+            }
+        };
+        assert!(
+            matches!(err.downcast_ref::<SpillError>(), Some(SpillError::Malformed { .. })),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn budget_and_footprints() {
+        assert!(MemoryBudget::Unbounded.fits(usize::MAX));
+        assert!(!MemoryBudget::Unbounded.is_bounded());
+        let b = MemoryBudget::Bytes(1024);
+        assert!(b.fits(1024) && !b.fits(1025) && b.is_bounded());
+        assert_eq!(resident_merge_bytes(1000), 16_000);
+        assert_eq!(spill_working_bytes(4), 5 * SPILL_BLOCK_ELEMS * 16);
+        assert_eq!(format!("{b}"), "1024 B");
+        assert_eq!(format!("{}", MemoryBudget::Unbounded), "unbounded");
+    }
+
+    #[test]
+    fn fnv_vectors() {
+        // Standard FNV-1a 64 test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+}

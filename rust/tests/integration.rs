@@ -254,9 +254,12 @@ fn hierarchical_sorts_100k() {
 /// The acceptance-criteria scale: 1M elements through chunk → colskip →
 /// merge. Ignored by default — it is a release-mode workload (run with
 /// `cargo test --release -- --ignored`); `memsort sort --n 1m` is the
-/// CLI equivalent.
+/// CLI equivalent. The always-run stand-in is
+/// `tests/spill.rs::tiny_budget_spill_sorts_100k`, which pushes 100k
+/// elements through the out-of-core merge at a 64 KiB budget on every
+/// `cargo test` — same multi-pass pipeline shape, debug-mode runtime.
 #[test]
-#[ignore = "1M-element release-scale run; see EXPERIMENTS.md"]
+#[ignore = "1M-element release-scale run; tiny_budget_spill_sorts_100k in tests/spill.rs is the always-run stand-in; see EXPERIMENTS.md"]
 fn hierarchical_sorts_1m() {
     let svc = SortService::start(ServiceConfig { workers: 8, ..Default::default() }).unwrap();
     let cfg = HierarchicalConfig::fixed(1024, 4);

@@ -1,0 +1,287 @@
+//! The spill-tier test harness: byte-identity of the out-of-core path
+//! against the resident pipeline (deterministic and disk-free on
+//! [`MemoryRunStore`], plus a real temp-file smoke test), fault
+//! injection through the `FlakyTransport`-style [`RunStore`] hooks
+//! (truncation, checksum, ENOSPC, reader death — always typed errors,
+//! never partial or silently-resident output), the always-run
+//! tiny-budget stand-in for the `#[ignore]`d 1M integration run, and
+//! the budgeted auto-tuner's spill-only-when-forced contract.
+
+use memsort::coordinator::hierarchical::{HierarchicalConfig, HierarchicalOutput};
+use memsort::coordinator::{ServiceConfig, SortService};
+use memsort::datasets::{Dataset, DatasetKind};
+use memsort::sorter::spill::{
+    resident_merge_bytes, spill_merge, write_run, MemoryBudget, MemoryRunStore, RunStore,
+    SpillError, TempDirRunStore,
+};
+use memsort::testing::{check, PropConfig};
+
+fn service(workers: usize) -> SortService {
+    SortService::start(ServiceConfig { workers, ..Default::default() }).unwrap()
+}
+
+/// The ISSUE's byte-identity contract: values, argsort and `SortStats`
+/// (summed and per-chunk), plus the merge accounting and the resolved
+/// shape, equal between a resident and a spilled run of the same sort.
+fn assert_identical(resident: &HierarchicalOutput, spilled: &HierarchicalOutput) {
+    assert_eq!(resident.output.sorted, spilled.output.sorted, "values");
+    assert_eq!(resident.output.order, spilled.output.order, "argsort");
+    assert_eq!(resident.output.stats, spilled.output.stats, "summed stats");
+    assert_eq!(resident.chunk_stats, spilled.chunk_stats, "per-chunk stats");
+    assert_eq!(resident.capacity, spilled.capacity, "resolved capacity");
+    assert_eq!(resident.merge.fanout, spilled.merge.fanout, "fanout");
+    assert_eq!(resident.merge.passes, spilled.merge.passes, "merge passes");
+    assert_eq!(resident.merge.comparisons, spilled.merge.comparisons, "merge comparisons");
+    assert_eq!(resident.merge.cycles, spilled.merge.cycles, "merge cycles");
+    // The resident latency models agree too — spilling only adds the
+    // I/O surcharge on top of them.
+    assert_eq!(resident.barrier_latency_cycles, spilled.barrier_latency_cycles);
+    assert_eq!(resident.streamed_latency_cycles, spilled.streamed_latency_cycles);
+}
+
+/// Deterministic identity sweep over DatasetKind × chunk shape ×
+/// fanout on the in-memory store (no disk, no clocks): the external
+/// merge returns exactly what the resident merge returns.
+#[test]
+fn spill_is_byte_identical_across_datasets_and_fanouts() {
+    let svc = service(2);
+    for kind in DatasetKind::ALL {
+        for &(capacity, fanout) in &[(256usize, 2usize), (256, 4), (128, 8)] {
+            let d = Dataset::generate32(kind, 2500, 23);
+            let cfg = HierarchicalConfig::fixed(capacity, fanout);
+            let resident = svc.sort_hierarchical(&d.values, &cfg).unwrap();
+            let store = MemoryRunStore::new();
+            let spilled = svc.sort_hierarchical_with_store(&d.values, &cfg, &store).unwrap();
+            assert!(!resident.spilled && spilled.spilled);
+            assert!(spilled.spilled_bytes > 0, "{kind:?} wrote no runs");
+            assert_eq!(spilled.spilled_bytes, store.spilled_bytes());
+            assert_identical(&resident, &spilled);
+        }
+    }
+    svc.shutdown();
+}
+
+/// Identity across the *budget* dimension on the public entry point:
+/// any bounded budget under the resident footprint forces the spill
+/// path (through the real temp-file backend) and changes nothing about
+/// the output; a budget at the footprint stays resident.
+#[test]
+fn budget_sweep_spills_under_and_stays_resident_at_the_footprint() {
+    let svc = service(2);
+    let d = Dataset::generate32(DatasetKind::MapReduce, 3000, 7);
+    let base = HierarchicalConfig::fixed(256, 4);
+    let resident = svc.sort_hierarchical(&d.values, &base).unwrap();
+    let footprint = resident_merge_bytes(d.values.len());
+    for budget in [0usize, 1, 16 << 10, footprint - 1] {
+        let cfg = base.clone().with_budget(MemoryBudget::Bytes(budget));
+        let spilled = svc.sort_hierarchical(&d.values, &cfg).unwrap();
+        assert!(spilled.spilled, "budget {budget} B should spill");
+        assert!(spilled.latency_cycles > resident.latency_cycles, "spill I/O is priced");
+        assert_identical(&resident, &spilled);
+    }
+    let cfg = base.clone().with_budget(MemoryBudget::Bytes(footprint));
+    let exact = svc.sort_hierarchical(&d.values, &cfg).unwrap();
+    assert!(!exact.spilled, "a fitting budget must not spill");
+    assert_eq!(exact.spilled_bytes, 0);
+    assert_eq!(exact.latency_cycles, resident.latency_cycles);
+    svc.shutdown();
+}
+
+/// Random-shape identity property on the in-memory store: every
+/// generated case sorts byte-identically resident and spilled.
+#[test]
+fn prop_spill_identical_to_resident() {
+    let svc = service(2);
+    let cfg = HierarchicalConfig::fixed(64, 4);
+    check(
+        "spill-identical-to-resident",
+        PropConfig { cases: 48, max_len: 600, seed: 0xD15C, ..Default::default() },
+        |case| {
+            let resident =
+                svc.sort_hierarchical(&case.values, &cfg).map_err(|e| format!("{e:#}"))?;
+            let store = MemoryRunStore::new();
+            let spilled = svc
+                .sort_hierarchical_with_store(&case.values, &cfg, &store)
+                .map_err(|e| format!("{e:#}"))?;
+            if resident.output.sorted != spilled.output.sorted {
+                return Err("values differ".into());
+            }
+            if resident.output.order != spilled.output.order {
+                return Err("argsort differs".into());
+            }
+            if resident.output.stats != spilled.output.stats {
+                return Err("stats differ".into());
+            }
+            if resident.merge.comparisons != spilled.merge.comparisons {
+                return Err("merge comparisons differ".into());
+            }
+            Ok(())
+        },
+    );
+    svc.shutdown();
+}
+
+/// One smoke test on the real backend: the temp-dir store produces the
+/// same bytes as the in-memory store, and its directory is gone after
+/// drop.
+#[test]
+fn temp_file_backend_matches_memory_and_cleans_up() {
+    let svc = service(2);
+    let d = Dataset::generate32(DatasetKind::Clustered, 2500, 11);
+    let cfg = HierarchicalConfig::fixed(256, 4);
+    let mem = MemoryRunStore::new();
+    let reference = svc.sort_hierarchical_with_store(&d.values, &cfg, &mem).unwrap();
+    let disk = TempDirRunStore::new().unwrap();
+    let dir = disk.dir().to_path_buf();
+    let out = svc.sort_hierarchical_with_store(&d.values, &cfg, &disk).unwrap();
+    assert!(dir.exists(), "spill dir lives while the store does");
+    assert_eq!(out.spilled_bytes, reference.spilled_bytes, "same run bytes on both backends");
+    assert_identical(&reference, &out);
+    drop(disk);
+    assert!(!dir.exists(), "spill dir removed on drop");
+    svc.shutdown();
+}
+
+/// The always-run stand-in for the `#[ignore]`d 1M integration run:
+/// 100k elements through a 64 KiB budget exercises multi-pass external
+/// merging on the real temp-file backend every `cargo test`.
+#[test]
+fn tiny_budget_spill_sorts_100k() {
+    let svc = service(4);
+    let cfg =
+        HierarchicalConfig::fixed(1024, 4).with_budget(MemoryBudget::Bytes(64 << 10));
+    let d = Dataset::generate32(DatasetKind::MapReduce, 100_000, 42);
+    let out = svc.sort_hierarchical(&d.values, &cfg).unwrap();
+    let mut expect = d.values.clone();
+    expect.sort_unstable();
+    assert_eq!(out.output.sorted, expect);
+    assert_eq!(out.chunks(), 98);
+    assert!(out.spilled);
+    // Every element crosses the store at least once (12 B each), and
+    // multi-pass merging re-spills intermediate runs on top.
+    assert!(out.spilled_bytes > 100_000 * 12, "{}", out.spilled_bytes);
+    for (i, &row) in out.output.order.iter().enumerate() {
+        assert_eq!(d.values[row], out.output.sorted[i]);
+    }
+    svc.shutdown();
+}
+
+// --- fault injection ------------------------------------------------------
+
+fn items(n: usize, base: usize) -> Vec<(u32, usize)> {
+    (0..n).map(|i| ((n - i) as u32, base + i)).collect()
+}
+
+fn sorted_items(n: usize, base: usize) -> Vec<(u32, usize)> {
+    let mut v = items(n, base);
+    v.sort();
+    v
+}
+
+/// A truncated run file surfaces [`SpillError::Truncated`] from the
+/// merge — never a short result.
+#[test]
+fn truncated_run_is_a_typed_error() {
+    let store = MemoryRunStore::new();
+    write_run(&store, 0, &sorted_items(100, 0)).unwrap();
+    write_run(&store, 1, &sorted_items(100, 100)).unwrap();
+    let full = store.run_len(0).unwrap();
+    store.truncate_run(0, full as usize - 7);
+    let err = spill_merge(&store, 2, 2).unwrap_err();
+    match err.downcast_ref::<SpillError>() {
+        Some(SpillError::Truncated { run: 0, need, have }) => {
+            assert!(have < need, "{have} < {need}")
+        }
+        other => panic!("expected Truncated, got {other:?} ({err:#})"),
+    }
+}
+
+/// A flipped payload byte surfaces [`SpillError::Checksum`] with the
+/// stored and recomputed sums.
+#[test]
+fn corrupted_run_is_a_typed_checksum_error() {
+    let store = MemoryRunStore::new();
+    write_run(&store, 0, &sorted_items(100, 0)).unwrap();
+    write_run(&store, 1, &sorted_items(100, 100)).unwrap();
+    store.corrupt_run(1, 20); // inside run 1's first block payload
+    let err = spill_merge(&store, 2, 2).unwrap_err();
+    match err.downcast_ref::<SpillError>() {
+        Some(SpillError::Checksum { run: 1, want, got }) => assert_ne!(want, got),
+        other => panic!("expected Checksum, got {other:?} ({err:#})"),
+    }
+}
+
+/// ENOSPC mid-spill fails the whole sort with a typed I/O error — the
+/// pipeline never falls back to a silent resident merge.
+#[test]
+fn enospc_mid_spill_fails_the_sort() {
+    let svc = service(2);
+    let d = Dataset::generate32(DatasetKind::Uniform, 2500, 3);
+    let cfg = HierarchicalConfig::fixed(256, 4);
+    let store = MemoryRunStore::new();
+    store.set_write_quota(1 << 10); // room for a run or two, not ten
+    let err = svc.sort_hierarchical_with_store(&d.values, &cfg, &store).unwrap_err();
+    match err.downcast_ref::<SpillError>() {
+        Some(SpillError::Io { detail, .. }) => {
+            assert!(detail.contains("ENOSPC"), "{detail}")
+        }
+        other => panic!("expected Io(ENOSPC), got {other:?} ({err:#})"),
+    }
+    svc.shutdown();
+}
+
+/// A reader dying mid-merge surfaces a typed I/O error from the k-way
+/// merge, not partial output.
+#[test]
+fn reader_death_mid_merge_is_a_typed_error() {
+    let store = MemoryRunStore::new();
+    for r in 0..3 {
+        write_run(&store, r, &sorted_items(2000, r * 2000)).unwrap();
+    }
+    // Let the merge open its sources, then kill the stream: each open
+    // costs a header read plus a first-block read, so a fuse of 8
+    // trips inside block refills.
+    store.fail_reads_after(8);
+    let err = spill_merge(&store, 3, 4).unwrap_err();
+    match err.downcast_ref::<SpillError>() {
+        Some(SpillError::Io { detail, .. }) => {
+            assert!(detail.contains("reader died"), "{detail}")
+        }
+        other => panic!("expected Io(reader died), got {other:?} ({err:#})"),
+    }
+}
+
+// --- budgeted planning ----------------------------------------------------
+
+/// The acceptance criterion on the tuner: spill is selected exactly
+/// when the modelled resident footprint exceeds the budget, under both
+/// fixed and auto chunking.
+#[test]
+fn planner_spills_only_when_the_budget_is_exceeded() {
+    let svc = service(2);
+    let n = 50_000;
+    let footprint = resident_merge_bytes(n);
+    for auto in [false, true] {
+        let base = if auto {
+            HierarchicalConfig::auto()
+        } else {
+            HierarchicalConfig::fixed(1024, 4)
+        };
+        let cases = [
+            (MemoryBudget::Unbounded, false),
+            (MemoryBudget::Bytes(footprint), false),
+            (MemoryBudget::Bytes(footprint - 1), true),
+            (MemoryBudget::Bytes(64 << 10), true),
+        ];
+        for (budget, want_spill) in cases {
+            let cfg = base.clone().with_budget(budget);
+            let (capacity, fanout, spill) = svc.resolve_chunking_budgeted(n, &cfg);
+            assert_eq!(
+                spill, want_spill,
+                "auto={auto} budget={budget} resolved ({capacity}, {fanout})"
+            );
+            assert!(capacity >= 1 && fanout >= 2);
+        }
+    }
+    svc.shutdown();
+}
